@@ -1,0 +1,102 @@
+//! Digital Twin fidelity demo: calibrate the DT from engine micro-
+//! benchmarks, then run engine and twin on the same workload trace and
+//! compare throughput / ITL / TTFT (a single-scenario preview of Table 1).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example digital_twin
+//! ```
+
+use adapter_serving::config::EngineConfig;
+use adapter_serving::dt;
+use adapter_serving::engine::Engine;
+use adapter_serving::runtime::{Manifest, ModelRuntime};
+use adapter_serving::util::stats;
+use adapter_serving::workload::WorkloadSpec;
+
+fn main() -> anyhow::Result<()> {
+    let mut rt = ModelRuntime::load(&Manifest::default_dir(), "pico-llama")?;
+    let base = EngineConfig::default();
+
+    println!("calibrating digital twin (engine micro-benchmarks) ...");
+    let calib = dt::calibrate(&mut rt, &base, true)?;
+    println!(
+        "  Lat_model = ({:.3e}·B + {:.3e}·bucket + {:.3e}) · ({:.3e}·A_B + {:.3})",
+        calib.k_backbone[0],
+        calib.k_backbone[1],
+        calib.k_backbone[2],
+        calib.k_overhead[0],
+        calib.k_overhead[1]
+    );
+    println!(
+        "  Lat_load  = {:?}",
+        calib
+            .load_s_by_rank
+            .iter()
+            .map(|(r, s)| format!("rank{r}: {:.2}ms", s * 1e3))
+            .collect::<Vec<_>>()
+    );
+
+    let mut engine_thr = vec![];
+    let mut twin_thr = vec![];
+    println!(
+        "\n{:<22} {:>12} {:>11} {:>7} {:>9} {:>10}",
+        "scenario", "engine tok/s", "twin tok/s", "err %", "eng wall", "twin wall"
+    );
+    for (n_adapters, rate) in [(8usize, 0.4f64), (16, 0.2), (32, 0.1), (64, 0.05)] {
+        let adapters = WorkloadSpec::heterogeneous(n_adapters, &[8, 16], &[rate, rate / 2.0], 3);
+        let spec = WorkloadSpec::sharegpt_like(adapters, 15.0, 21);
+        let trace = spec.trace();
+        let cfg = EngineConfig { a_max: n_adapters.min(32), s_max_rank: 16, ..Default::default() };
+
+        let mut engine = Engine::new(cfg.clone(), &mut rt);
+        let er = engine.run_trace(&spec, &trace)?;
+        let erep = er.report.expect("engine feasible");
+
+        let tr = dt::run_twin_trace(&cfg, &calib, &spec, &trace);
+        let trep = tr.report.expect("twin feasible");
+
+        if std::env::var("DT_DEBUG").is_ok() {
+            // Measured vs predicted decode latency by batch size.
+            let mut by_batch: std::collections::BTreeMap<usize, Vec<f64>> = Default::default();
+            for r in er.profiler.decode_iters() {
+                by_batch.entry(r.batch).or_default().push(r.exec_s);
+            }
+            for (b, ts) in &by_batch {
+                let measured = adapter_serving::util::stats::mean(ts);
+                let predicted = calib.lat_model(*b, calib.decode_bucket(*b), 2);
+                println!(
+                    "    batch {b:>3} n={:<5} measured {:.3}ms predicted {:.3}ms",
+                    ts.len(),
+                    measured * 1e3,
+                    predicted * 1e3
+                );
+            }
+            let pf: Vec<f64> =
+                er.profiler.iters.iter().filter(|r| r.prefill).map(|r| r.exec_s).collect();
+            println!(
+                "    prefill iters={} mean={:.3}ms  decode iters={}",
+                pf.len(),
+                adapter_serving::util::stats::mean(&pf) * 1e3,
+                er.profiler.decode_iters().count()
+            );
+        }
+        let err = 100.0 * (erep.throughput_tok_s - trep.throughput_tok_s).abs()
+            / ((erep.throughput_tok_s + trep.throughput_tok_s) / 2.0);
+        println!(
+            "{:<22} {:>12.1} {:>11.1} {:>7.2} {:>8.2}s {:>9.4}s",
+            format!("A={n_adapters} rate={rate}"),
+            erep.throughput_tok_s,
+            trep.throughput_tok_s,
+            err,
+            er.wall_s,
+            tr.wall_s
+        );
+        engine_thr.push(erep.throughput_tok_s);
+        twin_thr.push(trep.throughput_tok_s);
+    }
+    println!(
+        "\nthroughput SMAPE = {:.2}%  (paper Table 1 reports <= 5.08%)",
+        stats::smape(&engine_thr, &twin_thr)
+    );
+    Ok(())
+}

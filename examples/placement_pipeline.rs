@@ -1,0 +1,106 @@
+//! END-TO-END DRIVER: the full data-driven pipeline on a real workload,
+//! proving all layers compose (DESIGN.md §6, recorded in EXPERIMENTS.md):
+//!
+//!   1. load the AOT-compiled model (L1 Pallas kernels + L2 JAX graph)
+//!      into the Rust PJRT runtime;
+//!   2. calibrate the Digital Twin from engine micro-benchmarks;
+//!   3. generate a training set with the DT;
+//!   4. train the RF throughput/starvation models (halving grid search);
+//!   5. run the greedy caching algorithm for a 4-GPU cluster;
+//!   6. validate the allocation by SERVING IT on the real engine, and
+//!      compare against MaxBase and Random baselines.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example placement_pipeline
+//! ```
+
+use adapter_serving::cluster;
+use adapter_serving::config::EngineConfig;
+use adapter_serving::experiments::{ExpContext, Scale};
+use adapter_serving::placement::{baselines, greedy};
+use adapter_serving::workload::WorkloadSpec;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let ctx = ExpContext::new(Scale::Quick);
+    let model = "pico-llama";
+
+    println!("[1/6] loading AOT artifacts ({model}) ...");
+    let mut rt = ctx.load_runtime(model)?;
+    println!(
+        "      {} decode + {} prefill executables compiled",
+        rt.meta.decode_buckets.len(),
+        rt.meta.prefill_buckets.len()
+    );
+
+    println!("[2/6] calibrating the Digital Twin ...");
+    let calib = ctx.calibration(&mut rt)?;
+    println!(
+        "      Lat_load rank8={:.1}ms rank32={:.1}ms; decode table {} pts",
+        calib.lat_load(8) * 1e3,
+        calib.lat_load(32) * 1e3,
+        calib.decode_pts.len()
+    );
+
+    println!("[3/6] generating the DT training set ...");
+    let samples = ctx.dataset(&calib)?;
+    let starved = samples.iter().filter(|s| s.starved).count();
+    println!("      {} samples, {} starved ({:.0}%)", samples.len(), starved,
+             100.0 * starved as f64 / samples.len() as f64);
+
+    println!("[4/6] training RF models (successive halving, 5-fold CV) ...");
+    let models = ctx.trained_models(&calib)?;
+
+    println!("[5/6] greedy caching algorithm (Algorithms 1 & 2) ...");
+    let adapters = WorkloadSpec::heterogeneous(128, &[8, 16, 32], &[0.15, 0.075, 0.0375], 21);
+    let spec = WorkloadSpec::sharegpt_like(adapters.clone(), 12.0, 22);
+    println!(
+        "      workload: {} adapters, {:.0} tok/s incoming",
+        adapters.len(),
+        spec.incoming_token_rate()
+    );
+    let tp = Instant::now();
+    let placement = greedy::place(&adapters, 4, &models)
+        .map_err(|e| anyhow::anyhow!("placement failed: {e}"))?;
+    println!(
+        "      placed in {:.3}s → {} GPUs, A_max per GPU: {:?}",
+        tp.elapsed().as_secs_f64(),
+        placement.gpus_used(),
+        placement.a_max
+    );
+
+    println!("[6/6] validating on the real serving engine ...");
+    let base = EngineConfig { model: model.to_string(), ..Default::default() };
+    let rep = cluster::run_on_engine(&mut rt, &base, &placement, &spec)?;
+    println!(
+        "      Proposed: {} GPUs, {:.0} tok/s, itl {:.2} ms, feasible={}",
+        rep.gpus_used,
+        rep.total_throughput_tok_s,
+        rep.itl_mean_s * 1e3,
+        rep.feasible()
+    );
+
+    // Baselines for contrast.
+    let tpr = 385.0;
+    if let Ok(p) = baselines::max_base(&adapters, 4, 1200.0, tpr, false) {
+        let r = cluster::run_on_engine(&mut rt, &base, &p, &spec)?;
+        println!(
+            "      MaxBase : {} GPUs, {:.0} tok/s, feasible={}",
+            r.gpus_used,
+            r.total_throughput_tok_s,
+            r.feasible()
+        );
+    }
+    if let Ok(p) = baselines::random(&adapters, 4, 5) {
+        let r = cluster::run_on_engine(&mut rt, &base, &p, &spec)?;
+        println!(
+            "      Random  : {} GPUs, {:.0} tok/s, feasible={}",
+            r.gpus_used,
+            r.total_throughput_tok_s,
+            r.feasible()
+        );
+    }
+    println!("pipeline end-to-end in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: load the AOT-compiled pico model, serve a small multi-LoRA
+//! workload on one simulated GPU, and print the serving report.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use adapter_serving::config::EngineConfig;
+use adapter_serving::engine::Engine;
+use adapter_serving::runtime::{Manifest, ModelRuntime};
+use adapter_serving::workload::WorkloadSpec;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Manifest::default_dir();
+    println!("loading model pico-llama from {} ...", artifacts.display());
+    let mut rt = ModelRuntime::load(&artifacts, "pico-llama")?;
+    println!(
+        "compiled {} decode + {} prefill executables (window={}, slots={})",
+        rt.meta.decode_buckets.len(),
+        rt.meta.prefill_buckets.len(),
+        rt.meta.window,
+        rt.meta.slots,
+    );
+
+    // 16 adapters, mixed ranks, ShareGPT-like lengths, 10 simulated seconds.
+    let adapters = WorkloadSpec::heterogeneous(16, &[8, 16, 32], &[0.4, 0.2], 7);
+    let spec = WorkloadSpec::sharegpt_like(adapters, 10.0, 42);
+    println!(
+        "workload: {} adapters, total rate {:.2} req/s, incoming {:.0} tok/s",
+        spec.adapters.len(),
+        spec.total_rate(),
+        spec.incoming_token_rate()
+    );
+
+    let cfg = EngineConfig { a_max: 16, ..Default::default() };
+    let mut engine = Engine::new(cfg, &mut rt);
+    let result = engine.run(&spec)?;
+    let report = result.report.expect("feasible configuration");
+    println!("--- report ---");
+    println!("{}", report.summary());
+    println!(
+        "engine wall time {:.2}s for {:.0}s simulated ({:.1}x)",
+        result.wall_s,
+        spec.horizon_s,
+        spec.horizon_s / result.wall_s
+    );
+    println!(
+        "profile: sched={:.3}s exec={:.3}s load={:.3}s over {} iterations",
+        result.profiler.total_sched_s(),
+        result.profiler.total_exec_s(),
+        result.profiler.total_load_s(),
+        result.profiler.iters.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,154 @@
+"""AOT export: lower the L2 model (with L1 Pallas kernels) to HLO text.
+
+Runs ONCE at build time (``make artifacts``); Python is never on the
+request path.  For every model config and every bucket this writes one
+``.hlo.txt`` file plus a ``<model>.params.npz`` with the backbone weights,
+and a single ``manifest.json`` that tells the Rust runtime the model dims,
+bucket lists, artifact paths, and exact input ordering.
+
+Interchange format is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .config import MODELS, ModelConfig
+
+DECODE_INPUT_ORDER = ["params...", "bank_a_q", "bank_b_q", "bank_a_v", "bank_b_v",
+                      "tokens", "k_win", "v_win", "ctx", "slot"]
+PREFILL_INPUT_ORDER = ["params...", "bank_a_q", "bank_b_q", "bank_a_v", "bank_b_v",
+                       "tokens", "true_len", "slot"]
+DECODE_OUTPUTS = ["next_tokens[B]i32", "new_k[L,B,d]f32", "new_v[L,B,d]f32"]
+PREFILL_OUTPUTS = ["k[L,S,d]f32", "v[L,S,d]f32", "next_token[]i32"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def _i32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.int32)
+
+
+def _param_specs(cfg: ModelConfig):
+    return [_f32(*shape) for shape in
+            (M.param_shapes(cfg)[n] for n in M.param_names(cfg))]
+
+
+def _bank_specs(cfg: ModelConfig):
+    return [_f32(*M.bank_shapes(cfg)[n]) for n in M.BANK_NAMES]
+
+
+def lower_decode(cfg: ModelConfig, batch: int, use_pallas: bool) -> str:
+    n_params = len(M.param_names(cfg))
+
+    def fn(*args):
+        params = list(args[:n_params])
+        banks = list(args[n_params:n_params + 4])
+        tokens, k_win, v_win, ctx, slot = args[n_params + 4:]
+        return M.decode_step(cfg, params, banks, tokens, k_win, v_win, ctx,
+                             slot, use_pallas=use_pallas)
+
+    L, d, W, B = cfg.n_layers, cfg.d_model, cfg.window, batch
+    specs = (
+        _param_specs(cfg)
+        + _bank_specs(cfg)
+        + [_i32(B), _f32(L, B, W, d), _f32(L, B, W, d), _i32(B), _i32(B)]
+    )
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_prefill(cfg: ModelConfig, seq: int, use_pallas: bool) -> str:
+    n_params = len(M.param_names(cfg))
+
+    def fn(*args):
+        params = list(args[:n_params])
+        banks = list(args[n_params:n_params + 4])
+        tokens, true_len, slot = args[n_params + 4:]
+        return M.prefill(cfg, params, banks, tokens, true_len, slot,
+                         use_pallas=use_pallas)
+
+    specs = _param_specs(cfg) + _bank_specs(cfg) + [_i32(seq), _i32(), _i32()]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def export_model(cfg: ModelConfig, out_dir: str, use_pallas: bool) -> dict:
+    t0 = time.time()
+    params = M.init_params(cfg)
+    params_file = f"{cfg.name}.params.npz"
+    # Uncompressed zip on purpose: the Rust reader (xla::Literal::read_npz)
+    # supports stored + deflate, and stored loads faster.
+    np.savez(os.path.join(out_dir, params_file), **params)
+
+    entry = {
+        "config": cfg.to_dict(),
+        "params_file": params_file,
+        "param_names": M.param_names(cfg),
+        "bank_names": list(M.BANK_NAMES),
+        "bank_shapes": {k: list(v) for k, v in M.bank_shapes(cfg).items()},
+        "input_order": {"decode": DECODE_INPUT_ORDER, "prefill": PREFILL_INPUT_ORDER},
+        "outputs": {"decode": DECODE_OUTPUTS, "prefill": PREFILL_OUTPUTS},
+        "use_pallas": use_pallas,
+        "decode": {},
+        "prefill": {},
+    }
+    for b in cfg.decode_buckets:
+        path = f"{cfg.name}.decode_b{b}.hlo.txt"
+        text = lower_decode(cfg, b, use_pallas)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entry["decode"][str(b)] = path
+        print(f"  decode b={b:<4} -> {path} ({len(text)} chars)")
+    for s in cfg.prefill_buckets:
+        path = f"{cfg.name}.prefill_s{s}.hlo.txt"
+        text = lower_prefill(cfg, s, use_pallas)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entry["prefill"][str(s)] = path
+        print(f"  prefill s={s:<4} -> {path} ({len(text)} chars)")
+    print(f"  [{cfg.name}] exported in {time.time() - t0:.1f}s")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=list(MODELS.keys()))
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference path instead of the "
+                         "Pallas kernels (kernel-overhead ablation)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "use_pallas": not args.no_pallas, "models": {}}
+    for name in args.models:
+        cfg = MODELS[name]
+        print(f"exporting {name} ...")
+        manifest["models"][name] = export_model(cfg, args.out_dir,
+                                                use_pallas=not args.no_pallas)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Model configurations for the AOT compile path.
+
+Two "pico" backbone configurations stand in for the paper's two backbones
+(Llama-3.1-8B-Instruct and Qwen2.5-7B-Instruct).  The paper's results never
+depend on model quality, only on serving dynamics; see DESIGN.md §1.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description shared by L1/L2/aot and (via the
+    manifest) the Rust runtime."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    head_dim: int
+    vocab: int
+    # Sliding attention window (tokens of KV visible to a decode step).
+    window: int
+    # Physical adapter-bank slots on the device.  Slot 0 is reserved as the
+    # all-zero "no adapter" slot by the Rust side.
+    slots: int
+    # All adapters are zero-padded to this rank in the physical bank.
+    max_rank: int
+    mlp_mult: int
+    seed: int
+    # Decode executables are compiled per batch bucket, prefill per padded
+    # sequence-length bucket.
+    decode_buckets: tuple = (1, 2, 4, 8, 16, 32, 64)
+    prefill_buckets: tuple = (32, 64, 128, 256)
+
+    @property
+    def mlp_dim(self) -> int:
+        return self.d_model * self.mlp_mult
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["decode_buckets"] = list(self.decode_buckets)
+        d["prefill_buckets"] = list(self.prefill_buckets)
+        d["mlp_dim"] = self.mlp_dim
+        return d
+
+
+PICO_LLAMA = ModelConfig(
+    name="pico-llama",
+    d_model=128,
+    n_layers=2,
+    n_heads=4,
+    head_dim=32,
+    vocab=512,
+    window=128,
+    slots=64,
+    max_rank=32,
+    mlp_mult=4,
+    seed=1234,
+)
+
+PICO_QWEN = ModelConfig(
+    name="pico-qwen",
+    d_model=160,
+    n_layers=2,
+    n_heads=5,
+    head_dim=32,
+    vocab=512,
+    window=128,
+    slots=64,
+    max_rank=32,
+    mlp_mult=4,
+    seed=4321,
+)
+
+MODELS = {m.name: m for m in (PICO_LLAMA, PICO_QWEN)}
+
+
+def tiny_config(**overrides) -> ModelConfig:
+    """A very small config for fast unit tests."""
+    base = dict(
+        name="tiny",
+        d_model=32,
+        n_layers=2,
+        n_heads=2,
+        head_dim=16,
+        vocab=64,
+        window=16,
+        slots=8,
+        max_rank=8,
+        mlp_mult=2,
+        seed=7,
+        decode_buckets=(1, 2, 4),
+        prefill_buckets=(8, 16),
+    )
+    base.update(overrides)
+    return ModelConfig(**base)

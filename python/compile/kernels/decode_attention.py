@@ -1,0 +1,64 @@
+"""Decode-step attention Pallas kernel over a fixed KV window.
+
+One grid step per request: masked softmax attention of the single new
+query against the request's VMEM-resident KV window tile (the Rust KV
+block manager gathers the last ``window`` tokens from its paged store into
+this dense tile — the TPU analog of paged-attention reads).
+
+``ctx`` is the number of *valid* entries in the window; positions >= ctx
+are masked out.  Lowered with ``interpret=True`` (see sgmv.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(ctx_ref, q_ref, k_ref, v_ref, o_ref, *, scale):
+    """ctx_ref [1] i32; q_ref [1,h,dh]; k_ref/v_ref [1,W,h,dh]; o_ref [1,h*dh]."""
+    ctx = ctx_ref[0]
+    q = q_ref[0]  # [h, dh]
+    k = k_ref[0]  # [W, h, dh]
+    v = v_ref[0]  # [W, h, dh]
+    s = jnp.einsum("hd,whd->hw", q, k) * scale  # [h, W]
+    w_idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(w_idx < ctx, s, jnp.float32(-1e30))
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hw,whd->hd", p, v)  # [h, dh]
+    o_ref[...] = o.reshape(1, -1)
+
+
+def decode_attention(q, k_win, v_win, ctx, *, interpret: bool = True):
+    """Single-token attention for a batch of decoding requests.
+
+    Args:
+      q:     [B, h, dh] new-token queries.
+      k_win: [B, W, h, dh] key window (first ``ctx[b]`` rows valid).
+      v_win: [B, W, h, dh] value window.
+      ctx:   [B] int32 number of valid window entries per request.
+
+    Returns:
+      [B, h*dh] attention outputs.
+    """
+    B, h, dh = q.shape
+    W = k_win.shape[1]
+    assert k_win.shape == (B, W, h, dh)
+    assert v_win.shape == (B, W, h, dh)
+    assert ctx.shape == (B,)
+    scale = 1.0 / (dh**0.5)
+    import functools
+
+    kern = functools.partial(_attn_kernel, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, W, h, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, W, h, dh), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h * dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, h * dh), q.dtype),
+        interpret=interpret,
+    )(ctx, q, k_win, v_win)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: python/tests sweeps shapes and
+random inputs (hypothesis) and asserts the Pallas kernels match these to
+float tolerance.  They are also used by the ``--no-pallas`` AOT variant to
+quantify kernel overhead end-to-end.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def sgmv_ref(x, a_bank, b_bank, idx):
+    """Reference for kernels.sgmv: per-row gathered low-rank product."""
+    a = a_bank[idx]  # [B, d, r]
+    b = b_bank[idx]  # [B, r, d]
+    return jnp.einsum("bd,bdr,brk->bk", x, a, b)
+
+
+def decode_attention_ref(q, k_win, v_win, ctx):
+    """Reference for kernels.decode_attention: masked softmax attention."""
+    B, h, dh = q.shape
+    W = k_win.shape[1]
+    scale = 1.0 / (dh**0.5)
+    s = jnp.einsum("bhd,bwhd->bhw", q, k_win) * scale  # [B, h, W]
+    w_idx = jnp.arange(W)[None, None, :]
+    s = jnp.where(w_idx < ctx[:, None, None], s, jnp.float32(-1e30))
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhw,bwhd->bhd", p, v_win).reshape(B, h * dh)

@@ -1,0 +1,71 @@
+"""SGMV (segmented-gather matrix-vector) Pallas kernel.
+
+This is the multi-adapter LoRA hot spot of the paper (Punica-style batched
+adapter compute): every request in the batch carries an adapter index into
+a weight bank, and its hidden state is pushed through that adapter's two
+low-rank matrices.
+
+Hardware adaptation (CUDA -> TPU, see DESIGN.md §2): the CUDA SGMV kernel
+assigns warp groups to adapter segments and stages adapter weights in
+shared memory.  On TPU the analog is: the bank is a VMEM-resident block
+(full-array BlockSpec — it is small by construction: slots × d × r_max),
+the grid walks batch rows, and each row performs a dynamic gather of its
+adapter slab followed by two MXU-shaped matmuls.
+
+Kernels MUST be lowered with ``interpret=True``: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sgmv_kernel(idx_ref, x_ref, a_ref, b_ref, o_ref):
+    """One grid step = one batch row.
+
+    idx_ref: [1]        int32, adapter slot for this row
+    x_ref:   [1, d]     activations for this row
+    a_ref:   [S, d, r]  down-projection bank (full block, VMEM-resident)
+    b_ref:   [S, r, d]  up-projection bank
+    o_ref:   [1, d]     LoRA delta output
+    """
+    slot = idx_ref[0]
+    x = x_ref[...]  # [1, d]
+    # Dynamic gather of this row's adapter slab from the bank.
+    a = pl.load(a_ref, (pl.dslice(slot, 1), slice(None), slice(None)))[0]  # [d, r]
+    b = pl.load(b_ref, (pl.dslice(slot, 1), slice(None), slice(None)))[0]  # [r, d]
+    xa = jnp.dot(x, a)  # [1, r]
+    o_ref[...] = jnp.dot(xa, b)  # [1, d]
+
+
+def sgmv(x, a_bank, b_bank, idx, *, interpret: bool = True):
+    """Batched multi-adapter LoRA delta.
+
+    Args:
+      x:      [B, d] float32 activations.
+      a_bank: [S, d, r] float32 bank of down-projections.
+      b_bank: [S, r, d] float32 bank of up-projections.
+      idx:    [B] int32 adapter slot per row (0 = reserved zero adapter).
+
+    Returns:
+      [B, d] float32: ``(x @ A[idx]) @ B[idx]`` per row.
+    """
+    B, d = x.shape
+    S, d2, r = a_bank.shape
+    assert d2 == d, (d2, d)
+    assert b_bank.shape == (S, r, d), (b_bank.shape, (S, r, d))
+    assert idx.shape == (B,), (idx.shape, B)
+    return pl.pallas_call(
+        _sgmv_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((S, d, r), lambda i: (0, 0, 0)),
+            pl.BlockSpec((S, r, d), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, d), x.dtype),
+        interpret=interpret,
+    )(idx, x, a_bank, b_bank)

@@ -1,0 +1,244 @@
+"""L2: the backbone "pico" transformer with multi-LoRA, in JAX.
+
+Two entry points are AOT-lowered per bucket (see aot.py):
+
+- ``decode_step``: one continuous-batching decode iteration for a padded
+  batch of B requests.  The Rust engine gathers each request's KV window
+  from its paged store, and this function appends the new token's K/V,
+  runs sliding-window attention (L1 Pallas kernel), applies per-request
+  LoRA via the SGMV kernel, and returns sampled next tokens plus the new
+  K/V rows for the Rust side to write back into its pages.
+- ``prefill``: processes one request's (padded) prompt, returning the full
+  K/V to seed the paged cache plus the first generated token.
+
+LoRA is applied to the q and v projections, the common choice in the LoRA
+paper and what vLLM serves by default.  Positions are not encoded (NoPE):
+positional fidelity is irrelevant to the serving dynamics under study and
+keeps the kernels minimal (DESIGN.md §3.1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .kernels.sgmv import sgmv
+from .kernels.decode_attention import decode_attention
+from .kernels.ref import sgmv_ref, decode_attention_ref
+
+_EPS = 1e-6
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_names(cfg: ModelConfig) -> list:
+    """Deterministic parameter order shared with the Rust runtime via the
+    manifest.  The LM head is tied to the embedding."""
+    names = ["embed"]
+    for l in range(cfg.n_layers):
+        names += [
+            f"l{l}.ln1",
+            f"l{l}.wq",
+            f"l{l}.wk",
+            f"l{l}.wv",
+            f"l{l}.wo",
+            f"l{l}.ln2",
+            f"l{l}.w_up",
+            f"l{l}.w_down",
+        ]
+    names.append("final_ln")
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    d, m, v = cfg.d_model, cfg.mlp_dim, cfg.vocab
+    shapes = {"embed": (v, d), "final_ln": (d,)}
+    for l in range(cfg.n_layers):
+        shapes[f"l{l}.ln1"] = (d,)
+        shapes[f"l{l}.wq"] = (d, d)
+        shapes[f"l{l}.wk"] = (d, d)
+        shapes[f"l{l}.wv"] = (d, d)
+        shapes[f"l{l}.wo"] = (d, d)
+        shapes[f"l{l}.ln2"] = (d,)
+        shapes[f"l{l}.w_up"] = (d, m)
+        shapes[f"l{l}.w_down"] = (m, d)
+    return shapes
+
+
+def init_params(cfg: ModelConfig) -> dict:
+    """Random backbone weights (numpy, float32), keyed by name."""
+    rng = np.random.default_rng(cfg.seed)
+    out = {}
+    for name, shape in param_shapes(cfg).items():
+        if name.endswith("ln1") or name.endswith("ln2") or name == "final_ln":
+            out[name] = np.ones(shape, dtype=np.float32)
+        else:
+            out[name] = rng.normal(0.0, 0.05, size=shape).astype(np.float32)
+    return out
+
+
+def params_list(cfg: ModelConfig, params: dict) -> list:
+    return [params[n] for n in param_names(cfg)]
+
+
+def bank_shapes(cfg: ModelConfig) -> dict:
+    """Adapter bank tensors: LoRA A/B for the q and v projections of every
+    layer, stacked over layers and physical slots."""
+    L, S, d, r = cfg.n_layers, cfg.slots, cfg.d_model, cfg.max_rank
+    return {
+        "bank_a_q": (L, S, d, r),
+        "bank_b_q": (L, S, r, d),
+        "bank_a_v": (L, S, d, r),
+        "bank_b_v": (L, S, r, d),
+    }
+
+
+BANK_NAMES = ["bank_a_q", "bank_b_q", "bank_a_v", "bank_b_v"]
+
+
+def zero_banks(cfg: ModelConfig) -> dict:
+    return {k: np.zeros(v, dtype=np.float32) for k, v in bank_shapes(cfg).items()}
+
+
+def make_adapter(cfg: ModelConfig, rank: int, seed: int) -> dict:
+    """Synthetic LoRA weights for one adapter (per layer, q & v), padded to
+    cfg.max_rank.  Scaled by alpha/rank with alpha = 2*rank (so the LoRA
+    contribution magnitude is rank-independent, as for real adapters)."""
+    assert rank <= cfg.max_rank
+    rng = np.random.default_rng(seed)
+    L, d, R = cfg.n_layers, cfg.d_model, cfg.max_rank
+    out = {}
+    for proj in ("q", "v"):
+        a = np.zeros((L, d, R), dtype=np.float32)
+        b = np.zeros((L, R, d), dtype=np.float32)
+        a[:, :, :rank] = rng.normal(0.0, 0.02, size=(L, d, rank))
+        # Real LoRA inits B to zero; we want non-trivial compute, so use a
+        # small random B scaled like a trained adapter.
+        b[:, :rank, :] = rng.normal(0.0, 0.02, size=(L, rank, d)) * (2.0)
+        out[f"a_{proj}"] = a
+        out[f"b_{proj}"] = b
+    return out
+
+
+# --------------------------------------------------------------------------
+# Model blocks
+# --------------------------------------------------------------------------
+
+def _rms_norm(x, w):
+    return x * w * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + _EPS)
+
+
+def _unpack(cfg: ModelConfig, params: list) -> dict:
+    return dict(zip(param_names(cfg), params))
+
+
+def _insert_row(win, new, pos):
+    """win [B, W, d]; new [B, d]; pos [B] — write new[b] at win[b, pos[b]]."""
+    return jax.vmap(
+        lambda w, n, p: jax.lax.dynamic_update_slice(w, n[None, :], (p, 0))
+    )(win, new, pos)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: list,
+    banks: list,
+    tokens,  # [B] int32
+    k_win,  # [L, B, W, d] float32 — last <=W-1 cached keys per request
+    v_win,  # [L, B, W, d]
+    ctx,  # [B] int32 — number of valid window entries (<= W-1)
+    slot,  # [B] int32 — physical adapter slot (0 = zero adapter)
+    *,
+    use_pallas: bool = True,
+):
+    """One decode iteration.  Returns (next_tokens [B] i32,
+    new_k [L, B, d], new_v [L, B, d])."""
+    p = _unpack(cfg, params)
+    a_q, b_q, a_v, b_v = banks
+    B = tokens.shape[0]
+    h = p["embed"][tokens]  # [B, d]
+    nh, dh, W = cfg.n_heads, cfg.head_dim, cfg.window
+    _sgmv = sgmv if use_pallas else (lambda x, a, b, i: sgmv_ref(x, a, b, i))
+    _attn = (
+        decode_attention
+        if use_pallas
+        else (lambda q, k, v, c: decode_attention_ref(q, k, v, c))
+    )
+
+    new_ks, new_vs = [], []
+    for l in range(cfg.n_layers):
+        x = _rms_norm(h, p[f"l{l}.ln1"])
+        q = x @ p[f"l{l}.wq"] + _sgmv(x, a_q[l], b_q[l], slot)
+        k_new = x @ p[f"l{l}.wk"]
+        v_new = x @ p[f"l{l}.wv"] + _sgmv(x, a_v[l], b_v[l], slot)
+        kw = _insert_row(k_win[l], k_new, ctx)  # [B, W, d]
+        vw = _insert_row(v_win[l], v_new, ctx)
+        attn = _attn(
+            q.reshape(B, nh, dh),
+            kw.reshape(B, W, nh, dh),
+            vw.reshape(B, W, nh, dh),
+            ctx + 1,
+        )  # [B, nh*dh]
+        h = h + attn @ p[f"l{l}.wo"]
+        x2 = _rms_norm(h, p[f"l{l}.ln2"])
+        h = h + jax.nn.silu(x2 @ p[f"l{l}.w_up"]) @ p[f"l{l}.w_down"]
+        new_ks.append(k_new)
+        new_vs.append(v_new)
+
+    logits = _rms_norm(h, p["final_ln"]) @ p["embed"].T  # [B, V]
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: list,
+    banks: list,
+    tokens,  # [S] int32, padded prompt
+    true_len,  # [] int32, actual prompt length (<= S)
+    slot,  # [] int32, physical adapter slot
+    *,
+    use_pallas: bool = True,
+):
+    """Process one request's prompt.  Returns (k [L, S, d], v [L, S, d],
+    next_token [] i32).  Rows >= true_len of k/v are garbage (never read:
+    the Rust side only copies the first true_len rows into its pages)."""
+    p = _unpack(cfg, params)
+    a_q, b_q, a_v, b_v = banks
+    S = tokens.shape[0]
+    nh, dh = cfg.n_heads, cfg.head_dim
+    scale = 1.0 / (dh**0.5)
+    h = p["embed"][tokens]  # [S, d]
+    slot_vec = jnp.full((S,), slot, dtype=jnp.int32)
+    _sgmv = sgmv if use_pallas else (lambda x, a, b, i: sgmv_ref(x, a, b, i))
+
+    pos = jnp.arange(S)
+    causal = pos[None, :] <= pos[:, None]  # [S(q), S(k)]
+    valid = pos[None, :] < true_len
+    mask = causal & valid
+
+    ks, vs = [], []
+    for l in range(cfg.n_layers):
+        x = _rms_norm(h, p[f"l{l}.ln1"])
+        q = x @ p[f"l{l}.wq"] + _sgmv(x, a_q[l], b_q[l], slot_vec)
+        k = x @ p[f"l{l}.wk"]
+        v = x @ p[f"l{l}.wv"] + _sgmv(x, a_v[l], b_v[l], slot_vec)
+        qh = q.reshape(S, nh, dh)
+        kh = k.reshape(S, nh, dh)
+        vh = v.reshape(S, nh, dh)
+        s = jnp.einsum("ihd,jhd->hij", qh, kh) * scale  # [h, S, S]
+        s = jnp.where(mask[None, :, :], s, jnp.float32(-1e30))
+        pw = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("hij,jhd->ihd", pw, vh).reshape(S, nh * dh)
+        h = h + attn @ p[f"l{l}.wo"]
+        x2 = _rms_norm(h, p[f"l{l}.ln2"])
+        h = h + jax.nn.silu(x2 @ p[f"l{l}.w_up"]) @ p[f"l{l}.w_down"]
+        ks.append(k)
+        vs.append(v)
+
+    last = jnp.take(h, true_len - 1, axis=0)  # [d]
+    logits = _rms_norm(last, p["final_ln"]) @ p["embed"].T
+    next_token = jnp.argmax(logits).astype(jnp.int32)
+    return jnp.stack(ks), jnp.stack(vs), next_token

@@ -1,0 +1,47 @@
+"""AOT path: lowering produces parseable HLO text with the expected
+parameter count; manifest writer round-trips."""
+
+import json
+import os
+import re
+
+import pytest
+
+
+def _entry_param_count(text: str) -> int:
+    """Nested computations (pallas interpret loops) carry their own
+    parameters; the ENTRY computation has the largest parameter index."""
+    return max(int(m) for m in re.findall(r"parameter\((\d+)\)", text)) + 1
+
+from compile import aot, model as M
+from compile.config import tiny_config
+
+CFG = tiny_config()
+
+
+def test_lower_decode_hlo_text():
+    text = aot.lower_decode(CFG, batch=2, use_pallas=True)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # params + 4 banks + 5 dynamic inputs
+    n_inputs = len(M.param_names(CFG)) + 4 + 5
+    assert _entry_param_count(text) == n_inputs
+
+
+def test_lower_prefill_hlo_text():
+    text = aot.lower_prefill(CFG, seq=8, use_pallas=True)
+    assert "HloModule" in text
+    n_inputs = len(M.param_names(CFG)) + 4 + 3
+    assert _entry_param_count(text) == n_inputs
+
+
+def test_export_model_writes_manifest_entry(tmp_path):
+    entry = aot.export_model(CFG, str(tmp_path), use_pallas=True)
+    assert set(entry["decode"].keys()) == {str(b) for b in CFG.decode_buckets}
+    assert set(entry["prefill"].keys()) == {str(s) for s in CFG.prefill_buckets}
+    for rel in list(entry["decode"].values()) + list(entry["prefill"].values()):
+        assert (tmp_path / rel).exists()
+    assert (tmp_path / entry["params_file"]).exists()
+    # json round-trip
+    s = json.dumps(entry)
+    assert json.loads(s)["config"]["d_model"] == CFG.d_model

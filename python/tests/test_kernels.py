@@ -1,0 +1,135 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.sgmv import sgmv
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.ref import sgmv_ref, decode_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, *shape):
+    return rng.normal(0.0, 1.0, size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# SGMV
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 9),
+    d=st.sampled_from([8, 32, 128]),
+    r=st.sampled_from([4, 8, 32]),
+    s=st.sampled_from([2, 8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgmv_matches_ref(b, d, r, s, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, d)
+    a_bank = _rand(rng, s, d, r)
+    b_bank = _rand(rng, s, r, d)
+    idx = rng.integers(0, s, size=b).astype(np.int32)
+    got = sgmv(x, a_bank, b_bank, idx)
+    want = sgmv_ref(x, a_bank, b_bank, idx)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_sgmv_zero_slot_is_identity_delta():
+    """Slot 0 holds the reserved zero adapter: delta must be exactly 0."""
+    rng = np.random.default_rng(0)
+    x = _rand(rng, 4, 16)
+    a_bank = _rand(rng, 4, 16, 8)
+    b_bank = _rand(rng, 4, 8, 16)
+    a_bank[0] = 0.0
+    idx = np.zeros(4, dtype=np.int32)
+    got = sgmv(x, a_bank, b_bank, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros((4, 16), np.float32))
+
+
+def test_sgmv_mixed_slots():
+    """Different rows must read different bank slabs."""
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 3, 8)
+    a_bank = _rand(rng, 3, 8, 4)
+    b_bank = _rand(rng, 3, 4, 8)
+    idx = np.array([2, 0, 1], dtype=np.int32)
+    got = np.asarray(sgmv(x, a_bank, b_bank, idx))
+    for row, slot in enumerate(idx):
+        want = x[row] @ a_bank[slot] @ b_bank[slot]
+        np.testing.assert_allclose(got[row], want, rtol=1e-4, atol=1e-5)
+
+
+def test_sgmv_rank_padding_equivalence():
+    """Zero-padding the rank dimension must not change the product."""
+    rng = np.random.default_rng(2)
+    x = _rand(rng, 4, 16)
+    a_small = _rand(rng, 2, 16, 4)
+    b_small = _rand(rng, 2, 4, 16)
+    a_pad = np.zeros((2, 16, 8), np.float32)
+    b_pad = np.zeros((2, 8, 16), np.float32)
+    a_pad[:, :, :4] = a_small
+    b_pad[:, :4, :] = b_small
+    idx = np.array([0, 1, 0, 1], dtype=np.int32)
+    np.testing.assert_allclose(
+        np.asarray(sgmv(x, a_pad, b_pad, idx)),
+        np.asarray(sgmv(x, a_small, b_small, idx)),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    h=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 16, 32]),
+    w=st.sampled_from([4, 16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, h, dh, w, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, b, h, dh)
+    k = _rand(rng, b, w, h, dh)
+    v = _rand(rng, b, w, h, dh)
+    ctx = rng.integers(1, w + 1, size=b).astype(np.int32)
+    got = decode_attention(q, k, v, ctx)
+    want = decode_attention_ref(q, k, v, ctx)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_masks_stale_entries():
+    """Entries at positions >= ctx must not influence the output."""
+    rng = np.random.default_rng(3)
+    q = _rand(rng, 2, 2, 8)
+    k = _rand(rng, 2, 8, 2, 8)
+    v = _rand(rng, 2, 8, 2, 8)
+    ctx = np.array([3, 5], dtype=np.int32)
+    base = np.asarray(decode_attention(q, k, v, ctx))
+    k2, v2 = k.copy(), v.copy()
+    k2[0, 3:] = 777.0
+    v2[0, 3:] = -777.0
+    k2[1, 5:] = 777.0
+    v2[1, 5:] = -777.0
+    poked = np.asarray(decode_attention(q, k2, v2, ctx))
+    np.testing.assert_allclose(poked, base, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_ctx_one_returns_v0():
+    """With a single valid entry, attention output is exactly v[0]."""
+    rng = np.random.default_rng(4)
+    q = _rand(rng, 1, 2, 4)
+    k = _rand(rng, 1, 4, 2, 4)
+    v = _rand(rng, 1, 4, 2, 4)
+    ctx = np.array([1], dtype=np.int32)
+    got = np.asarray(decode_attention(q, k, v, ctx))
+    np.testing.assert_allclose(got[0], v[0, 0].reshape(-1), rtol=1e-5, atol=1e-5)

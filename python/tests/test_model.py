@@ -1,0 +1,155 @@
+"""L2 correctness: model shapes, prefill/decode consistency, LoRA effect."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.config import tiny_config
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = tiny_config()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = M.params_list(CFG, M.init_params(CFG))
+    banks_d = M.zero_banks(CFG)
+    # Put a real adapter into slot 1.
+    ad = M.make_adapter(CFG, rank=4, seed=99)
+    for proj in ("q", "v"):
+        banks_d[f"bank_a_{proj}"][:, 1] = ad[f"a_{proj}"]
+        banks_d[f"bank_b_{proj}"][:, 1] = ad[f"b_{proj}"]
+    banks = [banks_d[n] for n in M.BANK_NAMES]
+    return params, banks
+
+
+def _decode(params, banks, tokens, k_win, v_win, ctx, slot, use_pallas=True):
+    return M.decode_step(CFG, params, banks,
+                         jnp.asarray(tokens, jnp.int32),
+                         jnp.asarray(k_win), jnp.asarray(v_win),
+                         jnp.asarray(ctx, jnp.int32),
+                         jnp.asarray(slot, jnp.int32),
+                         use_pallas=use_pallas)
+
+
+def test_decode_shapes(setup):
+    params, banks = setup
+    B, L, W, d = 4, CFG.n_layers, CFG.window, CFG.d_model
+    rng = np.random.default_rng(0)
+    nxt, nk, nv = _decode(
+        params, banks,
+        rng.integers(0, CFG.vocab, B),
+        rng.normal(size=(L, B, W, d)).astype(np.float32),
+        rng.normal(size=(L, B, W, d)).astype(np.float32),
+        rng.integers(1, W - 1, B),
+        np.zeros(B, np.int32),
+    )
+    assert nxt.shape == (B,) and nxt.dtype == jnp.int32
+    assert nk.shape == (L, B, d)
+    assert nv.shape == (L, B, d)
+    assert bool(jnp.all(nxt >= 0)) and bool(jnp.all(nxt < CFG.vocab))
+
+
+def test_prefill_shapes(setup):
+    params, banks = setup
+    S, L, d = 16, CFG.n_layers, CFG.d_model
+    rng = np.random.default_rng(1)
+    k, v, nxt = M.prefill(CFG, params, banks,
+                          jnp.asarray(rng.integers(0, CFG.vocab, S), jnp.int32),
+                          jnp.asarray(9, jnp.int32), jnp.asarray(0, jnp.int32))
+    assert k.shape == (L, S, d) and v.shape == (L, S, d)
+    assert nxt.shape == () and nxt.dtype == jnp.int32
+
+
+def test_pallas_and_ref_paths_agree(setup):
+    """The AOT'd Pallas path and the pure-jnp path must be numerically equal
+    (this is the end-to-end version of the kernel-vs-ref tests)."""
+    params, banks = setup
+    B, L, W, d = 3, CFG.n_layers, CFG.window, CFG.d_model
+    rng = np.random.default_rng(2)
+    args = (
+        rng.integers(0, CFG.vocab, B),
+        rng.normal(size=(L, B, W, d)).astype(np.float32),
+        rng.normal(size=(L, B, W, d)).astype(np.float32),
+        np.array([3, 1, 7]),
+        np.array([1, 0, 1]),
+    )
+    n1, k1, v1 = _decode(params, banks, *args, use_pallas=True)
+    n2, k2, v2 = _decode(params, banks, *args, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(n1), np.asarray(n2))
+    np.testing.assert_allclose(np.asarray(k1), np.asarray(k2), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4, atol=1e-5)
+
+
+def test_prefill_then_decode_consistency(setup):
+    """Decoding token t+1 after a prefill of length t must equal decoding it
+    after a prefill of length t+1 computed the K/V for the same prefix —
+    i.e. prefill K/V seeds the decode path correctly."""
+    params, banks = setup
+    L, W, d = CFG.n_layers, CFG.window, CFG.d_model
+    rng = np.random.default_rng(3)
+    S, t = 16, 6
+    prompt = rng.integers(0, CFG.vocab, S).astype(np.int32)
+    k, v, nxt = M.prefill(CFG, params, banks,
+                          jnp.asarray(prompt), jnp.asarray(t, jnp.int32),
+                          jnp.asarray(1, jnp.int32))
+    # Feed the generated token through decode with the prefill K/V window.
+    k_win = np.zeros((L, 1, W, d), np.float32)
+    v_win = np.zeros((L, 1, W, d), np.float32)
+    k_win[:, 0, :t] = np.asarray(k)[:, :t]
+    v_win[:, 0, :t] = np.asarray(v)[:, :t]
+    nxt2, nk, nv = _decode(params, banks, [int(nxt)], k_win, v_win, [t], [1])
+    # Ground truth: prefill over the extended prompt of length t+1.
+    ext = prompt.copy()
+    ext[t] = int(nxt)
+    k3, v3, nxt3 = M.prefill(CFG, params, banks,
+                             jnp.asarray(ext), jnp.asarray(t + 1, jnp.int32),
+                             jnp.asarray(1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(nk)[:, 0], np.asarray(k3)[:, t],
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(nv)[:, 0], np.asarray(v3)[:, t],
+                               rtol=1e-3, atol=1e-4)
+    assert int(nxt2[0]) == int(nxt3)
+
+
+def test_adapter_changes_output(setup):
+    """A non-zero adapter must actually change the computation vs slot 0."""
+    params, banks = setup
+    B, L, W, d = 2, CFG.n_layers, CFG.window, CFG.d_model
+    rng = np.random.default_rng(4)
+    base_args = (
+        rng.integers(0, CFG.vocab, B),
+        rng.normal(size=(L, B, W, d)).astype(np.float32),
+        rng.normal(size=(L, B, W, d)).astype(np.float32),
+        np.array([4, 4]),
+    )
+    _, k0, _ = _decode(params, banks, *base_args, np.array([0, 0]))
+    _, k1, _ = _decode(params, banks, *base_args, np.array([1, 1]))
+    assert not np.allclose(np.asarray(k0), np.asarray(k1))
+
+
+def test_padding_rows_do_not_affect_outputs(setup):
+    """Rust pads batches up to the bucket with dummy rows; real rows must be
+    unaffected by what the padding rows contain."""
+    params, banks = setup
+    L, W, d = CFG.n_layers, CFG.window, CFG.d_model
+    rng = np.random.default_rng(5)
+    kw = rng.normal(size=(L, 2, W, d)).astype(np.float32)
+    vw = rng.normal(size=(L, 2, W, d)).astype(np.float32)
+    toks = rng.integers(0, CFG.vocab, 2)
+    n_a, k_a, v_a = _decode(params, banks, toks, kw, vw, [3, 5], [1, 0])
+    # Change everything about row 1 (the "padding" row).
+    kw2, vw2 = kw.copy(), vw.copy()
+    kw2[:, 1] = 123.0
+    vw2[:, 1] = -9.0
+    toks2 = toks.copy()
+    toks2[1] = 0
+    n_b, k_b, v_b = _decode(params, banks, toks2, kw2, vw2, [3, 1], [1, 0])
+    assert int(n_a[0]) == int(n_b[0])
+    np.testing.assert_allclose(np.asarray(k_a)[:, 0], np.asarray(k_b)[:, 0],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v_a)[:, 0], np.asarray(v_b)[:, 0],
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,30 @@
+//! End-to-end experiment benches: one per paper table/figure, at quick
+//! scale.  `cargo bench` regenerates every evaluation artifact into
+//! `results/` and times each (captured in bench_output.txt).
+
+use adapter_serving::experiments::{self, ExpContext, Scale};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    println!("# paper experiments (quick scale) — one bench per table/figure");
+    let ctx = ExpContext::new(Scale::Quick);
+    // Order matters: table1 populates the validation cache that tables 3/4
+    // reuse; common caches (calibration/dataset/models) build on first use.
+    let order = [
+        "fig1", "fig4", "fig5", "fig6", "fig7", "table1", "fig8", "fig9", "table3", "table4",
+        "fig10", "fig11", "table5", "fig12", "figa13",
+    ];
+    let mut rows = vec![];
+    for id in order {
+        let t0 = Instant::now();
+        experiments::run(id, &ctx)?;
+        let dt = t0.elapsed().as_secs_f64();
+        println!("bench experiment/{id:<8} completed in {dt:>8.2}s");
+        rows.push((id, dt));
+    }
+    println!("\n# summary");
+    for (id, dt) in rows {
+        println!("bench experiment/{id:<8} {dt:>8.2}s");
+    }
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Hot-path micro-benchmarks (criterion-free harness, see util::bench):
+//! PJRT decode/prefill per bucket, KV window gather, bank upload, twin
+//! iteration, ML inference.  `cargo bench` → bench_output.txt.
+
+use adapter_serving::config::EngineConfig;
+use adapter_serving::dt::{self, Calibration};
+use adapter_serving::engine::kv::RequestKv;
+use adapter_serving::ml;
+use adapter_serving::runtime::{Manifest, ModelRuntime};
+use adapter_serving::util::bench::bench_auto;
+use adapter_serving::util::rng::Rng;
+use adapter_serving::workload::WorkloadSpec;
+
+fn main() -> anyhow::Result<()> {
+    println!("# hotpath micro-benchmarks");
+    let mut rt = ModelRuntime::load(&Manifest::default_dir(), "pico-llama")?;
+    let meta = rt.meta.clone();
+    let (l, d, w) = (meta.n_layers, meta.d_model, meta.window);
+
+    // --- L3+L2+L1: PJRT decode per bucket -------------------------------
+    for bucket in [1usize, 8, 64] {
+        let tokens = vec![1i32; bucket];
+        let k_win = vec![0.1f32; l * bucket * w * d];
+        let v_win = vec![0.1f32; l * bucket * w * d];
+        let ctx = vec![64i32; bucket];
+        let slot = vec![0i32; bucket];
+        bench_auto(&format!("decode_b{bucket}"), 1.0, || {
+            rt.decode(bucket, &tokens, &k_win, &v_win, &ctx, &slot).unwrap();
+        });
+    }
+
+    // --- prefill per bucket ---------------------------------------------
+    for bucket in [32usize, 256] {
+        let tokens = vec![1i32; bucket];
+        bench_auto(&format!("prefill_s{bucket}"), 1.0, || {
+            rt.prefill(bucket, &tokens, bucket - 1, 0).unwrap();
+        });
+    }
+
+    // --- KV window gather (pure rust hot loop) ---------------------------
+    let mut kv = RequestKv::default();
+    let row_k = vec![0.5f32; l * d];
+    let row_v = vec![0.25f32; l * d];
+    for _ in 0..256 {
+        kv.append(l, d, &row_k, &row_v);
+    }
+    let mut dst_k = vec![0f32; (w - 1) * d];
+    let mut dst_v = vec![0f32; (w - 1) * d];
+    bench_auto("kv_gather_window_127", 0.5, || {
+        for layer in 0..l {
+            kv.gather_window(layer, l, d, w - 1, &mut dst_k, &mut dst_v);
+        }
+    });
+
+    // --- adapter bank slot write + upload --------------------------------
+    let a_len = d * meta.max_rank;
+    let b_len = meta.max_rank * d;
+    let a_q = vec![0.01f32; l * a_len];
+    let b_q = vec![0.01f32; l * b_len];
+    bench_auto("bank_write_and_upload", 1.0, || {
+        rt.write_bank_slot(3, &a_q, &b_q, &a_q, &b_q).unwrap();
+        rt.upload_bank().unwrap();
+    });
+
+    // --- Digital Twin full run -------------------------------------------
+    let calib = Calibration::default();
+    let cfg = EngineConfig { a_max: 32, s_max_rank: 16, ..Default::default() };
+    let spec = WorkloadSpec::sharegpt_like(
+        WorkloadSpec::heterogeneous(64, &[8, 16], &[0.1, 0.05], 3),
+        30.0,
+        4,
+    );
+    bench_auto("twin_run_64_adapters_30s", 2.0, || {
+        let _ = dt::run_twin(&cfg, &calib, &spec, dt::LengthVariant::Mean);
+    });
+
+    // --- ML inference -----------------------------------------------------
+    let mut rng = Rng::new(1);
+    let xs: Vec<Vec<f64>> = (0..512)
+        .map(|_| (0..ml::N_FEATURES).map(|_| rng.f64() * 100.0).collect())
+        .collect();
+    let ys: Vec<f64> = xs.iter().map(|x| x[1] * 96.0).collect();
+    let forest = ml::forest::Forest::fit(
+        &xs,
+        &ys,
+        &ml::forest::ForestParams { n_estimators: 128, ..Default::default() },
+    );
+    let tree = ml::refine::distill(&xs, &ys, ml::tree::Criterion::Mse, 32);
+    let flat = ml::refine::FlatTree::compile(&tree);
+    bench_auto("rf128_predict_one", 0.5, || {
+        std::hint::black_box(forest.predict_one(&xs[7]));
+    });
+    bench_auto("small_tree_predict_one", 0.5, || {
+        std::hint::black_box(tree.predict_one(&xs[7]));
+    });
+    bench_auto("small_tree_flat_predict_one", 0.5, || {
+        std::hint::black_box(flat.predict_one(&xs[7]));
+    });
+    Ok(())
+}

@@ -1,0 +1,227 @@
+//! Typed configuration system (JSON-backed).
+//!
+//! Three config families:
+//! - [`MemoryConfig`] — the simulated-GPU memory ledger (DESIGN.md §3.2);
+//! - [`EngineConfig`] — one serving-engine instance ("one GPU");
+//! - [`ClusterConfig`] — a multi-GPU deployment.
+//!
+//! Workload configuration lives in [`crate::workload`].
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Simulated GPU memory, expressed in KV-token units the way the paper
+/// reasons about it: adapter weights ("A_max · S_max") and request KV cache
+/// compete for the same budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryConfig {
+    /// KV-token capacity with zero adapters loaded (T0).
+    pub total_tokens: usize,
+    /// KV block granularity (vLLM paged-attention block).
+    pub block_tokens: usize,
+    /// Token-equivalents consumed per unit of adapter rank.
+    pub rank_token_cost: f64,
+    /// S-LoRA mode (Appendix A): no static adapter region; adapter weights
+    /// and KV share one pool and are charged dynamically per loaded adapter.
+    pub unified: bool,
+}
+
+impl Default for MemoryConfig {
+    fn default() -> Self {
+        MemoryConfig {
+            total_tokens: 8192,
+            block_tokens: 16,
+            rank_token_cost: 4.0,
+            unified: false,
+        }
+    }
+}
+
+impl MemoryConfig {
+    /// Token-equivalents reserved by one adapter of `rank`.
+    pub fn adapter_tokens(&self, rank: usize) -> f64 {
+        rank as f64 * self.rank_token_cost
+    }
+
+    /// KV pool (in tokens) left after statically reserving `a_max` slots of
+    /// `s_max_rank`-sized adapters, vLLM-style.  `None` = memory error
+    /// (reservation exceeds the GPU).
+    pub fn kv_pool_tokens(&self, a_max: usize, s_max_rank: usize) -> Option<usize> {
+        let reserve = a_max as f64 * self.adapter_tokens(s_max_rank);
+        let total = self.total_tokens as f64;
+        if reserve >= total {
+            None
+        } else {
+            Some((total - reserve) as usize)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_tokens", Json::Num(self.total_tokens as f64)),
+            ("block_tokens", Json::Num(self.block_tokens as f64)),
+            ("rank_token_cost", Json::Num(self.rank_token_cost)),
+            ("unified", Json::Bool(self.unified)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let d = MemoryConfig::default();
+        Ok(MemoryConfig {
+            total_tokens: j.get("total_tokens").and_then(Json::as_usize).unwrap_or(d.total_tokens),
+            block_tokens: j.get("block_tokens").and_then(Json::as_usize).unwrap_or(d.block_tokens),
+            rank_token_cost: j
+                .get("rank_token_cost")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.rank_token_cost),
+            unified: j.get("unified").and_then(Json::as_bool).unwrap_or(d.unified),
+        })
+    }
+}
+
+/// One serving-engine instance ("one GPU").
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    /// Backbone model name (must exist in the artifact manifest).
+    pub model: String,
+    /// Max simultaneously loaded adapters (the paper's A_max).
+    pub a_max: usize,
+    /// Per-adapter memory footprint cap as a rank (the paper's S_max);
+    /// vLLM reserves this uniformly for every slot.
+    pub s_max_rank: usize,
+    pub mem: MemoryConfig,
+    /// vLLM's max_num_seqs: cap on requests in the running batch.  Also
+    /// bounded by the largest compiled decode bucket.
+    pub max_num_seqs: usize,
+    /// Modeled CPU→GPU adapter transfer time per unit rank (ms); the real
+    /// device-bank re-upload cost is measured and added on top.
+    pub load_ms_per_rank: f64,
+    /// Disk→GPU multiplier over CPU→GPU (paper Fig. 6: ~1.7x).
+    pub load_disk_mult: f64,
+    /// Whether adapters are preloaded in CPU memory (vs loaded from disk).
+    pub preload_cpu: bool,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            model: "pico-llama".to_string(),
+            a_max: 32,
+            s_max_rank: 32,
+            mem: MemoryConfig::default(),
+            max_num_seqs: 64,
+            load_ms_per_rank: 0.35,
+            load_disk_mult: 1.7,
+            preload_cpu: true,
+            seed: 1,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// KV pool after the static adapter reservation; `None` = memory error.
+    pub fn kv_pool_tokens(&self) -> Option<usize> {
+        if self.mem.unified {
+            Some(self.mem.total_tokens)
+        } else {
+            self.mem.kv_pool_tokens(self.a_max, self.s_max_rank)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("a_max", Json::Num(self.a_max as f64)),
+            ("s_max_rank", Json::Num(self.s_max_rank as f64)),
+            ("mem", self.mem.to_json()),
+            ("max_num_seqs", Json::Num(self.max_num_seqs as f64)),
+            ("load_ms_per_rank", Json::Num(self.load_ms_per_rank)),
+            ("load_disk_mult", Json::Num(self.load_disk_mult)),
+            ("preload_cpu", Json::Bool(self.preload_cpu)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let d = EngineConfig::default();
+        Ok(EngineConfig {
+            model: j.get("model").and_then(Json::as_str).unwrap_or(&d.model).to_string(),
+            a_max: j.get("a_max").and_then(Json::as_usize).unwrap_or(d.a_max),
+            s_max_rank: j.get("s_max_rank").and_then(Json::as_usize).unwrap_or(d.s_max_rank),
+            mem: j.get("mem").map(MemoryConfig::from_json).transpose()?.unwrap_or_default(),
+            max_num_seqs: j.get("max_num_seqs").and_then(Json::as_usize).unwrap_or(d.max_num_seqs),
+            load_ms_per_rank: j
+                .get("load_ms_per_rank")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.load_ms_per_rank),
+            load_disk_mult: j
+                .get("load_disk_mult")
+                .and_then(Json::as_f64)
+                .unwrap_or(d.load_disk_mult),
+            preload_cpu: j.get("preload_cpu").and_then(Json::as_bool).unwrap_or(d.preload_cpu),
+            seed: j.get("seed").and_then(Json::as_f64).unwrap_or(d.seed as f64) as u64,
+        })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        Self::from_json(&Json::read_file(path)?)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        self.to_json().write_file(path)
+    }
+}
+
+/// A multi-GPU deployment: `gpus` engines sharing one compiled model.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub gpus: usize,
+    pub engine: EngineConfig,
+}
+
+impl ClusterConfig {
+    pub fn new(gpus: usize, engine: EngineConfig) -> Self {
+        ClusterConfig { gpus, engine }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_pool_shrinks_with_a_max() {
+        let m = MemoryConfig::default();
+        let p0 = m.kv_pool_tokens(0, 32).unwrap();
+        let p32 = m.kv_pool_tokens(32, 32).unwrap();
+        assert_eq!(p0, m.total_tokens);
+        assert_eq!(p32, m.total_tokens - (32.0 * 32.0 * m.rank_token_cost) as usize);
+        assert!(p32 < p0);
+    }
+
+    #[test]
+    fn memory_error_when_over_reserved() {
+        let m = MemoryConfig::default();
+        // 8192 tokens; 384 slots × rank32 × 4 = 49152 > 8192 → error
+        assert!(m.kv_pool_tokens(384, 32).is_none());
+    }
+
+    #[test]
+    fn unified_mode_has_no_static_reservation() {
+        let mut e = EngineConfig::default();
+        e.mem.unified = true;
+        e.a_max = 10_000;
+        assert_eq!(e.kv_pool_tokens(), Some(e.mem.total_tokens));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut e = EngineConfig::default();
+        e.a_max = 96;
+        e.mem.unified = true;
+        let j = e.to_json();
+        let e2 = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(e, e2);
+    }
+}

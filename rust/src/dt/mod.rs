@@ -1,0 +1,11 @@
+//! The Digital Twin of the LLM-adapter serving engine (paper §5): the same
+//! continuous-batching, KV-allocation and adapter-swap state machine, with
+//! measured latencies replaced by the four calibrated predictive models.
+
+pub mod calibrate;
+pub mod perf_model;
+pub mod twin;
+
+pub use calibrate::calibrate;
+pub use perf_model::Calibration;
+pub use twin::{run as run_twin, run_trace as run_twin_trace, LengthVariant, TwinResult};

@@ -1,0 +1,326 @@
+//! The Digital Twin's predictive performance models (paper Eq. 1):
+//!
+//! ```text
+//! Mem_max(A_max, S_max)      → T_max            (shared KvLedger math)
+//! Lat_sched(B, R_P, A_B, A)  = K1·B + K2·R_P + K3·R_P·A_B/A
+//! Lat_load(S)                = L_S              (profiled per rank)
+//! Lat_model(B, A_B)          = (K4·B + K5)·(K6·A_B + K7)
+//! ```
+//!
+//! plus a prefill latency model (linear in the padded bucket length) that
+//! the paper folds into its model component but we keep explicit because
+//! our engine schedules prefills as separate iterations.
+//!
+//! All constants are parameterized from engine profiling data by
+//! [`crate::dt::calibrate`].
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Calibrated constants for one (backbone model, hardware) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    pub model: String,
+    /// Scheduler: K1·B + K2·R_P + K3·R_P·(A_B/A) + bias (seconds).
+    pub k_sched: [f64; 4],
+    /// Backbone decode: K4a·B + K4b·bucket + K5 (seconds).  The paper's
+    /// model is linear in B alone; our engine executes bucketed batches
+    /// (CUDA-graph style), so per-request costs (window gather, readback)
+    /// scale with B while padded compute scales with the bucket — a
+    /// refinement of the same analytical form (§3.2 of the paper notes
+    /// such refinements are expected per deployment).
+    pub k_backbone: [f64; 3],
+    /// Adapter overhead multiplier: K6·A_B + K7 (dimensionless).
+    pub k_overhead: [f64; 2],
+    /// Swap-in latency per rank (seconds), profiled.
+    pub load_s_by_rank: BTreeMap<usize, f64>,
+    /// Prefill: P0·bucket + P1 (seconds over padded length).
+    pub k_prefill: [f64; 2],
+    /// Fixed per-iteration engine overhead outside sched/exec (seconds).
+    pub iter_overhead_s: f64,
+    /// Compiled batch buckets of the engine (latency steps with the bucket,
+    /// CUDA-graph style; the DT evaluates Lat_model at the bucketed batch).
+    pub decode_buckets: Vec<usize>,
+    /// Compiled prefill buckets (padded prompt lengths).
+    pub prefill_buckets: Vec<usize>,
+    /// Profiled decode latency points (batch → seconds), piecewise-linear
+    /// interpolated.  Like the paper's `Mem_max`, a profiled table "proved
+    /// more straightforward and equally accurate" than the analytical form
+    /// on this testbed, whose bucketed executables have latency cliffs the
+    /// K4·B+K5 line cannot express.  Empty → fall back to the linear fit.
+    pub decode_pts: Vec<(f64, f64)>,
+    /// Profiled prefill latency points (padded bucket → seconds).
+    pub prefill_pts: Vec<(f64, f64)>,
+}
+
+fn pts_json(pts: &[(f64, f64)]) -> Json {
+    Json::Arr(pts.iter().map(|&(x, y)| Json::arr_f64(&[x, y])).collect())
+}
+
+fn pts_from_json(j: Option<&Json>) -> Vec<(f64, f64)> {
+    j.and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|p| {
+                    let v = p.f64_vec()?;
+                    (v.len() == 2).then(|| (v[0], v[1]))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Piecewise-linear interpolation over sorted (x, y) points; clamps to the
+/// end slopes outside the profiled range.
+fn interp(pts: &[(f64, f64)], x: f64) -> f64 {
+    match pts.len() {
+        0 => 0.0,
+        1 => pts[0].1,
+        _ => {
+            if x <= pts[0].0 {
+                return pts[0].1;
+            }
+            for w in pts.windows(2) {
+                if x <= w[1].0 {
+                    let t = (x - w[0].0) / (w[1].0 - w[0].0);
+                    return w[0].1 + t * (w[1].1 - w[0].1);
+                }
+            }
+            // Extrapolate with the final segment's slope.
+            let (a, b) = (pts[pts.len() - 2], pts[pts.len() - 1]);
+            let slope = (b.1 - a.1) / (b.0 - a.0);
+            (b.1 + slope * (x - b.0)).max(0.0)
+        }
+    }
+}
+
+impl Calibration {
+    /// Smallest decode bucket that fits `batch` (engine-identical).
+    pub fn decode_bucket(&self, batch: usize) -> usize {
+        self.decode_buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= batch)
+            .unwrap_or_else(|| self.decode_buckets.last().copied().unwrap_or(batch))
+    }
+
+    /// Smallest prefill bucket that fits `len` (engine-identical).
+    pub fn prefill_bucket(&self, len: usize) -> usize {
+        self.prefill_buckets
+            .iter()
+            .copied()
+            .find(|&s| s >= len)
+            .unwrap_or_else(|| self.prefill_buckets.last().copied().unwrap_or(len))
+    }
+
+    pub fn max_decode_bucket(&self) -> usize {
+        self.decode_buckets.last().copied().unwrap_or(64)
+    }
+
+    pub fn max_prefill_bucket(&self) -> usize {
+        self.prefill_buckets.last().copied().unwrap_or(256)
+    }
+}
+
+impl Calibration {
+    /// Scheduler latency estimate (paper's Lat_sched).
+    pub fn lat_sched(&self, batch: usize, pending: usize, a_b: usize, a: usize) -> f64 {
+        let frac = if a == 0 { 0.0 } else { a_b as f64 / a as f64 };
+        (self.k_sched[0] * batch as f64
+            + self.k_sched[1] * pending as f64
+            + self.k_sched[2] * pending as f64 * frac
+            + self.k_sched[3])
+            .max(0.0)
+    }
+
+    /// Decode-step latency estimate (paper's Lat_model): profiled backbone
+    /// latency (table, falling back to the linear fit), multiplied by the
+    /// adapter-count overhead.
+    pub fn lat_model(&self, batch: usize, bucket: usize, a_b: usize) -> f64 {
+        let backbone = if self.decode_pts.is_empty() {
+            self.k_backbone[0] * batch as f64
+                + self.k_backbone[1] * bucket as f64
+                + self.k_backbone[2]
+        } else {
+            interp(&self.decode_pts, batch as f64)
+        };
+        let overhead = if a_b == 0 {
+            1.0
+        } else {
+            (self.k_overhead[0] * a_b as f64 + self.k_overhead[1]).max(1.0)
+        };
+        (backbone * overhead).max(0.0)
+    }
+
+    /// Swap-in latency estimate (paper's Lat_load), interpolating between
+    /// profiled ranks.
+    pub fn lat_load(&self, rank: usize) -> f64 {
+        if self.load_s_by_rank.is_empty() {
+            return 0.0;
+        }
+        if let Some(&v) = self.load_s_by_rank.get(&rank) {
+            return v;
+        }
+        // Linear interpolation / extrapolation on the profiled points.
+        let pts: Vec<(f64, f64)> =
+            self.load_s_by_rank.iter().map(|(&r, &s)| (r as f64, s)).collect();
+        if pts.len() == 1 {
+            return pts[0].1 * rank as f64 / pts[0].0.max(1.0);
+        }
+        let (lo, hi) = pts
+            .windows(2)
+            .find(|w| rank as f64 <= w[1].0)
+            .map(|w| (w[0], w[1]))
+            .unwrap_or((pts[pts.len() - 2], pts[pts.len() - 1]));
+        let t = (rank as f64 - lo.0) / (hi.0 - lo.0);
+        (lo.1 + t * (hi.1 - lo.1)).max(0.0)
+    }
+
+    /// Prefill latency estimate for a padded bucket length.
+    pub fn lat_prefill(&self, bucket: usize) -> f64 {
+        if self.prefill_pts.is_empty() {
+            (self.k_prefill[0] * bucket as f64 + self.k_prefill[1]).max(0.0)
+        } else {
+            interp(&self.prefill_pts, bucket as f64)
+        }
+    }
+
+    // ------------------------------------------------------------------
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("k_sched", Json::arr_f64(&self.k_sched)),
+            ("k_backbone", Json::arr_f64(&self.k_backbone)),
+            ("k_overhead", Json::arr_f64(&self.k_overhead)),
+            (
+                "load_s_by_rank",
+                Json::Obj(
+                    self.load_s_by_rank
+                        .iter()
+                        .map(|(k, v)| (k.to_string(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ),
+            ("k_prefill", Json::arr_f64(&self.k_prefill)),
+            ("iter_overhead_s", Json::Num(self.iter_overhead_s)),
+            (
+                "decode_buckets",
+                Json::arr_f64(&self.decode_buckets.iter().map(|&b| b as f64).collect::<Vec<_>>()),
+            ),
+            (
+                "prefill_buckets",
+                Json::arr_f64(&self.prefill_buckets.iter().map(|&b| b as f64).collect::<Vec<_>>()),
+            ),
+            ("decode_pts", pts_json(&self.decode_pts)),
+            ("prefill_pts", pts_json(&self.prefill_pts)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Calibration> {
+        let arr = |k: &str, n: usize| -> anyhow::Result<Vec<f64>> {
+            let v = j.req(k)?.f64_vec().ok_or_else(|| anyhow::anyhow!("{k} not array"))?;
+            anyhow::ensure!(v.len() == n, "{k} wrong arity");
+            Ok(v)
+        };
+        let mut load = BTreeMap::new();
+        if let Some(obj) = j.req("load_s_by_rank")?.as_obj() {
+            for (k, v) in obj {
+                load.insert(k.parse::<usize>()?, v.as_f64().unwrap_or(0.0));
+            }
+        }
+        let ks = arr("k_sched", 4)?;
+        let kb = arr("k_backbone", 3)?;
+        let ko = arr("k_overhead", 2)?;
+        let kp = arr("k_prefill", 2)?;
+        Ok(Calibration {
+            model: j.req("model")?.as_str().unwrap_or_default().to_string(),
+            k_sched: [ks[0], ks[1], ks[2], ks[3]],
+            k_backbone: [kb[0], kb[1], kb[2]],
+            k_overhead: [ko[0], ko[1]],
+            load_s_by_rank: load,
+            k_prefill: [kp[0], kp[1]],
+            iter_overhead_s: j.get("iter_overhead_s").and_then(Json::as_f64).unwrap_or(0.0),
+            decode_buckets: j
+                .get("decode_buckets")
+                .and_then(Json::usize_vec)
+                .unwrap_or_else(|| vec![1, 2, 4, 8, 16, 32, 64]),
+            prefill_buckets: j
+                .get("prefill_buckets")
+                .and_then(Json::usize_vec)
+                .unwrap_or_else(|| vec![32, 64, 128, 256]),
+            decode_pts: pts_from_json(j.get("decode_pts")),
+            prefill_pts: pts_from_json(j.get("prefill_pts")),
+        })
+    }
+
+    pub fn load_file(path: &std::path::Path, model: &str) -> anyhow::Result<Calibration> {
+        let j = Json::read_file(path)?;
+        // File may hold one calibration or a map keyed by model.
+        if j.get("model").is_some() {
+            Calibration::from_json(&j)
+        } else {
+            Calibration::from_json(j.req(model)?)
+        }
+    }
+}
+
+/// A reasonable default (used by unit tests and as a fallback): values in
+/// the ballpark of the measured engine on this container.
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration {
+            model: "pico-llama".into(),
+            k_sched: [2e-8, 3e-8, 5e-8, 2e-6],
+            k_backbone: [6e-5, 1.0e-3, 1.2e-3],
+            k_overhead: [1e-3, 1.05],
+            load_s_by_rank: [(8, 0.006), (16, 0.009), (32, 0.015)].into_iter().collect(),
+            k_prefill: [3.5e-5, 2e-3],
+            iter_overhead_s: 2e-6,
+            decode_buckets: vec![1, 2, 4, 8, 16, 32, 64],
+            prefill_buckets: vec![32, 64, 128, 256],
+            decode_pts: vec![],
+            prefill_pts: vec![],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lat_model_monotone_in_batch_and_adapters() {
+        let c = Calibration::default();
+        assert!(c.lat_model(8, 8, 1) < c.lat_model(32, 32, 1));
+        assert!(c.lat_model(32, 32, 1) <= c.lat_model(32, 32, 16));
+        assert!(c.lat_model(4, 4, 0) > 0.0);
+        // Padding costs: same batch, larger bucket → slower.
+        assert!(c.lat_model(8, 8, 1) < c.lat_model(8, 16, 1));
+    }
+
+    #[test]
+    fn lat_load_interpolates() {
+        let c = Calibration::default();
+        let l8 = c.lat_load(8);
+        let l16 = c.lat_load(16);
+        let l12 = c.lat_load(12);
+        assert!(l8 < l12 && l12 < l16);
+        // Exact table hits.
+        assert_eq!(c.lat_load(32), c.load_s_by_rank[&32]);
+    }
+
+    #[test]
+    fn sched_term_scales_with_pending_fraction() {
+        let c = Calibration::default();
+        let cheap = c.lat_sched(8, 100, 1, 100);
+        let costly = c.lat_sched(8, 100, 100, 100);
+        assert!(costly > cheap);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = Calibration::default();
+        let c2 = Calibration::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+    }
+}

@@ -1,0 +1,308 @@
+//! The Digital Twin: a discrete-event emulation of the serving engine in
+//! which every measured latency is replaced by a predictive-model estimate.
+//!
+//! The twin executes the *same* scheduler policy code as the engine
+//! ([`crate::engine::scheduler`]) over the same simulated memory state
+//! ([`KvLedger`], [`SimAdapterCache`]) — exactly the paper's design where
+//! the DT "reproduces system behavior through simplified yet structurally
+//! analogous logic" with "lightweight predictive performance models [for]
+//! the most computationally intensive operations" (§5).  Fidelity error
+//! therefore comes from latency prediction and (in the Mean variant) from
+//! request-length abstraction, which is what Table 1 quantifies.
+
+use super::perf_model::Calibration;
+use crate::config::EngineConfig;
+use crate::engine::adapter_cache::SimAdapterCache;
+use crate::engine::kv::KvLedger;
+use crate::engine::metrics::{MetricsCollector, Report};
+use crate::engine::request::{ReqState, Request};
+use crate::engine::scheduler::{grow_or_preempt, scan_admissions, AdmissionLimits};
+use crate::workload::{Arrival, WorkloadSpec};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Which request lengths the twin receives (Table 1 variants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LengthVariant {
+    /// Exact per-request input/output lengths (as observed in the system).
+    Original,
+    /// Workload-average lengths (the information available in practice,
+    /// and what the ML dataset generation uses).
+    Mean,
+}
+
+/// Result of a twin run.
+pub struct TwinResult {
+    pub report: Option<Report>,
+    pub memory_error: bool,
+    /// Wall-clock seconds the simulation itself took (Table 2).
+    pub wall_s: f64,
+    /// Simulated iterations executed.
+    pub iterations: usize,
+}
+
+/// Run the Digital Twin for `spec` under engine configuration `cfg`.
+pub fn run(
+    cfg: &EngineConfig,
+    calib: &Calibration,
+    spec: &WorkloadSpec,
+    variant: LengthVariant,
+) -> TwinResult {
+    let trace = match variant {
+        LengthVariant::Original => spec.trace(),
+        LengthVariant::Mean => spec.trace_mean_lengths(),
+    };
+    run_trace(cfg, calib, spec, &trace)
+}
+
+/// Run the twin over an explicit trace (the DT input interface: arrival
+/// time, adapter, size, input length and expected output length per
+/// request — paper §5).
+pub fn run_trace(
+    cfg: &EngineConfig,
+    calib: &Calibration,
+    spec: &WorkloadSpec,
+    trace: &[Arrival],
+) -> TwinResult {
+    let wall0 = Instant::now();
+    let Some(pool) = cfg.kv_pool_tokens() else {
+        return TwinResult {
+            report: None,
+            memory_error: true,
+            wall_s: wall0.elapsed().as_secs_f64(),
+            iterations: 0,
+        };
+    };
+
+    let rank_of: std::collections::HashMap<usize, usize> =
+        spec.adapters.iter().map(|a| (a.id, a.rank)).collect();
+    let mut requests: Vec<Request> = trace
+        .iter()
+        .map(|a| {
+            Request::new(
+                a.request_id,
+                a.adapter_id,
+                rank_of.get(&a.adapter_id).copied().unwrap_or(0),
+                a.time_s,
+                a.input_len,
+                a.output_len,
+            )
+        })
+        .collect();
+
+    let mut waiting: VecDeque<usize> = VecDeque::new();
+    let mut prefill_queue: VecDeque<usize> = VecDeque::new();
+    let mut running: Vec<usize> = Vec::new();
+    let mut ledger = KvLedger::new(cfg.mem.clone(), pool);
+    let mut cache = SimAdapterCache::new(cfg.a_max);
+    let mut metrics = MetricsCollector::default();
+    let max_running = cfg.max_num_seqs.min(calib.max_decode_bucket());
+    let limits = AdmissionLimits {
+        max_running,
+        max_prefill_tokens: 1024,
+        unified: cfg.mem.unified,
+    };
+    let adapters_total = spec.adapters.len();
+    let max_prefill = calib.max_prefill_bucket();
+
+    let mut sim_time = 0.0f64;
+    let mut next_arrival = 0usize;
+    let mut iterations = 0usize;
+
+    while sim_time < spec.horizon_s {
+        iterations += 1;
+        while next_arrival < trace.len() && trace[next_arrival].time_s <= sim_time {
+            let a = &trace[next_arrival];
+            metrics.on_arrival(a.input_len, a.output_len);
+            waiting.push_back(a.request_id);
+            next_arrival += 1;
+        }
+
+        // Scheduler (predicted cost instead of measured).
+        let batch_now = running.len();
+        let a_b_now = distinct_adapters(&running, &requests);
+        let pending_now = waiting.len();
+        let adm = scan_admissions(
+            &mut waiting,
+            &mut requests,
+            &mut ledger,
+            &mut cache,
+            running.len() + prefill_queue.len(),
+            limits,
+        );
+        let sched_s = calib.lat_sched(batch_now, pending_now, a_b_now, adapters_total);
+
+        // Swap-ins: predicted load latency.
+        let mut load_s = 0.0;
+        for ev in &adm.loads {
+            load_s += calib.lat_load(ev.rank);
+            metrics.swap_ins += 1;
+        }
+        prefill_queue.extend(adm.admitted.iter().copied());
+
+        if let Some(id) = prefill_queue.pop_front() {
+            let r = &mut requests[id];
+            let prompt_len = (r.input_len + r.generated).min(max_prefill);
+            let bucket = calib.prefill_bucket(prompt_len.max(1));
+            let exec_s = calib.lat_prefill(bucket);
+            sim_time += sched_s + load_s + exec_s + calib.iter_overhead_s;
+            let first_time = r.first_token_s.is_none();
+            r.generated += 1;
+            r.context_len += 1;
+            r.state = ReqState::Running;
+            r.first_token_s.get_or_insert(sim_time);
+            r.token_times.push(sim_time);
+            let input_len = r.input_len;
+            if first_time {
+                metrics.on_prefill(input_len, sim_time);
+            }
+            metrics.on_decode_tokens(1, sim_time);
+            running.push(id);
+            finish_if_done(id, sim_time, &mut requests, &mut running, &mut ledger, &mut cache, &mut metrics);
+        } else if !running.is_empty() {
+            let preempted =
+                grow_or_preempt(&mut running, &mut requests, &mut ledger, &mut cache, limits.unified);
+            for id in preempted {
+                metrics.preemptions += 1;
+                waiting.push_front(id);
+            }
+            if running.is_empty() {
+                sim_time += sched_s + load_s + 1e-4;
+                continue;
+            }
+            let batch = running.len();
+            let a_b = distinct_adapters(&running, &requests);
+            let exec_s = calib.lat_model(batch, calib.decode_bucket(batch), a_b);
+            sim_time += sched_s + load_s + exec_s + calib.iter_overhead_s;
+            let ids = running.clone();
+            for &id in &ids {
+                let r = &mut requests[id];
+                r.generated += 1;
+                r.context_len += 1;
+                r.token_times.push(sim_time);
+            }
+            metrics.on_decode_tokens(ids.len(), sim_time);
+            for id in ids {
+                finish_if_done(id, sim_time, &mut requests, &mut running, &mut ledger, &mut cache, &mut metrics);
+            }
+        } else {
+            match trace.get(next_arrival).map(|a| a.time_s) {
+                Some(t) if t < spec.horizon_s => sim_time += (t - sim_time).max(0.0) + 1e-6,
+                _ => break,
+            }
+        }
+        metrics.sample_queues(sim_time, running.len() + prefill_queue.len(), waiting.len());
+    }
+
+    let report = metrics.report(spec.horizon_s, spec.incoming_token_rate());
+    TwinResult {
+        report: Some(report),
+        memory_error: false,
+        wall_s: wall0.elapsed().as_secs_f64(),
+        iterations,
+    }
+}
+
+fn distinct_adapters(running: &[usize], requests: &[Request]) -> usize {
+    running
+        .iter()
+        .filter(|&&id| requests[id].rank > 0)
+        .map(|&id| requests[id].adapter_id)
+        .collect::<std::collections::HashSet<_>>()
+        .len()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finish_if_done(
+    id: usize,
+    t: f64,
+    requests: &mut [Request],
+    running: &mut Vec<usize>,
+    ledger: &mut KvLedger,
+    cache: &mut SimAdapterCache,
+    metrics: &mut MetricsCollector,
+) {
+    if !requests[id].is_done() {
+        return;
+    }
+    let r = &mut requests[id];
+    r.state = ReqState::Finished;
+    r.finish_s = Some(t);
+    let (ttft, itl) = (r.ttft(), r.itl_mean());
+    let (adapter, rank) = (r.adapter_id, r.rank);
+    ledger.release(id);
+    if rank > 0 {
+        cache.release(adapter);
+    }
+    running.retain(|&x| x != id);
+    metrics.on_finish(ttft, itl);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadSpec;
+
+    fn quick_spec(n: usize, rate: f64) -> WorkloadSpec {
+        WorkloadSpec::fixed_len(WorkloadSpec::homogeneous(n, 8, rate), 64, 32, 20.0, 5)
+    }
+
+    #[test]
+    fn twin_serves_light_workload_without_starvation() {
+        let cfg = EngineConfig { a_max: 16, ..Default::default() };
+        let calib = Calibration::default();
+        let res = run(&cfg, &calib, &quick_spec(8, 0.2), LengthVariant::Original);
+        let rep = res.report.unwrap();
+        assert!(rep.completed > 0, "completed {}", rep.completed);
+        assert!(!rep.starved, "{}", rep.summary());
+        assert!(res.wall_s < 2.0);
+    }
+
+    #[test]
+    fn twin_detects_starvation_under_overload() {
+        let cfg = EngineConfig { a_max: 8, ..Default::default() };
+        let calib = Calibration::default();
+        // 256 adapters at 0.5 req/s ≈ 12k tok/s incoming — far beyond capacity.
+        let res = run(&cfg, &calib, &quick_spec(256, 0.5), LengthVariant::Original);
+        let rep = res.report.unwrap();
+        assert!(rep.starved, "{}", rep.summary());
+    }
+
+    #[test]
+    fn twin_reports_memory_error_for_over_reservation() {
+        let mut cfg = EngineConfig::default();
+        cfg.a_max = 384;
+        cfg.s_max_rank = 32;
+        let res = run(&cfg, &Calibration::default(), &quick_spec(8, 0.1), LengthVariant::Original);
+        assert!(res.memory_error);
+        assert!(res.report.is_none());
+    }
+
+    #[test]
+    fn mean_variant_close_to_original_for_fixed_lengths() {
+        // With Fixed length dists the two variants see identical traces.
+        let cfg = EngineConfig { a_max: 16, ..Default::default() };
+        let calib = Calibration::default();
+        let spec = quick_spec(8, 0.2);
+        let a = run(&cfg, &calib, &spec, LengthVariant::Original).report.unwrap();
+        let b = run(&cfg, &calib, &spec, LengthVariant::Mean).report.unwrap();
+        assert!((a.throughput_tok_s - b.throughput_tok_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_increases_with_adapters_before_saturation() {
+        // s_max_rank must match the workload's max rank (8): at rank 32 the
+        // default pool cannot hold 64 reserved slots (a real memory error).
+        let cfg = EngineConfig { a_max: 64, s_max_rank: 8, ..Default::default() };
+        let calib = Calibration::default();
+        let t8 = run(&cfg, &calib, &quick_spec(8, 0.2), LengthVariant::Original)
+            .report
+            .unwrap()
+            .throughput_tok_s;
+        let t32 = run(&cfg, &calib, &quick_spec(32, 0.2), LengthVariant::Original)
+            .report
+            .unwrap()
+            .throughput_tok_s;
+        assert!(t32 > t8 * 2.0, "t8={t8} t32={t32}");
+    }
+}

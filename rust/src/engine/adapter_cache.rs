@@ -1,0 +1,236 @@
+//! Adapter caching, split like the KV side into simulated and physical:
+//!
+//! - [`SimAdapterCache`] — the *simulated GPU* resident set, bounded by the
+//!   paper's `A_max`, with LRU swap of idle adapters.  Shared engine/DT, so
+//!   swap behaviour (and therefore modeled PCIe load latency) is identical.
+//! - [`PhysBank`] — engine-only mapping of adapter → physical device bank
+//!   slot backing the actual SGMV compute (slot 0 is the reserved zero
+//!   adapter for backbone-only rows).
+
+use std::collections::HashMap;
+
+/// A swap-in event (for load-latency accounting).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadEvent {
+    pub adapter_id: usize,
+    pub rank: usize,
+}
+
+/// Simulated resident adapter set with LRU eviction of idle adapters.
+#[derive(Debug, Clone)]
+pub struct SimAdapterCache {
+    a_max: usize,
+    /// adapter -> (rank, last-use tick, active request count)
+    resident: HashMap<usize, AdapterState>,
+    tick: u64,
+}
+
+#[derive(Debug, Clone)]
+struct AdapterState {
+    rank: usize,
+    last_use: u64,
+    active: usize,
+}
+
+impl SimAdapterCache {
+    pub fn new(a_max: usize) -> SimAdapterCache {
+        SimAdapterCache { a_max, resident: HashMap::new(), tick: 0 }
+    }
+
+    pub fn a_max(&self) -> usize {
+        self.a_max
+    }
+
+    pub fn loaded(&self, adapter: usize) -> bool {
+        self.resident.contains_key(&adapter)
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// Can `adapter` start a request now — i.e. is it loaded, or is there
+    /// room (possibly after evicting an idle adapter)?
+    pub fn admissible(&self, adapter: usize) -> bool {
+        self.loaded(adapter)
+            || self.resident.len() < self.a_max
+            || self.resident.values().any(|s| s.active == 0)
+    }
+
+    /// Acquire the adapter for a starting request.  Returns
+    /// `Some(Some(load))` if a swap-in occurred, `Some(None)` if already
+    /// resident, `None` if not admissible (A_max reached, all busy).
+    /// `evicted` receives the ranks of evicted adapters (unified-memory
+    /// callers release their KV charge).
+    pub fn acquire(
+        &mut self,
+        adapter: usize,
+        rank: usize,
+        evicted: &mut Vec<(usize, usize)>,
+    ) -> Option<Option<LoadEvent>> {
+        self.tick += 1;
+        if let Some(s) = self.resident.get_mut(&adapter) {
+            s.active += 1;
+            s.last_use = self.tick;
+            return Some(None);
+        }
+        if self.resident.len() >= self.a_max {
+            // Evict the least-recently-used idle adapter.
+            let victim = self
+                .resident
+                .iter()
+                .filter(|(_, s)| s.active == 0)
+                .min_by_key(|(_, s)| s.last_use)
+                .map(|(&id, s)| (id, s.rank));
+            match victim {
+                Some((id, r)) => {
+                    self.resident.remove(&id);
+                    evicted.push((id, r));
+                }
+                None => return None,
+            }
+        }
+        self.resident
+            .insert(adapter, AdapterState { rank, last_use: self.tick, active: 1 });
+        Some(Some(LoadEvent { adapter_id: adapter, rank }))
+    }
+
+    /// Release one active use (request finished or preempted).  The adapter
+    /// stays resident (LRU candidate) until evicted by a later acquire.
+    pub fn release(&mut self, adapter: usize) {
+        if let Some(s) = self.resident.get_mut(&adapter) {
+            s.active = s.active.saturating_sub(1);
+        }
+    }
+
+    pub fn active_count(&self, adapter: usize) -> usize {
+        self.resident.get(&adapter).map(|s| s.active).unwrap_or(0)
+    }
+}
+
+/// Physical device-bank slot allocator (engine-only).  Slot 0 is reserved
+/// for the zero adapter; the rest are LRU-managed.
+#[derive(Debug)]
+pub struct PhysBank {
+    slots: usize,
+    /// adapter -> slot
+    map: HashMap<usize, usize>,
+    /// slot -> (adapter, last-use tick); index 0 unused.
+    owner: Vec<Option<(usize, u64)>>,
+    tick: u64,
+}
+
+/// Result of a physical slot acquisition.
+#[derive(Debug, PartialEq)]
+pub enum PhysSlot {
+    /// Adapter already resident in this slot.
+    Hit(usize),
+    /// Adapter must be written into this (newly assigned) slot.
+    Miss(usize),
+    /// No slot free (all pinned by the current batch).
+    Full,
+}
+
+impl PhysBank {
+    pub fn new(slots: usize) -> PhysBank {
+        PhysBank { slots, map: HashMap::new(), owner: vec![None; slots], tick: 0 }
+    }
+
+    pub fn zero_slot() -> usize {
+        0
+    }
+
+    /// Get the slot for `adapter`, assigning (and possibly evicting an
+    /// adapter not in `pinned`) on miss.
+    pub fn acquire(&mut self, adapter: usize, pinned: &dyn Fn(usize) -> bool) -> PhysSlot {
+        self.tick += 1;
+        if let Some(&slot) = self.map.get(&adapter) {
+            self.owner[slot] = Some((adapter, self.tick));
+            return PhysSlot::Hit(slot);
+        }
+        // Free slot?
+        for slot in 1..self.slots {
+            if self.owner[slot].is_none() {
+                self.map.insert(adapter, slot);
+                self.owner[slot] = Some((adapter, self.tick));
+                return PhysSlot::Miss(slot);
+            }
+        }
+        // LRU-evict an unpinned resident.
+        let victim = (1..self.slots)
+            .filter_map(|s| self.owner[s].map(|(a, t)| (s, a, t)))
+            .filter(|&(_, a, _)| !pinned(a))
+            .min_by_key(|&(_, _, t)| t);
+        match victim {
+            Some((slot, old, _)) => {
+                self.map.remove(&old);
+                self.map.insert(adapter, slot);
+                self.owner[slot] = Some((adapter, self.tick));
+                PhysSlot::Miss(slot)
+            }
+            None => PhysSlot::Full,
+        }
+    }
+
+    pub fn slot_of(&self, adapter: usize) -> Option<usize> {
+        self.map.get(&adapter).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_cache_loads_up_to_a_max() {
+        let mut c = SimAdapterCache::new(2);
+        let mut ev = vec![];
+        assert_eq!(
+            c.acquire(1, 8, &mut ev),
+            Some(Some(LoadEvent { adapter_id: 1, rank: 8 }))
+        );
+        assert_eq!(c.acquire(2, 16, &mut ev).unwrap().unwrap().adapter_id, 2);
+        // Both busy: a third adapter is not admissible.
+        assert!(c.acquire(3, 8, &mut ev).is_none());
+        assert!(!c.admissible(3));
+        assert!(ev.is_empty());
+    }
+
+    #[test]
+    fn sim_cache_evicts_lru_idle() {
+        let mut c = SimAdapterCache::new(2);
+        let mut ev = vec![];
+        c.acquire(1, 8, &mut ev);
+        c.acquire(2, 16, &mut ev);
+        c.release(1); // 1 idle now
+        assert!(c.admissible(3));
+        let load = c.acquire(3, 32, &mut ev).unwrap().unwrap();
+        assert_eq!(load.adapter_id, 3);
+        assert_eq!(ev, vec![(1, 8)]);
+        assert!(!c.loaded(1));
+        assert!(c.loaded(2) && c.loaded(3));
+    }
+
+    #[test]
+    fn sim_cache_hit_costs_nothing() {
+        let mut c = SimAdapterCache::new(2);
+        let mut ev = vec![];
+        c.acquire(1, 8, &mut ev);
+        assert_eq!(c.acquire(1, 8, &mut ev), Some(None));
+        assert_eq!(c.active_count(1), 2);
+    }
+
+    #[test]
+    fn phys_bank_hit_miss_full() {
+        let mut b = PhysBank::new(3); // slots 1, 2 usable
+        assert_eq!(b.acquire(10, &|_| false), PhysSlot::Miss(1));
+        assert_eq!(b.acquire(10, &|_| false), PhysSlot::Hit(1));
+        assert_eq!(b.acquire(11, &|_| false), PhysSlot::Miss(2));
+        // All pinned → Full.
+        assert_eq!(b.acquire(12, &|_| true), PhysSlot::Full);
+        // Unpinned → LRU eviction of adapter 10 (slot 1 older).
+        assert_eq!(b.acquire(12, &|a| a == 11), PhysSlot::Miss(1));
+        assert_eq!(b.slot_of(10), None);
+        assert_eq!(b.slot_of(12), Some(1));
+    }
+}

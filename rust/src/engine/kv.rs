@@ -1,0 +1,263 @@
+//! KV-cache management.
+//!
+//! Two distinct concerns, deliberately separated:
+//!
+//! - [`KvLedger`] — the *simulated GPU memory* ledger in token/block units
+//!   (vLLM paged-attention semantics: greedy block allocation, preemption
+//!   when the pool is exhausted).  Shared by the engine and the Digital
+//!   Twin, so starvation/OOM dynamics are identical by construction and
+//!   only *timing* differs.
+//! - [`HostKv`] — the *real* host-side KV data backing the PJRT compute
+//!   (per-request pages of f32 keys/values, gathered into dense window
+//!   tiles per decode step).  Engine-only.
+
+use crate::config::MemoryConfig;
+
+/// Simulated paged KV allocator.
+#[derive(Debug, Clone)]
+pub struct KvLedger {
+    mem: MemoryConfig,
+    /// Total pool size in blocks (after the static adapter reservation).
+    total_blocks: usize,
+    /// Blocks currently held, keyed by request id.
+    held: std::collections::HashMap<usize, usize>,
+    free_blocks: usize,
+    /// Dynamic adapter charge in unified (S-LoRA) mode, in tokens.
+    unified_adapter_tokens: f64,
+}
+
+impl KvLedger {
+    /// `kv_pool_tokens` is the pool after static reservation (engine config
+    /// already subtracted the A_max·S_max region in vLLM mode).
+    pub fn new(mem: MemoryConfig, kv_pool_tokens: usize) -> KvLedger {
+        let total_blocks = kv_pool_tokens / mem.block_tokens;
+        KvLedger {
+            mem,
+            total_blocks,
+            held: Default::default(),
+            free_blocks: total_blocks,
+            unified_adapter_tokens: 0.0,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.mem.block_tokens
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free_blocks
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.mem.block_tokens)
+    }
+
+    /// In unified (S-LoRA) mode, loading/unloading adapters consumes pool
+    /// dynamically.  Returns false if the charge cannot fit.
+    pub fn charge_adapter(&mut self, rank: usize) -> bool {
+        let blocks = self.blocks_for(self.mem.adapter_tokens(rank).ceil() as usize);
+        if blocks > self.free_blocks {
+            return false;
+        }
+        self.free_blocks -= blocks;
+        self.unified_adapter_tokens += self.mem.adapter_tokens(rank);
+        true
+    }
+
+    pub fn release_adapter(&mut self, rank: usize) {
+        let blocks = self.blocks_for(self.mem.adapter_tokens(rank).ceil() as usize);
+        self.free_blocks = (self.free_blocks + blocks).min(self.total_blocks);
+        self.unified_adapter_tokens =
+            (self.unified_adapter_tokens - self.mem.adapter_tokens(rank)).max(0.0);
+    }
+
+    /// Grow request `id` to `tokens` total tokens.  Greedy: allocates only
+    /// the missing blocks.  Returns false (no change) if the pool cannot
+    /// satisfy the growth — the caller must preempt someone and retry.
+    pub fn grow_to(&mut self, id: usize, tokens: usize) -> bool {
+        let need = self.blocks_for(tokens);
+        let have = self.held.get(&id).copied().unwrap_or(0);
+        if need <= have {
+            return true;
+        }
+        let delta = need - have;
+        if delta > self.free_blocks {
+            return false;
+        }
+        self.free_blocks -= delta;
+        *self.held.entry(id).or_insert(0) = need;
+        true
+    }
+
+    /// Free all blocks of request `id` (finish or preemption).
+    pub fn release(&mut self, id: usize) {
+        if let Some(b) = self.held.remove(&id) {
+            self.free_blocks += b;
+        }
+    }
+
+    pub fn held_blocks(&self, id: usize) -> usize {
+        self.held.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Used blocks across all requests.
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free_blocks
+    }
+}
+
+/// Real host-side KV pages for one request: `[token, layer, d]` layout for
+/// keys and values separately (append-friendly; gathered per layer when
+/// building the decode window).
+#[derive(Debug, Default, Clone)]
+pub struct RequestKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub tokens: usize,
+}
+
+impl RequestKv {
+    /// Append one token's K/V rows given `[L, d]`-flattened new rows.
+    pub fn append(&mut self, n_layers: usize, d: usize, new_k: &[f32], new_v: &[f32]) {
+        debug_assert_eq!(new_k.len(), n_layers * d);
+        self.k.extend_from_slice(new_k);
+        self.v.extend_from_slice(new_v);
+        self.tokens += 1;
+    }
+
+    /// Bulk-load from a prefill output with layout `[L, S, d]` (only the
+    /// first `true_len` positions are valid).
+    pub fn load_prefill(
+        &mut self,
+        n_layers: usize,
+        d: usize,
+        bucket: usize,
+        true_len: usize,
+        k: &[f32],
+        v: &[f32],
+    ) {
+        self.k.clear();
+        self.v.clear();
+        self.k.resize(true_len * n_layers * d, 0.0);
+        self.v.resize(true_len * n_layers * d, 0.0);
+        for t in 0..true_len {
+            for l in 0..n_layers {
+                let src = (l * bucket + t) * d;
+                let dst = (t * n_layers + l) * d;
+                self.k[dst..dst + d].copy_from_slice(&k[src..src + d]);
+                self.v[dst..dst + d].copy_from_slice(&v[src..src + d]);
+            }
+        }
+        self.tokens = true_len;
+    }
+
+    pub fn clear(&mut self) {
+        self.k.clear();
+        self.v.clear();
+        self.tokens = 0;
+    }
+
+    /// Copy the last `n` tokens of layer `l` into `dst` (length `n * d`),
+    /// the dense window tile for the decode kernel.
+    pub fn gather_window(&self, layer: usize, n_layers: usize, d: usize, n: usize, dst_k: &mut [f32], dst_v: &mut [f32]) {
+        debug_assert!(n <= self.tokens);
+        let start = self.tokens - n;
+        for (i, t) in (start..self.tokens).enumerate() {
+            let src = (t * n_layers + layer) * d;
+            dst_k[i * d..(i + 1) * d].copy_from_slice(&self.k[src..src + d]);
+            dst_v[i * d..(i + 1) * d].copy_from_slice(&self.v[src..src + d]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ledger(pool_tokens: usize) -> KvLedger {
+        KvLedger::new(MemoryConfig { total_tokens: pool_tokens, ..Default::default() }, pool_tokens)
+    }
+
+    #[test]
+    fn grow_allocates_incrementally() {
+        let mut l = ledger(160); // 10 blocks of 16
+        assert!(l.grow_to(1, 10)); // 1 block
+        assert_eq!(l.free_blocks(), 9);
+        assert!(l.grow_to(1, 16)); // still 1 block
+        assert_eq!(l.free_blocks(), 9);
+        assert!(l.grow_to(1, 17)); // 2 blocks
+        assert_eq!(l.free_blocks(), 8);
+    }
+
+    #[test]
+    fn exhaustion_refuses_without_change() {
+        let mut l = ledger(32); // 2 blocks
+        assert!(l.grow_to(1, 32));
+        assert_eq!(l.free_blocks(), 0);
+        assert!(!l.grow_to(2, 1));
+        assert_eq!(l.held_blocks(2), 0);
+        l.release(1);
+        assert_eq!(l.free_blocks(), 2);
+        assert!(l.grow_to(2, 1));
+    }
+
+    #[test]
+    fn unified_adapter_charge() {
+        let mut l = ledger(160);
+        assert!(l.charge_adapter(32)); // 128 tokens = 8 blocks
+        assert_eq!(l.free_blocks(), 2);
+        assert!(!l.charge_adapter(32));
+        l.release_adapter(32);
+        assert_eq!(l.free_blocks(), 10);
+    }
+
+    #[test]
+    fn request_kv_append_and_gather() {
+        let (nl, d) = (2, 3);
+        let mut kv = RequestKv::default();
+        for t in 0..5 {
+            let row_k: Vec<f32> = (0..nl * d).map(|i| (t * 100 + i) as f32).collect();
+            let row_v: Vec<f32> = row_k.iter().map(|x| -x).collect();
+            kv.append(nl, d, &row_k, &row_v);
+        }
+        assert_eq!(kv.tokens, 5);
+        let mut wk = vec![0.0; 2 * d];
+        let mut wv = vec![0.0; 2 * d];
+        kv.gather_window(1, nl, d, 2, &mut wk, &mut wv);
+        // last two tokens (3, 4), layer 1 → values 3xx+3.., 4xx+3..
+        assert_eq!(wk[0], 303.0);
+        assert_eq!(wk[d], 403.0);
+        assert_eq!(wv[0], -303.0);
+    }
+
+    #[test]
+    fn prefill_layout_conversion() {
+        let (nl, d, bucket, tl) = (2, 2, 4, 3);
+        // k[l][s][d] = l*1000 + s*10 + d
+        let mut k = vec![0.0; nl * bucket * d];
+        for l in 0..nl {
+            for s in 0..bucket {
+                for x in 0..d {
+                    k[(l * bucket + s) * d + x] = (l * 1000 + s * 10 + x) as f32;
+                }
+            }
+        }
+        let v: Vec<f32> = k.iter().map(|x| x + 0.5).collect();
+        let mut kv = RequestKv::default();
+        kv.load_prefill(nl, d, bucket, tl, &k, &v);
+        assert_eq!(kv.tokens, 3);
+        // token 1, layer 1 starts at (1*nl+1)*d
+        assert_eq!(kv.k[(1 * nl + 1) * d], 1010.0);
+        let mut wk = vec![0.0; 3 * d];
+        let mut wv = vec![0.0; 3 * d];
+        kv.gather_window(0, nl, d, 3, &mut wk, &mut wv);
+        assert_eq!(wk[0], 0.0); // token0 layer0 x0
+        assert_eq!(wk[d], 10.0); // token1 layer0
+        assert_eq!(wk[2 * d], 20.0);
+    }
+}

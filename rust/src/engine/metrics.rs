@@ -1,0 +1,149 @@
+//! Metrics collection shared by the engine and the Digital Twin so reports
+//! are directly comparable (Table 1 / Figs. 8-9).
+
+use crate::util::stats;
+
+/// A periodic sample of queue state (Fig. 9 right panel).
+#[derive(Debug, Clone, Copy)]
+pub struct QueueSample {
+    pub time_s: f64,
+    pub running: usize,
+    pub waiting: usize,
+}
+
+/// Accumulates serving metrics over one run.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsCollector {
+    /// Tokens that *arrived* (input + expected output of injected requests).
+    /// The starvation criterion compares throughput against the realized
+    /// incoming rate, not the configured one, so short horizons with
+    /// Poisson variance do not mislabel feasible workloads.
+    pub arrived_tokens: usize,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+    pub completed: usize,
+    pub preemptions: usize,
+    pub swap_ins: usize,
+    pub ttfts: Vec<f64>,
+    pub itls: Vec<f64>,
+    pub queue_trace: Vec<QueueSample>,
+    /// Throughput measured per time bucket (for time-series plots).
+    pub token_stamps: Vec<(f64, usize)>,
+}
+
+impl MetricsCollector {
+    pub fn on_arrival(&mut self, input_len: usize, output_len: usize) {
+        self.arrived_tokens += input_len + output_len;
+    }
+
+    pub fn on_prefill(&mut self, input_len: usize, time_s: f64) {
+        self.input_tokens += input_len;
+        self.token_stamps.push((time_s, input_len));
+    }
+
+    pub fn on_decode_tokens(&mut self, n: usize, time_s: f64) {
+        self.output_tokens += n;
+        self.token_stamps.push((time_s, n));
+    }
+
+    pub fn on_finish(&mut self, ttft: Option<f64>, itl: Option<f64>) {
+        self.completed += 1;
+        if let Some(t) = ttft {
+            self.ttfts.push(t);
+        }
+        if let Some(i) = itl {
+            self.itls.push(i);
+        }
+    }
+
+    pub fn sample_queues(&mut self, time_s: f64, running: usize, waiting: usize) {
+        self.queue_trace.push(QueueSample { time_s, running, waiting });
+    }
+
+    pub fn report(&self, horizon_s: f64, configured_rate: f64) -> Report {
+        let total = self.input_tokens + self.output_tokens;
+        let throughput = total as f64 / horizon_s;
+        let realized = self.arrived_tokens as f64 / horizon_s;
+        // Fall back to the configured rate when arrivals were not recorded.
+        let incoming_token_rate = if self.arrived_tokens > 0 { realized } else { configured_rate };
+        Report {
+            throughput_tok_s: throughput,
+            input_tokens: self.input_tokens,
+            output_tokens: self.output_tokens,
+            completed: self.completed,
+            preemptions: self.preemptions,
+            swap_ins: self.swap_ins,
+            ttft_mean_s: stats::mean(&self.ttfts),
+            ttft_p95_s: stats::percentile(&self.ttfts, 95.0),
+            itl_mean_s: stats::mean(&self.itls),
+            itl_p95_s: stats::percentile(&self.itls, 95.0),
+            incoming_token_rate,
+            starved: throughput < 0.9 * incoming_token_rate,
+            queue_trace: self.queue_trace.clone(),
+        }
+    }
+}
+
+/// Final run report.  `starved` follows the paper's criterion: measured
+/// throughput below 90% of the incoming token rate.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub throughput_tok_s: f64,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+    pub completed: usize,
+    pub preemptions: usize,
+    pub swap_ins: usize,
+    pub ttft_mean_s: f64,
+    pub ttft_p95_s: f64,
+    pub itl_mean_s: f64,
+    pub itl_p95_s: f64,
+    pub incoming_token_rate: f64,
+    pub starved: bool,
+    /// Periodic (time, running, waiting) samples (Fig. 9).
+    pub queue_trace: Vec<QueueSample>,
+}
+
+impl Report {
+    pub fn summary(&self) -> String {
+        format!(
+            "thr={:.1} tok/s (in={} out={}) done={} ttft={:.1}ms itl={:.2}ms preempt={} swaps={}{}",
+            self.throughput_tok_s,
+            self.input_tokens,
+            self.output_tokens,
+            self.completed,
+            self.ttft_mean_s * 1e3,
+            self.itl_mean_s * 1e3,
+            self.preemptions,
+            self.swap_ins,
+            if self.starved { " STARVED" } else { "" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_and_starvation() {
+        let mut m = MetricsCollector::default();
+        m.on_prefill(100, 1.0);
+        m.on_decode_tokens(50, 2.0);
+        let r = m.report(10.0, 20.0);
+        assert!((r.throughput_tok_s - 15.0).abs() < 1e-12);
+        assert!(r.starved); // 15 < 0.9*20
+        let r2 = m.report(10.0, 16.0);
+        assert!(!r2.starved); // 15 > 0.9*16=14.4
+    }
+
+    #[test]
+    fn finish_records_latencies() {
+        let mut m = MetricsCollector::default();
+        m.on_finish(Some(0.5), Some(0.01));
+        m.on_finish(None, None);
+        let r = m.report(1.0, 0.0);
+        assert_eq!(r.completed, 2);
+        assert!((r.ttft_mean_s - 0.5).abs() < 1e-12);
+    }
+}

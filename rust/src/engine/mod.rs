@@ -1,0 +1,505 @@
+//! The serving engine (`adapterd`): a vLLM-like multi-LoRA continuous-
+//! batching server and the repository's stand-in for the paper's "real
+//! system" (vLLM v0.8.5 on H100 — see DESIGN.md §1 for the substitution
+//! argument).
+//!
+//! Per iteration: inject arrivals → scheduler (admission scan, shared with
+//! the Digital Twin) → adapter swap-ins → execute (PJRT prefill or decode
+//! on the AOT-compiled pico model) → bookkeeping.  Time is a **virtual
+//! clock**: simulated time advances by the *measured wall time* of each
+//! component, so saturation dynamics match a real deployment without idle
+//! waiting, and a 60 s horizon plays back in however long the compute
+//! takes.
+
+pub mod adapter_cache;
+pub mod kv;
+pub mod metrics;
+pub mod profiler;
+pub mod request;
+pub mod scheduler;
+
+use crate::config::EngineConfig;
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Rng;
+use crate::workload::{Arrival, WorkloadSpec};
+use adapter_cache::{PhysBank, PhysSlot, SimAdapterCache};
+use anyhow::Result;
+use kv::KvLedger;
+use metrics::{MetricsCollector, Report};
+use profiler::{IterRecord, Profiler};
+use request::{ReqState, Request};
+use scheduler::{scan_admissions, AdmissionLimits};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Outcome of one engine run.
+pub struct RunResult {
+    /// None on memory error (the paper's infeasible configurations).
+    pub report: Option<Report>,
+    pub memory_error: bool,
+    pub profiler: Profiler,
+    /// Wall-clock time the run took (Table 2 compares DT time against this).
+    pub wall_s: f64,
+}
+
+impl RunResult {
+    pub fn memory_error(wall_s: f64) -> RunResult {
+        RunResult { report: None, memory_error: true, profiler: Profiler::default(), wall_s }
+    }
+}
+
+/// One simulated GPU running the AOT-compiled model via PJRT.
+pub struct Engine<'rt> {
+    pub cfg: EngineConfig,
+    rt: &'rt mut ModelRuntime,
+    phys_bank: Option<PhysBank>,
+    /// Bucket used by the previous decode step.  Stale window content is
+    /// harmless (the attention kernel masks positions >= ctx per row), so
+    /// buffers are only re-zeroed when the bucket changes (hygiene for the
+    /// shifted row offsets); see the §Perf log in EXPERIMENTS.md.
+    last_bucket: usize,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(cfg: EngineConfig, rt: &'rt mut ModelRuntime) -> Engine<'rt> {
+        Engine { cfg, rt, phys_bank: None, last_bucket: 0 }
+    }
+
+    /// Serve the workload to completion of the horizon.
+    pub fn run(&mut self, spec: &WorkloadSpec) -> Result<RunResult> {
+        let trace = spec.trace();
+        self.run_trace(spec, &trace)
+    }
+
+    /// Serve an explicit arrival trace (used by calibration and by the
+    /// Digital-Twin fidelity experiments so engine and twin consume the
+    /// *same* arrivals).
+    pub fn run_trace(&mut self, spec: &WorkloadSpec, trace: &[Arrival]) -> Result<RunResult> {
+        let wall0 = Instant::now();
+        // Static reservation check — the paper's "GPU memory error".
+        let Some(pool) = self.cfg.kv_pool_tokens() else {
+            return Ok(RunResult::memory_error(wall0.elapsed().as_secs_f64()));
+        };
+        let mut st = SimState::new(&self.cfg, pool, trace, spec);
+        let meta = self.rt.meta.clone();
+        let max_running = self.cfg.max_num_seqs.min(self.rt.max_decode_bucket());
+        let limits = AdmissionLimits {
+            max_running,
+            max_prefill_tokens: 1024,
+            unified: self.cfg.mem.unified,
+        };
+        let max_prefill = self.rt.max_prefill_bucket();
+
+        // Reusable window buffers sized for the largest decode bucket.
+        // do_decode overwrites exactly the valid prefix of each row and
+        // zeroes only the stale tail (perf pass: a full `fill(0.0)` of the
+        // 2·L·B·W·d buffer dominated small-batch decode latency).
+        let max_bucket = self.rt.max_decode_bucket();
+        let win_elems = meta.n_layers * max_bucket * meta.window * meta.d_model;
+        let mut k_win = vec![0f32; win_elems];
+        let mut v_win = vec![0f32; win_elems];
+        self.last_bucket = 0;
+
+        while st.sim_time < spec.horizon_s {
+            st.inject_arrivals();
+
+            // ---- Scheduler (measured) -----------------------------------
+            let t0 = Instant::now();
+            let active = st.active_count();
+            let adm = scan_admissions(
+                &mut st.waiting,
+                &mut st.requests,
+                &mut st.ledger,
+                &mut st.cache,
+                active,
+                limits,
+            );
+            let sched_s = t0.elapsed().as_secs_f64();
+
+            // ---- Adapter swap-ins ---------------------------------------
+            let mut load_s = 0.0;
+            let n_loads = adm.loads.len();
+            for ev in &adm.loads {
+                let modeled = self.modeled_load_s(ev.rank);
+                let upload_s = self.physical_load(ev.adapter_id, ev.rank)?;
+                st.profiler.record_load(ev.rank, modeled, upload_s);
+                st.metrics.swap_ins += 1;
+                load_s += modeled + upload_s;
+            }
+            st.prefill_queue.extend(adm.admitted.iter().copied());
+
+            // ---- Execute -------------------------------------------------
+            if let Some(id) = st.prefill_queue.pop_front() {
+                // Prefill one request per iteration (vLLM v0.5 alternates
+                // prefill-priority iterations).
+                let t1 = Instant::now();
+                let exec_s = self.do_prefill(id, &mut st, max_prefill)?;
+                let wall = t1.elapsed().as_secs_f64().max(exec_s);
+                st.advance(sched_s + load_s + wall);
+                let r = &st.requests[id];
+                st.profiler.record(IterRecord {
+                    sim_time_s: st.sim_time,
+                    batch: 0,
+                    pending: st.waiting.len(),
+                    adapters_in_batch: 1,
+                    adapters_total: st.adapters_total,
+                    sched_s,
+                    exec_s: wall,
+                    gather_s: 0.0,
+                    load_s,
+                    loads: n_loads,
+                    prefill: true,
+                    prefill_bucket: self
+                        .rt
+                        .prefill_bucket(r.kv.tokens.max(1))
+                        .unwrap_or(max_prefill),
+                });
+                // First token was produced by the prefill.
+                st.finish_or_continue(id);
+            } else if !st.running.is_empty() {
+                let preempted = scheduler::grow_or_preempt(
+                    &mut st.running,
+                    &mut st.requests,
+                    &mut st.ledger,
+                    &mut st.cache,
+                    limits.unified,
+                );
+                for id in preempted {
+                    st.metrics.preemptions += 1;
+                    st.waiting.push_front(id);
+                }
+                if st.running.is_empty() {
+                    st.advance(sched_s + load_s + 1e-4);
+                    continue;
+                }
+                let (exec_s, gather_s, batch, a_b) =
+                    self.do_decode(&mut st, &mut k_win, &mut v_win)?;
+                st.advance(sched_s + load_s + exec_s);
+                st.profiler.record(IterRecord {
+                    sim_time_s: st.sim_time,
+                    batch,
+                    pending: st.waiting.len(),
+                    adapters_in_batch: a_b,
+                    adapters_total: st.adapters_total,
+                    sched_s,
+                    exec_s,
+                    gather_s,
+                    load_s,
+                    loads: n_loads,
+                    prefill: false,
+                    prefill_bucket: 0,
+                });
+            } else {
+                // Idle: jump to the next arrival (or finish).
+                match st.next_arrival_time() {
+                    Some(t) if t < spec.horizon_s => {
+                        st.advance((t - st.sim_time).max(0.0) + 1e-6)
+                    }
+                    _ => break,
+                }
+            }
+            st.metrics
+                .sample_queues(st.sim_time, st.running.len() + st.prefill_queue.len(), st.waiting.len());
+        }
+
+        let report = st.metrics.report(spec.horizon_s, spec.incoming_token_rate());
+        Ok(RunResult {
+            report: Some(report),
+            memory_error: false,
+            profiler: st.profiler,
+            wall_s: wall0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Modeled CPU(or disk)→GPU transfer latency for an adapter of `rank`.
+    fn modeled_load_s(&self, rank: usize) -> f64 {
+        let base = rank as f64 * self.cfg.load_ms_per_rank / 1e3;
+        if self.cfg.preload_cpu {
+            base
+        } else {
+            base * self.cfg.load_disk_mult
+        }
+    }
+
+    /// Write the adapter's (synthetic, deterministic) weights into the
+    /// physical bank and re-upload.  Returns the measured upload seconds.
+    fn physical_load(&mut self, adapter_id: usize, rank: usize) -> Result<f64> {
+        let t0 = Instant::now();
+        // Pinning is resolved at batch-build time; during load any
+        // non-resident slot may be evicted.
+        if let PhysSlot::Miss(slot) = self.phys().acquire(adapter_id, &|_| false) {
+            self.rewrite_slot(adapter_id, rank, slot)?;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn phys(&mut self) -> &mut PhysBank {
+        // The physical bank lives alongside the runtime (one per engine).
+        // Lazily initialized to the runtime's slot count.
+        if self.phys_bank.is_none() {
+            self.phys_bank = Some(PhysBank::new(self.rt.meta.slots));
+        }
+        self.phys_bank.as_mut().unwrap()
+    }
+
+    fn do_prefill(&mut self, id: usize, st: &mut SimState, max_prefill: usize) -> Result<f64> {
+        let meta = self.rt.meta.clone();
+        let r = &st.requests[id];
+        let prompt = r.prompt_tokens(meta.vocab, max_prefill);
+        let true_len = prompt.len();
+        let bucket = self
+            .rt
+            .prefill_bucket(true_len)
+            .ok_or_else(|| anyhow::anyhow!("prompt {true_len} exceeds prefill buckets"))?;
+        let mut padded = prompt;
+        padded.resize(bucket, 0);
+        let slot = if r.rank == 0 {
+            PhysBank::zero_slot() as i32
+        } else {
+            self.phys().slot_of(r.adapter_id).unwrap_or(PhysBank::zero_slot()) as i32
+        };
+        let t0 = Instant::now();
+        let out = self.rt.prefill(bucket, &padded, true_len, slot)?;
+        let exec_s = t0.elapsed().as_secs_f64();
+        let r = &mut st.requests[id];
+        r.kv.load_prefill(meta.n_layers, meta.d_model, bucket, true_len, &out.k, &out.v);
+        r.last_token = out.next_token;
+        r.generated += 1;
+        r.context_len += 1;
+        r.state = ReqState::Running;
+        // Input tokens count toward throughput only on the first prefill;
+        // recompute after preemption is overhead, not progress.
+        let first_time = r.first_token_s.is_none();
+        r.first_token_s.get_or_insert(st.sim_time + exec_s);
+        r.token_times.push(st.sim_time + exec_s);
+        let input_len = r.input_len;
+        if first_time {
+            st.metrics.on_prefill(input_len, st.sim_time + exec_s);
+        }
+        st.metrics.on_decode_tokens(1, st.sim_time + exec_s);
+        st.running.push(id);
+        Ok(exec_s)
+    }
+
+    /// Run one decode step over the running batch.  Returns
+    /// (exec_s, gather_s, batch, adapters_in_batch).
+    fn do_decode(
+        &mut self,
+        st: &mut SimState,
+        k_win: &mut [f32],
+        v_win: &mut [f32],
+    ) -> Result<(f64, f64, usize, usize)> {
+        let meta = self.rt.meta.clone();
+        let (nl, d, w) = (meta.n_layers, meta.d_model, meta.window);
+        let batch = st.running.len();
+        let bucket = self
+            .rt
+            .decode_bucket(batch)
+            .ok_or_else(|| anyhow::anyhow!("batch {batch} exceeds decode buckets"))?;
+
+        let t_gather = Instant::now();
+        let mut tokens = vec![0i32; bucket];
+        let mut ctx = vec![0i32; bucket];
+        let mut slots = vec![0i32; bucket];
+        let k_sl = &mut k_win[..nl * bucket * w * d];
+        let v_sl = &mut v_win[..nl * bucket * w * d];
+        if bucket != self.last_bucket {
+            // Bucket changed: row offsets shifted, all previous content is
+            // misplaced — zero everything once.
+            k_sl.fill(0.0);
+            v_sl.fill(0.0);
+            self.last_bucket = bucket;
+        }
+        let mut adapters = std::collections::HashSet::new();
+        // Resolve physical slots (pinning all adapters in this batch).
+        let batch_adapters: std::collections::HashSet<usize> = st
+            .running
+            .iter()
+            .filter(|&&id| st.requests[id].rank > 0)
+            .map(|&id| st.requests[id].adapter_id)
+            .collect();
+        for (row, &id) in st.running.iter().enumerate() {
+            let r = &st.requests[id];
+            tokens[row] = r.last_token;
+            let n = r.kv.tokens.min(w - 1);
+            ctx[row] = n as i32;
+            if r.rank > 0 {
+                adapters.insert(r.adapter_id);
+                let pinned = |a: usize| batch_adapters.contains(&a);
+                match self.phys().acquire(r.adapter_id, &pinned) {
+                    PhysSlot::Hit(s) => slots[row] = s as i32,
+                    PhysSlot::Miss(s) => {
+                        // Re-materialize evicted weights (counts as gather
+                        // overhead; sim-side load already accounted at
+                        // admission).
+                        let (adapter_id, rank) = (r.adapter_id, r.rank);
+                        self.rewrite_slot(adapter_id, rank, s)?;
+                        slots[row] = s as i32;
+                    }
+                    PhysSlot::Full => slots[row] = PhysBank::zero_slot() as i32,
+                }
+            }
+            let r = &st.requests[id];
+            for l in 0..nl {
+                let off = (l * bucket + row) * w * d;
+                r.kv.gather_window(
+                    l,
+                    nl,
+                    d,
+                    n,
+                    &mut k_sl[off..off + n * d],
+                    &mut v_sl[off..off + n * d],
+                );
+            }
+        }
+        let gather_s = t_gather.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let out = self.rt.decode(bucket, &tokens, k_sl, v_sl, &ctx, &slots)?;
+        let exec_s = t0.elapsed().as_secs_f64() + gather_s;
+        let t_done = st.sim_time + exec_s;
+
+        // Write back new K/V rows; layout [L, bucket, d].
+        let ids: Vec<usize> = st.running.clone();
+        let mut new_row_k = vec![0f32; nl * d];
+        let mut new_row_v = vec![0f32; nl * d];
+        for (row, &id) in ids.iter().enumerate() {
+            for l in 0..nl {
+                let src = (l * bucket + row) * d;
+                new_row_k[l * d..(l + 1) * d].copy_from_slice(&out.new_k[src..src + d]);
+                new_row_v[l * d..(l + 1) * d].copy_from_slice(&out.new_v[src..src + d]);
+            }
+            let r = &mut st.requests[id];
+            r.kv.append(nl, d, &new_row_k, &new_row_v);
+            r.last_token = out.next_tokens[row];
+            r.generated += 1;
+            r.context_len += 1;
+            r.token_times.push(t_done);
+        }
+        st.metrics.on_decode_tokens(ids.len(), t_done);
+        for id in ids {
+            st.finish_or_continue_at(id, t_done);
+        }
+        Ok((exec_s, gather_s, batch, adapters.len()))
+    }
+
+    fn rewrite_slot(&mut self, adapter_id: usize, rank: usize, slot: usize) -> Result<()> {
+        let m = &self.rt.meta;
+        let (l, d, rmax) = (m.n_layers, m.d_model, m.max_rank);
+        let mut wrng = Rng::new(0xA0A0_0000 ^ adapter_id as u64);
+        let gen = |rng: &mut Rng, n: usize, active: usize, stride: usize| -> Vec<f32> {
+            let mut v = vec![0f32; n];
+            for (i, x) in v.iter_mut().enumerate() {
+                if i % stride < active {
+                    *x = (rng.normal() * 0.02) as f32;
+                }
+            }
+            v
+        };
+        let a_q = gen(&mut wrng, l * d * rmax, rank, rmax);
+        let b_q = gen(&mut wrng, l * rmax * d, rank * d, rmax * d);
+        let a_v = gen(&mut wrng, l * d * rmax, rank, rmax);
+        let b_v = gen(&mut wrng, l * rmax * d, rank * d, rmax * d);
+        self.rt.write_bank_slot(slot, &a_q, &b_q, &a_v, &b_v)?;
+        self.rt.upload_bank()?;
+        Ok(())
+    }
+}
+
+/// Mutable per-run simulation state.
+struct SimState {
+    requests: Vec<Request>,
+    waiting: VecDeque<usize>,
+    prefill_queue: VecDeque<usize>,
+    running: Vec<usize>,
+    ledger: KvLedger,
+    cache: SimAdapterCache,
+    sim_time: f64,
+    trace: Vec<Arrival>,
+    next_arrival: usize,
+    adapters_total: usize,
+    metrics: MetricsCollector,
+    profiler: Profiler,
+    rank_of: std::collections::HashMap<usize, usize>,
+}
+
+impl SimState {
+    fn new(cfg: &EngineConfig, pool: usize, trace: &[Arrival], spec: &WorkloadSpec) -> SimState {
+        let rank_of: std::collections::HashMap<usize, usize> =
+            spec.adapters.iter().map(|a| (a.id, a.rank)).collect();
+        let requests = trace
+            .iter()
+            .map(|a| {
+                Request::new(
+                    a.request_id,
+                    a.adapter_id,
+                    rank_of.get(&a.adapter_id).copied().unwrap_or(0),
+                    a.time_s,
+                    a.input_len,
+                    a.output_len,
+                )
+            })
+            .collect();
+        SimState {
+            requests,
+            waiting: VecDeque::new(),
+            prefill_queue: VecDeque::new(),
+            running: Vec::new(),
+            ledger: KvLedger::new(cfg.mem.clone(), pool),
+            cache: SimAdapterCache::new(cfg.a_max),
+            sim_time: 0.0,
+            trace: trace.to_vec(),
+            next_arrival: 0,
+            adapters_total: spec.adapters.len(),
+            metrics: MetricsCollector::default(),
+            profiler: Profiler::default(),
+            rank_of,
+        }
+    }
+
+    fn inject_arrivals(&mut self) {
+        while self.next_arrival < self.trace.len()
+            && self.trace[self.next_arrival].time_s <= self.sim_time
+        {
+            let a = &self.trace[self.next_arrival];
+            self.metrics.on_arrival(a.input_len, a.output_len);
+            self.waiting.push_back(a.request_id);
+            self.next_arrival += 1;
+        }
+    }
+
+    fn next_arrival_time(&self) -> Option<f64> {
+        self.trace.get(self.next_arrival).map(|a| a.time_s)
+    }
+
+    fn active_count(&self) -> usize {
+        self.running.len() + self.prefill_queue.len()
+    }
+
+    fn advance(&mut self, dt: f64) {
+        self.sim_time += dt;
+    }
+
+    fn finish_or_continue(&mut self, id: usize) {
+        self.finish_or_continue_at(id, self.sim_time)
+    }
+
+    fn finish_or_continue_at(&mut self, id: usize, t: f64) {
+        if !self.requests[id].is_done() {
+            return;
+        }
+        let r = &mut self.requests[id];
+        r.state = ReqState::Finished;
+        r.finish_s = Some(t);
+        let (ttft, itl) = (r.ttft(), r.itl_mean());
+        let (adapter, rank) = (r.adapter_id, r.rank);
+        r.kv.clear();
+        self.ledger.release(id);
+        if rank > 0 {
+            self.cache.release(adapter);
+        }
+        self.running.retain(|&x| x != id);
+        self.metrics.on_finish(ttft, itl);
+        let _ = &self.rank_of;
+    }
+}

@@ -1,0 +1,92 @@
+//! Per-iteration component profiling.
+//!
+//! Feeds (a) the §5.1-style overhead analysis experiments (Figs. 4-7) and
+//! (b) the Digital-Twin calibration fits: every engine iteration records
+//! the state the paper's predictive models condition on, together with the
+//! measured wall time of each component.
+
+/// One engine iteration's profile record.
+#[derive(Debug, Clone, Default)]
+pub struct IterRecord {
+    pub sim_time_s: f64,
+    /// Batch size fed to the decode step (0 for prefill iterations).
+    pub batch: usize,
+    /// Pending (waiting) requests at scheduling time (R_P).
+    pub pending: usize,
+    /// Distinct adapters in the executed batch (A_B).
+    pub adapters_in_batch: usize,
+    /// Total adapters being served (A).
+    pub adapters_total: usize,
+    /// Measured scheduler wall time (s).
+    pub sched_s: f64,
+    /// Measured execute wall time (s) — decode or prefill PJRT call
+    /// including window gather and readback.
+    pub exec_s: f64,
+    /// Window-gather / marshalling share of exec (s).
+    pub gather_s: f64,
+    /// Swap-in cost charged this iteration (s): modeled PCIe + measured
+    /// bank re-upload.
+    pub load_s: f64,
+    /// Number of swap-ins this iteration.
+    pub loads: usize,
+    /// True for prefill iterations.
+    pub prefill: bool,
+    /// Prefill bucket (padded length) when `prefill`.
+    pub prefill_bucket: usize,
+}
+
+/// Collects iteration records; cheap to keep always-on.
+#[derive(Debug, Default)]
+pub struct Profiler {
+    pub iters: Vec<IterRecord>,
+    /// (rank, modeled_s, measured_upload_s) per swap-in.
+    pub load_events: Vec<(usize, f64, f64)>,
+}
+
+impl Profiler {
+    pub fn record(&mut self, rec: IterRecord) {
+        self.iters.push(rec);
+    }
+
+    pub fn record_load(&mut self, rank: usize, modeled_s: f64, upload_s: f64) {
+        self.load_events.push((rank, modeled_s, upload_s));
+    }
+
+    /// Decode iterations only (the calibration fits exclude prefill).
+    pub fn decode_iters(&self) -> impl Iterator<Item = &IterRecord> {
+        self.iters.iter().filter(|r| !r.prefill && r.batch > 0)
+    }
+
+    pub fn total_sched_s(&self) -> f64 {
+        self.iters.iter().map(|r| r.sched_s).sum()
+    }
+
+    pub fn total_exec_s(&self) -> f64 {
+        self.iters.iter().map(|r| r.exec_s).sum()
+    }
+
+    pub fn total_load_s(&self) -> f64 {
+        self.iters.iter().map(|r| r.load_s).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_filters() {
+        let mut p = Profiler::default();
+        p.record(IterRecord { batch: 4, sched_s: 0.1, exec_s: 1.0, ..Default::default() });
+        p.record(IterRecord {
+            prefill: true,
+            batch: 0,
+            sched_s: 0.2,
+            exec_s: 2.0,
+            ..Default::default()
+        });
+        assert_eq!(p.decode_iters().count(), 1);
+        assert!((p.total_sched_s() - 0.3).abs() < 1e-12);
+        assert!((p.total_exec_s() - 3.0).abs() < 1e-12);
+    }
+}

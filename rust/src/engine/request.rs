@@ -1,0 +1,128 @@
+//! Request state machine for the continuous-batching loop.
+
+use super::kv::RequestKv;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqState {
+    /// In the waiting queue (never scheduled, or preempted).
+    Waiting,
+    /// Admitted; prompt not yet processed.
+    Prefilling,
+    /// In the running batch, generating tokens.
+    Running,
+    Finished,
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    pub adapter_id: usize,
+    pub rank: usize,
+    pub arrival_s: f64,
+    pub input_len: usize,
+    /// Target number of generated tokens (benchmark-style fixed budget,
+    /// vLLM `ignore_eos`; the paper's traces fix output lengths the same way).
+    pub output_len: usize,
+    pub state: ReqState,
+    /// Tokens currently represented in (simulated and host) KV.
+    pub context_len: usize,
+    pub generated: usize,
+    pub last_token: i32,
+    pub first_token_s: Option<f64>,
+    /// Sim-time stamps of generated tokens (ITL = successive diffs).
+    pub token_times: Vec<f64>,
+    pub finish_s: Option<f64>,
+    pub preemptions: usize,
+    pub kv: RequestKv,
+}
+
+impl Request {
+    pub fn new(
+        id: usize,
+        adapter_id: usize,
+        rank: usize,
+        arrival_s: f64,
+        input_len: usize,
+        output_len: usize,
+    ) -> Request {
+        Request {
+            id,
+            adapter_id,
+            rank,
+            arrival_s,
+            input_len,
+            output_len,
+            state: ReqState::Waiting,
+            context_len: 0,
+            generated: 0,
+            last_token: 0,
+            first_token_s: None,
+            token_times: Vec::new(),
+            finish_s: None,
+            preemptions: 0,
+            kv: RequestKv::default(),
+        }
+    }
+
+    /// Prompt tokens for (re-)prefill: deterministic pseudo-tokens derived
+    /// from the request id.  On re-prefill after preemption this includes
+    /// the already-generated tokens (vLLM recompute semantics).
+    pub fn prompt_tokens(&self, vocab: usize, max_len: usize) -> Vec<i32> {
+        let total = self.input_len + self.generated;
+        let take = total.min(max_len);
+        let start = total - take;
+        (start..total)
+            .map(|i| ((self.id.wrapping_mul(1_000_003) + i * 7919) % vocab) as i32)
+            .collect()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.generated >= self.output_len
+    }
+
+    /// Mean inter-token latency over generated tokens (s).
+    pub fn itl_mean(&self) -> Option<f64> {
+        if self.token_times.len() < 2 {
+            return None;
+        }
+        let d: f64 = self.token_times.windows(2).map(|w| w[1] - w[0]).sum();
+        Some(d / (self.token_times.len() - 1) as f64)
+    }
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_s.map(|t| t - self.arrival_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_tokens_deterministic_and_bounded() {
+        let r = Request::new(7, 1, 8, 0.0, 50, 10);
+        let a = r.prompt_tokens(512, 256);
+        let b = r.prompt_tokens(512, 256);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 50);
+        assert!(a.iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    #[test]
+    fn preempted_prompt_includes_generated_suffix() {
+        let mut r = Request::new(7, 1, 8, 0.0, 50, 10);
+        r.generated = 5;
+        assert_eq!(r.prompt_tokens(512, 256).len(), 55);
+        // Clipped to max_len keeping the *last* tokens (window semantics).
+        assert_eq!(r.prompt_tokens(512, 32).len(), 32);
+    }
+
+    #[test]
+    fn itl_and_ttft() {
+        let mut r = Request::new(1, 0, 8, 10.0, 4, 3);
+        r.first_token_s = Some(10.5);
+        r.token_times = vec![10.5, 10.7, 11.1];
+        assert!((r.ttft().unwrap() - 0.5).abs() < 1e-12);
+        assert!((r.itl_mean().unwrap() - 0.3).abs() < 1e-12);
+    }
+}

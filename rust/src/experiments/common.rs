@@ -1,0 +1,346 @@
+//! Shared infrastructure for the experiment harness: scales, cached
+//! pipeline artifacts (calibration, dataset, trained models), and the
+//! validation-scenario suite reused by Tables 1-4.
+
+use crate::config::EngineConfig;
+use crate::dt::{self, Calibration};
+use crate::engine::Engine;
+use crate::ml::{self, dataset, GridSpec, MlModels, Predictor, Sample};
+use crate::runtime::{Manifest, ModelRuntime};
+use crate::util::csv::Table;
+use crate::util::json::Json;
+use crate::workload::{AdapterSpec, WorkloadSpec};
+use anyhow::Result;
+use std::path::PathBuf;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Minutes-scale runs used by `cargo bench` and CI.
+    Quick,
+    /// The full sweeps (hours on this CPU).
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Scale {
+        if s.eq_ignore_ascii_case("full") {
+            Scale::Full
+        } else {
+            Scale::Quick
+        }
+    }
+
+    pub fn is_quick(&self) -> bool {
+        matches!(self, Scale::Quick)
+    }
+}
+
+pub struct ExpContext {
+    pub scale: Scale,
+    pub out_dir: PathBuf,
+    pub artifacts: PathBuf,
+    pub workers: usize,
+    pub models: Vec<String>,
+}
+
+impl ExpContext {
+    pub fn new(scale: Scale) -> ExpContext {
+        ExpContext {
+            scale,
+            out_dir: PathBuf::from("results"),
+            artifacts: Manifest::default_dir(),
+            workers: crate::util::threadpool::default_workers(),
+            models: vec!["pico-llama".into(), "pico-qwen".into()],
+        }
+    }
+
+    pub fn exp_dir(&self, id: &str) -> PathBuf {
+        let d = self.out_dir.join(id);
+        std::fs::create_dir_all(&d).ok();
+        d
+    }
+
+    /// Short horizon used for engine/twin runs (the paper runs 1 h; see
+    /// DESIGN.md §1 on horizon compression).
+    pub fn horizon(&self) -> f64 {
+        match self.scale {
+            Scale::Quick => 10.0,
+            Scale::Full => 40.0,
+        }
+    }
+
+    pub fn load_runtime(&self, model: &str) -> Result<ModelRuntime> {
+        ModelRuntime::load(&self.artifacts, model)
+    }
+
+    // ------------------------------------------------------------------
+    // Cached pipeline stages
+    // ------------------------------------------------------------------
+
+    /// Calibration, cached at results/calibration_<model>.json.
+    pub fn calibration(&self, rt: &mut ModelRuntime) -> Result<Calibration> {
+        let path = self.out_dir.join(format!("calibration_{}.json", rt.meta.name));
+        if path.exists() {
+            if let Ok(c) = Calibration::load_file(&path, &rt.meta.name) {
+                return Ok(c);
+            }
+        }
+        eprintln!("[common] calibrating {} ...", rt.meta.name);
+        let calib = dt::calibrate(rt, &EngineConfig { model: rt.meta.name.clone(), ..Default::default() }, self.scale.is_quick())?;
+        std::fs::create_dir_all(&self.out_dir).ok();
+        calib.to_json().write_file(&path)?;
+        Ok(calib)
+    }
+
+    /// DT-generated training set, cached at results/dataset_<model>.csv.
+    pub fn dataset(&self, calib: &Calibration) -> Result<Vec<Sample>> {
+        let path = self.out_dir.join(format!("dataset_{}.csv", calib.model));
+        if path.exists() {
+            return dataset::load(&path);
+        }
+        eprintln!("[common] generating dataset for {} via the Digital Twin ...", calib.model);
+        let grid = GridSpec::paper(self.scale.is_quick());
+        let base = EngineConfig { model: calib.model.clone(), ..Default::default() };
+        let samples = dataset::generate(calib, &base, &grid, self.workers);
+        dataset::save(&samples, &path)?;
+        Ok(samples)
+    }
+
+    /// Best RF model pair, cached at results/models_<model>.json.
+    pub fn trained_models(&self, calib: &Calibration) -> Result<MlModels> {
+        let path = self.out_dir.join(format!("models_{}.json", calib.model));
+        if path.exists() {
+            if let Ok(m) = ml::load_models(&path) {
+                return Ok(m);
+            }
+        }
+        let samples = self.dataset(calib)?;
+        eprintln!("[common] training RF models for {} ...", calib.model);
+        let (thr, _) = ml::train(&samples, ml::Task::Throughput, ml::ModelType::RandomForest, self.scale.is_quick(), 7);
+        let (st, _) = ml::train(&samples, ml::Task::Starvation, ml::ModelType::RandomForest, self.scale.is_quick(), 7);
+        let models = MlModels { throughput: thr, starvation: st, scaler: None };
+        ml::save_models(&models, &path)?;
+        Ok(models)
+    }
+
+    /// The refined (Small Tree**) model pair for ProposedFast.
+    pub fn refined_models(&self, calib: &Calibration) -> Result<MlModels> {
+        let samples = self.dataset(calib)?;
+        let models = self.trained_models(calib)?;
+        let xs = ml::train::xs(&samples);
+        // Distill from the RF teacher's predictions (knowledge distillation).
+        let t_thr: Vec<f64> = xs.iter().map(|x| models.predict_throughput(x)).collect();
+        let t_st: Vec<f64> = xs
+            .iter()
+            .map(|x| models.predict_starvation(x) as i32 as f64)
+            .collect();
+        let small_thr = ml::refine::distill(&xs, &t_thr, ml::tree::Criterion::Mse, 32);
+        let small_st = ml::refine::distill(&xs, &t_st, ml::tree::Criterion::Gini, 16);
+        Ok(MlModels {
+            throughput: Predictor::Flat(ml::refine::FlatTree::compile(&small_thr)),
+            starvation: Predictor::Flat(ml::refine::FlatTree::compile(&small_st)),
+            scaler: None,
+        })
+    }
+}
+
+// ----------------------------------------------------------------------
+// Validation scenarios (paper §8.2 grid) shared by Tables 1-4
+// ----------------------------------------------------------------------
+
+/// One validation scenario: spec parameters + (cached) engine ground truth.
+#[derive(Debug, Clone)]
+pub struct ValScenario {
+    pub n_adapters: usize,
+    pub sizes: Vec<usize>,
+    pub rates: Vec<f64>,
+    pub a_max: usize,
+    pub seed: u64,
+    // Engine measurements:
+    pub throughput: f64,
+    pub itl_s: f64,
+    pub ttft_s: f64,
+    pub starved: bool,
+    pub engine_wall_s: f64,
+}
+
+impl ValScenario {
+    pub fn adapters(&self) -> Vec<AdapterSpec> {
+        WorkloadSpec::heterogeneous(self.n_adapters, &self.sizes, &self.rates, self.seed)
+    }
+
+    pub fn spec(&self, horizon: f64) -> WorkloadSpec {
+        WorkloadSpec::sharegpt_like(self.adapters(), horizon, self.seed ^ 0x77)
+    }
+
+    pub fn config(&self, model: &str) -> EngineConfig {
+        EngineConfig {
+            model: model.to_string(),
+            a_max: self.a_max,
+            s_max_rank: *self.sizes.iter().max().unwrap(),
+            ..Default::default()
+        }
+    }
+}
+
+/// The §8.2 scenario grid: Cartesian product of size sets and rate regimes
+/// over adapter counts, A_max co-varied.
+fn scenario_grid(quick: bool) -> Vec<(usize, Vec<usize>, Vec<f64>, usize)> {
+    let size_sets: Vec<Vec<usize>> = vec![vec![8, 16, 32], vec![8, 16]];
+    let rate_sets: Vec<Vec<f64>> = vec![vec![1.6, 0.8, 0.4], vec![0.1, 0.05, 0.025]];
+    let counts: Vec<usize> =
+        if quick { vec![8, 32, 96] } else { vec![8, 16, 32, 64, 96, 128, 192, 256, 384] };
+    let mut out = vec![];
+    for sizes in &size_sets {
+        for rates in &rate_sets {
+            for &n in &counts {
+                // High-rate regimes saturate far earlier; skip huge counts.
+                if rates[0] > 1.0 && n > 96 {
+                    continue;
+                }
+                let a_max = n.min(if rates[0] > 1.0 { 32 } else { 96 });
+                out.push((n, sizes.clone(), rates.clone(), a_max));
+            }
+        }
+    }
+    out
+}
+
+/// Run (or load from cache) the engine ground-truth for the validation
+/// scenarios of one model.
+pub fn validation_runs(ctx: &ExpContext, rt: &mut ModelRuntime) -> Result<Vec<ValScenario>> {
+    let model = rt.meta.name.clone();
+    let path = ctx.out_dir.join(format!("validation_{model}.csv"));
+    if path.exists() {
+        return load_validation(&path);
+    }
+    let mut out = vec![];
+    for (i, (n, sizes, rates, a_max)) in scenario_grid(ctx.scale.is_quick()).into_iter().enumerate() {
+        let mut sc = ValScenario {
+            n_adapters: n,
+            sizes,
+            rates,
+            a_max,
+            seed: 1000 + i as u64,
+            throughput: 0.0,
+            itl_s: 0.0,
+            ttft_s: 0.0,
+            starved: false,
+            engine_wall_s: 0.0,
+        };
+        let spec = sc.spec(ctx.horizon());
+        let cfg = sc.config(&model);
+        eprintln!(
+            "[validation {}] scenario {i}: A={n} sizes={:?} rates={:?} a_max={a_max}",
+            model, sc.sizes, sc.rates
+        );
+        let mut engine = Engine::new(cfg, rt);
+        let res = engine.run(&spec)?;
+        match res.report {
+            Some(rep) => {
+                sc.throughput = rep.throughput_tok_s;
+                sc.itl_s = rep.itl_mean_s;
+                sc.ttft_s = rep.ttft_mean_s;
+                sc.starved = rep.starved;
+                sc.engine_wall_s = res.wall_s;
+            }
+            None => {
+                sc.throughput = 0.0;
+                sc.starved = true;
+                sc.engine_wall_s = res.wall_s;
+            }
+        }
+        out.push(sc);
+    }
+    save_validation(&out, &path)?;
+    Ok(out)
+}
+
+fn save_validation(scs: &[ValScenario], path: &std::path::Path) -> Result<()> {
+    let mut t = Table::new(&[
+        "n_adapters", "sizes", "rates", "a_max", "seed", "throughput", "itl_s", "ttft_s",
+        "starved", "engine_wall_s",
+    ]);
+    for s in scs {
+        t.push(vec![
+            s.n_adapters.to_string(),
+            s.sizes.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(" "),
+            s.rates.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(" "),
+            s.a_max.to_string(),
+            s.seed.to_string(),
+            s.throughput.to_string(),
+            s.itl_s.to_string(),
+            s.ttft_s.to_string(),
+            (s.starved as i32).to_string(),
+            s.engine_wall_s.to_string(),
+        ]);
+    }
+    t.write_file(path)
+}
+
+fn load_validation(path: &std::path::Path) -> Result<Vec<ValScenario>> {
+    let t = Table::read_file(path)?;
+    let mut out = vec![];
+    for row in &t.rows {
+        out.push(ValScenario {
+            n_adapters: row[0].parse()?,
+            sizes: row[1].split_whitespace().map(|x| x.parse().unwrap()).collect(),
+            rates: row[2].split_whitespace().map(|x| x.parse().unwrap()).collect(),
+            a_max: row[3].parse()?,
+            seed: row[4].parse()?,
+            throughput: row[5].parse()?,
+            itl_s: row[6].parse()?,
+            ttft_s: row[7].parse()?,
+            starved: row[8].parse::<i32>()? != 0,
+            engine_wall_s: row[9].parse()?,
+        });
+    }
+    Ok(out)
+}
+
+/// Pretty table printer for report rows.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let widths: Vec<usize> = header
+        .iter()
+        .enumerate()
+        .map(|(i, h)| rows.iter().map(|r| r[i].len()).chain([h.len()]).max().unwrap_or(4))
+        .collect();
+    let line = |cells: Vec<String>| {
+        let s: Vec<String> =
+            cells.iter().zip(&widths).map(|(c, w)| format!("{c:>w$}", w = w)).collect();
+        println!("  {}", s.join("  "));
+    };
+    line(header.iter().map(|s| s.to_string()).collect());
+    for r in rows {
+        line(r.clone());
+    }
+}
+
+/// Write rows to CSV under the experiment dir.
+pub fn write_csv(dir: &std::path::Path, name: &str, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    let mut t = Table::new(header);
+    for r in rows {
+        t.push(r.clone());
+    }
+    t.write_file(&dir.join(name))
+}
+
+/// Rough measure of current process peak RSS (MB) from /proc.
+pub fn peak_rss_mb() -> f64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                if let Some(kb) = rest.trim().split_whitespace().next() {
+                    return kb.parse::<f64>().unwrap_or(0.0) / 1024.0;
+                }
+            }
+        }
+    }
+    0.0
+}
+
+/// JSON summary writer (EXPERIMENTS.md sources these).
+pub fn write_summary(dir: &std::path::Path, fields: Vec<(&str, Json)>) -> Result<()> {
+    Json::obj(fields).write_file(&dir.join("summary.json"))
+}

@@ -1,0 +1,283 @@
+//! Digital-Twin evaluation (paper §8.2): Table 1 (fidelity SMAPE under
+//! predictable and unpredictable arrivals, Original vs Mean lengths),
+//! Table 2 (DT execution time / resources), Fig. 8 (DT vs engine curves),
+//! Fig. 9 (unpredictable traces and queue dynamics).
+
+use super::common::{peak_rss_mb, print_table, validation_runs, write_csv, ExpContext};
+use crate::config::EngineConfig;
+use crate::dt::{self, LengthVariant};
+use crate::engine::Engine;
+use crate::util::stats;
+use crate::workload::{ArrivalModel, UnpredictableParams, WorkloadSpec};
+use anyhow::Result;
+
+/// Table 1 + Table 2 (they share the scenario runs).
+pub fn table1(ctx: &ExpContext) -> Result<()> {
+    let dir = ctx.exp_dir("table1");
+    let mut table_rows = vec![];
+    let mut t2_rows = vec![];
+    let mut csv_rows = vec![];
+    for model in &ctx.models {
+        let mut rt = ctx.load_runtime(model)?;
+        let calib = ctx.calibration(&mut rt)?;
+        let scenarios = validation_runs(ctx, &mut rt)?;
+
+        // -------- Predictable arrivals --------
+        let mut acc: std::collections::HashMap<&str, (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)> =
+            Default::default();
+        let mut twin_walls = vec![];
+        let mut engine_walls = vec![];
+        for sc in &scenarios {
+            if sc.throughput <= 0.0 {
+                continue; // memory-error scenarios have no metrics to compare
+            }
+            let spec = sc.spec(ctx.horizon());
+            let trace = spec.trace();
+            let cfg = sc.config(model);
+            for (variant, key) in
+                [(LengthVariant::Original, "Original"), (LengthVariant::Mean, "Mean")]
+            {
+                let trace_v = match variant {
+                    LengthVariant::Original => trace.clone(),
+                    LengthVariant::Mean => spec.trace_mean_lengths(),
+                };
+                let res = dt::run_twin_trace(&cfg, &calib, &spec, &trace_v);
+                if key == "Original" {
+                    twin_walls.push(res.wall_s);
+                    engine_walls.push(sc.engine_wall_s);
+                }
+                if let Some(rep) = res.report {
+                    let e = acc.entry(key).or_default();
+                    e.0.push(sc.throughput);
+                    e.1.push(rep.throughput_tok_s);
+                    e.2.push(sc.itl_s);
+                    e.3.push(rep.itl_mean_s);
+                    e.4.push(sc.ttft_s);
+                    e.5.push(rep.ttft_mean_s);
+                }
+            }
+        }
+        for key in ["Original", "Mean"] {
+            let (ta, tp, ia, ip, fa, fp) = &acc[key];
+            let row = vec![
+                model.clone(),
+                key.to_string(),
+                "predictable".to_string(),
+                format!("{:.2}", stats::smape(ta, tp)),
+                format!("{:.2}", stats::smape(ia, ip)),
+                format!("{:.2}", stats::smape(fa, fp)),
+            ];
+            table_rows.push(row.clone());
+            csv_rows.push(row);
+        }
+
+        // -------- Unpredictable arrivals --------
+        let mut acc_u: std::collections::HashMap<&str, (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)> =
+            Default::default();
+        let counts: Vec<usize> = if ctx.scale.is_quick() { vec![32, 64] } else { vec![32, 64, 128] };
+        for (i, &n) in counts.iter().enumerate() {
+            let adapters = WorkloadSpec::homogeneous(n, 8, 0.1);
+            let mut spec = WorkloadSpec::sharegpt_like(adapters, ctx.horizon(), 3000 + i as u64);
+            spec.arrival = ArrivalModel::Unpredictable(UnpredictableParams {
+                switch_interval_s: spec.horizon_s / 12.0,
+                ..Default::default()
+            });
+            let trace = spec.trace();
+            let cfg = EngineConfig {
+                model: model.clone(),
+                a_max: 32,
+                s_max_rank: 8,
+                ..Default::default()
+            };
+            let mut engine = Engine::new(cfg.clone(), &mut rt);
+            let eres = engine.run_trace(&spec, &trace)?;
+            let Some(erep) = eres.report else { continue };
+            for (variant, key) in
+                [(LengthVariant::Original, "Original"), (LengthVariant::Mean, "Mean")]
+            {
+                let trace_v = match variant {
+                    LengthVariant::Original => trace.clone(),
+                    LengthVariant::Mean => spec.trace_mean_lengths(),
+                };
+                let res = dt::run_twin_trace(&cfg, &calib, &spec, &trace_v);
+                if let Some(rep) = res.report {
+                    let e = acc_u.entry(key).or_default();
+                    e.0.push(erep.throughput_tok_s);
+                    e.1.push(rep.throughput_tok_s);
+                    e.2.push(erep.itl_mean_s);
+                    e.3.push(rep.itl_mean_s);
+                    e.4.push(erep.ttft_mean_s);
+                    e.5.push(rep.ttft_mean_s);
+                }
+            }
+        }
+        for key in ["Original", "Mean"] {
+            if let Some((ta, tp, ia, ip, fa, fp)) = acc_u.get(key) {
+                let row = vec![
+                    model.clone(),
+                    key.to_string(),
+                    "unpredictable".to_string(),
+                    format!("{:.2}", stats::smape(ta, tp)),
+                    format!("{:.2}", stats::smape(ia, ip)),
+                    format!("{:.2}", stats::smape(fa, fp)),
+                ];
+                table_rows.push(row.clone());
+                csv_rows.push(row);
+            }
+        }
+
+        // -------- Table 2: DT time & resources --------
+        let speedups: Vec<f64> = twin_walls
+            .iter()
+            .zip(&engine_walls)
+            .map(|(t, e)| e / t.max(1e-9))
+            .collect();
+        t2_rows.push(vec![
+            model.clone(),
+            format!("{:.4} ± {:.4}", stats::mean(&twin_walls), stats::std(&twin_walls)),
+            format!("{:.1} ± {:.1}", stats::mean(&engine_walls), stats::std(&engine_walls)),
+            format!("{:.0}x", stats::mean(&speedups)),
+            format!("{:.0}", peak_rss_mb()),
+        ]);
+    }
+    print_table(
+        "Table 1 — Digital Twin fidelity (SMAPE %, lower is better; paper: thr<=5.08, ITL<=9.87, TTFT<=21.49)",
+        &["model", "req-lengths", "arrivals", "thr SMAPE", "ITL SMAPE", "TTFT SMAPE"],
+        &table_rows,
+    );
+    write_csv(&dir, "table1.csv", &["model", "req_lengths", "arrivals", "smape_thr", "smape_itl", "smape_ttft"], &csv_rows)?;
+    print_table(
+        "Table 2 — DT execution time & resources (paper: ~39s for 1h horizon, ~90x, ~200MB)",
+        &["model", "twin wall (s)", "engine wall (s)", "speedup", "proc peak RSS (MB)"],
+        &t2_rows,
+    );
+    write_csv(&ctx.exp_dir("table2"), "table2.csv", &["model", "twin_wall_s", "engine_wall_s", "speedup", "peak_rss_mb"], &t2_rows)?;
+    Ok(())
+}
+
+/// Fig. 8: engine vs twin (and ML) throughput/ITL/TTFT as the number of
+/// adapters grows.
+pub fn fig8(ctx: &ExpContext) -> Result<()> {
+    let dir = ctx.exp_dir("fig8");
+    let model = "pico-qwen";
+    let mut rt = ctx.load_runtime(model)?;
+    let calib = ctx.calibration(&mut rt)?;
+    let models = ctx.trained_models(&calib)?;
+    let counts: Vec<usize> =
+        if ctx.scale.is_quick() { vec![8, 16, 32, 64] } else { vec![8, 16, 32, 64, 96, 128, 192] };
+    let mut rows = vec![];
+    for rate in [0.1f64, 0.05] {
+        for &n in &counts {
+            let adapters = WorkloadSpec::heterogeneous(n, &[8, 16], &[rate], 500 + n as u64);
+            let spec = WorkloadSpec::sharegpt_like(adapters.clone(), ctx.horizon(), 600 + n as u64);
+            let trace = spec.trace();
+            let cfg = EngineConfig {
+                model: model.to_string(),
+                a_max: n.min(64),
+                s_max_rank: 16,
+                ..Default::default()
+            };
+            let mut engine = Engine::new(cfg.clone(), &mut rt);
+            let eres = engine.run_trace(&spec, &trace)?;
+            let erep = eres.report.unwrap();
+            let tres = dt::run_twin_trace(&cfg, &calib, &spec, &spec.trace_mean_lengths());
+            let trep = tres.report.unwrap();
+            let ml_thr = models.predict_throughput(&crate::ml::features(&adapters, cfg.a_max));
+            println!(
+                "  fig8 rate={rate} A={n}: engine={:.0} twin={:.0} ml={:.0} tok/s",
+                erep.throughput_tok_s, trep.throughput_tok_s, ml_thr
+            );
+            rows.push(vec![
+                format!("{rate}"),
+                n.to_string(),
+                format!("{:.1}", erep.throughput_tok_s),
+                format!("{:.1}", trep.throughput_tok_s),
+                format!("{:.1}", ml_thr),
+                format!("{:.5}", erep.itl_mean_s),
+                format!("{:.5}", trep.itl_mean_s),
+                format!("{:.4}", erep.ttft_mean_s),
+                format!("{:.4}", trep.ttft_mean_s),
+            ]);
+        }
+    }
+    write_csv(
+        &dir,
+        "fig8.csv",
+        &["rate", "n_adapters", "thr_engine", "thr_twin", "thr_ml", "itl_engine", "itl_twin", "ttft_engine", "ttft_twin"],
+        &rows,
+    )?;
+    println!("fig8: wrote {}", dir.display());
+    Ok(())
+}
+
+/// Fig. 9: unpredictable arrival traces (left) and running/waiting queue
+/// dynamics, engine vs twin (right).
+pub fn fig9(ctx: &ExpContext) -> Result<()> {
+    let dir = ctx.exp_dir("fig9");
+    let model = "pico-llama";
+    let mut rt = ctx.load_runtime(model)?;
+    let calib = ctx.calibration(&mut rt)?;
+    let n = 32;
+    let adapters = WorkloadSpec::heterogeneous(n, &[8], &[1.6, 0.8, 0.4], 900);
+    let mut spec = WorkloadSpec::sharegpt_like(adapters, ctx.horizon() * 2.0, 901);
+    spec.arrival = ArrivalModel::Unpredictable(UnpredictableParams {
+        switch_interval_s: spec.horizon_s / 12.0,
+        ..Default::default()
+    });
+    let trace = spec.trace();
+    // Left panel: arrival rate per time bin for a few sampled adapters.
+    let bins = 24usize;
+    let bin_w = spec.horizon_s / bins as f64;
+    let mut arr_rows = vec![];
+    for &aid in &[0usize, 7, 19] {
+        for b in 0..bins {
+            let t0 = b as f64 * bin_w;
+            let cnt = trace
+                .iter()
+                .filter(|a| a.adapter_id == aid && a.time_s >= t0 && a.time_s < t0 + bin_w)
+                .count();
+            arr_rows.push(vec![
+                aid.to_string(),
+                format!("{:.2}", t0 + bin_w / 2.0),
+                format!("{:.3}", cnt as f64 / bin_w),
+            ]);
+        }
+    }
+    write_csv(&dir, "fig9_arrivals.csv", &["adapter", "time_s", "rate_req_s"], &arr_rows)?;
+
+    // Right panel: running/waiting over time, engine vs twin.
+    let cfg = EngineConfig { model: model.to_string(), a_max: 32, s_max_rank: 8, ..Default::default() };
+    let mut engine = Engine::new(cfg.clone(), &mut rt);
+    let eres = engine.run_trace(&spec, &trace)?;
+    let tres = dt::run_twin_trace(&cfg, &calib, &spec, &trace);
+    let mut q_rows = vec![];
+    // Engine metrics are inside RunResult's report; queue traces come from
+    // the collectors — subsample to ~200 points each.
+    let dump = |rows: &mut Vec<Vec<String>>, who: &str, samples: &[crate::engine::metrics::QueueSample]| {
+        let step = (samples.len() / 200).max(1);
+        for s in samples.iter().step_by(step) {
+            rows.push(vec![
+                who.to_string(),
+                format!("{:.3}", s.time_s),
+                s.running.to_string(),
+                s.waiting.to_string(),
+            ]);
+        }
+    };
+    // The report doesn't expose the queue trace; re-derive from metrics —
+    // the collectors store it in the RunResult report? They do not, so the
+    // engine/twin expose it via the profiler-side sample list instead.
+    let _ = &eres;
+    let _ = &tres;
+    // Fall back: rerun twin with trace sampling through its metrics report.
+    // (Queue traces are written by the metric collectors into the reports.)
+    if let Some(r) = &eres.report {
+        dump(&mut q_rows, "engine", &r.queue_trace);
+    }
+    if let Some(r) = &tres.report {
+        dump(&mut q_rows, "twin", &r.queue_trace);
+    }
+    write_csv(&dir, "fig9_queues.csv", &["who", "time_s", "running", "waiting"], &q_rows)?;
+    println!("fig9: wrote {} ({} queue samples)", dir.display(), q_rows.len());
+    Ok(())
+}

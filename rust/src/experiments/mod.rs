@@ -1,0 +1,50 @@
+//! Experiment harness: one entry per table/figure of the paper's
+//! evaluation (see DESIGN.md §5 for the index).  Each experiment prints
+//! its rows and writes CSVs under `results/<id>/`.
+
+pub mod caching;
+pub mod common;
+pub mod dt_eval;
+pub mod ml_eval;
+pub mod profiling;
+
+pub use common::{ExpContext, Scale};
+
+use anyhow::Result;
+
+type ExpFn = fn(&ExpContext) -> Result<()>;
+
+/// (id, paper artifact, runner)
+pub const REGISTRY: &[(&str, &str, ExpFn)] = &[
+    ("fig1", "Fig. 1 — the adapter caching problem (throughput vs adapters)", profiling::fig1),
+    ("fig4", "Fig. 4 — memory overhead: batch/throughput vs loaded adapters; ITL vs batch", profiling::fig4),
+    ("fig5", "Fig. 5 — compute overhead vs adapters in batch", profiling::fig5),
+    ("fig6", "Fig. 6 — adapter load time relative to request latency", profiling::fig6),
+    ("fig7", "Fig. 7 — scheduler time share vs (adapters, A_max)", profiling::fig7),
+    ("table1", "Tables 1+2 — Digital Twin fidelity and cost", dt_eval::table1),
+    ("fig8", "Fig. 8 — DT & ML vs engine across adapter counts", dt_eval::fig8),
+    ("fig9", "Fig. 9 — unpredictable arrivals; queue dynamics", dt_eval::fig9),
+    ("table3", "Table 3 — ML model accuracy and inference time", ml_eval::table3),
+    ("table4", "Table 4 — refinement phase (Small Tree / Small Tree**)", ml_eval::table4),
+    ("fig10", "Fig. 10 — single-GPU placement vs baselines", caching::fig10),
+    ("fig11", "Fig. 11 — GPUs required on a 4-GPU system", caching::fig11),
+    ("table5", "Table 5 — placement algorithm runtimes", caching::table5),
+    ("fig12", "Fig. 12 — Proposed vs dLoRA vs ProposedLat", caching::fig12),
+    ("figa13", "Fig. A.13 — S-LoRA unified-memory mode", caching::figa13),
+];
+
+pub fn run(id: &str, ctx: &ExpContext) -> Result<()> {
+    if id == "all" {
+        for (name, desc, f) in REGISTRY {
+            println!("\n########## {name}: {desc}");
+            f(ctx)?;
+        }
+        return Ok(());
+    }
+    let (_, desc, f) = REGISTRY
+        .iter()
+        .find(|(name, _, _)| *name == id)
+        .ok_or_else(|| anyhow::anyhow!("unknown experiment '{id}' (see list-experiments)"))?;
+    println!("########## {id}: {desc}");
+    f(ctx)
+}

@@ -1,0 +1,312 @@
+//! §2.3 + §5.1 profiling experiments: Fig. 1 (the adapter caching problem),
+//! Fig. 4 (memory overhead & ITL vs batch), Fig. 5 (compute overhead),
+//! Fig. 6 (loading time), Fig. 7 (scheduler overhead).
+
+use super::common::{write_csv, ExpContext};
+use crate::config::EngineConfig;
+use crate::engine::Engine;
+use crate::util::stats;
+use crate::workload::{AdapterSpec, Arrival, WorkloadSpec};
+use anyhow::Result;
+
+/// Fig. 1: throughput vs number of served adapters under (a) adapter sizes,
+/// (b) arrival rates, (c) A_max settings.  Crosses (memory errors) are
+/// reported as `oom`.
+pub fn fig1(ctx: &ExpContext) -> Result<()> {
+    let dir = ctx.exp_dir("fig1");
+    let mut rt = ctx.load_runtime("pico-llama")?;
+    let counts: Vec<usize> =
+        if ctx.scale.is_quick() { vec![8, 48, 96, 128] } else { vec![8, 16, 32, 48, 64, 96, 128, 160, 192] };
+    let mut rows = vec![];
+    let mut run = |panel: &str,
+                   label: String,
+                   n: usize,
+                   rank: usize,
+                   rate: f64,
+                   a_max: usize,
+                   rt: &mut crate::runtime::ModelRuntime|
+     -> Result<()> {
+        let adapters = WorkloadSpec::homogeneous(n, rank, rate);
+        let spec = WorkloadSpec::sharegpt_like(adapters, ctx.horizon(), 42 + n as u64);
+        let cfg = EngineConfig {
+            model: "pico-llama".into(),
+            a_max,
+            s_max_rank: rank,
+            ..Default::default()
+        };
+        let mut engine = Engine::new(cfg, rt);
+        let res = engine.run(&spec)?;
+        let (thr, starved, oom) = match res.report {
+            Some(r) => (r.throughput_tok_s, r.starved, false),
+            None => (0.0, false, true),
+        };
+        println!(
+            "  fig1[{panel}] {label} A={n}: thr={thr:.0} tok/s{}{}",
+            if starved { " STARVED" } else { "" },
+            if oom { " OOM" } else { "" }
+        );
+        rows.push(vec![
+            panel.to_string(),
+            label,
+            n.to_string(),
+            format!("{thr:.1}"),
+            (starved as i32).to_string(),
+            (oom as i32).to_string(),
+        ]);
+        Ok(())
+    };
+
+    // (a) adapter sizes at fixed rate; A_max = N (paper's setting).
+    for rank in [8usize, 16, 32] {
+        for &n in &counts {
+            run("size", format!("size={rank}"), n, rank, 0.05, n, &mut rt)?;
+        }
+    }
+    // (b) arrival rates at fixed size 8.
+    for rate in [0.1f64, 0.05, 0.025] {
+        for &n in &counts {
+            run("rate", format!("rate={rate}"), n, 8, rate, n, &mut rt)?;
+        }
+    }
+    // (c) A_max settings at fixed size 8 / rate 0.05.
+    for a_max in [32usize, 96, 160] {
+        for &n in &counts {
+            run("amax", format!("amax={a_max}"), n, 8, 0.05, a_max.min(n), &mut rt)?;
+        }
+    }
+    write_csv(&dir, "fig1.csv", &["panel", "line", "n_adapters", "throughput", "starved", "oom"], &rows)?;
+    println!("fig1: wrote {}", dir.join("fig1.csv").display());
+    Ok(())
+}
+
+/// Fig. 4: oversaturated backbone-only serving with idle loaded adapters:
+/// achieved batch size and throughput vs loaded adapters (A_max·S_max
+/// reservation), plus ITL vs batch size.
+pub fn fig4(ctx: &ExpContext) -> Result<()> {
+    let dir = ctx.exp_dir("fig4");
+    let mut rows = vec![];
+    let mut itl_rows = vec![];
+    let loaded: Vec<usize> =
+        if ctx.scale.is_quick() { vec![0, 64, 128] } else { vec![0, 16, 32, 64, 96, 128, 160, 192, 256] };
+    let models: Vec<String> =
+        if ctx.scale.is_quick() { vec!["pico-llama".into()] } else { ctx.models.clone() };
+    for model in &models {
+        let mut rt = ctx.load_runtime(model)?;
+        for rank in [8usize, 32] {
+            for &a in &loaded {
+                // Backbone-only oversaturation: requests all arrive at t=0.
+                let n_req = if ctx.scale.is_quick() { 80 } else { 128 };
+                let adapters = vec![AdapterSpec { id: 0, rank: 0, rate: 0.0 }];
+                let spec = WorkloadSpec::fixed_len(adapters, 128, 48, 1e9, 5);
+                let trace: Vec<Arrival> = (0..n_req)
+                    .map(|i| Arrival {
+                        request_id: i,
+                        time_s: 0.0,
+                        adapter_id: 0,
+                        input_len: 128,
+                        output_len: if ctx.scale.is_quick() { 24 } else { 48 },
+                    })
+                    .collect();
+                let cfg = EngineConfig {
+                    model: model.clone(),
+                    a_max: a,
+                    s_max_rank: rank,
+                    ..Default::default()
+                };
+                if cfg.kv_pool_tokens().is_none() {
+                    println!("  fig4 {model} rank={rank} loaded={a}: OOM");
+                    rows.push(vec![model.clone(), rank.to_string(), a.to_string(), "0".into(), "0".into(), "1".into()]);
+                    continue;
+                }
+                let mut engine = Engine::new(cfg, &mut rt);
+                let res = engine.run_trace(&spec, &trace)?;
+                let decode: Vec<&crate::engine::profiler::IterRecord> =
+                    res.profiler.decode_iters().collect();
+                let mean_batch =
+                    stats::mean(&decode.iter().map(|r| r.batch as f64).collect::<Vec<_>>());
+                let max_batch = decode.iter().map(|r| r.batch).max().unwrap_or(0);
+                let thr = res.report.as_ref().map(|r| {
+                    (r.input_tokens + r.output_tokens) as f64
+                        / res.profiler.iters.last().map(|i| i.sim_time_s).unwrap_or(1.0)
+                });
+                println!(
+                    "  fig4 {model} rank={rank} loaded={a}: batch mean={mean_batch:.1} max={max_batch} thr={:.0}",
+                    thr.unwrap_or(0.0)
+                );
+                rows.push(vec![
+                    model.clone(),
+                    rank.to_string(),
+                    a.to_string(),
+                    format!("{max_batch}"),
+                    format!("{:.1}", thr.unwrap_or(0.0)),
+                    "0".into(),
+                ]);
+                // ITL vs batch points from the same run.
+                let mut by_batch: std::collections::BTreeMap<usize, Vec<f64>> = Default::default();
+                for r in &decode {
+                    by_batch.entry(r.batch).or_default().push(r.exec_s);
+                }
+                for (b, ts) in by_batch {
+                    itl_rows.push(vec![
+                        model.clone(),
+                        rank.to_string(),
+                        b.to_string(),
+                        format!("{:.6}", stats::mean(&ts)),
+                    ]);
+                }
+            }
+        }
+    }
+    write_csv(&dir, "fig4_batch_throughput.csv", &["model", "rank", "loaded_adapters", "max_batch", "throughput", "oom"], &rows)?;
+    write_csv(&dir, "fig4_itl_vs_batch.csv", &["model", "rank", "batch", "itl_s"], &itl_rows)?;
+    println!("fig4: wrote {}", dir.display());
+    Ok(())
+}
+
+/// Fig. 5: throughput slowdown and ITL overhead vs number of distinct
+/// adapters in a fixed-size batch, relative to backbone-only.
+pub fn fig5(ctx: &ExpContext) -> Result<()> {
+    let dir = ctx.exp_dir("fig5");
+    let mut rt = ctx.load_runtime("pico-llama")?;
+    let fixed_b = 32usize;
+    let out_tokens = if ctx.scale.is_quick() { 32 } else { 96 };
+    let mut baseline_itl = 0.0f64;
+    let mut rows = vec![];
+    for rank in [0usize, 8, 16, 32] {
+        let counts: Vec<usize> =
+            if rank == 0 { vec![1] } else { vec![1, 2, 4, 8, 16, 32] };
+        for a_b in counts {
+            let adapters: Vec<AdapterSpec> = if rank == 0 {
+                vec![AdapterSpec { id: 0, rank: 0, rate: 0.0 }]
+            } else {
+                (0..a_b).map(|id| AdapterSpec { id, rank, rate: 0.0 }).collect()
+            };
+            let spec = WorkloadSpec::fixed_len(adapters, 64, out_tokens, 1e9, 9);
+            let trace: Vec<Arrival> = (0..fixed_b)
+                .map(|i| Arrival {
+                    request_id: i,
+                    time_s: 0.0,
+                    adapter_id: if rank == 0 { 0 } else { i % a_b },
+                    input_len: 64,
+                    output_len: out_tokens,
+                })
+                .collect();
+            let cfg = EngineConfig {
+                model: "pico-llama".into(),
+                a_max: a_b.max(1),
+                s_max_rank: rank.max(8),
+                max_num_seqs: fixed_b,
+                ..Default::default()
+            };
+            let mut engine = Engine::new(cfg, &mut rt);
+            let res = engine.run_trace(&spec, &trace)?;
+            let ts: Vec<f64> = res
+                .profiler
+                .decode_iters()
+                .filter(|r| r.batch == fixed_b)
+                .map(|r| r.exec_s)
+                .collect();
+            let itl = stats::mean(&ts);
+            if rank == 0 {
+                baseline_itl = itl;
+                println!("  fig5 backbone-only: itl={:.3}ms", itl * 1e3);
+                continue;
+            }
+            let itl_overhead = itl / baseline_itl.max(1e-12);
+            let slowdown = itl_overhead; // tokens/step fixed → slowdown = ITL ratio
+            println!(
+                "  fig5 rank={rank} A_B={a_b}: itl={:.3}ms overhead={:.3}x",
+                itl * 1e3,
+                itl_overhead
+            );
+            rows.push(vec![
+                rank.to_string(),
+                a_b.to_string(),
+                format!("{:.6}", itl),
+                format!("{:.4}", itl_overhead),
+                format!("{:.4}", slowdown),
+            ]);
+        }
+    }
+    write_csv(&dir, "fig5.csv", &["rank", "adapters_in_batch", "itl_s", "itl_overhead", "throughput_slowdown"], &rows)?;
+    println!("fig5: wrote {}", dir.display());
+    Ok(())
+}
+
+/// Fig. 6: adapter loading time relative to request latency, per rank,
+/// request length and storage tier (CPU vs disk).
+pub fn fig6(ctx: &ExpContext) -> Result<()> {
+    let dir = ctx.exp_dir("fig6");
+    let mut rt = ctx.load_runtime("pico-llama")?;
+    let base = EngineConfig { model: "pico-llama".into(), ..Default::default() };
+    let calib = ctx.calibration(&mut rt)?;
+    // TPOT at a typical single-request decode.
+    let mut rows = vec![];
+    for (in_len, out_len) in [(32usize, 32usize), (128, 128), (256, 512)] {
+        let tpot = calib.lat_model(1, 1, 1);
+        let req_latency = tpot * (out_len.saturating_sub(1)) as f64;
+        for rank in [8usize, 16, 32] {
+            for disk in [false, true] {
+                let load = calib.lat_load(rank)
+                    * if disk { base.load_disk_mult } else { 1.0 };
+                let rel = 100.0 * load / (req_latency + load).max(1e-12);
+                println!(
+                    "  fig6 rank={rank} len={in_len}/{out_len} {}: load={:.2}ms = {rel:.2}% of request",
+                    if disk { "disk" } else { "cpu" },
+                    load * 1e3
+                );
+                rows.push(vec![
+                    rank.to_string(),
+                    in_len.to_string(),
+                    out_len.to_string(),
+                    if disk { "disk" } else { "cpu" }.to_string(),
+                    format!("{:.6}", load),
+                    format!("{:.6}", req_latency),
+                    format!("{rel:.3}"),
+                ]);
+            }
+        }
+    }
+    write_csv(&dir, "fig6.csv", &["rank", "input_len", "output_len", "storage", "load_s", "request_latency_s", "relative_pct"], &rows)?;
+    println!("fig6: wrote {}", dir.display());
+    Ok(())
+}
+
+/// Fig. 7: scheduler time share vs number of adapters and A_max.
+pub fn fig7(ctx: &ExpContext) -> Result<()> {
+    let dir = ctx.exp_dir("fig7");
+    let mut rt = ctx.load_runtime("pico-llama")?;
+    let mut rows = vec![];
+    let counts: Vec<usize> = if ctx.scale.is_quick() { vec![64, 192] } else { vec![64, 128, 256, 384] };
+    for &n in &counts {
+        for a_max in [8usize, 32, 128] {
+            if a_max > n {
+                continue;
+            }
+            // Overload with a large pending queue.
+            let adapters = WorkloadSpec::homogeneous(n, 8, 0.4);
+            let spec = WorkloadSpec::sharegpt_like(adapters, ctx.horizon() / 2.0, 77);
+            let cfg = EngineConfig {
+                model: "pico-llama".into(),
+                a_max,
+                s_max_rank: 8,
+                ..Default::default()
+            };
+            let mut engine = Engine::new(cfg, &mut rt);
+            let res = engine.run(&spec)?;
+            let total_sched = res.profiler.total_sched_s();
+            let total_step: f64 = res
+                .profiler
+                .iters
+                .iter()
+                .map(|r| r.sched_s + r.exec_s + r.load_s)
+                .sum();
+            let share = 100.0 * total_sched / total_step.max(1e-12);
+            println!("  fig7 A={n} a_max={a_max}: scheduler {share:.3}% of step time");
+            rows.push(vec![n.to_string(), a_max.to_string(), format!("{share:.4}")]);
+        }
+    }
+    write_csv(&dir, "fig7.csv", &["n_adapters", "a_max", "sched_share_pct"], &rows)?;
+    println!("fig7: wrote {}", dir.display());
+    Ok(())
+}

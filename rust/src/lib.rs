@@ -1,0 +1,27 @@
+//! # adapter-serving
+//!
+//! Reproduction of *"Data-Driven Optimization of GPU efficiency for
+//! Distributed LLM-Adapter Serving"* (Agulló et al., 2026) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - [`runtime`] — PJRT CPU client loading AOT-compiled HLO artifacts;
+//! - [`engine`] — the vLLM-like multi-LoRA continuous-batching serving
+//!   engine (the paper's "real system" stand-in);
+//! - [`dt`] — the Digital Twin and its four predictive performance models;
+//! - [`ml`] — from-scratch ML (RF/KNN/SVM + refinement) trained on DT data;
+//! - [`placement`] — the greedy adapter-caching algorithm and baselines;
+//! - [`cluster`] — multi-GPU routing driven by placement decisions;
+//! - [`experiments`] — regenerates every table and figure of the paper.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod cluster;
+pub mod config;
+pub mod dt;
+pub mod engine;
+pub mod experiments;
+pub mod ml;
+pub mod placement;
+pub mod runtime;
+pub mod util;
+pub mod workload;

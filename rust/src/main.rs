@@ -1,0 +1,225 @@
+//! `adapterd` — CLI for the adapter-serving reproduction.
+//!
+//! Subcommands:
+//!   serve            run one engine over a synthetic workload, print report
+//!   twin             run the Digital Twin over the same kind of workload
+//!   calibrate        run the DT parameterization suite, write calibration
+//!   dataset          generate the DT training set
+//!   train            train + persist the RF model pair
+//!   place            compute a placement for a workload (greedy pipeline)
+//!   experiment <id>  regenerate a paper table/figure (or `all`)
+//!   list-experiments list experiment ids
+//!   artifacts-info   show the AOT artifact manifest
+
+use adapter_serving::config::EngineConfig;
+use adapter_serving::dt::{self, Calibration};
+use adapter_serving::engine::Engine;
+use adapter_serving::experiments::{self, ExpContext, Scale};
+use adapter_serving::ml;
+use adapter_serving::placement::greedy;
+use adapter_serving::runtime::{Manifest, ModelRuntime};
+use adapter_serving::util::cli::Args;
+use adapter_serving::workload::WorkloadSpec;
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "usage: adapterd <serve|twin|calibrate|dataset|train|place|experiment|list-experiments|artifacts-info> [options]
+common options:
+  --model <pico-llama|pico-qwen>   backbone (default pico-llama)
+  --adapters N --rank R --rate X   synthetic workload shape
+  --a-max N --s-max-rank R         engine configuration
+  --horizon S                      simulated seconds (default 15)
+  --scale <quick|full>             experiment scale (default quick)
+  --out PATH                       output file/directory";
+
+fn main() -> Result<()> {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = raw.remove(0);
+    let args = Args::parse(raw, &["full", "unified", "fast"]);
+    match cmd.as_str() {
+        "serve" => serve(&args, false),
+        "twin" => serve(&args, true),
+        "calibrate" => calibrate_cmd(&args),
+        "dataset" => dataset_cmd(&args),
+        "train" => train_cmd(&args),
+        "place" => place_cmd(&args),
+        "experiment" => experiment_cmd(&args),
+        "list-experiments" => {
+            for (id, desc, _) in experiments::REGISTRY {
+                println!("{id:>8}  {desc}");
+            }
+            Ok(())
+        }
+        "artifacts-info" => artifacts_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}'\n{USAGE}")),
+    }
+}
+
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    let mut cfg = EngineConfig {
+        model: args.get_or("model", "pico-llama").to_string(),
+        a_max: args.usize_or("a-max", 32)?,
+        s_max_rank: args.usize_or("s-max-rank", 32)?,
+        ..Default::default()
+    };
+    cfg.mem.unified = args.flag("unified");
+    Ok(cfg)
+}
+
+fn workload(args: &Args) -> Result<WorkloadSpec> {
+    let n = args.usize_or("adapters", 16)?;
+    let rank = args.usize_or("rank", 8)?;
+    let rate = args.f64_or("rate", 0.1)?;
+    let horizon = args.f64_or("horizon", 15.0)?;
+    let seed = args.usize_or("seed", 42)? as u64;
+    Ok(WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(n, rank, rate), horizon, seed))
+}
+
+fn serve(args: &Args, twin: bool) -> Result<()> {
+    let cfg = engine_config(args)?;
+    let spec = workload(args)?;
+    println!(
+        "workload: {} adapters, {:.2} req/s total, {:.0} tok/s incoming; horizon {:.0}s",
+        spec.adapters.len(),
+        spec.total_rate(),
+        spec.incoming_token_rate(),
+        spec.horizon_s
+    );
+    if twin {
+        let calib = load_or_default_calibration(args, &cfg.model)?;
+        let res = dt::run_twin(&cfg, &calib, &spec, dt::LengthVariant::Original);
+        match res.report {
+            Some(r) => println!("twin: {} ({} iterations in {:.4}s)", r.summary(), res.iterations, res.wall_s),
+            None => println!("twin: MEMORY ERROR (A_max×S_max exceeds GPU memory)"),
+        }
+    } else {
+        let mut rt = ModelRuntime::load(&Manifest::default_dir(), &cfg.model)?;
+        let mut engine = Engine::new(cfg, &mut rt);
+        let res = engine.run(&spec)?;
+        match res.report {
+            Some(r) => println!("engine: {} (wall {:.2}s)", r.summary(), res.wall_s),
+            None => println!("engine: MEMORY ERROR (A_max×S_max exceeds GPU memory)"),
+        }
+    }
+    Ok(())
+}
+
+fn load_or_default_calibration(args: &Args, model: &str) -> Result<Calibration> {
+    let path = PathBuf::from(
+        args.get_or("calibration", &format!("results/calibration_{model}.json")),
+    );
+    if path.exists() {
+        Calibration::load_file(&path, model)
+    } else {
+        eprintln!("note: {} not found; using built-in default calibration", path.display());
+        Ok(Calibration::default())
+    }
+}
+
+fn calibrate_cmd(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "pico-llama").to_string();
+    let out = PathBuf::from(args.get_or("out", &format!("results/calibration_{model}.json")));
+    let mut rt = ModelRuntime::load(&Manifest::default_dir(), &model)?;
+    let cfg = EngineConfig { model: model.clone(), ..Default::default() };
+    let calib = dt::calibrate(&mut rt, &cfg, args.flag("fast"))?;
+    calib.to_json().write_file(&out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+fn dataset_cmd(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "pico-llama").to_string();
+    let calib = load_or_default_calibration(args, &model)?;
+    let out = PathBuf::from(args.get_or("out", &format!("results/dataset_{model}.csv")));
+    let quick = !args.flag("full");
+    let grid = ml::GridSpec::paper(quick);
+    let base = EngineConfig { model, ..Default::default() };
+    let samples = ml::dataset::generate(
+        &calib,
+        &base,
+        &grid,
+        adapter_serving::util::threadpool::default_workers(),
+    );
+    ml::dataset::save(&samples, &out)?;
+    let starved = samples.iter().filter(|s| s.starved).count();
+    println!("wrote {} samples ({starved} starved) to {}", samples.len(), out.display());
+    Ok(())
+}
+
+fn train_cmd(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "pico-llama").to_string();
+    let ds_path = PathBuf::from(args.get_or("dataset", &format!("results/dataset_{model}.csv")));
+    let out = PathBuf::from(args.get_or("out", &format!("results/models_{model}.json")));
+    let samples = ml::dataset::load(&ds_path)?;
+    let quick = !args.flag("full");
+    let (thr, s1) = ml::train(&samples, ml::Task::Throughput, ml::ModelType::RandomForest, quick, 7);
+    let (st, s2) = ml::train(&samples, ml::Task::Starvation, ml::ModelType::RandomForest, quick, 7);
+    println!("RF throughput cv-score {s1:.2}; starvation macro-F1 {s2:.3}");
+    ml::save_models(&ml::MlModels { throughput: thr, starvation: st, scaler: None }, &out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+fn place_cmd(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "pico-llama").to_string();
+    let models_path =
+        PathBuf::from(args.get_or("models", &format!("results/models_{model}.json")));
+    let models = ml::load_models(&models_path)?;
+    let gpus = args.usize_or("gpus", 4)?;
+    let spec = workload(args)?;
+    match greedy::place(&spec.adapters, gpus, &models) {
+        Ok(p) => {
+            println!("placement uses {} / {gpus} GPUs", p.gpus_used());
+            for g in 0..gpus {
+                let on = p.adapters_on(g);
+                if !on.is_empty() {
+                    println!("  gpu{g}: {} adapters, A_max={}", on.len(), p.a_max[g]);
+                }
+            }
+        }
+        Err(e) => println!("placement failed: {e}"),
+    }
+    Ok(())
+}
+
+fn experiment_cmd(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("experiment id required (or 'all')"))?;
+    let mut ctx = ExpContext::new(Scale::parse(args.get_or("scale", "quick")));
+    if let Some(out) = args.get("out") {
+        ctx.out_dir = PathBuf::from(out);
+    }
+    if let Some(m) = args.get("model") {
+        ctx.models = vec![m.to_string()];
+    }
+    experiments::run(id, &ctx)
+}
+
+fn artifacts_info(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").map(PathBuf::from).unwrap_or_else(Manifest::default_dir);
+    let m = Manifest::load(Path::new(&dir))?;
+    for (name, meta) in &m.models {
+        println!(
+            "{name}: d={} L={} heads={} window={} slots={} decode buckets {:?} prefill {:?} (pallas={})",
+            meta.d_model,
+            meta.n_layers,
+            meta.n_heads,
+            meta.window,
+            meta.slots,
+            meta.decode_buckets,
+            meta.prefill_buckets,
+            meta.use_pallas
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,153 @@
+//! Cross-validation and hyperparameter search: 5-fold CV and successive
+//! halving (the paper uses scikit-learn's HalvingGridSearchCV).
+
+use crate::util::rng::Rng;
+
+/// Deterministic shuffled k-fold index split.
+pub fn kfold(n: usize, folds: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+    let folds = folds.clamp(2, n.max(2));
+    let mut idx: Vec<usize> = (0..n).collect();
+    Rng::new(seed ^ 0xF01D).shuffle(&mut idx);
+    let mut out = Vec::with_capacity(folds);
+    for f in 0..folds {
+        let test: Vec<usize> = idx.iter().copied().skip(f).step_by(folds).collect();
+        let test_set: std::collections::HashSet<usize> = test.iter().copied().collect();
+        let train: Vec<usize> = idx.iter().copied().filter(|i| !test_set.contains(i)).collect();
+        out.push((train, test));
+    }
+    out
+}
+
+/// Mean CV score of one candidate on a subsample of the data.
+/// `fit_score(train_x, train_y, test_x, test_y)` returns a score where
+/// higher is better.
+fn cv_score<F>(
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    sample: &[usize],
+    folds: usize,
+    seed: u64,
+    fit_score: &F,
+) -> f64
+where
+    F: Fn(&[Vec<f64>], &[f64], &[Vec<f64>], &[f64]) -> f64,
+{
+    let mut total = 0.0;
+    let splits = kfold(sample.len(), folds, seed);
+    for (train, test) in &splits {
+        let tx: Vec<Vec<f64>> = train.iter().map(|&i| xs[sample[i]].clone()).collect();
+        let ty: Vec<f64> = train.iter().map(|&i| ys[sample[i]]).collect();
+        let vx: Vec<Vec<f64>> = test.iter().map(|&i| xs[sample[i]].clone()).collect();
+        let vy: Vec<f64> = test.iter().map(|&i| ys[sample[i]]).collect();
+        if tx.is_empty() || vx.is_empty() {
+            continue;
+        }
+        total += fit_score(&tx, &ty, &vx, &vy);
+    }
+    total / splits.len() as f64
+}
+
+/// Successive-halving grid search (HalvingGridSearchCV analog): all
+/// candidates start on a small subsample; each rung keeps the top
+/// `1/factor` and multiplies the sample size by `factor`, until one
+/// candidate remains or the full dataset is reached.  Returns the best
+/// candidate index and its final CV score.
+pub fn halving_search<P, F>(
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    candidates: &[P],
+    folds: usize,
+    factor: usize,
+    min_samples: usize,
+    seed: u64,
+    fit_score: F,
+) -> (usize, f64)
+where
+    F: Fn(&[Vec<f64>], &[f64], &[Vec<f64>], &[f64], &P) -> f64,
+{
+    assert!(!candidates.is_empty());
+    let n = xs.len();
+    let factor = factor.max(2);
+    let mut alive: Vec<usize> = (0..candidates.len()).collect();
+    // Rungs needed to eliminate down to one candidate.
+    let rungs = (candidates.len() as f64).log(factor as f64).ceil() as u32;
+    let mut sample_size = (n / factor.pow(rungs) as usize).max(min_samples).min(n);
+    let mut rng = Rng::new(seed ^ 0x4A1F);
+    let mut perm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut perm);
+    let mut best = (alive[0], f64::NEG_INFINITY);
+
+    loop {
+        let sample: Vec<usize> = perm.iter().copied().take(sample_size).collect();
+        let mut scored: Vec<(usize, f64)> = alive
+            .iter()
+            .map(|&c| {
+                let s = cv_score(xs, ys, &sample, folds, seed, &|tx: &[Vec<f64>],
+                                                                 ty: &[f64],
+                                                                 vx: &[Vec<f64>],
+                                                                 vy: &[f64]| {
+                    fit_score(tx, ty, vx, vy, &candidates[c])
+                });
+                (c, s)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        best = scored[0];
+        if scored.len() == 1 || sample_size >= n {
+            return best;
+        }
+        let keep = (scored.len() / factor).max(1);
+        alive = scored.into_iter().take(keep).map(|(c, _)| c).collect();
+        sample_size = (sample_size * factor).min(n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kfold_partitions_everything() {
+        let splits = kfold(103, 5, 1);
+        assert_eq!(splits.len(), 5);
+        let mut seen = vec![false; 103];
+        for (train, test) in &splits {
+            assert_eq!(train.len() + test.len(), 103);
+            for &i in test {
+                assert!(!seen[i], "index {i} in two test folds");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn halving_finds_the_good_candidate() {
+        // Candidates are "prediction constants"; data says 7.0 is right.
+        let xs: Vec<Vec<f64>> = (0..200).map(|i| vec![i as f64]).collect();
+        let ys = vec![7.0; 200];
+        let candidates = vec![0.0, 3.0, 7.0, 10.0, -5.0, 6.0];
+        let (best, _) = halving_search(
+            &xs,
+            &ys,
+            &candidates,
+            3,
+            2,
+            8,
+            42,
+            |_tx, _ty, _vx, vy, &c| {
+                // score = negative MSE of the constant predictor c
+                -vy.iter().map(|y| (y - c) * (y - c)).sum::<f64>() / vy.len() as f64
+            },
+        );
+        assert_eq!(candidates[best], 7.0);
+    }
+
+    #[test]
+    fn halving_single_candidate() {
+        let xs: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let ys = vec![1.0; 20];
+        let (best, _) = halving_search(&xs, &ys, &[42.0], 3, 2, 4, 1, |_, _, _, _, _| 0.0);
+        assert_eq!(best, 0);
+    }
+}

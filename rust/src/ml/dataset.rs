@@ -1,0 +1,222 @@
+//! Training-set generation by sweeping the Digital Twin across workload ×
+//! device configurations (paper §8.3): Cartesian combinations of three
+//! adapter sizes and three arrival rates, swept over adapter counts and
+//! `A_max`, simulated with Poisson arrivals and mean request lengths.
+
+use super::features::{features, FEATURE_NAMES};
+use crate::config::EngineConfig;
+use crate::dt::{self, Calibration, LengthVariant};
+use crate::util::csv::Table;
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+use crate::workload::{AdapterSpec, WorkloadSpec};
+use std::path::Path;
+
+/// One training sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub x: Vec<f64>,
+    pub throughput: f64,
+    pub starved: bool,
+    /// Static reservation exceeded GPU memory (labelled starved too, with
+    /// zero throughput, so the classifier learns to reject these configs).
+    pub memory_error: bool,
+}
+
+/// Sweep specification.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    pub sizes: Vec<usize>,
+    pub rates: Vec<f64>,
+    pub adapter_counts: Vec<usize>,
+    pub a_max_values: Vec<usize>,
+    pub horizon_s: f64,
+    /// Cap on the number of scenarios (deterministically subsampled).
+    pub max_scenarios: usize,
+    pub seed: u64,
+}
+
+impl GridSpec {
+    /// Paper §8.3 grid, subsampled for this testbed's CPU budget.
+    pub fn paper(quick: bool) -> GridSpec {
+        GridSpec {
+            sizes: vec![8, 16, 32],
+            rates: vec![3.2, 1.6, 0.8, 0.4, 0.1, 0.05, 0.025, 0.0125, 0.00625, 0.003125],
+            adapter_counts: vec![8, 16, 32, 64, 96, 128, 160, 192, 256, 320, 384],
+            a_max_values: vec![8, 16, 32, 64, 96, 128, 160, 192, 256, 320, 384],
+            horizon_s: if quick { 20.0 } else { 40.0 },
+            max_scenarios: if quick { 1500 } else { 8000 },
+            seed: 0xDA7A,
+        }
+    }
+}
+
+/// Combinations with replacement of exactly 3 elements.
+fn combos3<T: Copy>(set: &[T]) -> Vec<[T; 3]> {
+    let mut out = vec![];
+    for i in 0..set.len() {
+        for j in i..set.len() {
+            for k in j..set.len() {
+                out.push([set[i], set[j], set[k]]);
+            }
+        }
+    }
+    out
+}
+
+/// Generate the dataset by running the DT (Mean length variant) per
+/// scenario, in parallel.
+pub fn generate(
+    calib: &Calibration,
+    base_cfg: &EngineConfig,
+    grid: &GridSpec,
+    workers: usize,
+) -> Vec<Sample> {
+    let size_combos = combos3(&grid.sizes);
+    let rate_combos = combos3(&grid.rates);
+    let mut scenarios: Vec<(usize, [usize; 3], [f64; 3], usize, u64)> = vec![];
+    let mut tag = 0u64;
+    for &n in &grid.adapter_counts {
+        for sc in &size_combos {
+            for rc in &rate_combos {
+                for &a_max in &grid.a_max_values {
+                    // A_max above the adapter count is meaningless in vLLM.
+                    if a_max > n {
+                        continue;
+                    }
+                    scenarios.push((n, *sc, *rc, a_max, tag));
+                    tag += 1;
+                }
+            }
+        }
+    }
+    let mut rng = Rng::new(grid.seed);
+    rng.shuffle(&mut scenarios);
+    scenarios.truncate(grid.max_scenarios);
+
+    let calib = calib.clone();
+    let base = base_cfg.clone();
+    let horizon = grid.horizon_s;
+    let seed = grid.seed;
+    parallel_map(scenarios, workers, move |(n, sizes, rates, a_max, tag)| {
+        let mut arng = Rng::new(seed ^ tag.wrapping_mul(0x9E3779B97F4A7C15));
+        let adapters: Vec<AdapterSpec> = (0..n)
+            .map(|id| AdapterSpec {
+                id,
+                rank: *arng.choose(&sizes),
+                rate: *arng.choose(&rates),
+            })
+            .collect();
+        let s_max = adapters.iter().map(|a| a.rank).max().unwrap_or(8);
+        let mut cfg = base.clone();
+        cfg.a_max = a_max;
+        cfg.s_max_rank = s_max;
+        let spec = WorkloadSpec::sharegpt_like(adapters.clone(), horizon, seed ^ tag);
+        let res = dt::run_twin(&cfg, &calib, &spec, LengthVariant::Mean);
+        let x = features(&adapters, a_max);
+        match res.report {
+            Some(rep) => Sample {
+                x,
+                throughput: rep.throughput_tok_s,
+                starved: rep.starved,
+                memory_error: false,
+            },
+            None => Sample { x, throughput: 0.0, starved: true, memory_error: true },
+        }
+    })
+}
+
+pub fn save(samples: &[Sample], path: &Path) -> anyhow::Result<()> {
+    let mut cols: Vec<&str> = FEATURE_NAMES.to_vec();
+    cols.extend(["throughput", "starved", "memory_error"]);
+    let mut t = Table::new(&cols);
+    for s in samples {
+        let mut row: Vec<String> = s.x.iter().map(|v| format!("{v}")).collect();
+        row.push(format!("{}", s.throughput));
+        row.push(format!("{}", s.starved as i32));
+        row.push(format!("{}", s.memory_error as i32));
+        t.push(row);
+    }
+    t.write_file(path)
+}
+
+pub fn load(path: &Path) -> anyhow::Result<Vec<Sample>> {
+    let t = Table::read_file(path)?;
+    let nf = FEATURE_NAMES.len();
+    let thr = t.f64_col("throughput")?;
+    let st = t.f64_col("starved")?;
+    let me = t.f64_col("memory_error")?;
+    let mut out = Vec::with_capacity(t.rows.len());
+    for (i, row) in t.rows.iter().enumerate() {
+        let x: Vec<f64> = row[..nf]
+            .iter()
+            .map(|c| c.parse::<f64>().unwrap_or(0.0))
+            .collect();
+        out.push(Sample {
+            x,
+            throughput: thr[i],
+            starved: st[i] >= 0.5,
+            memory_error: me[i] >= 0.5,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combos3_counts() {
+        // C(3+2, 3) = 10 combinations with replacement of 3 from 3.
+        assert_eq!(combos3(&[1, 2, 3]).len(), 10);
+        assert_eq!(combos3(&[1, 2]).len(), 4);
+    }
+
+    #[test]
+    fn generate_small_grid() {
+        let grid = GridSpec {
+            sizes: vec![8, 32],
+            rates: vec![0.2, 0.05],
+            adapter_counts: vec![8, 16],
+            a_max_values: vec![8, 16],
+            horizon_s: 5.0,
+            max_scenarios: 12,
+            seed: 3,
+        };
+        let samples = generate(&Calibration::default(), &EngineConfig::default(), &grid, 2);
+        assert_eq!(samples.len(), 12);
+        assert!(samples.iter().all(|s| s.x.len() == FEATURE_NAMES.len()));
+        assert!(samples.iter().any(|s| s.throughput > 0.0));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ds_test_{}", std::process::id()));
+        let path = dir.join("ds.csv");
+        let samples = vec![
+            Sample { x: vec![1.0; 7], throughput: 100.0, starved: false, memory_error: false },
+            Sample { x: vec![2.0; 7], throughput: 0.0, starved: true, memory_error: true },
+        ];
+        save(&samples, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back, samples);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let grid = GridSpec {
+            sizes: vec![8],
+            rates: vec![0.1],
+            adapter_counts: vec![8],
+            a_max_values: vec![8],
+            horizon_s: 3.0,
+            max_scenarios: 3,
+            seed: 7,
+        };
+        let a = generate(&Calibration::default(), &EngineConfig::default(), &grid, 2);
+        let b = generate(&Calibration::default(), &EngineConfig::default(), &grid, 1);
+        assert_eq!(a, b);
+    }
+}

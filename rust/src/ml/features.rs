@@ -1,0 +1,59 @@
+//! Feature engineering for the ML phase (paper §6): the feature vector
+//! characterizes the workload and the GPU configuration.
+
+use crate::util::stats;
+use crate::workload::AdapterSpec;
+
+/// Feature order is part of the trained-model contract.
+pub const FEATURE_NAMES: [&str; 7] = [
+    "n_adapters",
+    "sum_rate",
+    "std_rate",
+    "max_size",
+    "mean_size",
+    "std_size",
+    "a_max",
+];
+
+pub const N_FEATURES: usize = FEATURE_NAMES.len();
+
+/// Build the 7-feature vector for an adapter set under a given `A_max`.
+pub fn features(adapters: &[AdapterSpec], a_max: usize) -> Vec<f64> {
+    let rates: Vec<f64> = adapters.iter().map(|a| a.rate).collect();
+    let sizes: Vec<f64> = adapters.iter().map(|a| a.rank as f64).collect();
+    vec![
+        adapters.len() as f64,
+        rates.iter().sum(),
+        stats::std(&rates),
+        stats::max(&sizes).max(0.0),
+        stats::mean(&sizes),
+        stats::std(&sizes),
+        a_max as f64,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_vector_shape_and_values() {
+        let ads = vec![
+            AdapterSpec { id: 0, rank: 8, rate: 0.1 },
+            AdapterSpec { id: 1, rank: 32, rate: 0.3 },
+        ];
+        let f = features(&ads, 16);
+        assert_eq!(f.len(), N_FEATURES);
+        assert_eq!(f[0], 2.0); // count
+        assert!((f[1] - 0.4).abs() < 1e-12); // sum rate
+        assert_eq!(f[3], 32.0); // max size
+        assert_eq!(f[4], 20.0); // mean size
+        assert_eq!(f[6], 16.0); // a_max
+    }
+
+    #[test]
+    fn empty_set_is_all_zero_except_amax() {
+        let f = features(&[], 8);
+        assert_eq!(f, vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 8.0]);
+    }
+}

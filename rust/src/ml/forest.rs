@@ -1,0 +1,129 @@
+//! Random Forest (bagged CART ensemble with feature subsampling).
+
+use super::tree::{Tree, TreeParams};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ForestParams {
+    pub n_estimators: usize,
+    pub tree: TreeParams,
+    /// Bootstrap sample fraction.
+    pub subsample: f64,
+    pub seed: u64,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams { n_estimators: 64, tree: TreeParams::default(), subsample: 1.0, seed: 0 }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Forest {
+    pub trees: Vec<Tree>,
+}
+
+impl Forest {
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], params: &ForestParams) -> Forest {
+        let n = xs.len();
+        let mut rng = Rng::new(params.seed ^ 0xF0_4E57);
+        let d = xs[0].len();
+        let mut trees = Vec::with_capacity(params.n_estimators);
+        for t in 0..params.n_estimators {
+            // Bootstrap resample.
+            let m = ((n as f64 * params.subsample) as usize).max(1);
+            let mut bx = Vec::with_capacity(m);
+            let mut by = Vec::with_capacity(m);
+            for _ in 0..m {
+                let i = rng.below(n);
+                bx.push(xs[i].clone());
+                by.push(ys[i]);
+            }
+            let mut tp = params.tree.clone();
+            tp.seed = params.seed ^ (t as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            // sklearn default max_features for RF regression is all; for
+            // classification sqrt.  Honour whatever the caller set, default
+            // to sqrt(d) which works well for both here.
+            if tp.max_features.is_none() {
+                tp.max_features = Some(((d as f64).sqrt().ceil() as usize).max(1));
+            }
+            trees.push(Tree::fit(&bx, &by, &tp));
+        }
+        Forest { trees }
+    }
+
+    /// Mean over trees (probability for classification labels in {0,1}).
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        if self.trees.is_empty() {
+            return 0.0;
+        }
+        self.trees.iter().map(|t| t.predict_one(x)).sum::<f64>() / self.trees.len() as f64
+    }
+
+    pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.predict_one(x)).collect()
+    }
+
+    /// Total decision-rule count (Table 4's complexity measure).
+    pub fn n_rules(&self) -> usize {
+        self.trees.iter().map(Tree::n_leaves).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::tree::Criterion;
+
+    #[test]
+    fn forest_beats_constant_on_nonlinear_target() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<Vec<f64>> = (0..400).map(|_| vec![rng.f64() * 4.0, rng.f64() * 4.0]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (x[0] * x[1]).sin() + x[0]).collect();
+        let f = Forest::fit(
+            &xs,
+            &ys,
+            &ForestParams { n_estimators: 30, ..Default::default() },
+        );
+        let preds = f.predict(&xs);
+        let mse: f64 =
+            preds.iter().zip(&ys).map(|(p, y)| (p - y) * (p - y)).sum::<f64>() / ys.len() as f64;
+        let var: f64 = {
+            let m = ys.iter().sum::<f64>() / ys.len() as f64;
+            ys.iter().map(|y| (y - m) * (y - m)).sum::<f64>() / ys.len() as f64
+        };
+        assert!(mse < 0.25 * var, "mse={mse} var={var}");
+    }
+
+    #[test]
+    fn classification_probability_in_unit_interval() {
+        let mut rng = Rng::new(4);
+        let xs: Vec<Vec<f64>> = (0..200).map(|_| vec![rng.f64()]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| (x[0] > 0.5) as i32 as f64).collect();
+        let f = Forest::fit(
+            &xs,
+            &ys,
+            &ForestParams {
+                n_estimators: 16,
+                tree: TreeParams { criterion: Criterion::Gini, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        for x in &xs {
+            let p = f.predict_one(x);
+            assert!((0.0..=1.0).contains(&p));
+        }
+        assert!(f.predict_one(&[0.95]) > 0.8);
+        assert!(f.predict_one(&[0.05]) < 0.2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let xs: Vec<Vec<f64>> = (0..50).map(|i| vec![i as f64]).collect();
+        let ys: Vec<f64> = (0..50).map(|i| (i % 7) as f64).collect();
+        let p = ForestParams { n_estimators: 5, seed: 9, ..Default::default() };
+        let a = Forest::fit(&xs, &ys, &p).predict(&xs);
+        let b = Forest::fit(&xs, &ys, &p).predict(&xs);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,82 @@
+//! Evaluation metrics for the ML phase: macro-F1 (starvation detection)
+//! and MSE/SMAPE (throughput regression; SMAPE lives in util::stats).
+
+/// Macro-averaged F1 over binary labels in {0, 1}.
+pub fn macro_f1(actual: &[f64], predicted: &[f64]) -> f64 {
+    let f1_for = |positive: f64| -> f64 {
+        let (mut tp, mut fp, mut fne) = (0.0, 0.0, 0.0);
+        for (&a, &p) in actual.iter().zip(predicted) {
+            let a = (a >= 0.5) as i32 as f64;
+            let p = (p >= 0.5) as i32 as f64;
+            if p == positive && a == positive {
+                tp += 1.0;
+            } else if p == positive && a != positive {
+                fp += 1.0;
+            } else if p != positive && a == positive {
+                fne += 1.0;
+            }
+        }
+        if tp == 0.0 {
+            // No true positives: F1 is 0 unless the class is absent
+            // entirely and never predicted (then it is vacuously perfect).
+            if fp == 0.0 && fne == 0.0 {
+                return 1.0;
+            }
+            return 0.0;
+        }
+        let prec = tp / (tp + fp);
+        let rec = tp / (tp + fne);
+        2.0 * prec * rec / (prec + rec)
+    };
+    (f1_for(1.0) + f1_for(0.0)) / 2.0
+}
+
+pub fn accuracy(actual: &[f64], predicted: &[f64]) -> f64 {
+    if actual.is_empty() {
+        return 0.0;
+    }
+    actual
+        .iter()
+        .zip(predicted)
+        .filter(|(a, p)| ((**a >= 0.5) as i32) == ((**p >= 0.5) as i32))
+        .count() as f64
+        / actual.len() as f64
+}
+
+pub fn mse(actual: &[f64], predicted: &[f64]) -> f64 {
+    if actual.is_empty() {
+        return 0.0;
+    }
+    actual.iter().zip(predicted).map(|(a, p)| (a - p) * (a - p)).sum::<f64>()
+        / actual.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_predictions() {
+        let y = vec![1.0, 0.0, 1.0, 0.0];
+        assert_eq!(macro_f1(&y, &y), 1.0);
+        assert_eq!(accuracy(&y, &y), 1.0);
+        assert_eq!(mse(&y, &y), 0.0);
+    }
+
+    #[test]
+    fn all_wrong_f1_zero() {
+        let a = vec![1.0, 1.0, 0.0, 0.0];
+        let p = vec![0.0, 0.0, 1.0, 1.0];
+        assert_eq!(macro_f1(&a, &p), 0.0);
+        assert_eq!(accuracy(&a, &p), 0.0);
+    }
+
+    #[test]
+    fn imbalanced_majority_guess_penalized() {
+        let a = vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let p = vec![0.0; 8];
+        // Accuracy looks fine but macro-F1 exposes the missed positive.
+        assert!(accuracy(&a, &p) > 0.8);
+        assert!(macro_f1(&a, &p) < 0.5);
+    }
+}

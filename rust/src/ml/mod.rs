@@ -1,0 +1,22 @@
+//! The ML learning phase (paper §6): from-scratch Random Forest, KNN and
+//! SVM trained on Digital-Twin-generated data with successive-halving grid
+//! search and 5-fold CV, plus the §6.1 refinement into interpretable
+//! shallow trees with a compiled flat-array evaluator.
+
+pub mod cv;
+pub mod dataset;
+pub mod features;
+pub mod forest;
+pub mod knn;
+pub mod metrics;
+pub mod model;
+pub mod refine;
+pub mod scaler;
+pub mod svm;
+pub mod train;
+pub mod tree;
+
+pub use dataset::{GridSpec, Sample};
+pub use features::{features, FEATURE_NAMES, N_FEATURES};
+pub use model::{load_models, save_models, MlModels, Predictor};
+pub use train::{train, ModelType, Task};

@@ -1,0 +1,201 @@
+//! Unified predictor interface consumed by the placement layer, plus JSON
+//! persistence for the tree-family models (the ones deployed in the
+//! pipeline; KNN/SVM are evaluated in-process by the Table-3 experiment).
+
+use super::forest::Forest;
+use super::knn::Knn;
+use super::refine::FlatTree;
+use super::scaler::Scaler;
+use super::svm::{Svc, Svr};
+use super::tree::Tree;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Any trained model, normalized to `predict_one(&[f64]) -> f64`
+/// (regression value, or class-1 probability / label for classification).
+pub enum Predictor {
+    Forest(Forest),
+    Tree(Tree),
+    Flat(FlatTree),
+    Knn(Box<Knn>),
+    Svc(Box<Svc>),
+    Svr(Box<Svr>),
+}
+
+impl Predictor {
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        match self {
+            Predictor::Forest(m) => m.predict_one(x),
+            Predictor::Tree(m) => m.predict_one(x),
+            Predictor::Flat(m) => m.predict_one(x),
+            Predictor::Knn(m) => m.predict_one(x),
+            Predictor::Svc(m) => m.predict_one(x),
+            Predictor::Svr(m) => m.predict_one(x),
+        }
+    }
+
+    pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.predict_one(x)).collect()
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Predictor::Forest(_) => "forest",
+            Predictor::Tree(_) => "tree",
+            Predictor::Flat(_) => "flat",
+            Predictor::Knn(_) => "knn",
+            Predictor::Svc(_) => "svc",
+            Predictor::Svr(_) => "svr",
+        }
+    }
+}
+
+/// The deployed model pair (paper §6): a throughput regressor and a
+/// starvation classifier, with an optional shared scaler.
+pub struct MlModels {
+    pub throughput: Predictor,
+    pub starvation: Predictor,
+    pub scaler: Option<Scaler>,
+}
+
+impl MlModels {
+    pub fn predict_throughput(&self, x: &[f64]) -> f64 {
+        match &self.scaler {
+            Some(s) => self.throughput.predict_one(&s.transform_one(x)),
+            None => self.throughput.predict_one(x),
+        }
+    }
+
+    pub fn predict_starvation(&self, x: &[f64]) -> bool {
+        let p = match &self.scaler {
+            Some(s) => self.starvation.predict_one(&s.transform_one(x)),
+            None => self.starvation.predict_one(x),
+        };
+        p >= 0.5
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON persistence (tree family)
+// ---------------------------------------------------------------------
+
+pub fn tree_to_json(t: &Tree) -> Json {
+    Json::obj(vec![
+        ("feature", Json::arr_f64(&t.feature.iter().map(|&v| v as f64).collect::<Vec<_>>())),
+        ("threshold", Json::arr_f64(&t.threshold)),
+        ("left", Json::arr_f64(&t.left.iter().map(|&v| v as f64).collect::<Vec<_>>())),
+        ("right", Json::arr_f64(&t.right.iter().map(|&v| v as f64).collect::<Vec<_>>())),
+        ("value", Json::arr_f64(&t.value)),
+        ("n_samples", Json::arr_f64(&t.n_samples.iter().map(|&v| v as f64).collect::<Vec<_>>())),
+    ])
+}
+
+pub fn tree_from_json(j: &Json) -> Result<Tree> {
+    let f = |k: &str| -> Result<Vec<f64>> {
+        j.req(k)?.f64_vec().ok_or_else(|| anyhow!("{k} not an array"))
+    };
+    Ok(Tree {
+        feature: f("feature")?.into_iter().map(|v| v as i32).collect(),
+        threshold: f("threshold")?,
+        left: f("left")?.into_iter().map(|v| v as u32).collect(),
+        right: f("right")?.into_iter().map(|v| v as u32).collect(),
+        value: f("value")?,
+        n_samples: f("n_samples")?.into_iter().map(|v| v as u32).collect(),
+    })
+}
+
+pub fn forest_to_json(f: &Forest) -> Json {
+    Json::Arr(f.trees.iter().map(tree_to_json).collect())
+}
+
+pub fn forest_from_json(j: &Json) -> Result<Forest> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("forest not an array"))?;
+    Ok(Forest { trees: arr.iter().map(tree_from_json).collect::<Result<_>>()? })
+}
+
+/// Save a throughput/starvation model pair (forest or tree flavor).
+pub fn save_models(models: &MlModels, path: &Path) -> Result<()> {
+    let enc = |p: &Predictor| -> Result<Json> {
+        Ok(match p {
+            Predictor::Forest(f) => {
+                Json::obj(vec![("kind", Json::Str("forest".into())), ("data", forest_to_json(f))])
+            }
+            Predictor::Tree(t) => {
+                Json::obj(vec![("kind", Json::Str("tree".into())), ("data", tree_to_json(t))])
+            }
+            Predictor::Flat(_) => anyhow::bail!("persist the Tree; Flat is compiled at load"),
+            _ => anyhow::bail!("only tree-family models are persisted"),
+        })
+    };
+    let mut fields = vec![
+        ("throughput", enc(&models.throughput)?),
+        ("starvation", enc(&models.starvation)?),
+    ];
+    if let Some(s) = &models.scaler {
+        fields.push(("scaler", s.to_json()));
+    }
+    Json::obj(fields).write_file(path)
+}
+
+pub fn load_models(path: &Path) -> Result<MlModels> {
+    let j = Json::read_file(path)?;
+    let dec = |j: &Json| -> Result<Predictor> {
+        let kind = j.req("kind")?.as_str().unwrap_or_default();
+        let data = j.req("data")?;
+        Ok(match kind {
+            "forest" => Predictor::Forest(forest_from_json(data)?),
+            "tree" => Predictor::Tree(tree_from_json(data)?),
+            other => anyhow::bail!("unknown model kind '{other}'"),
+        })
+    };
+    Ok(MlModels {
+        throughput: dec(j.req("throughput")?)?,
+        starvation: dec(j.req("starvation")?)?,
+        scaler: j.get("scaler").map(Scaler::from_json).transpose()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::forest::ForestParams;
+    use crate::ml::tree::TreeParams;
+
+    fn tiny_data() -> (Vec<Vec<f64>>, Vec<f64>) {
+        let xs: Vec<Vec<f64>> = (0..60).map(|i| vec![i as f64, (i % 5) as f64]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0] * 2.0).collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_predictions() {
+        let (xs, ys) = tiny_data();
+        let forest = Forest::fit(&xs, &ys, &ForestParams { n_estimators: 5, ..Default::default() });
+        let tree = Tree::fit(&xs, &ys, &TreeParams::default());
+        let models = MlModels {
+            throughput: Predictor::Forest(forest),
+            starvation: Predictor::Tree(tree),
+            scaler: None,
+        };
+        let dir = std::env::temp_dir().join(format!("mlm_{}", std::process::id()));
+        let path = dir.join("models.json");
+        save_models(&models, &path).unwrap();
+        let back = load_models(&path).unwrap();
+        for x in xs.iter().take(10) {
+            assert_eq!(models.predict_throughput(x), back.predict_throughput(x));
+            assert_eq!(models.predict_starvation(x), back.predict_starvation(x));
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn flat_predictor_dispatch() {
+        let (xs, ys) = tiny_data();
+        let tree = Tree::fit(&xs, &ys, &TreeParams::default());
+        let flat = crate::ml::refine::FlatTree::compile(&tree);
+        let p = Predictor::Flat(flat);
+        assert_eq!(p.predict_one(&xs[3]), tree.predict_one(&xs[3]));
+        assert_eq!(p.kind(), "flat");
+    }
+}

@@ -1,0 +1,137 @@
+//! The refinement phase (paper §6.1): distill the best-performing model
+//! into a single shallow decision tree with a bounded number of decision
+//! rules, then "compile" it into a framework-free flat-array evaluator —
+//! our analog of the paper's plain-Python + Numba step.
+
+use super::tree::{Criterion, Tree, TreeParams};
+
+/// Distill: re-grow a single tree on (xs, teacher-labels) under a hard
+/// rule budget.  The paper penalizes complexity during hyperparameter
+/// optimization; with our best-first builder the budget is exact.
+pub fn distill(
+    xs: &[Vec<f64>],
+    teacher_labels: &[f64],
+    criterion: Criterion,
+    max_rules: usize,
+) -> Tree {
+    Tree::fit(
+        xs,
+        teacher_labels,
+        &TreeParams {
+            criterion,
+            max_leaves: Some(max_rules),
+            min_samples_leaf: 2,
+            ..Default::default()
+        },
+    )
+}
+
+/// The "compiled" evaluator (Small Tree** in Table 4): one cache-dense
+/// record per node, a single sign-bit branch per level, and unchecked
+/// indexing — no bounds checks or extra arrays on the hot loop.
+#[derive(Debug, Clone, Default)]
+pub struct FlatTree {
+    /// Packed nodes: (feature|-1, threshold-or-value, left, right).
+    nodes: Vec<FlatNode>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct FlatNode {
+    /// Split feature; negative marks a leaf (then `thr` holds the value).
+    feature: i32,
+    left: u32,
+    right: u32,
+    thr: f64,
+}
+
+impl FlatTree {
+    pub fn compile(t: &Tree) -> FlatTree {
+        FlatTree {
+            nodes: (0..t.feature.len())
+                .map(|i| FlatNode {
+                    feature: t.feature[i],
+                    left: t.left[i],
+                    right: t.right[i],
+                    thr: if t.feature[i] < 0 { t.value[i] } else { t.threshold[i] },
+                })
+                .collect(),
+        }
+    }
+
+    #[inline]
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        let mut node = 0usize;
+        // SAFETY: indices were produced by Tree::fit and are in-bounds by
+        // construction; x has N_FEATURES entries checked by the caller.
+        unsafe {
+            loop {
+                let n = self.nodes.get_unchecked(node);
+                if n.feature < 0 {
+                    return n.thr;
+                }
+                node = if *x.get_unchecked(n.feature as usize) <= n.thr {
+                    n.left as usize
+                } else {
+                    n.right as usize
+                };
+            }
+        }
+    }
+
+    pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.predict_one(x)).collect()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn dataset() -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(8);
+        let xs: Vec<Vec<f64>> = (0..500)
+            .map(|_| vec![rng.f64() * 10.0, rng.f64() * 10.0, rng.f64()])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0] * 2.0 + (x[1] > 5.0) as i32 as f64 * 10.0).collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn distilled_tree_respects_rule_budget() {
+        let (xs, ys) = dataset();
+        for budget in [8usize, 16, 32] {
+            let t = distill(&xs, &ys, Criterion::Mse, budget);
+            assert!(t.n_leaves() <= budget);
+        }
+    }
+
+    #[test]
+    fn flat_tree_matches_tree_exactly() {
+        let (xs, ys) = dataset();
+        let t = distill(&xs, &ys, Criterion::Mse, 32);
+        let ft = FlatTree::compile(&t);
+        for x in xs.iter().take(200) {
+            assert_eq!(t.predict_one(x), ft.predict_one(x));
+        }
+    }
+
+    #[test]
+    fn more_rules_fit_better() {
+        let (xs, ys) = dataset();
+        let mse = |t: &Tree| -> f64 {
+            xs.iter()
+                .zip(&ys)
+                .map(|(x, y)| (t.predict_one(x) - y) * (t.predict_one(x) - y))
+                .sum::<f64>()
+                / ys.len() as f64
+        };
+        let small = distill(&xs, &ys, Criterion::Mse, 4);
+        let large = distill(&xs, &ys, Criterion::Mse, 64);
+        assert!(mse(&large) <= mse(&small));
+    }
+}

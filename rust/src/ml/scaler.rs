@@ -1,0 +1,81 @@
+//! Feature standardization (zero mean, unit variance) — required by the
+//! SVM and KNN models; trees are scale-invariant but tolerate it.
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scaler {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl Scaler {
+    pub fn fit(xs: &[Vec<f64>]) -> Scaler {
+        let d = xs[0].len();
+        let mut mean = vec![0.0; d];
+        let mut std = vec![0.0; d];
+        for j in 0..d {
+            let col: Vec<f64> = xs.iter().map(|x| x[j]).collect();
+            mean[j] = stats::mean(&col);
+            std[j] = stats::std(&col).max(1e-12);
+        }
+        Scaler { mean, std }
+    }
+
+    pub fn transform_one(&self, x: &[f64]) -> Vec<f64> {
+        x.iter()
+            .enumerate()
+            .map(|(j, v)| (v - self.mean[j]) / self.std[j])
+            .collect()
+    }
+
+    pub fn transform(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        xs.iter().map(|x| self.transform_one(x)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mean", Json::arr_f64(&self.mean)),
+            ("std", Json::arr_f64(&self.std)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Scaler> {
+        Ok(Scaler {
+            mean: j.req("mean")?.f64_vec().ok_or_else(|| anyhow::anyhow!("mean"))?,
+            std: j.req("std")?.f64_vec().ok_or_else(|| anyhow::anyhow!("std"))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standardizes_columns() {
+        let xs = vec![vec![1.0, 10.0], vec![3.0, 20.0], vec![5.0, 30.0]];
+        let s = Scaler::fit(&xs);
+        let t = s.transform(&xs);
+        for j in 0..2 {
+            let col: Vec<f64> = t.iter().map(|x| x[j]).collect();
+            assert!(stats::mean(&col).abs() < 1e-12);
+            assert!((stats::std(&col) - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn constant_column_does_not_divide_by_zero() {
+        let xs = vec![vec![7.0], vec![7.0]];
+        let s = Scaler::fit(&xs);
+        let t = s.transform_one(&[7.0]);
+        assert!(t[0].is_finite());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = Scaler { mean: vec![1.0, 2.0], std: vec![0.5, 4.0] };
+        assert_eq!(Scaler::from_json(&s.to_json()).unwrap(), s);
+    }
+}

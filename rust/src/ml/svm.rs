@@ -1,0 +1,386 @@
+//! Support Vector Machines from scratch: SMO-trained SVC (binary
+//! classification) and projected-gradient ε-SVR (regression), with linear /
+//! RBF / polynomial / sigmoid kernels matching the paper's Appendix B grid.
+//!
+//! Intended for the dataset sizes the ML phase produces (10²-10³ training
+//! rows after the halving schedule); kernels are evaluated on the fly.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Kernel {
+    Linear,
+    Rbf { gamma: f64 },
+    Poly { gamma: f64, degree: f64, coef0: f64 },
+    Sigmoid { gamma: f64, coef0: f64 },
+}
+
+impl Kernel {
+    pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        match *self {
+            Kernel::Linear => dot,
+            Kernel::Rbf { gamma } => {
+                let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+                (-gamma * d2).exp()
+            }
+            Kernel::Poly { gamma, degree, coef0 } => (gamma * dot + coef0).powf(degree),
+            Kernel::Sigmoid { gamma, coef0 } => (gamma * dot + coef0).tanh(),
+        }
+    }
+
+    /// sklearn's gamma="scale": 1 / (d · Var(X)).
+    pub fn scale_gamma(xs: &[Vec<f64>]) -> f64 {
+        let d = xs[0].len();
+        let n = xs.len() as f64;
+        let mut var_sum = 0.0;
+        for j in 0..d {
+            let mean: f64 = xs.iter().map(|x| x[j]).sum::<f64>() / n;
+            var_sum += xs.iter().map(|x| (x[j] - mean) * (x[j] - mean)).sum::<f64>() / n;
+        }
+        let v = var_sum / d as f64;
+        if v < 1e-12 {
+            1.0
+        } else {
+            1.0 / (d as f64 * v)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SVC (simplified SMO, Platt 1998 via the CS229 simplification)
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct SvcParams {
+    pub c: f64,
+    pub kernel: Kernel,
+    pub tol: f64,
+    pub max_passes: usize,
+    pub seed: u64,
+}
+
+impl Default for SvcParams {
+    fn default() -> Self {
+        SvcParams { c: 1.0, kernel: Kernel::Rbf { gamma: 0.5 }, tol: 1e-3, max_passes: 5, seed: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Svc {
+    support: Vec<Vec<f64>>,
+    alpha_y: Vec<f64>,
+    b: f64,
+    kernel: Kernel,
+}
+
+impl Svc {
+    /// Labels in {0, 1} (mapped internally to ±1).
+    pub fn fit(xs: &[Vec<f64>], ys01: &[f64], p: &SvcParams) -> Svc {
+        let n = xs.len();
+        let ys: Vec<f64> = ys01.iter().map(|&y| if y >= 0.5 { 1.0 } else { -1.0 }).collect();
+        // Degenerate single-class data: constant classifier.
+        if ys.iter().all(|&y| y > 0.0) || ys.iter().all(|&y| y < 0.0) {
+            return Svc { support: vec![], alpha_y: vec![], b: ys[0], kernel: p.kernel };
+        }
+        let mut alpha = vec![0.0f64; n];
+        let mut b = 0.0f64;
+        let mut rng = Rng::new(p.seed ^ 0x53C0);
+        // Cache kernel rows lazily is overkill at our sizes; precompute K.
+        let k_mat: Vec<Vec<f64>> = (0..n)
+            .map(|i| (0..n).map(|j| p.kernel.eval(&xs[i], &xs[j])).collect())
+            .collect();
+        let f = |alpha: &[f64], b: f64, i: usize| -> f64 {
+            let mut s = b;
+            for j in 0..n {
+                if alpha[j] != 0.0 {
+                    s += alpha[j] * ys[j] * k_mat[i][j];
+                }
+            }
+            s
+        };
+        let mut passes = 0;
+        let mut iters = 0;
+        while passes < p.max_passes && iters < 200 {
+            iters += 1;
+            let mut changed = 0;
+            for i in 0..n {
+                let ei = f(&alpha, b, i) - ys[i];
+                if (ys[i] * ei < -p.tol && alpha[i] < p.c) || (ys[i] * ei > p.tol && alpha[i] > 0.0)
+                {
+                    let mut j = rng.below(n - 1);
+                    if j >= i {
+                        j += 1;
+                    }
+                    let ej = f(&alpha, b, j) - ys[j];
+                    let (ai_old, aj_old) = (alpha[i], alpha[j]);
+                    let (lo, hi) = if ys[i] != ys[j] {
+                        ((aj_old - ai_old).max(0.0), (p.c + aj_old - ai_old).min(p.c))
+                    } else {
+                        ((ai_old + aj_old - p.c).max(0.0), (ai_old + aj_old).min(p.c))
+                    };
+                    if lo >= hi {
+                        continue;
+                    }
+                    let eta = 2.0 * k_mat[i][j] - k_mat[i][i] - k_mat[j][j];
+                    if eta >= 0.0 {
+                        continue;
+                    }
+                    let mut aj = aj_old - ys[j] * (ei - ej) / eta;
+                    aj = aj.clamp(lo, hi);
+                    if (aj - aj_old).abs() < 1e-5 {
+                        continue;
+                    }
+                    let ai = ai_old + ys[i] * ys[j] * (aj_old - aj);
+                    alpha[i] = ai;
+                    alpha[j] = aj;
+                    let b1 = b - ei
+                        - ys[i] * (ai - ai_old) * k_mat[i][i]
+                        - ys[j] * (aj - aj_old) * k_mat[i][j];
+                    let b2 = b - ej
+                        - ys[i] * (ai - ai_old) * k_mat[i][j]
+                        - ys[j] * (aj - aj_old) * k_mat[j][j];
+                    b = if ai > 0.0 && ai < p.c {
+                        b1
+                    } else if aj > 0.0 && aj < p.c {
+                        b2
+                    } else {
+                        (b1 + b2) / 2.0
+                    };
+                    changed += 1;
+                }
+            }
+            if changed == 0 {
+                passes += 1;
+            } else {
+                passes = 0;
+            }
+        }
+        let mut support = vec![];
+        let mut alpha_y = vec![];
+        for i in 0..n {
+            if alpha[i].abs() > 1e-9 {
+                support.push(xs[i].clone());
+                alpha_y.push(alpha[i] * ys[i]);
+            }
+        }
+        Svc { support, alpha_y, b, kernel: p.kernel }
+    }
+
+    pub fn decision(&self, x: &[f64]) -> f64 {
+        let mut s = self.b;
+        for (sv, ay) in self.support.iter().zip(&self.alpha_y) {
+            s += ay * self.kernel.eval(sv, x);
+        }
+        s
+    }
+
+    /// Predict class in {0, 1}.
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        (self.decision(x) >= 0.0) as i32 as f64
+    }
+
+    pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.predict_one(x)).collect()
+    }
+
+    pub fn n_support(&self) -> usize {
+        self.support.len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// ε-SVR via projected gradient ascent on the dual
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct SvrParams {
+    pub c: f64,
+    pub epsilon: f64,
+    pub kernel: Kernel,
+    pub iters: usize,
+    pub lr: f64,
+}
+
+impl Default for SvrParams {
+    fn default() -> Self {
+        SvrParams { c: 10.0, epsilon: 0.1, kernel: Kernel::Rbf { gamma: 0.5 }, iters: 300, lr: 0.1 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Svr {
+    support: Vec<Vec<f64>>,
+    beta: Vec<f64>, // alpha - alpha*
+    b: f64,
+    kernel: Kernel,
+}
+
+impl Svr {
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], p: &SvrParams) -> Svr {
+        let n = xs.len();
+        // K + 1 absorbs the bias term (equivalent to an appended constant
+        // feature), which lets us drop the Σβ = 0 equality constraint and
+        // solve the box-constrained dual by exact coordinate descent.
+        let k_mat: Vec<Vec<f64>> = (0..n)
+            .map(|i| (0..n).map(|j| p.kernel.eval(&xs[i], &xs[j]) + 1.0).collect())
+            .collect();
+        // Dual over beta_i = alpha_i - alpha_i* ∈ [-C, C]:
+        // max  -0.5 βᵀKβ + βᵀy - ε·Σ|β|
+        let mut beta = vec![0.0f64; n];
+        // Lipschitz-ish step from the kernel diagonal.
+        let diag_max = (0..n).map(|i| k_mat[i][i]).fold(1e-9, f64::max);
+        let step = p.lr / diag_max;
+        for _ in 0..p.iters {
+            // Coordinate-wise proximal gradient sweep.
+            for i in 0..n {
+                let mut g = ys[i];
+                for j in 0..n {
+                    if beta[j] != 0.0 {
+                        g -= k_mat[i][j] * beta[j];
+                    }
+                }
+                g += k_mat[i][i] * beta[i]; // exclude own contribution
+                // Closed-form coordinate update with soft threshold at ε.
+                let denom = k_mat[i][i].max(1e-9);
+                let raw = g;
+                let bnew = if raw > p.epsilon {
+                    (raw - p.epsilon) / denom
+                } else if raw < -p.epsilon {
+                    (raw + p.epsilon) / denom
+                } else {
+                    0.0
+                };
+                beta[i] = bnew.clamp(-p.c, p.c);
+            }
+            let _ = step;
+        }
+        // Bias is absorbed by the +1 kernel offset: f(x) = Σβ(K(x,·)+1),
+        // so the explicit intercept equals Σβ.
+        let b = beta.iter().sum::<f64>();
+        let mut support = vec![];
+        let mut sbeta = vec![];
+        for i in 0..n {
+            if beta[i].abs() > 1e-9 {
+                support.push(xs[i].clone());
+                sbeta.push(beta[i]);
+            }
+        }
+        Svr { support, beta: sbeta, b, kernel: p.kernel }
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        let mut s = self.b;
+        for (sv, bt) in self.support.iter().zip(&self.beta) {
+            s += bt * self.kernel.eval(sv, x);
+        }
+        s
+    }
+
+    pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.predict_one(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn svc_separates_linear_data() {
+        let mut rng = Rng::new(6);
+        let mut xs = vec![];
+        let mut ys = vec![];
+        for _ in 0..120 {
+            let x = vec![rng.normal(), rng.normal()];
+            ys.push((x[0] + x[1] > 0.0) as i32 as f64);
+            xs.push(x);
+        }
+        let svc = Svc::fit(&xs, &ys, &SvcParams { kernel: Kernel::Linear, c: 10.0, ..Default::default() });
+        let acc: f64 = xs
+            .iter()
+            .zip(&ys)
+            .map(|(x, y)| (svc.predict_one(x) == *y) as i32 as f64)
+            .sum::<f64>()
+            / ys.len() as f64;
+        assert!(acc > 0.93, "acc={acc}");
+    }
+
+    #[test]
+    fn svc_rbf_handles_circle() {
+        let mut rng = Rng::new(7);
+        let mut xs = vec![];
+        let mut ys = vec![];
+        for _ in 0..160 {
+            let x = vec![rng.normal(), rng.normal()];
+            let r2 = x[0] * x[0] + x[1] * x[1];
+            ys.push((r2 < 1.0) as i32 as f64);
+            xs.push(x);
+        }
+        let svc = Svc::fit(
+            &xs,
+            &ys,
+            &SvcParams { kernel: Kernel::Rbf { gamma: 1.0 }, c: 10.0, ..Default::default() },
+        );
+        let acc: f64 = xs
+            .iter()
+            .zip(&ys)
+            .map(|(x, y)| (svc.predict_one(x) == *y) as i32 as f64)
+            .sum::<f64>()
+            / ys.len() as f64;
+        assert!(acc > 0.85, "acc={acc}");
+    }
+
+    #[test]
+    fn svc_single_class_is_constant() {
+        let xs = vec![vec![1.0], vec![2.0]];
+        let ys = vec![1.0, 1.0];
+        let svc = Svc::fit(&xs, &ys, &SvcParams::default());
+        assert_eq!(svc.predict_one(&[5.0]), 1.0);
+    }
+
+    #[test]
+    fn svr_fits_linear_function() {
+        let xs: Vec<Vec<f64>> = (0..60).map(|i| vec![i as f64 / 10.0]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x[0] + 1.0).collect();
+        let svr = Svr::fit(
+            &xs,
+            &ys,
+            &SvrParams { kernel: Kernel::Linear, c: 100.0, epsilon: 0.05, iters: 500, lr: 0.1 },
+        );
+        let mae: f64 = xs
+            .iter()
+            .zip(&ys)
+            .map(|(x, y)| (svr.predict_one(x) - y).abs())
+            .sum::<f64>()
+            / ys.len() as f64;
+        // ε-SVR tolerates errors up to ~ε inside the tube plus boundary
+        // effects at the domain edges; mean error is the right check.
+        assert!(mae < 0.2, "mae {mae}");
+    }
+
+    #[test]
+    fn svr_rbf_fits_sine() {
+        let xs: Vec<Vec<f64>> = (0..80).map(|i| vec![i as f64 * 0.1]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0].sin()).collect();
+        let svr = Svr::fit(
+            &xs,
+            &ys,
+            &SvrParams { kernel: Kernel::Rbf { gamma: 2.0 }, c: 50.0, epsilon: 0.02, iters: 300, lr: 0.1 },
+        );
+        let mae: f64 = xs
+            .iter()
+            .zip(&ys)
+            .map(|(x, y)| (svr.predict_one(x) - y).abs())
+            .sum::<f64>()
+            / ys.len() as f64;
+        assert!(mae < 0.12, "mae={mae}");
+    }
+
+    #[test]
+    fn scale_gamma_positive() {
+        let xs = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 0.0]];
+        assert!(Kernel::scale_gamma(&xs) > 0.0);
+    }
+}

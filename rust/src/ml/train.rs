@@ -1,0 +1,287 @@
+//! Training orchestration: the paper's ML learning phase.  For each task
+//! (throughput regression, starvation classification) and each model type
+//! (KNN, RF, SVM), run successive-halving grid search with 5-fold CV over
+//! the Appendix-B hyperparameter grids, and return the fitted best model.
+
+use super::cv::halving_search;
+use super::dataset::Sample;
+use super::forest::{Forest, ForestParams};
+use super::knn::{Knn, KnnParams};
+use super::metrics::{macro_f1, mse};
+use super::model::Predictor;
+use super::scaler::Scaler;
+use super::svm::{Kernel, Svc, SvcParams, Svr, SvrParams};
+use super::tree::{Criterion, TreeParams};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Throughput,
+    Starvation,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelType {
+    Knn,
+    RandomForest,
+    Svm,
+}
+
+impl ModelType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelType::Knn => "KNN",
+            ModelType::RandomForest => "RF",
+            ModelType::Svm => "SVM",
+        }
+    }
+}
+
+pub fn labels(samples: &[Sample], task: Task) -> Vec<f64> {
+    samples
+        .iter()
+        .map(|s| match task {
+            Task::Throughput => s.throughput,
+            Task::Starvation => s.starved as i32 as f64,
+        })
+        .collect()
+}
+
+pub fn xs(samples: &[Sample]) -> Vec<Vec<f64>> {
+    samples.iter().map(|s| s.x.clone()).collect()
+}
+
+/// CV score: negative MSE for regression, macro-F1 for classification.
+fn score(task: Task, actual: &[f64], predicted: &[f64]) -> f64 {
+    match task {
+        Task::Throughput => -mse(actual, predicted),
+        Task::Starvation => macro_f1(actual, predicted),
+    }
+}
+
+/// Train one model type on one task with halving grid search; returns the
+/// fitted predictor (on all data) and the best CV score.
+pub fn train(
+    samples: &[Sample],
+    task: Task,
+    model: ModelType,
+    quick: bool,
+    seed: u64,
+) -> (Predictor, f64) {
+    let xs_all = xs(samples);
+    let ys = labels(samples, task);
+    let scaler = Scaler::fit(&xs_all);
+    let xs_std = scaler.transform(&xs_all);
+    let folds = 5;
+    let factor = 3;
+    let min_samples = 64;
+
+    match model {
+        ModelType::RandomForest => {
+            // Appendix B grid (subset when quick).
+            let mut grid = vec![];
+            let n_estimators: &[usize] = if quick { &[32, 128] } else { &[32, 128, 256] };
+            let max_depths: &[Option<usize>] =
+                if quick { &[None, Some(10)] } else { &[None, Some(5), Some(10), Some(20)] };
+            let min_leaf: &[usize] = if quick { &[1, 5] } else { &[1, 2, 5, 10] };
+            for &ne in n_estimators {
+                for &md in max_depths {
+                    for &ml in min_leaf {
+                        grid.push(ForestParams {
+                            n_estimators: ne,
+                            tree: TreeParams {
+                                criterion: match task {
+                                    Task::Throughput => Criterion::Mse,
+                                    Task::Starvation => Criterion::Gini,
+                                },
+                                max_depth: md,
+                                min_samples_leaf: ml,
+                                ..Default::default()
+                            },
+                            subsample: 1.0,
+                            seed,
+                        });
+                    }
+                }
+            }
+            let (best, sc) = halving_search(
+                &xs_all,
+                &ys,
+                &grid,
+                folds,
+                factor,
+                min_samples,
+                seed,
+                |tx, ty, vx, vy, p| {
+                    let f = Forest::fit(tx, ty, p);
+                    score(task, vy, &f.predict(vx))
+                },
+            );
+            (Predictor::Forest(Forest::fit(&xs_all, &ys, &grid[best])), sc)
+        }
+        ModelType::Knn => {
+            // Paper: fixed n_neighbors=1, leaf_size=8, kd_tree; tune p.
+            let grid = vec![
+                KnnParams { k: 1, p: 1.0, leaf_size: 8 },
+                KnnParams { k: 1, p: 2.0, leaf_size: 8 },
+            ];
+            let (best, sc) = halving_search(
+                &xs_std,
+                &ys,
+                &grid,
+                folds,
+                factor,
+                min_samples,
+                seed,
+                |tx, ty, vx, vy, p| {
+                    let m = Knn::fit(tx, ty, p);
+                    score(task, vy, &m.predict(vx))
+                },
+            );
+            (Predictor::Knn(Box::new(Knn::fit(&xs_std, &ys, &grid[best]))), sc)
+        }
+        ModelType::Svm => {
+            // SVM cost scales quadratically; cap the training subset.
+            let cap = if quick { 400 } else { 1200 };
+            let take = xs_std.len().min(cap);
+            let xs_sub = &xs_std[..take];
+            let ys_sub = &ys[..take];
+            let gamma = Kernel::scale_gamma(xs_sub);
+            let cs: &[f64] = if quick { &[1.0, 100.0] } else { &[0.1, 1.0, 10.0, 100.0, 1000.0] };
+            match task {
+                Task::Starvation => {
+                    let mut grid = vec![];
+                    for &c in cs {
+                        for kernel in [Kernel::Linear, Kernel::Rbf { gamma }] {
+                            grid.push(SvcParams { c, kernel, ..Default::default() });
+                        }
+                    }
+                    let (best, sc) = halving_search(
+                        xs_sub,
+                        ys_sub,
+                        &grid,
+                        folds,
+                        factor,
+                        min_samples,
+                        seed,
+                        |tx, ty, vx, vy, p| {
+                            let m = Svc::fit(tx, ty, p);
+                            score(task, vy, &m.predict(vx))
+                        },
+                    );
+                    (Predictor::Svc(Box::new(Svc::fit(xs_sub, ys_sub, &grid[best]))), sc)
+                }
+                Task::Throughput => {
+                    // Normalize the target too (SVR epsilon is scale-bound).
+                    let y_scale = ys_sub.iter().fold(1e-9f64, |m, &y| m.max(y.abs()));
+                    let ys_n: Vec<f64> = ys_sub.iter().map(|y| y / y_scale).collect();
+                    let mut grid = vec![];
+                    for &c in cs {
+                        for kernel in [Kernel::Linear, Kernel::Rbf { gamma }] {
+                            for eps in [0.01, 0.05] {
+                                grid.push(SvrParams {
+                                    c,
+                                    epsilon: eps,
+                                    kernel,
+                                    ..Default::default()
+                                });
+                            }
+                        }
+                    }
+                    let (best, sc) = halving_search(
+                        xs_sub,
+                        &ys_n,
+                        &grid,
+                        folds,
+                        factor,
+                        min_samples,
+                        seed,
+                        |tx, ty, vx, vy, p| {
+                            let m = Svr::fit(tx, ty, p);
+                            score(task, vy, &m.predict(vx))
+                        },
+                    );
+                    // Refit and wrap with the y re-scaling baked into a
+                    // forest-free closure is not possible in the enum; we
+                    // instead refit on unnormalized labels with scaled C.
+                    let mut p = grid[best].clone();
+                    p.c *= y_scale;
+                    p.epsilon *= y_scale;
+                    (Predictor::Svr(Box::new(Svr::fit(xs_sub, ys_sub, &p))), sc)
+                }
+            }
+        }
+    }
+}
+
+/// The scaler matching `train`'s preprocessing for KNN/SVM predictors.
+pub fn fitted_scaler(samples: &[Sample]) -> Scaler {
+    Scaler::fit(&xs(samples))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::features::N_FEATURES;
+    use crate::util::rng::Rng;
+
+    /// Synthetic dataset shaped like the real one: throughput saturates in
+    /// sum_rate, starvation when demand exceeds a capacity that shrinks
+    /// with a_max.
+    fn synthetic(n: usize, seed: u64) -> Vec<Sample> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let n_ad = rng.range(8, 256) as f64;
+                let sum_rate = rng.range_f64(0.1, 30.0);
+                let mean_size = *rng.choose(&[8.0, 16.0, 32.0]);
+                let a_max = rng.range(8, 256) as f64;
+                let capacity = 1200.0 - 2.0 * a_max * mean_size / 32.0;
+                let demand = sum_rate * 96.0;
+                let thr = demand.min(capacity).max(0.0);
+                let starved = demand > capacity;
+                let mut x = vec![0.0; N_FEATURES];
+                x[0] = n_ad;
+                x[1] = sum_rate;
+                x[2] = rng.f64();
+                x[3] = mean_size;
+                x[4] = mean_size;
+                x[5] = 0.0;
+                x[6] = a_max;
+                Sample { x, throughput: thr, starved, memory_error: false }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rf_regression_learns_saturation() {
+        let data = synthetic(600, 1);
+        let (m, _) = train(&data, Task::Throughput, ModelType::RandomForest, true, 7);
+        let test = synthetic(100, 2);
+        let pred: Vec<f64> = test.iter().map(|s| m.predict_one(&s.x)).collect();
+        let actual: Vec<f64> = test.iter().map(|s| s.throughput).collect();
+        let sm = crate::util::stats::smape(&actual, &pred);
+        assert!(sm < 20.0, "smape={sm}");
+    }
+
+    #[test]
+    fn rf_starvation_classifier_accurate() {
+        let data = synthetic(600, 3);
+        let (m, _) = train(&data, Task::Starvation, ModelType::RandomForest, true, 7);
+        let test = synthetic(150, 4);
+        let pred: Vec<f64> = test.iter().map(|s| m.predict_one(&s.x)).collect();
+        let actual: Vec<f64> = test.iter().map(|s| s.starved as i32 as f64).collect();
+        let f1 = macro_f1(&actual, &pred);
+        assert!(f1 > 0.8, "f1={f1}");
+    }
+
+    #[test]
+    fn knn_trains_and_predicts() {
+        let data = synthetic(300, 5);
+        let (m, _) = train(&data, Task::Starvation, ModelType::Knn, true, 7);
+        // KNN predictor consumes *standardized* features.
+        let sc = fitted_scaler(&data);
+        let x = sc.transform_one(&data[0].x);
+        let p = m.predict_one(&x);
+        assert!((0.0..=1.0).contains(&p));
+    }
+}

@@ -1,0 +1,410 @@
+//! CART decision trees (regression and binary classification), built from
+//! scratch: scikit-learn is unavailable offline, and the refinement phase
+//! (§6.1) needs full control over tree complexity anyway.
+//!
+//! Binary classification is handled through the same machinery with labels
+//! in {0, 1} and leaf values = class-1 probability (the starvation task is
+//! binary).
+
+use crate::util::rng::Rng;
+
+/// Split quality criterion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Criterion {
+    /// Variance reduction (regression; sklearn "squared_error").
+    Mse,
+    /// Gini impurity (binary labels).
+    Gini,
+    /// Shannon entropy (binary labels).
+    Entropy,
+}
+
+impl Criterion {
+    fn impurity(&self, sum: f64, sum_sq: f64, n: f64) -> f64 {
+        if n <= 0.0 {
+            return 0.0;
+        }
+        let mean = sum / n;
+        match self {
+            Criterion::Mse => (sum_sq / n - mean * mean).max(0.0),
+            Criterion::Gini => 2.0 * mean * (1.0 - mean),
+            Criterion::Entropy => {
+                let p = mean.clamp(1e-12, 1.0 - 1e-12);
+                -(p * p.log2() + (1.0 - p) * (1.0 - p).log2())
+            }
+        }
+    }
+}
+
+/// Hyperparameters (sklearn-compatible subset used in Appendix B).
+#[derive(Debug, Clone)]
+pub struct TreeParams {
+    pub criterion: Criterion,
+    pub max_depth: Option<usize>,
+    pub min_samples_split: usize,
+    pub min_samples_leaf: usize,
+    /// Number of features considered per split (None = all); RF sets this
+    /// to sqrt/log2 of the feature count.
+    pub max_features: Option<usize>,
+    /// Maximum number of leaves (best-first growth); the refinement phase
+    /// uses this to cap the rule count.
+    pub max_leaves: Option<usize>,
+    pub seed: u64,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            criterion: Criterion::Mse,
+            max_depth: None,
+            min_samples_split: 2,
+            min_samples_leaf: 1,
+            max_features: None,
+            max_leaves: None,
+            seed: 0,
+        }
+    }
+}
+
+/// Array-encoded binary tree.  `feature < 0` marks a leaf whose prediction
+/// is `value`.  This flat layout *is* the runtime representation — also the
+/// basis of the "compiled" Small Tree** evaluator (the paper's Numba step).
+#[derive(Debug, Clone, Default)]
+pub struct Tree {
+    pub feature: Vec<i32>,
+    pub threshold: Vec<f64>,
+    pub left: Vec<u32>,
+    pub right: Vec<u32>,
+    pub value: Vec<f64>,
+    pub n_samples: Vec<u32>,
+}
+
+struct BuildNode {
+    idx: Vec<u32>,
+    depth: usize,
+    node: usize,
+    impurity: f64,
+}
+
+impl Tree {
+    pub fn n_nodes(&self) -> usize {
+        self.feature.len()
+    }
+
+    /// Leaves = decision rules in the paper's complexity measure (§6.1).
+    pub fn n_leaves(&self) -> usize {
+        self.feature.iter().filter(|&&f| f < 0).count()
+    }
+
+    pub fn depth(&self) -> usize {
+        fn rec(t: &Tree, node: usize) -> usize {
+            if t.feature[node] < 0 {
+                0
+            } else {
+                1 + rec(t, t.left[node] as usize).max(rec(t, t.right[node] as usize))
+            }
+        }
+        if self.feature.is_empty() {
+            0
+        } else {
+            rec(self, 0)
+        }
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        let mut node = 0usize;
+        loop {
+            let f = self.feature[node];
+            if f < 0 {
+                return self.value[node];
+            }
+            node = if x[f as usize] <= self.threshold[node] {
+                self.left[node] as usize
+            } else {
+                self.right[node] as usize
+            };
+        }
+    }
+
+    pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        xs.iter().map(|x| self.predict_one(x)).collect()
+    }
+
+    /// Extract human-readable decision rules (Appendix C interpretability).
+    pub fn rules(&self, feature_names: &[&str]) -> Vec<String> {
+        let mut out = Vec::new();
+        fn rec(
+            t: &Tree,
+            node: usize,
+            path: &mut Vec<String>,
+            names: &[&str],
+            out: &mut Vec<String>,
+        ) {
+            if t.feature[node] < 0 {
+                let cond = if path.is_empty() { "true".to_string() } else { path.join(" ∧ ") };
+                out.push(format!("{cond} → {:.4}", t.value[node]));
+                return;
+            }
+            let f = t.feature[node] as usize;
+            let name = names.get(f).copied().unwrap_or("x?");
+            path.push(format!("{name} ≤ {:.4}", t.threshold[node]));
+            rec(t, t.left[node] as usize, path, names, out);
+            path.pop();
+            path.push(format!("{name} > {:.4}", t.threshold[node]));
+            rec(t, t.right[node] as usize, path, names, out);
+            path.pop();
+        }
+        if !self.feature.is_empty() {
+            rec(self, 0, &mut Vec::new(), feature_names, &mut out);
+        }
+        out
+    }
+
+    /// Fit a tree on row-major `xs` (n × d) and labels `ys`.
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], params: &TreeParams) -> Tree {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty(), "empty training set");
+        let d = xs[0].len();
+        let mut t = Tree::default();
+        let mut rng = Rng::new(params.seed ^ 0x7EE5);
+        let root_idx: Vec<u32> = (0..xs.len() as u32).collect();
+        let root_imp = node_impurity(&root_idx, ys, params.criterion);
+        t.push_leaf(&root_idx, ys);
+        // Best-first frontier (needed for max_leaves semantics).
+        let mut frontier = vec![BuildNode { idx: root_idx, depth: 0, node: 0, impurity: root_imp }];
+        let mut leaves = 1usize;
+
+        while let Some(pos) = best_frontier_node(&frontier) {
+            if let Some(maxl) = params.max_leaves {
+                if leaves >= maxl {
+                    break;
+                }
+            }
+            let cand = frontier.swap_remove(pos);
+            if cand.idx.len() < params.min_samples_split
+                || params.max_depth.is_some_and(|md| cand.depth >= md)
+                || cand.impurity <= 1e-12
+            {
+                continue; // stays a leaf
+            }
+            let Some(split) = best_split(xs, ys, &cand.idx, d, params, &mut rng) else {
+                continue;
+            };
+            // Materialize children.
+            let (li, ri) = partition(xs, &cand.idx, split.feature, split.threshold);
+            let l_imp = node_impurity(&li, ys, params.criterion);
+            let r_imp = node_impurity(&ri, ys, params.criterion);
+            let l_node = t.push_leaf(&li, ys);
+            let r_node = t.push_leaf(&ri, ys);
+            t.feature[cand.node] = split.feature as i32;
+            t.threshold[cand.node] = split.threshold;
+            t.left[cand.node] = l_node as u32;
+            t.right[cand.node] = r_node as u32;
+            leaves += 1; // one leaf became two
+            frontier.push(BuildNode { idx: li, depth: cand.depth + 1, node: l_node, impurity: l_imp });
+            frontier.push(BuildNode { idx: ri, depth: cand.depth + 1, node: r_node, impurity: r_imp });
+        }
+        t
+    }
+
+    fn push_leaf(&mut self, idx: &[u32], ys: &[f64]) -> usize {
+        let n = idx.len().max(1);
+        let mean = idx.iter().map(|&i| ys[i as usize]).sum::<f64>() / n as f64;
+        self.feature.push(-1);
+        self.threshold.push(0.0);
+        self.left.push(0);
+        self.right.push(0);
+        self.value.push(mean);
+        self.n_samples.push(idx.len() as u32);
+        self.feature.len() - 1
+    }
+}
+
+fn node_impurity(idx: &[u32], ys: &[f64], crit: Criterion) -> f64 {
+    let n = idx.len() as f64;
+    let sum: f64 = idx.iter().map(|&i| ys[i as usize]).sum();
+    let sum_sq: f64 = idx.iter().map(|&i| ys[i as usize] * ys[i as usize]).sum();
+    crit.impurity(sum, sum_sq, n)
+}
+
+/// Pick the frontier node with the largest weighted impurity (best-first).
+fn best_frontier_node(frontier: &[BuildNode]) -> Option<usize> {
+    if frontier.is_empty() {
+        return None;
+    }
+    frontier
+        .iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| {
+            let wa = a.impurity * a.idx.len() as f64;
+            let wb = b.impurity * b.idx.len() as f64;
+            wa.partial_cmp(&wb).unwrap()
+        })
+        .map(|(i, _)| i)
+}
+
+struct Split {
+    feature: usize,
+    threshold: f64,
+    gain: f64,
+}
+
+fn best_split(
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    idx: &[u32],
+    d: usize,
+    params: &TreeParams,
+    rng: &mut Rng,
+) -> Option<Split> {
+    let n = idx.len() as f64;
+    let parent = node_impurity(idx, ys, params.criterion);
+    let mut features: Vec<usize> = (0..d).collect();
+    if let Some(mf) = params.max_features {
+        rng.shuffle(&mut features);
+        features.truncate(mf.clamp(1, d));
+    }
+    let mut best: Option<Split> = None;
+    let mut vals: Vec<(f64, f64)> = Vec::with_capacity(idx.len());
+    for &f in &features {
+        vals.clear();
+        vals.extend(idx.iter().map(|&i| (xs[i as usize][f], ys[i as usize])));
+        vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // Prefix sums over the sorted order: O(n) split scan.
+        let (mut ls, mut lq, mut ln) = (0.0f64, 0.0f64, 0.0f64);
+        let total_s: f64 = vals.iter().map(|v| v.1).sum();
+        let total_q: f64 = vals.iter().map(|v| v.1 * v.1).sum();
+        for w in 0..vals.len() - 1 {
+            ls += vals[w].1;
+            lq += vals[w].1 * vals[w].1;
+            ln += 1.0;
+            if vals[w].0 == vals[w + 1].0 {
+                continue; // can't split between equal values
+            }
+            let rn = n - ln;
+            if (ln as usize) < params.min_samples_leaf || (rn as usize) < params.min_samples_leaf {
+                continue;
+            }
+            let imp = (ln / n) * params.criterion.impurity(ls, lq, ln)
+                + (rn / n) * params.criterion.impurity(total_s - ls, total_q - lq, rn);
+            let gain = parent - imp;
+            // Zero-gain splits are allowed (sklearn semantics): XOR-like
+            // targets need an uninformative first split before the children
+            // become separable.  Termination is still guaranteed by the
+            // min-samples checks and shrinking partitions.
+            if gain > best.as_ref().map_or(-1e-12, |b| b.gain) {
+                best = Some(Split {
+                    feature: f,
+                    threshold: (vals[w].0 + vals[w + 1].0) / 2.0,
+                    gain,
+                });
+            }
+        }
+    }
+    best
+}
+
+fn partition(xs: &[Vec<f64>], idx: &[u32], f: usize, thr: f64) -> (Vec<u32>, Vec<u32>) {
+    let mut l = Vec::new();
+    let mut r = Vec::new();
+    for &i in idx {
+        if xs[i as usize][f] <= thr {
+            l.push(i);
+        } else {
+            r.push(i);
+        }
+    }
+    (l, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor_data() -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut xs = vec![];
+        let mut ys = vec![];
+        for a in 0..2 {
+            for b in 0..2 {
+                for _ in 0..10 {
+                    xs.push(vec![a as f64, b as f64]);
+                    ys.push(((a ^ b) == 1) as i32 as f64);
+                }
+            }
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn fits_xor_exactly() {
+        let (xs, ys) = xor_data();
+        let t = Tree::fit(&xs, &ys, &TreeParams { criterion: Criterion::Gini, ..Default::default() });
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(t.predict_one(x) >= 0.5, *y >= 0.5);
+        }
+        assert!(t.n_leaves() >= 4);
+    }
+
+    #[test]
+    fn regression_recovers_step_function() {
+        let xs: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64]).collect();
+        let ys: Vec<f64> = (0..100).map(|i| if i < 50 { 1.0 } else { 5.0 }).collect();
+        let t = Tree::fit(&xs, &ys, &TreeParams::default());
+        assert!((t.predict_one(&[10.0]) - 1.0).abs() < 1e-9);
+        assert!((t.predict_one(&[90.0]) - 5.0).abs() < 1e-9);
+        assert_eq!(t.n_leaves(), 2);
+    }
+
+    #[test]
+    fn max_leaves_caps_rule_count() {
+        let mut rng = Rng::new(1);
+        let xs: Vec<Vec<f64>> = (0..200).map(|_| vec![rng.f64(), rng.f64(), rng.f64()]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0] * 3.0 + x[1] * x[2]).collect();
+        for maxl in [4usize, 8, 16] {
+            let t = Tree::fit(
+                &xs,
+                &ys,
+                &TreeParams { max_leaves: Some(maxl), ..Default::default() },
+            );
+            assert!(t.n_leaves() <= maxl, "{} > {maxl}", t.n_leaves());
+        }
+    }
+
+    #[test]
+    fn max_depth_respected() {
+        let mut rng = Rng::new(2);
+        let xs: Vec<Vec<f64>> = (0..200).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0] + x[1]).collect();
+        let t = Tree::fit(&xs, &ys, &TreeParams { max_depth: Some(3), ..Default::default() });
+        assert!(t.depth() <= 3);
+    }
+
+    #[test]
+    fn min_samples_leaf_respected() {
+        let (xs, ys) = xor_data();
+        let t = Tree::fit(
+            &xs,
+            &ys,
+            &TreeParams { criterion: Criterion::Gini, min_samples_leaf: 15, ..Default::default() },
+        );
+        assert!(t.n_samples.iter().zip(&t.feature).all(|(&n, &f)| f >= 0 || n >= 15));
+    }
+
+    #[test]
+    fn rules_cover_all_leaves() {
+        let (xs, ys) = xor_data();
+        let t = Tree::fit(&xs, &ys, &TreeParams { criterion: Criterion::Gini, ..Default::default() });
+        let rules = t.rules(&["a", "b"]);
+        assert_eq!(rules.len(), t.n_leaves());
+        assert!(rules.iter().all(|r| r.contains('→')));
+    }
+
+    #[test]
+    fn constant_labels_yield_single_leaf() {
+        let xs: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let ys = vec![2.5; 10];
+        let t = Tree::fit(&xs, &ys, &TreeParams::default());
+        assert_eq!(t.n_leaves(), 1);
+        assert_eq!(t.predict_one(&[3.0]), 2.5);
+    }
+}

@@ -1,0 +1,113 @@
+//! Baseline placement strategies (paper §8.4.1-2): MaxBase, MaxBase* and
+//! Random.  MaxBase/MaxBase* fill GPUs up to the backbone's benchmarked
+//! maximum throughput, blind to adapter overheads and memory dynamics —
+//! which is exactly why they starve or OOM past `Max_pack`.
+
+use super::{Placement, PlacementError, PlacementResult};
+use crate::util::rng::Rng;
+use crate::workload::AdapterSpec;
+
+/// MaxBase: fill each GPU until the aggregate incoming token rate reaches
+/// `backbone_max_tok_s`; set `A_max = A` (adapters on the GPU).
+/// MaxBase* differs only in `A_max = A/2` (`halve_parallelism`).
+pub fn max_base(
+    adapters: &[AdapterSpec],
+    gpus: usize,
+    backbone_max_tok_s: f64,
+    tokens_per_request: f64,
+    halve_parallelism: bool,
+) -> PlacementResult {
+    let mut placement = Placement { assignment: Default::default(), a_max: vec![0; gpus] };
+    let mut g = 0usize;
+    let mut load = 0.0f64;
+    let mut count = 0usize;
+    for a in adapters {
+        let demand = a.rate * tokens_per_request;
+        if load + demand > backbone_max_tok_s && count > 0 {
+            // GPU "full" by the backbone metric: move on.
+            placement.a_max[g] = if halve_parallelism { (count / 2).max(1) } else { count };
+            g += 1;
+            load = 0.0;
+            count = 0;
+            if g >= gpus {
+                return Err(PlacementError::Starvation);
+            }
+        }
+        placement.assignment.insert(a.id, g);
+        load += demand;
+        count += 1;
+    }
+    if count > 0 {
+        placement.a_max[g] = if halve_parallelism { (count / 2).max(1) } else { count };
+    }
+    Ok(placement)
+}
+
+/// Random: uniform GPU per adapter; `A_max[g]` uniform in [1, count(g)].
+pub fn random(adapters: &[AdapterSpec], gpus: usize, seed: u64) -> PlacementResult {
+    let mut rng = Rng::new(seed ^ 0x0DD5);
+    let mut placement = Placement { assignment: Default::default(), a_max: vec![0; gpus] };
+    let mut counts = vec![0usize; gpus];
+    for a in adapters {
+        let g = rng.below(gpus);
+        placement.assignment.insert(a.id, g);
+        counts[g] += 1;
+    }
+    for g in 0..gpus {
+        if counts[g] > 0 {
+            placement.a_max[g] = rng.range(1, counts[g] as i64) as usize;
+        }
+    }
+    Ok(placement)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adapters(n: usize, rate: f64) -> Vec<AdapterSpec> {
+        (0..n).map(|id| AdapterSpec { id, rank: 8, rate }).collect()
+    }
+
+    #[test]
+    fn max_base_fills_sequentially() {
+        // capacity 500 tok/s, 96 tok/req, rate 1.0 → ~5 adapters per GPU.
+        let p = max_base(&adapters(10, 1.0), 4, 500.0, 96.0, false).unwrap();
+        assert!(p.gpus_used() == 2);
+        // A_max equals the adapter count on each used GPU.
+        for g in 0..2 {
+            assert_eq!(p.a_max[g], p.adapters_on(g).len());
+        }
+    }
+
+    #[test]
+    fn max_base_star_halves_a_max() {
+        let p = max_base(&adapters(10, 1.0), 4, 500.0, 96.0, true).unwrap();
+        for g in 0..p.gpus_used() {
+            let n = p.adapters_on(g).len();
+            assert_eq!(p.a_max[g], (n / 2).max(1));
+        }
+    }
+
+    #[test]
+    fn max_base_overflow_is_starvation() {
+        assert_eq!(
+            max_base(&adapters(100, 1.0), 2, 300.0, 96.0, false).unwrap_err(),
+            PlacementError::Starvation
+        );
+    }
+
+    #[test]
+    fn random_assigns_everyone_and_bounds_a_max() {
+        let p = random(&adapters(50, 0.1), 4, 7).unwrap();
+        assert_eq!(p.assignment.len(), 50);
+        for g in 0..4 {
+            let n = p.adapters_on(g).len();
+            if n > 0 {
+                assert!((1..=n).contains(&p.a_max[g]));
+            }
+        }
+        // Random "almost always utilizes all available GPUs" (paper).
+        assert_eq!(p.gpus_used(), 4);
+    }
+}

@@ -1,0 +1,157 @@
+//! Reimplementation of dLoRA's *proactive* placement (Wu et al., OSDI'24)
+//! as described in the paper's §8.4.3 comparison.
+//!
+//! dLoRA's long-term algorithm is latency-oriented: it spreads load over
+//! *all* available GPUs (minimizing the maximum per-GPU load) rather than
+//! packing a minimum number of them.  The original code is not available
+//! offline; we implement the described behaviour as greedy balanced
+//! assignment followed by an iterative best-swap refinement whose cost
+//! grows as O(A²·G) per pass — which faithfully reproduces the time-limit
+//! failure the paper observes at large adapter counts (Fig. 12, "the
+//! placement algorithm does not complete within one hour"; our budget is
+//! scaled to the testbed).
+
+use super::{Placement, PlacementError, PlacementResult};
+use crate::workload::AdapterSpec;
+use std::time::Instant;
+
+pub struct DloraParams {
+    /// Wall-clock budget for the refinement (the paper's 1 h, scaled).
+    pub time_limit_s: f64,
+    /// Convergence threshold on the balance objective.
+    pub tol: f64,
+}
+
+impl Default for DloraParams {
+    fn default() -> Self {
+        DloraParams { time_limit_s: 2.0, tol: 1e-9 }
+    }
+}
+
+/// Objective: the maximum per-GPU aggregate rate, with a mild variance
+/// term (dLoRA balances both adapter load and memory pressure).
+fn objective(loads: &[f64], mem: &[f64]) -> f64 {
+    let max_load = loads.iter().cloned().fold(0.0, f64::max);
+    let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+    let var = loads.iter().map(|l| (l - mean) * (l - mean)).sum::<f64>() / loads.len() as f64;
+    let max_mem = mem.iter().cloned().fold(0.0, f64::max);
+    max_load + 0.1 * var.sqrt() + 1e-4 * max_mem
+}
+
+pub fn place(adapters: &[AdapterSpec], gpus: usize, params: &DloraParams) -> PlacementResult {
+    let t0 = Instant::now();
+    // Phase 1: greedy balanced assignment (rate-descending, least-loaded).
+    let mut order: Vec<&AdapterSpec> = adapters.iter().collect();
+    order.sort_by(|a, b| b.rate.partial_cmp(&a.rate).unwrap());
+    let mut assign: Vec<usize> = vec![0; adapters.len()];
+    let mut loads = vec![0.0f64; gpus];
+    let mut mem = vec![0.0f64; gpus];
+    let mut idx_of: std::collections::HashMap<usize, usize> = Default::default();
+    for (i, a) in adapters.iter().enumerate() {
+        idx_of.insert(a.id, i);
+    }
+    for a in &order {
+        let g = (0..gpus)
+            .min_by(|&x, &y| loads[x].partial_cmp(&loads[y]).unwrap())
+            .unwrap();
+        assign[idx_of[&a.id]] = g;
+        loads[g] += a.rate;
+        mem[g] += a.rank as f64;
+    }
+
+    // Phase 2: best-swap local search until converged or out of budget.
+    let n = adapters.len();
+    loop {
+        if t0.elapsed().as_secs_f64() > params.time_limit_s {
+            return Err(PlacementError::TimeLimit);
+        }
+        let current = objective(&loads, &mem);
+        let mut best: Option<(usize, usize, f64)> = None; // (adapter idx, new gpu, obj)
+        for i in 0..n {
+            // Periodic budget check inside the O(A²)-ish scan.
+            if i % 64 == 0 && t0.elapsed().as_secs_f64() > params.time_limit_s {
+                return Err(PlacementError::TimeLimit);
+            }
+            let from = assign[i];
+            for to in 0..gpus {
+                if to == from {
+                    continue;
+                }
+                let mut l2 = loads.clone();
+                let mut m2 = mem.clone();
+                l2[from] -= adapters[i].rate;
+                l2[to] += adapters[i].rate;
+                m2[from] -= adapters[i].rank as f64;
+                m2[to] += adapters[i].rank as f64;
+                let obj = objective(&l2, &m2);
+                if obj < best.map_or(current - params.tol, |(_, _, b)| b) {
+                    best = Some((i, to, obj));
+                }
+            }
+        }
+        match best {
+            Some((i, to, _)) => {
+                let from = assign[i];
+                loads[from] -= adapters[i].rate;
+                loads[to] += adapters[i].rate;
+                mem[from] -= adapters[i].rank as f64;
+                mem[to] += adapters[i].rank as f64;
+                assign[i] = to;
+            }
+            None => break,
+        }
+    }
+
+    // dLoRA sets parallelism to everything it placed (latency first).
+    let mut placement = Placement { assignment: Default::default(), a_max: vec![0; gpus] };
+    let mut counts = vec![0usize; gpus];
+    for (i, a) in adapters.iter().enumerate() {
+        placement.assignment.insert(a.id, assign[i]);
+        counts[assign[i]] += 1;
+    }
+    for g in 0..gpus {
+        placement.a_max[g] = counts[g];
+    }
+    Ok(placement)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adapters(n: usize) -> Vec<AdapterSpec> {
+        (0..n)
+            .map(|id| AdapterSpec { id, rank: 8 + 8 * (id % 3), rate: 0.1 * ((id % 5) + 1) as f64 })
+            .collect()
+    }
+
+    #[test]
+    fn balances_load_across_all_gpus() {
+        let ads = adapters(40);
+        let p = place(&ads, 4, &DloraParams::default()).unwrap();
+        assert_eq!(p.gpus_used(), 4); // latency-oriented: uses everything
+        let mut loads = vec![0.0; 4];
+        for a in &ads {
+            loads[p.assignment[&a.id]] += a.rate;
+        }
+        let max = loads.iter().cloned().fold(0.0, f64::max);
+        let min = loads.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max - min < 0.35, "imbalance {max}-{min}");
+    }
+
+    #[test]
+    fn a_max_equals_per_gpu_count() {
+        let ads = adapters(20);
+        let p = place(&ads, 4, &DloraParams::default()).unwrap();
+        for g in 0..4 {
+            assert_eq!(p.a_max[g], p.adapters_on(g).len());
+        }
+    }
+
+    #[test]
+    fn time_limit_fires_when_budget_exhausted() {
+        let ads = adapters(3000);
+        let err = place(&ads, 4, &DloraParams { time_limit_s: 0.0, tol: 0.0 }).unwrap_err();
+        assert_eq!(err, PlacementError::TimeLimit);
+    }
+}

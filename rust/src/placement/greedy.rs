@@ -1,0 +1,267 @@
+//! The caching greedy algorithm — faithful implementation of the paper's
+//! Algorithm 1 (main loop) and Algorithm 2 (TestAllocation).
+//!
+//! First-Fit-Decreasing flavour: adapters are priority-sorted (size
+//! descending, zigzag by arrival rate inside size groups), provisionally
+//! packed onto the current GPU, and validated at the testing points via
+//! the ML models (throughput probe over the current and next `A_max`
+//! candidates, then a starvation veto).
+
+use super::{Placement, PlacementError, PlacementResult, TESTING_POINTS};
+use crate::ml::{features, MlModels};
+use crate::workload::AdapterSpec;
+use std::collections::VecDeque;
+
+/// PrioritySorting (Alg. 1 line 2): sort by size (largest first), then
+/// zigzag by rate within each size group (high, low, next-high, ...),
+/// preserving the size-based ordering.
+pub fn priority_sorting(adapters: &[AdapterSpec]) -> Vec<AdapterSpec> {
+    let mut by_size: std::collections::BTreeMap<usize, Vec<AdapterSpec>> = Default::default();
+    for a in adapters {
+        by_size.entry(a.rank).or_default().push(a.clone());
+    }
+    let mut out = Vec::with_capacity(adapters.len());
+    for (_, mut group) in by_size.into_iter().rev() {
+        group.sort_by(|a, b| b.rate.partial_cmp(&a.rate).unwrap());
+        // Zigzag: alternate highest / lowest remaining.
+        let mut dq: VecDeque<AdapterSpec> = group.into();
+        let mut take_front = true;
+        while let Some(a) = if take_front { dq.pop_front() } else { dq.pop_back() } {
+            out.push(a);
+            take_front = !take_front;
+        }
+    }
+    out
+}
+
+/// Per-GPU packing state.
+#[derive(Debug, Clone, Default)]
+struct GpuState {
+    committed: Vec<AdapterSpec>,
+    provisional: Vec<AdapterSpec>,
+    a_max: usize,
+}
+
+impl GpuState {
+    fn count(&self) -> usize {
+        self.committed.len() + self.provisional.len()
+    }
+
+    fn all(&self) -> Vec<AdapterSpec> {
+        let mut v = self.committed.clone();
+        v.extend(self.provisional.iter().cloned());
+        v
+    }
+}
+
+/// TestAllocation (Algorithm 2): probe the current and the next `A_max`
+/// candidate with the throughput model, keep the better, veto on predicted
+/// starvation.  Returns `(ok, chosen_a_max)`.
+fn test_allocation(g: &GpuState, models: &MlModels) -> (bool, usize) {
+    let all = g.all();
+    let p = if g.a_max == 0 { TESTING_POINTS[0] } else { g.a_max };
+    let p_next = next_gpu_config(p);
+    let x_p = features(&all, p);
+    let t_p = models.predict_throughput(&x_p);
+    let p_best = match p_next {
+        Some(pn) => {
+            let t_next = models.predict_throughput(&features(&all, pn));
+            if t_p > t_next {
+                p
+            } else {
+                pn
+            }
+        }
+        None => p,
+    };
+    let starve = models.predict_starvation(&features(&all, p_best));
+    (!starve, p_best)
+}
+
+/// NextGPUConfig: the next candidate in the testing-point array.
+fn next_gpu_config(current: usize) -> Option<usize> {
+    TESTING_POINTS.iter().copied().find(|&p| p > current)
+}
+
+/// Algorithm 1.  Returns the placement or `Err(Starvation)` when no
+/// starvation-free allocation exists within `gpus`.
+pub fn place(adapters: &[AdapterSpec], gpus: usize, models: &MlModels) -> PlacementResult {
+    let sorted = priority_sorting(adapters);
+    let mut a_q: VecDeque<AdapterSpec> = sorted.into();
+    let mut g_q: VecDeque<usize> = (0..gpus).collect();
+    let mut states: Vec<GpuState> = vec![GpuState::default(); gpus];
+    let testing: std::collections::HashSet<usize> = TESTING_POINTS.iter().copied().collect();
+
+    while let Some(a) = a_q.pop_front() {
+        let Some(g) = g_q.pop_front() else {
+            return Err(PlacementError::Starvation);
+        };
+        states[g].provisional.push(a); // ProvisionalInclude
+        let at_testing_point =
+            testing.contains(&states[g].count()) || states[g].count() >= *TESTING_POINTS.last().unwrap();
+        if at_testing_point {
+            let (ok, p_new) = test_allocation(&states[g], models);
+            if ok {
+                // CommitAllocation
+                let prov = std::mem::take(&mut states[g].provisional);
+                states[g].committed.extend(prov);
+                states[g].a_max = p_new;
+                g_q.push_front(g);
+            } else {
+                // RollbackAllocation + Merge: provisional adapters return
+                // to the head of the queue (they keep priority) and the
+                // GPU is retired with what it already committed.
+                let un_alloc = std::mem::take(&mut states[g].provisional);
+                for a in un_alloc.into_iter().rev() {
+                    a_q.push_front(a);
+                }
+                // If the GPU has no committed adapters it cannot make
+                // progress on this workload at all: fail fast (otherwise
+                // the same head adapter would starve every GPU).
+                if states[g].committed.is_empty() && a_q.len() >= gpus {
+                    // GPU unusable for the head adapter; continue with the
+                    // remaining GPUs.
+                }
+            }
+        } else {
+            g_q.push_front(g);
+        }
+    }
+
+    // Validate any leftover provisional allocations (Alg. 1 lines 24-28).
+    for g in 0..gpus {
+        if !states[g].provisional.is_empty() {
+            let (ok, p_new) = test_allocation(&states[g], models);
+            if !ok {
+                return Err(PlacementError::Starvation);
+            }
+            let prov = std::mem::take(&mut states[g].provisional);
+            states[g].committed.extend(prov);
+            states[g].a_max = p_new;
+        } else if !states[g].committed.is_empty() && states[g].a_max == 0 {
+            let (ok, p_new) = test_allocation(&states[g], models);
+            if !ok {
+                return Err(PlacementError::Starvation);
+            }
+            states[g].a_max = p_new;
+        }
+    }
+
+    let mut placement = Placement { assignment: Default::default(), a_max: vec![0; gpus] };
+    for (g, st) in states.iter().enumerate() {
+        for a in &st.committed {
+            placement.assignment.insert(a.id, g);
+        }
+        placement.a_max[g] = st.a_max;
+    }
+    if placement.assignment.len() != adapters.len() {
+        return Err(PlacementError::Starvation);
+    }
+    Ok(placement)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::refine::FlatTree;
+    use crate::ml::tree::{Tree, TreeParams};
+    use crate::ml::Predictor;
+
+    /// Analytic stand-in models: capacity 1000 tok/s minus an A_max tax;
+    /// starvation when demand (sum_rate × 96 tok) exceeds capacity.
+    fn fake_models() -> MlModels {
+        // Build trivial trees by fitting on synthetic data reproducing the
+        // analytic rule, so we exercise the real Predictor machinery.
+        let mut xs = vec![];
+        let mut thr = vec![];
+        let mut st = vec![];
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..4000 {
+            let sum_rate = rng.range_f64(0.0, 30.0);
+            let a_max = *rng.choose(&[8.0, 16.0, 32.0, 64.0, 96.0, 128.0, 160.0, 192.0, 256.0]);
+            let n = rng.range(1, 384) as f64;
+            let demand = sum_rate * 96.0;
+            let capacity = 1000.0 - a_max * 2.0;
+            let mut x = vec![0.0; crate::ml::N_FEATURES];
+            x[0] = n;
+            x[1] = sum_rate;
+            x[3] = 8.0;
+            x[4] = 8.0;
+            x[6] = a_max;
+            xs.push(x);
+            thr.push(demand.min(capacity));
+            st.push((demand > capacity || a_max < (n / 8.0).min(64.0)) as i32 as f64);
+        }
+        let t_thr = Tree::fit(&xs, &thr, &TreeParams::default());
+        let t_st = Tree::fit(
+            &xs,
+            &st,
+            &TreeParams { criterion: crate::ml::tree::Criterion::Gini, ..Default::default() },
+        );
+        MlModels {
+            throughput: Predictor::Flat(FlatTree::compile(&t_thr)),
+            starvation: Predictor::Flat(FlatTree::compile(&t_st)),
+            scaler: None,
+        }
+    }
+
+    fn adapters(n: usize, rate: f64) -> Vec<AdapterSpec> {
+        (0..n).map(|id| AdapterSpec { id, rank: 8, rate }).collect()
+    }
+
+    #[test]
+    fn priority_sorting_size_then_zigzag() {
+        let ads = vec![
+            AdapterSpec { id: 0, rank: 8, rate: 0.1 },
+            AdapterSpec { id: 1, rank: 32, rate: 0.5 },
+            AdapterSpec { id: 2, rank: 32, rate: 0.1 },
+            AdapterSpec { id: 3, rank: 32, rate: 0.3 },
+            AdapterSpec { id: 4, rank: 8, rate: 0.9 },
+        ];
+        let s = priority_sorting(&ads);
+        // Size 32 group first, zigzag by rate: 0.5, 0.1, 0.3.
+        assert_eq!(s[0].id, 1);
+        assert_eq!(s[1].id, 2);
+        assert_eq!(s[2].id, 3);
+        // Then size 8: zigzag 0.9, 0.1.
+        assert_eq!(s[3].id, 4);
+        assert_eq!(s[4].id, 0);
+    }
+
+    #[test]
+    fn small_workload_packs_one_gpu() {
+        let models = fake_models();
+        let p = place(&adapters(16, 0.1), 4, &models).unwrap();
+        assert_eq!(p.gpus_used(), 1);
+        assert_eq!(p.assignment.len(), 16);
+    }
+
+    #[test]
+    fn larger_workload_spills_to_more_gpus() {
+        let models = fake_models();
+        // 64 adapters × 0.3 req/s × 96 tok = 1843 tok/s demand > 1 GPU.
+        let p = place(&adapters(64, 0.3), 4, &models).unwrap();
+        assert!(p.gpus_used() >= 2, "used {}", p.gpus_used());
+        assert_eq!(p.assignment.len(), 64);
+    }
+
+    #[test]
+    fn impossible_workload_errors_starvation() {
+        let models = fake_models();
+        // 384 adapters × 1.0 req/s: demand far beyond 4 GPUs.
+        let err = place(&adapters(384, 1.0), 4, &models).unwrap_err();
+        assert_eq!(err, PlacementError::Starvation);
+    }
+
+    #[test]
+    fn a_max_is_configured_for_used_gpus() {
+        let models = fake_models();
+        let p = place(&adapters(32, 0.1), 4, &models).unwrap();
+        for g in 0..4 {
+            if !p.adapters_on(g).is_empty() {
+                assert!(p.a_max[g] > 0);
+                assert!(TESTING_POINTS.contains(&p.a_max[g]));
+            }
+        }
+    }
+}

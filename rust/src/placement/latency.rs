@@ -1,0 +1,89 @@
+//! ProposedLat (paper §8.4.4): the latency-oriented proof-of-concept
+//! variant of the pipeline.  Assigns each adapter to the GPU with the
+//! lowest aggregated arrival rate, sets `A_max` to the per-GPU adapter
+//! count, and validates the resulting allocation with the learned ML
+//! models (starvation / memory-error veto).
+
+use super::{Placement, PlacementError, PlacementResult};
+use crate::ml::{features, MlModels};
+use crate::workload::AdapterSpec;
+
+pub fn place(adapters: &[AdapterSpec], gpus: usize, models: &MlModels) -> PlacementResult {
+    let mut placement = Placement { assignment: Default::default(), a_max: vec![0; gpus] };
+    let mut loads = vec![0.0f64; gpus];
+    let mut per_gpu: Vec<Vec<AdapterSpec>> = vec![Vec::new(); gpus];
+    for a in adapters {
+        let g = (0..gpus)
+            .min_by(|&x, &y| loads[x].partial_cmp(&loads[y]).unwrap())
+            .unwrap();
+        placement.assignment.insert(a.id, g);
+        loads[g] += a.rate;
+        per_gpu[g].push(a.clone());
+    }
+    for g in 0..gpus {
+        placement.a_max[g] = per_gpu[g].len();
+    }
+    // Post-hoc ML validation: any predicted starvation (which the training
+    // data also uses to encode memory errors) makes the whole allocation
+    // infeasible.
+    for g in 0..gpus {
+        if per_gpu[g].is_empty() {
+            continue;
+        }
+        let x = features(&per_gpu[g], placement.a_max[g]);
+        if models.predict_starvation(&x) {
+            return Err(PlacementError::Starvation);
+        }
+    }
+    Ok(placement)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::refine::FlatTree;
+    use crate::ml::tree::{Criterion, Tree, TreeParams};
+    use crate::ml::Predictor;
+
+    fn models(starve_above_rate: f64) -> MlModels {
+        let mut xs = vec![];
+        let mut st = vec![];
+        let mut rng = crate::util::rng::Rng::new(2);
+        for _ in 0..500 {
+            let sum_rate = rng.range_f64(0.0, 10.0);
+            let mut x = vec![0.0; crate::ml::N_FEATURES];
+            x[1] = sum_rate;
+            xs.push(x);
+            st.push((sum_rate > starve_above_rate) as i32 as f64);
+        }
+        let t = Tree::fit(&xs, &st, &TreeParams { criterion: Criterion::Gini, ..Default::default() });
+        let thr = Tree::fit(&xs, &vec![100.0; 500], &TreeParams::default());
+        MlModels {
+            throughput: Predictor::Tree(thr),
+            starvation: Predictor::Flat(FlatTree::compile(&t)),
+            scaler: None,
+        }
+    }
+
+    fn adapters(n: usize, rate: f64) -> Vec<AdapterSpec> {
+        (0..n).map(|id| AdapterSpec { id, rank: 8, rate }).collect()
+    }
+
+    #[test]
+    fn spreads_over_all_gpus() {
+        let p = place(&adapters(16, 0.1), 4, &models(100.0)).unwrap();
+        assert_eq!(p.gpus_used(), 4);
+        // Balanced: 4 adapters per GPU, A_max = count.
+        for g in 0..4 {
+            assert_eq!(p.adapters_on(g).len(), 4);
+            assert_eq!(p.a_max[g], 4);
+        }
+    }
+
+    #[test]
+    fn rejects_predicted_starvation() {
+        // 2.0 total rate per GPU > 1.5 threshold → infeasible.
+        let err = place(&adapters(16, 0.5), 4, &models(1.5)).unwrap_err();
+        assert_eq!(err, PlacementError::Starvation);
+    }
+}

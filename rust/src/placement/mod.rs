@@ -1,0 +1,87 @@
+//! The adapter caching problem (paper §7): place adapters on the minimum
+//! number of GPUs, choosing a per-GPU `A_max`, without starvation or
+//! memory errors.
+//!
+//! - [`greedy`] — the paper's contribution (Algorithms 1 & 2);
+//! - [`baselines`] — MaxBase, MaxBase*, Random (§8.4);
+//! - [`dlora`] — the dLoRA proactive placement reimplementation (§8.4.3);
+//! - [`latency`] — the ProposedLat latency-oriented variant (§8.4.4).
+
+pub mod baselines;
+pub mod dlora;
+pub mod greedy;
+pub mod latency;
+
+use crate::workload::AdapterSpec;
+use std::collections::HashMap;
+
+/// The paper's testing-point array, reused as the `A_max` candidate set.
+pub const TESTING_POINTS: [usize; 11] = [8, 16, 32, 64, 96, 128, 160, 192, 256, 320, 384];
+
+/// A complete placement decision.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Placement {
+    /// adapter id → GPU index.
+    pub assignment: HashMap<usize, usize>,
+    /// Per-GPU `A_max` configuration (0 = GPU unused).
+    pub a_max: Vec<usize>,
+}
+
+impl Placement {
+    pub fn gpus_used(&self) -> usize {
+        let mut used: Vec<bool> = vec![false; self.a_max.len()];
+        for &g in self.assignment.values() {
+            used[g] = true;
+        }
+        used.iter().filter(|&&u| u).count()
+    }
+
+    /// Adapter ids assigned to GPU `g`.
+    pub fn adapters_on(&self, g: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .assignment
+            .iter()
+            .filter(|(_, &gpu)| gpu == g)
+            .map(|(&a, _)| a)
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// The adapter subsets per GPU.
+    pub fn per_gpu<'a>(&self, adapters: &'a [AdapterSpec]) -> Vec<Vec<&'a AdapterSpec>> {
+        let mut out: Vec<Vec<&AdapterSpec>> = vec![Vec::new(); self.a_max.len()];
+        for a in adapters {
+            if let Some(&g) = self.assignment.get(&a.id) {
+                out[g].push(a);
+            }
+        }
+        out
+    }
+}
+
+/// Why a placement attempt failed.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum PlacementError {
+    #[error("starvation: no feasible allocation within the available GPUs")]
+    Starvation,
+    #[error("placement algorithm exceeded its time limit")]
+    TimeLimit,
+}
+
+pub type PlacementResult = Result<Placement, PlacementError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpus_used_counts_distinct() {
+        let mut p = Placement { assignment: HashMap::new(), a_max: vec![8, 8, 0, 0] };
+        p.assignment.insert(0, 0);
+        p.assignment.insert(1, 0);
+        p.assignment.insert(2, 1);
+        assert_eq!(p.gpus_used(), 2);
+        assert_eq!(p.adapters_on(0), vec![0, 1]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (model dims, bucket lists, artifact paths, input ordering).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed per-model manifest entry.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub window: usize,
+    pub slots: usize,
+    pub max_rank: usize,
+    pub decode_buckets: Vec<usize>,
+    pub prefill_buckets: Vec<usize>,
+    pub param_names: Vec<String>,
+    pub params_file: String,
+    pub decode_artifacts: BTreeMap<usize, String>,
+    pub prefill_artifacts: BTreeMap<usize, String>,
+    pub use_pallas: bool,
+}
+
+impl ModelMeta {
+    /// Elements of one A-bank tensor `[L, S, d, r]`.
+    pub fn bank_a_len(&self) -> usize {
+        self.n_layers * self.slots * self.d_model * self.max_rank
+    }
+
+    /// Elements of one B-bank tensor `[L, S, r, d]`.
+    pub fn bank_b_len(&self) -> usize {
+        self.bank_a_len()
+    }
+
+    /// Host KV bytes per token (both k and v, all layers) — real bytes, as
+    /// opposed to the simulated-GPU token ledger.
+    pub fn kv_f32_per_token(&self) -> usize {
+        2 * self.n_layers * self.d_model
+    }
+
+    fn from_json(name: &str, j: &Json) -> Result<ModelMeta> {
+        let cfg = j.req("config")?;
+        let get = |k: &str| -> Result<usize> {
+            cfg.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow!("config.{k} not a number"))
+        };
+        let artifacts = |key: &str| -> Result<BTreeMap<usize, String>> {
+            let obj = j
+                .req(key)?
+                .as_obj()
+                .ok_or_else(|| anyhow!("{key} not an object"))?;
+            let mut out = BTreeMap::new();
+            for (k, v) in obj {
+                out.insert(
+                    k.parse::<usize>().map_err(|_| anyhow!("bad bucket {k}"))?,
+                    v.as_str().ok_or_else(|| anyhow!("bad path"))?.to_string(),
+                );
+            }
+            Ok(out)
+        };
+        Ok(ModelMeta {
+            name: name.to_string(),
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            head_dim: get("head_dim")?,
+            vocab: get("vocab")?,
+            window: get("window")?,
+            slots: get("slots")?,
+            max_rank: get("max_rank")?,
+            decode_buckets: cfg
+                .req("decode_buckets")?
+                .usize_vec()
+                .ok_or_else(|| anyhow!("decode_buckets"))?,
+            prefill_buckets: cfg
+                .req("prefill_buckets")?
+                .usize_vec()
+                .ok_or_else(|| anyhow!("prefill_buckets"))?,
+            param_names: j
+                .req("param_names")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("param_names"))?
+                .iter()
+                .map(|v| v.as_str().unwrap_or_default().to_string())
+                .collect(),
+            params_file: j
+                .req("params_file")?
+                .as_str()
+                .ok_or_else(|| anyhow!("params_file"))?
+                .to_string(),
+            decode_artifacts: artifacts("decode")?,
+            prefill_artifacts: artifacts("prefill")?,
+            use_pallas: j.get("use_pallas").and_then(Json::as_bool).unwrap_or(true),
+        })
+    }
+}
+
+/// The whole artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::read_file(&dir.join("manifest.json"))?;
+        let models_j = j
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models not an object"))?;
+        let mut models = BTreeMap::new();
+        for (name, entry) in models_j {
+            models.insert(name.clone(), ModelMeta::from_json(name, entry)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models })
+    }
+
+    /// Default artifact dir: `$ADAPTER_SERVING_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("ADAPTER_SERVING_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example_entry() -> Json {
+        Json::parse(
+            r#"{
+              "config": {"d_model": 128, "n_layers": 2, "n_heads": 4,
+                         "head_dim": 32, "vocab": 512, "window": 128,
+                         "slots": 64, "max_rank": 32,
+                         "decode_buckets": [1, 2], "prefill_buckets": [32]},
+              "param_names": ["embed", "final_ln"],
+              "params_file": "m.params.npz",
+              "decode": {"1": "d1.hlo.txt", "2": "d2.hlo.txt"},
+              "prefill": {"32": "p32.hlo.txt"},
+              "use_pallas": true
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_model_meta() {
+        let m = ModelMeta::from_json("pico", &example_entry()).unwrap();
+        assert_eq!(m.d_model, 128);
+        assert_eq!(m.decode_artifacts[&2], "d2.hlo.txt");
+        assert_eq!(m.bank_a_len(), 2 * 64 * 128 * 32);
+        assert_eq!(m.kv_f32_per_token(), 2 * 2 * 128);
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        let mut j = example_entry();
+        if let Json::Obj(m) = &mut j {
+            m.remove("params_file");
+        }
+        assert!(ModelMeta::from_json("pico", &j).is_err());
+    }
+}

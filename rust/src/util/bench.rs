@@ -1,0 +1,98 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! `cargo bench` binaries (harness = false) use this: warmup, timed
+//! iterations, mean/std/p50/p95 reporting, and a uniform output format that
+//! bench_output.txt captures.
+
+use super::stats;
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<44} iters={:<5} mean={:>12} p50={:>12} p95={:>12} std={:>12}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean_s),
+            fmt_dur(self.p50_s),
+            fmt_dur(self.p95_s),
+            fmt_dur(self.std_s),
+        );
+    }
+}
+
+pub fn fmt_dur(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&samples),
+        std_s: stats::std(&samples),
+        p50_s: stats::percentile(&samples, 50.0),
+        p95_s: stats::percentile(&samples, 95.0),
+    };
+    r.report();
+    r
+}
+
+/// Auto-calibrating variant: picks an iteration count so the total measured
+/// time is roughly `target_s` seconds.
+pub fn bench_auto<F: FnMut()>(name: &str, target_s: f64, mut f: F) -> BenchResult {
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_s / once) as usize).clamp(3, 10_000);
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 1, 10, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(2.0).ends_with('s'));
+        assert!(fmt_dur(2e-3).ends_with("ms"));
+        assert!(fmt_dur(2e-6).ends_with("us"));
+        assert!(fmt_dur(2e-9).ends_with("ns"));
+    }
+}

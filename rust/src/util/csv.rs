@@ -1,0 +1,136 @@
+//! CSV writer/reader for experiment outputs and the ML dataset.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Column-ordered CSV table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Table {
+        Table { columns: columns.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn push_display(&mut self, row: &[&dyn std::fmt::Display]) {
+        self.push(row.iter().map(|v| v.to_string()).collect());
+    }
+
+    pub fn write_file(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "{}", self.columns.join(","))?;
+        for row in &self.rows {
+            let quoted: Vec<String> = row.iter().map(|c| quote(c)).collect();
+            writeln!(f, "{}", quoted.join(","))?;
+        }
+        Ok(())
+    }
+
+    pub fn read_file(path: &Path) -> anyhow::Result<Table> {
+        let s = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let mut lines = s.lines();
+        let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty csv"))?;
+        let columns: Vec<String> = split_line(header);
+        let mut rows = vec![];
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let row = split_line(line);
+            if row.len() != columns.len() {
+                anyhow::bail!("csv arity mismatch in {}", path.display());
+            }
+            rows.push(row);
+        }
+        Ok(Table { columns, rows })
+    }
+
+    pub fn col_index(&self, name: &str) -> anyhow::Result<usize> {
+        self.columns
+            .iter()
+            .position(|c| c == name)
+            .ok_or_else(|| anyhow::anyhow!("no csv column '{name}'"))
+    }
+
+    /// Extract a numeric column.
+    pub fn f64_col(&self, name: &str) -> anyhow::Result<Vec<f64>> {
+        let i = self.col_index(name)?;
+        self.rows
+            .iter()
+            .map(|r| {
+                r[i].parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("non-numeric value '{}' in column {name}", r[i]))
+            })
+            .collect()
+    }
+}
+
+fn quote(c: &str) -> String {
+    if c.contains(',') || c.contains('"') || c.contains('\n') {
+        format!("\"{}\"", c.replace('"', "\"\""))
+    } else {
+        c.to_string()
+    }
+}
+
+fn split_line(line: &str) -> Vec<String> {
+    let mut out = vec![];
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                cur.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    out.push(cur);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip(){
+        let dir = std::env::temp_dir().join(format!("csv_test_{}", std::process::id()));
+        let path = dir.join("t.csv");
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec!["1".into(), "x,y".into()]);
+        t.push(vec!["2.5".into(), "he said \"hi\"".into()]);
+        t.write_file(&path).unwrap();
+        let r = Table::read_file(&path).unwrap();
+        assert_eq!(r.columns, vec!["a", "b"]);
+        assert_eq!(r.rows[0][1], "x,y");
+        assert_eq!(r.rows[1][1], "he said \"hi\"");
+        assert_eq!(r.f64_col("a").unwrap(), vec![1.0, 2.5]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn arity_check() {
+        let mut t = Table::new(&["a"]);
+        t.push(vec!["1".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities built from scratch (the offline environment provides
+//! no serde/clap/rand/rayon/criterion/proptest — see DESIGN.md §4).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,92 @@
+//! Seeded property-testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over `n` random cases; on failure it reports the
+//! failing seed so the case can be replayed deterministically, and attempts
+//! a simple shrink by re-running with "smaller" generator sizes.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+    pub name: &'static str,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Prop {
+        Prop { cases: 64, seed: 0xC0FFEE, name }
+    }
+
+    pub fn cases(mut self, n: usize) -> Prop {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Prop {
+        self.seed = s;
+        self
+    }
+
+    /// Run `property(rng, size)` for sizes ramping from small to large.
+    /// `property` returns Err(description) on failure.
+    pub fn check<F>(&self, property: F)
+    where
+        F: Fn(&mut Rng, usize) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            // Ramp sizes so early cases are small (cheap shrinking).
+            let size = 1 + case * 4 / self.cases.max(1) * 8 + case % 8;
+            let case_seed = self.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let mut rng = Rng::new(case_seed);
+            if let Err(msg) = property(&mut rng, size) {
+                // Try to find a smaller failing size for a friendlier report.
+                let mut min_fail = (size, msg.clone());
+                for s in 1..size {
+                    let mut r2 = Rng::new(case_seed);
+                    if let Err(m2) = property(&mut r2, s) {
+                        min_fail = (s, m2);
+                        break;
+                    }
+                }
+                panic!(
+                    "property '{}' failed (case {case}, seed {case_seed:#x}, size {}): {}",
+                    self.name, min_fail.0, min_fail.1
+                );
+            }
+        }
+    }
+}
+
+/// Assert-like helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        Prop::new("reverse twice is identity").cases(32).check(|rng, size| {
+            let v: Vec<u64> = (0..size).map(|_| rng.next_u64()).collect();
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            prop_assert!(v == w, "mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        Prop::new("always fails").cases(4).check(|_, _| Err("nope".into()));
+    }
+}

@@ -1,0 +1,200 @@
+//! Small statistics toolkit: summary stats, percentiles, least squares.
+//!
+//! Used by the metrics collectors, the Digital-Twin calibration fits, and
+//! the experiment reports.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation (0.0 for len < 2).
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Ordinary least squares for y ~ X·beta, X given row-major with k columns.
+/// Solves the normal equations with Gaussian elimination + partial pivoting.
+/// Returns beta of length k.
+pub fn least_squares(x_rows: &[Vec<f64>], y: &[f64]) -> Vec<f64> {
+    assert!(!x_rows.is_empty());
+    assert_eq!(x_rows.len(), y.len());
+    let k = x_rows[0].len();
+    // Build X'X (k×k) and X'y (k).
+    let mut xtx = vec![vec![0.0; k]; k];
+    let mut xty = vec![0.0; k];
+    for (row, &yi) in x_rows.iter().zip(y) {
+        assert_eq!(row.len(), k);
+        for i in 0..k {
+            xty[i] += row[i] * yi;
+            for j in 0..k {
+                xtx[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    // Tiny ridge for numerical safety on near-singular designs.
+    for (i, row) in xtx.iter_mut().enumerate() {
+        row[i] += 1e-9;
+    }
+    solve_linear(xtx, xty)
+}
+
+/// Solve A·x = b by Gaussian elimination with partial pivoting.
+pub fn solve_linear(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let pivot = a[col][col];
+        if pivot.abs() < 1e-14 {
+            continue; // singular direction; leave zero
+        }
+        for row in col + 1..n {
+            let f = a[row][col] / pivot;
+            for c in col..n {
+                a[row][c] -= f * a[col][c];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut s = b[row];
+        for c in row + 1..n {
+            s -= a[row][c] * x[c];
+        }
+        x[row] = if a[row][row].abs() < 1e-14 { 0.0 } else { s / a[row][row] };
+    }
+    x
+}
+
+/// Simple linear regression y = a + b·x; returns (a, b).
+pub fn linreg(x: &[f64], y: &[f64]) -> (f64, f64) {
+    let rows: Vec<Vec<f64>> = x.iter().map(|&xi| vec![1.0, xi]).collect();
+    let beta = least_squares(&rows, y);
+    (beta[0], beta[1])
+}
+
+/// Symmetric Mean Absolute Percentage Error in percent, as used throughout
+/// the paper's evaluation (Tables 1, 3, 4).
+pub fn smape(actual: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(actual.len(), predicted.len());
+    if actual.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = actual
+        .iter()
+        .zip(predicted)
+        .map(|(&a, &p)| {
+            let denom = (a.abs() + p.abs()) / 2.0;
+            if denom < 1e-12 {
+                0.0
+            } else {
+                (a - p).abs() / denom
+            }
+        })
+        .sum();
+    100.0 * s / actual.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|&xi| 3.0 + 2.0 * xi).collect();
+        let (a, b) = linreg(&x, &y);
+        assert!((a - 3.0).abs() < 1e-9, "{a}");
+        assert!((b - 2.0).abs() < 1e-9, "{b}");
+    }
+
+    #[test]
+    fn least_squares_multi() {
+        // y = 1 + 2*x1 - 3*x2
+        let rows: Vec<Vec<f64>> = (0..100)
+            .map(|i| {
+                let x1 = (i % 10) as f64;
+                let x2 = (i / 10) as f64;
+                vec![1.0, x1, x2]
+            })
+            .collect();
+        let y: Vec<f64> = rows.iter().map(|r| 1.0 + 2.0 * r[1] - 3.0 * r[2]).collect();
+        let beta = least_squares(&rows, &y);
+        assert!((beta[0] - 1.0).abs() < 1e-8);
+        assert!((beta[1] - 2.0).abs() < 1e-8);
+        assert!((beta[2] + 3.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn smape_zero_for_exact() {
+        assert_eq!(smape(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn smape_symmetric() {
+        let a = smape(&[100.0], &[110.0]);
+        let b = smape(&[110.0], &[100.0]);
+        assert!((a - b).abs() < 1e-12);
+        assert!((a - 100.0 * 10.0 / 105.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn solve_linear_identity() {
+        let a = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let x = solve_linear(a, vec![5.0, -2.0]);
+        assert_eq!(x, vec![5.0, -2.0]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Arrival processes: predictable (Poisson) and the paper's unpredictable
+//! regime-switching traffic (§8.2 "Unpredictable arrivals").
+
+use crate::util::rng::Rng;
+
+/// Parameters of the unpredictable regime-switching process: every
+/// `switch_interval_s` each adapter independently re-draws its inter-arrival
+/// distribution (Poisson vs lognormal) and multiplies or divides its rate by
+/// two, clipped to [min_rate, max_rate].
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnpredictableParams {
+    pub switch_interval_s: f64,
+    pub min_rate: f64,
+    pub max_rate: f64,
+    /// CV of the lognormal inter-arrival regime (Poisson has CV 1).
+    pub lognormal_cv: f64,
+}
+
+impl Default for UnpredictableParams {
+    fn default() -> Self {
+        UnpredictableParams {
+            switch_interval_s: 5.0,
+            min_rate: 0.0125,
+            max_rate: 6.4,
+            lognormal_cv: 1.6,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalModel {
+    /// Stationary Poisson per adapter — the paper's predictable long-term
+    /// pattern assumption.
+    Poisson,
+    /// Non-stationary regime-switching traffic (paper Fig. 9).
+    Unpredictable(UnpredictableParams),
+}
+
+impl ArrivalModel {
+    /// Sample arrival times in [0, horizon) for one adapter with base rate
+    /// `rate` (req/s).
+    pub fn sample_times(&self, rate: f64, horizon_s: f64, rng: &mut Rng) -> Vec<f64> {
+        match self {
+            ArrivalModel::Poisson => poisson_times(rate, 0.0, horizon_s, rng),
+            ArrivalModel::Unpredictable(p) => unpredictable_times(rate, horizon_s, p, rng),
+        }
+    }
+}
+
+fn poisson_times(rate: f64, start: f64, end: f64, rng: &mut Rng) -> Vec<f64> {
+    let mut out = vec![];
+    if rate <= 0.0 {
+        return out;
+    }
+    let mut t = start + rng.exp(rate);
+    while t < end {
+        out.push(t);
+        t += rng.exp(rate);
+    }
+    out
+}
+
+/// Lognormal-renewal arrivals with mean inter-arrival 1/rate and given CV.
+fn lognormal_times(rate: f64, cv: f64, start: f64, end: f64, rng: &mut Rng) -> Vec<f64> {
+    let mut out = vec![];
+    if rate <= 0.0 {
+        return out;
+    }
+    let mean_gap = 1.0 / rate;
+    let sigma2 = (1.0 + cv * cv).ln();
+    let mu = mean_gap.ln() - sigma2 / 2.0;
+    let sigma = sigma2.sqrt();
+    let mut t = start + rng.lognormal(mu, sigma);
+    while t < end {
+        out.push(t);
+        t += rng.lognormal(mu, sigma);
+    }
+    out
+}
+
+fn unpredictable_times(
+    base_rate: f64,
+    horizon_s: f64,
+    p: &UnpredictableParams,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let mut out = vec![];
+    let mut rate = base_rate;
+    let mut t0 = 0.0;
+    while t0 < horizon_s {
+        let t1 = (t0 + p.switch_interval_s).min(horizon_s);
+        // Re-draw regime for this window.
+        let use_lognormal = rng.bool(0.5);
+        if rng.bool(0.5) {
+            rate *= 2.0;
+        } else {
+            rate /= 2.0;
+        }
+        rate = rate.clamp(p.min_rate, p.max_rate);
+        let times = if use_lognormal {
+            lognormal_times(rate, p.lognormal_cv, t0, t1, rng)
+        } else {
+            poisson_times(rate, t0, t1, rng)
+        };
+        out.extend(times);
+        t0 = t1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_count_matches_rate() {
+        let mut rng = Rng::new(1);
+        let times = ArrivalModel::Poisson.sample_times(2.0, 1000.0, &mut rng);
+        let n = times.len() as f64;
+        assert!((n - 2000.0).abs() < 150.0, "n={n}");
+        assert!(times.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn zero_rate_yields_no_arrivals() {
+        let mut rng = Rng::new(2);
+        assert!(ArrivalModel::Poisson.sample_times(0.0, 100.0, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn unpredictable_rate_clipped() {
+        let p = UnpredictableParams { min_rate: 0.5, max_rate: 1.0, ..Default::default() };
+        let mut rng = Rng::new(3);
+        // Even with many doublings the realized rate cannot exceed max_rate.
+        let times = ArrivalModel::Unpredictable(p).sample_times(1.0, 500.0, &mut rng);
+        let rate = times.len() as f64 / 500.0;
+        assert!(rate <= 1.3, "rate={rate}");
+        assert!(rate >= 0.3, "rate={rate}");
+    }
+
+    #[test]
+    fn unpredictable_within_horizon_and_sorted() {
+        let mut rng = Rng::new(4);
+        let times = ArrivalModel::Unpredictable(UnpredictableParams::default())
+            .sample_times(1.0, 60.0, &mut rng);
+        assert!(times.iter().all(|&t| (0.0..60.0).contains(&t)));
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn lognormal_renewal_mean_gap() {
+        let mut rng = Rng::new(5);
+        let times = lognormal_times(4.0, 1.2, 0.0, 2000.0, &mut rng);
+        let rate = times.len() as f64 / 2000.0;
+        assert!((rate - 4.0).abs() < 0.4, "rate={rate}");
+    }
+}

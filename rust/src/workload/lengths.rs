@@ -1,0 +1,102 @@
+//! Request length distributions.
+
+use crate::util::rng::Rng;
+
+/// Distribution of request input/output token lengths.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LengthDist {
+    Fixed(usize),
+    /// Lognormal parameterized by its *target* mean and coefficient of
+    /// variation, clipped to [min, max].
+    LogNormal { mean: f64, cv: f64, min: usize, max: usize },
+    Uniform { lo: usize, hi: usize },
+}
+
+impl LengthDist {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LengthDist::Fixed(n) => n,
+            LengthDist::LogNormal { mean, cv, min, max } => {
+                let (mu, sigma) = lognormal_params(mean, cv);
+                (rng.lognormal(mu, sigma).round() as usize).clamp(min, max)
+            }
+            LengthDist::Uniform { lo, hi } => rng.range(lo as i64, hi as i64) as usize,
+        }
+    }
+
+    /// Unclipped analytic mean.
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LengthDist::Fixed(n) => n as f64,
+            LengthDist::LogNormal { mean, .. } => mean,
+            LengthDist::Uniform { lo, hi } => (lo + hi) as f64 / 2.0,
+        }
+    }
+
+    /// Mean after clipping (estimated numerically once): this is what a
+    /// production operator would measure and feed to the DT "Mean" variant.
+    pub fn mean_clipped(&self) -> f64 {
+        match *self {
+            LengthDist::LogNormal { mean, cv, min, max } => {
+                let (mu, sigma) = lognormal_params(mean, cv);
+                let mut rng = Rng::new(0x11EA5);
+                let n = 4096;
+                let s: f64 = (0..n)
+                    .map(|_| {
+                        (rng.lognormal(mu, sigma).round()).clamp(min as f64, max as f64)
+                    })
+                    .sum();
+                s / n as f64
+            }
+            _ => self.mean(),
+        }
+    }
+}
+
+/// Underlying (mu, sigma) for a lognormal with the given mean and CV.
+fn lognormal_params(mean: f64, cv: f64) -> (f64, f64) {
+    let sigma2 = (1.0 + cv * cv).ln();
+    let mu = mean.ln() - sigma2 / 2.0;
+    (mu, sigma2.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_fixed() {
+        let mut rng = Rng::new(1);
+        assert_eq!(LengthDist::Fixed(42).sample(&mut rng), 42);
+        assert_eq!(LengthDist::Fixed(42).mean(), 42.0);
+    }
+
+    #[test]
+    fn lognormal_mean_close_to_target() {
+        let d = LengthDist::LogNormal { mean: 200.0, cv: 0.5, min: 1, max: 100_000 };
+        let mut rng = Rng::new(2);
+        let n = 100_000;
+        let m: f64 = (0..n).map(|_| d.sample(&mut rng) as f64).sum::<f64>() / n as f64;
+        assert!((m - 200.0).abs() < 5.0, "mean={m}");
+    }
+
+    #[test]
+    fn clipping_respected() {
+        let d = LengthDist::LogNormal { mean: 250.0, cv: 1.0, min: 10, max: 64 };
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let v = d.sample(&mut rng);
+            assert!((10..=64).contains(&v));
+        }
+        assert!(d.mean_clipped() <= 64.0);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let d = LengthDist::Uniform { lo: 5, hi: 9 };
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            assert!((5..=9).contains(&d.sample(&mut rng)));
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Workload model: adapters, request-length distributions, arrival
+//! processes and trace generation.
+//!
+//! A workload (paper §4) is "the required adapters, their sizes, and their
+//! request arrival rates", plus request length characteristics.  Traces are
+//! fully deterministic given the seed.
+
+pub mod arrivals;
+pub mod lengths;
+
+pub use arrivals::{ArrivalModel, UnpredictableParams};
+pub use lengths::LengthDist;
+
+use crate::util::rng::Rng;
+
+/// One adapter to serve: identity, LoRA rank ("size") and mean arrival rate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdapterSpec {
+    pub id: usize,
+    pub rank: usize,
+    /// Mean request arrival rate (req/s).
+    pub rate: f64,
+}
+
+/// A complete workload description.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub adapters: Vec<AdapterSpec>,
+    pub input_len: LengthDist,
+    pub output_len: LengthDist,
+    pub arrival: ArrivalModel,
+    /// Simulated duration (the paper runs 1 h per configuration; we default
+    /// to a compressed horizon — see DESIGN.md §1).
+    pub horizon_s: f64,
+    pub seed: u64,
+}
+
+/// One request arrival in a generated trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arrival {
+    pub request_id: usize,
+    pub time_s: f64,
+    pub adapter_id: usize,
+    pub input_len: usize,
+    pub output_len: usize,
+}
+
+impl WorkloadSpec {
+    /// ShareGPT-like length marginals (mean 250 in / 231 out), the paper's
+    /// §8.1 data source, clipped to the engine's compiled buckets.
+    pub fn sharegpt_like(adapters: Vec<AdapterSpec>, horizon_s: f64, seed: u64) -> Self {
+        WorkloadSpec {
+            adapters,
+            input_len: LengthDist::LogNormal { mean: 250.0, cv: 0.55, min: 8, max: 256 },
+            output_len: LengthDist::LogNormal { mean: 231.0, cv: 0.55, min: 4, max: 512 },
+            arrival: ArrivalModel::Poisson,
+            horizon_s,
+            seed,
+        }
+    }
+
+    /// Fixed-length variant (used by the §5.1 profiling experiments).
+    pub fn fixed_len(
+        adapters: Vec<AdapterSpec>,
+        input_len: usize,
+        output_len: usize,
+        horizon_s: f64,
+        seed: u64,
+    ) -> Self {
+        WorkloadSpec {
+            adapters,
+            input_len: LengthDist::Fixed(input_len),
+            output_len: LengthDist::Fixed(output_len),
+            arrival: ArrivalModel::Poisson,
+            horizon_s,
+            seed,
+        }
+    }
+
+    /// Homogeneous adapter set: `n` adapters of the same rank and rate.
+    pub fn homogeneous(n: usize, rank: usize, rate: f64) -> Vec<AdapterSpec> {
+        (0..n).map(|id| AdapterSpec { id, rank, rate }).collect()
+    }
+
+    /// Heterogeneous adapter set: ranks and rates sampled uniformly from
+    /// the given sets (paper §8.2 Cartesian methodology).
+    pub fn heterogeneous(n: usize, ranks: &[usize], rates: &[f64], seed: u64) -> Vec<AdapterSpec> {
+        let mut rng = Rng::new(seed ^ 0xADA97E55);
+        (0..n)
+            .map(|id| AdapterSpec {
+                id,
+                rank: *rng.choose(ranks),
+                rate: *rng.choose(rates),
+            })
+            .collect()
+    }
+
+    pub fn total_rate(&self) -> f64 {
+        self.adapters.iter().map(|a| a.rate).sum()
+    }
+
+    /// Expected incoming token rate (input+output tokens per second) — the
+    /// denominator of the paper's starvation criterion.
+    pub fn incoming_token_rate(&self) -> f64 {
+        self.total_rate() * (self.input_len.mean() + self.output_len.mean())
+    }
+
+    /// Generate the full arrival trace, sorted by time.
+    pub fn trace(&self) -> Vec<Arrival> {
+        let mut rng = Rng::new(self.seed);
+        let mut arrivals: Vec<Arrival> = Vec::new();
+        for a in &self.adapters {
+            let mut arng = rng.fork(a.id as u64 + 1);
+            let times = self.arrival.sample_times(a.rate, self.horizon_s, &mut arng);
+            for t in times {
+                arrivals.push(Arrival {
+                    request_id: 0, // assigned after sorting
+                    time_s: t,
+                    adapter_id: a.id,
+                    input_len: 0,
+                    output_len: 0,
+                });
+            }
+        }
+        arrivals.sort_by(|a, b| a.time_s.partial_cmp(&b.time_s).unwrap());
+        let mut lrng = rng.fork(0xBEEF);
+        for (i, arr) in arrivals.iter_mut().enumerate() {
+            arr.request_id = i;
+            arr.input_len = self.input_len.sample(&mut lrng);
+            arr.output_len = self.output_len.sample(&mut lrng);
+        }
+        arrivals
+    }
+
+    /// The same trace with every request length replaced by the workload
+    /// mean — the Digital Twin's "Mean" input variant (Table 1).
+    pub fn trace_mean_lengths(&self) -> Vec<Arrival> {
+        let mut t = self.trace();
+        let (mi, mo) = (self.input_len.mean_clipped() as usize, self.output_len.mean_clipped() as usize);
+        for a in &mut t {
+            a.input_len = mi.max(1);
+            a.output_len = mo.max(1);
+        }
+        t
+    }
+
+    /// Restrict to a subset of adapters (used by placement validation:
+    /// each GPU serves the adapters assigned to it).
+    pub fn subset(&self, adapter_ids: &[usize], seed: u64) -> WorkloadSpec {
+        let set: std::collections::HashSet<usize> = adapter_ids.iter().copied().collect();
+        WorkloadSpec {
+            adapters: self.adapters.iter().filter(|a| set.contains(&a.id)).cloned().collect(),
+            input_len: self.input_len.clone(),
+            output_len: self.output_len.clone(),
+            arrival: self.arrival.clone(),
+            horizon_s: self.horizon_s,
+            seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_sorted_and_deterministic() {
+        let spec = WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(8, 8, 0.5), 30.0, 42);
+        let t1 = spec.trace();
+        let t2 = spec.trace();
+        assert_eq!(t1, t2);
+        assert!(t1.windows(2).all(|w| w[0].time_s <= w[1].time_s));
+        assert!(t1.iter().enumerate().all(|(i, a)| a.request_id == i));
+    }
+
+    #[test]
+    fn poisson_rate_approximately_right() {
+        let spec = WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(20, 8, 1.0), 100.0, 7);
+        let t = spec.trace();
+        // 20 adapters × 1 req/s × 100 s = 2000 expected
+        let n = t.len() as f64;
+        assert!((n - 2000.0).abs() < 200.0, "n={n}");
+    }
+
+    #[test]
+    fn lengths_within_bounds() {
+        let spec = WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(4, 8, 2.0), 20.0, 3);
+        for a in spec.trace() {
+            assert!((8..=256).contains(&a.input_len));
+            assert!((4..=512).contains(&a.output_len));
+        }
+    }
+
+    #[test]
+    fn mean_variant_has_constant_lengths() {
+        let spec = WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(4, 8, 2.0), 20.0, 3);
+        let t = spec.trace_mean_lengths();
+        assert!(t.windows(2).all(|w| w[0].input_len == w[1].input_len));
+        assert!(t.windows(2).all(|w| w[0].output_len == w[1].output_len));
+    }
+
+    #[test]
+    fn subset_filters_adapters() {
+        let spec = WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(10, 8, 0.5), 10.0, 1);
+        let sub = spec.subset(&[2, 5], 99);
+        assert_eq!(sub.adapters.len(), 2);
+        assert!(sub.trace().iter().all(|a| a.adapter_id == 2 || a.adapter_id == 5));
+    }
+
+    #[test]
+    fn heterogeneous_uses_given_sets() {
+        let ads = WorkloadSpec::heterogeneous(50, &[8, 16, 32], &[0.1, 0.2], 5);
+        assert!(ads.iter().all(|a| [8, 16, 32].contains(&a.rank)));
+        assert!(ads.iter().all(|a| [0.1, 0.2].contains(&a.rate)));
+        // With 50 draws we should see more than one rank.
+        let first = ads[0].rank;
+        assert!(ads.iter().any(|a| a.rank != first));
+    }
+
+    #[test]
+    fn incoming_token_rate_matches_means() {
+        let spec = WorkloadSpec::fixed_len(WorkloadSpec::homogeneous(2, 8, 0.5), 100, 50, 10.0, 1);
+        assert!((spec.incoming_token_rate() - 1.0 * 150.0).abs() < 1e-9);
+    }
+}

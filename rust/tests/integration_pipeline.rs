@@ -1,0 +1,107 @@
+//! PJRT-free pipeline integration: Digital Twin → dataset → ML training →
+//! greedy placement → twin validation, end to end with the built-in
+//! default calibration (no artifacts required).
+
+use adapter_serving::cluster;
+use adapter_serving::config::EngineConfig;
+use adapter_serving::dt::{Calibration, LengthVariant};
+use adapter_serving::ml::{self, dataset::GridSpec, MlModels};
+use adapter_serving::placement::{baselines, greedy, latency};
+use adapter_serving::workload::WorkloadSpec;
+
+fn small_grid() -> GridSpec {
+    GridSpec {
+        sizes: vec![8, 16, 32],
+        rates: vec![0.8, 0.2, 0.05, 0.0125],
+        adapter_counts: vec![8, 16, 32, 64, 96, 128],
+        a_max_values: vec![8, 16, 32, 64, 96, 128],
+        horizon_s: 10.0,
+        max_scenarios: 400,
+        seed: 99,
+    }
+}
+
+fn trained_models(samples: &[ml::Sample]) -> MlModels {
+    let (thr, _) = ml::train(samples, ml::Task::Throughput, ml::ModelType::RandomForest, true, 3);
+    let (st, _) = ml::train(samples, ml::Task::Starvation, ml::ModelType::RandomForest, true, 3);
+    MlModels { throughput: thr, starvation: st, scaler: None }
+}
+
+#[test]
+fn dt_dataset_train_place_validate() {
+    let calib = Calibration::default();
+    let base = EngineConfig::default();
+    let samples = ml::dataset::generate(&calib, &base, &small_grid(), 4);
+    assert!(samples.len() >= 300);
+    let starved = samples.iter().filter(|s| s.starved).count();
+    assert!(starved > 0 && starved < samples.len(), "degenerate labels: {starved}");
+
+    let models = trained_models(&samples);
+
+    // Comfortably feasible workload (≈700 tok/s incoming vs ≈1 k tok/s per
+    // GPU) → placement exists and validates on the twin.
+    let adapters = WorkloadSpec::heterogeneous(48, &[8, 16], &[0.05, 0.025], 7);
+    let spec = WorkloadSpec::sharegpt_like(adapters.clone(), 15.0, 8);
+    let p = greedy::place(&adapters, 4, &models).expect("feasible placement");
+    assert_eq!(p.assignment.len(), 48);
+    let rep = cluster::run_on_twin(&calib, &base, &p, &spec, LengthVariant::Original);
+    assert!(!rep.memory_error, "greedy placement must never OOM");
+    // The greedy target: feasible serving on the used GPUs.
+    assert!(
+        !rep.starved,
+        "greedy allocation starved: thr={:.0} gpus={}",
+        rep.total_throughput_tok_s, rep.gpus_used
+    );
+}
+
+#[test]
+fn greedy_uses_fewer_gpus_than_latency_oriented_variants() {
+    let calib = Calibration::default();
+    let base = EngineConfig::default();
+    let samples = ml::dataset::generate(&calib, &base, &small_grid(), 4);
+    let models = trained_models(&samples);
+
+    // Light workload: greedy should pack few GPUs; ProposedLat spreads.
+    let adapters = WorkloadSpec::heterogeneous(24, &[8], &[0.05, 0.025], 17);
+    let p_greedy = greedy::place(&adapters, 4, &models).expect("greedy");
+    let p_lat = latency::place(&adapters, 4, &models).expect("latency");
+    assert!(p_greedy.gpus_used() <= p_lat.gpus_used());
+    assert_eq!(p_lat.gpus_used(), 4, "ProposedLat uses all GPUs by design");
+}
+
+#[test]
+fn random_baseline_is_less_reliable_than_greedy() {
+    let calib = Calibration::default();
+    let base = EngineConfig::default();
+    let samples = ml::dataset::generate(&calib, &base, &small_grid(), 4);
+    let models = trained_models(&samples);
+
+    // Moderately heavy workload with large adapters.
+    let adapters = WorkloadSpec::heterogeneous(96, &[32], &[0.1, 0.05], 23);
+    let spec = WorkloadSpec::sharegpt_like(adapters.clone(), 12.0, 24);
+
+    // The hard guarantee the pipeline provides is avoiding *memory errors*
+    // (OOM configurations are labelled starved with zero throughput in the
+    // training data, a strong signal); starvation avoidance is statistical
+    // with the quick training grid (see EXPERIMENTS.md Table 3 notes).
+    let greedy_safe = match greedy::place(&adapters, 4, &models) {
+        Ok(p) => {
+            let rep = cluster::run_on_twin(&calib, &base, &p, &spec, LengthVariant::Original);
+            !rep.memory_error
+        }
+        Err(_) => true, // declining is also a safe answer
+    };
+    assert!(greedy_safe, "greedy produced an OOM allocation");
+
+    // Random with A_max up to the per-GPU count frequently over-reserves
+    // rank-32 slots → memory errors; count failures over several seeds.
+    let mut failures = 0;
+    for seed in 0..6 {
+        let p = baselines::random(&adapters, 4, seed).unwrap();
+        let rep = cluster::run_on_twin(&calib, &base, &p, &spec, LengthVariant::Original);
+        if !rep.feasible() {
+            failures += 1;
+        }
+    }
+    assert!(failures > 0, "expected Random to fail at least once over 6 seeds");
+}

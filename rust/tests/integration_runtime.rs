@@ -1,0 +1,168 @@
+//! Integration tests over the real PJRT runtime and the serving engine.
+//! These require `make artifacts` to have run (skipped gracefully if the
+//! artifact directory is missing, e.g. in a bare checkout).
+
+use adapter_serving::config::EngineConfig;
+use adapter_serving::dt::{self, LengthVariant};
+use adapter_serving::engine::Engine;
+use adapter_serving::runtime::{Manifest, ModelRuntime};
+use adapter_serving::workload::{Arrival, WorkloadSpec};
+
+/// PJRT handles are not Send, so each test loads its own runtime (compiles
+/// the artifact buckets fresh; a few seconds per test).
+fn runtime() -> Option<ModelRuntime> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; skipping runtime integration tests");
+        return None;
+    }
+    Some(ModelRuntime::load(&dir, "pico-llama").expect("runtime load"))
+}
+
+#[test]
+fn decode_executes_all_buckets_with_sane_outputs() {
+    let Some(mut rt) = runtime() else { return };
+    let meta = rt.meta.clone();
+    for &b in &[1usize, 2, 64] {
+        let tokens = vec![3i32; b];
+        let n = meta.n_layers * b * meta.window * meta.d_model;
+        let k = vec![0.01f32; n];
+        let v = vec![0.02f32; n];
+        let ctx = vec![5i32; b];
+        let slot = vec![0i32; b];
+        let out = rt.decode(b, &tokens, &k, &v, &ctx, &slot).expect("decode");
+        assert_eq!(out.next_tokens.len(), b);
+        assert_eq!(out.new_k.len(), meta.n_layers * b * meta.d_model);
+        assert!(out.next_tokens.iter().all(|&t| (0..meta.vocab as i32).contains(&t)));
+        assert!(out.new_k.iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn identical_rows_produce_identical_outputs() {
+    // Batch invariance: two identical requests in one batch must get the
+    // same next token and K/V rows (checks slot/window indexing).
+    let Some(mut rt) = runtime() else { return };
+    let meta = rt.meta.clone();
+    let b = 4usize;
+    let (l, d, w) = (meta.n_layers, meta.d_model, meta.window);
+    let mut k = vec![0f32; l * b * w * d];
+    let mut v = vec![0f32; l * b * w * d];
+    // Same window content for all rows.
+    for li in 0..l {
+        for row in 0..b {
+            for t in 0..6 {
+                for x in 0..d {
+                    let idx = ((li * b + row) * w + t) * d + x;
+                    k[idx] = (t * d + x) as f32 * 1e-3;
+                    v[idx] = -(x as f32) * 1e-3;
+                }
+            }
+        }
+    }
+    let out = rt
+        .decode(b, &[7, 7, 7, 7], &k, &v, &[6, 6, 6, 6], &[0, 0, 0, 0])
+        .expect("decode");
+    for row in 1..b {
+        assert_eq!(out.next_tokens[row], out.next_tokens[0]);
+        for li in 0..l {
+            let a0 = (li * b) * d;
+            let ar = (li * b + row) * d;
+            assert_eq!(out.new_k[a0..a0 + d], out.new_k[ar..ar + d]);
+        }
+    }
+}
+
+#[test]
+fn prefill_roundtrip_through_runtime() {
+    let Some(mut rt) = runtime() else { return };
+    let meta = rt.meta.clone();
+    let bucket = 32usize;
+    let mut tokens = vec![0i32; bucket];
+    for (i, t) in tokens.iter_mut().enumerate().take(10) {
+        *t = (i % meta.vocab) as i32;
+    }
+    let out = rt.prefill(bucket, &tokens, 10, 0).expect("prefill");
+    assert_eq!(out.k.len(), meta.n_layers * bucket * meta.d_model);
+    assert!((0..meta.vocab as i32).contains(&out.next_token));
+}
+
+#[test]
+fn engine_completes_requests_and_counts_tokens_exactly() {
+    let Some(mut rt) = runtime() else { return };
+    let adapters = vec![adapter_serving::workload::AdapterSpec { id: 0, rank: 8, rate: 0.0 }];
+    let spec = WorkloadSpec::fixed_len(adapters, 40, 12, 1e9, 1);
+    let trace: Vec<Arrival> = (0..6)
+        .map(|i| Arrival { request_id: i, time_s: 0.0, adapter_id: 0, input_len: 40, output_len: 12 })
+        .collect();
+    let cfg = EngineConfig { a_max: 4, s_max_rank: 8, ..Default::default() };
+    let mut engine = Engine::new(cfg, &mut rt);
+    let res = engine.run_trace(&spec, &trace).expect("run");
+    let rep = res.report.expect("feasible");
+    assert_eq!(rep.completed, 6);
+    assert_eq!(rep.input_tokens, 6 * 40);
+    assert_eq!(rep.output_tokens, 6 * 12);
+    assert!(rep.ttft_mean_s > 0.0);
+}
+
+#[test]
+fn engine_preempts_and_recovers_under_memory_pressure() {
+    let Some(mut rt) = runtime() else { return };
+    let adapters = vec![adapter_serving::workload::AdapterSpec { id: 0, rank: 8, rate: 0.0 }];
+    let mut spec = WorkloadSpec::fixed_len(adapters, 96, 64, 1e9, 1);
+    // Tiny pool: 512 tokens → ~3 concurrent requests of 160 tokens.
+    spec.horizon_s = 1e9;
+    let trace: Vec<Arrival> = (0..8)
+        .map(|i| Arrival { request_id: i, time_s: 0.0, adapter_id: 0, input_len: 96, output_len: 64 })
+        .collect();
+    let mut cfg = EngineConfig { a_max: 4, s_max_rank: 8, ..Default::default() };
+    cfg.mem.total_tokens = 512;
+    let mut engine = Engine::new(cfg, &mut rt);
+    let res = engine.run_trace(&spec, &trace).expect("run");
+    let rep = res.report.expect("feasible config");
+    // All requests must still complete (preemption = recompute, not drop).
+    assert_eq!(rep.completed, 8, "{}", rep.summary());
+}
+
+#[test]
+fn engine_reports_memory_error_for_over_reservation() {
+    let Some(mut rt) = runtime() else { return };
+    let spec = WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(4, 32, 0.1), 5.0, 1);
+    let cfg = EngineConfig { a_max: 384, s_max_rank: 32, ..Default::default() };
+    let mut engine = Engine::new(cfg, &mut rt);
+    let res = engine.run(&spec).expect("run");
+    assert!(res.memory_error);
+    assert!(res.report.is_none());
+}
+
+#[test]
+fn engine_and_twin_agree_on_feasibility_of_the_same_trace() {
+    let Some(mut rt) = runtime() else { return };
+    // Light load (~350 tok/s, well under capacity) so the *default*
+    // calibration's pessimism cannot flip feasibility; exact-latency
+    // agreement is covered by the table1 experiment with a fitted
+    // calibration.
+    let adapters = WorkloadSpec::heterogeneous(12, &[8, 16], &[0.1, 0.05], 9);
+    let spec = WorkloadSpec::sharegpt_like(adapters, 8.0, 10);
+    let trace = spec.trace();
+    let cfg = EngineConfig { a_max: 12, s_max_rank: 16, ..Default::default() };
+    let mut engine = Engine::new(cfg.clone(), &mut rt);
+    let eres = engine.run_trace(&spec, &trace).expect("engine");
+    let erep = eres.report.expect("feasible");
+    // Prefer the fitted calibration when a prior `adapterd calibrate` /
+    // bench run cached one; the built-in default is deliberately
+    // pessimistic, so with it we only require feasibility agreement.
+    let fitted = dt::Calibration::load_file(
+        std::path::Path::new("results/calibration_pico-llama.json"),
+        "pico-llama",
+    );
+    let calibrated = fitted.is_ok();
+    let calib = fitted.unwrap_or_default();
+    let tres = dt::run_twin_trace(&cfg, &calib, &spec, &trace);
+    let trep = tres.report.expect("twin feasible");
+    assert_eq!(erep.starved, trep.starved);
+    if calibrated {
+        // Same trace + calibrated latencies → same completion count.
+        assert_eq!(erep.completed, trep.completed);
+    }
+}

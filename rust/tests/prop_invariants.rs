@@ -1,0 +1,252 @@
+//! Property-based tests (seeded harness in util::prop) over the system's
+//! core invariants: memory conservation, scheduler admission soundness,
+//! placement completeness, serialization round-trips, twin determinism.
+
+use adapter_serving::config::{EngineConfig, MemoryConfig};
+use adapter_serving::dt::{self, Calibration, LengthVariant};
+use adapter_serving::engine::adapter_cache::SimAdapterCache;
+use adapter_serving::engine::kv::KvLedger;
+use adapter_serving::engine::request::Request;
+use adapter_serving::engine::scheduler::{scan_admissions, AdmissionLimits};
+use adapter_serving::placement::{greedy, TESTING_POINTS};
+use adapter_serving::prop_assert;
+use adapter_serving::util::json::Json;
+use adapter_serving::util::prop::Prop;
+use adapter_serving::util::rng::Rng;
+use adapter_serving::workload::{AdapterSpec, WorkloadSpec};
+use std::collections::VecDeque;
+
+#[test]
+fn kv_ledger_never_leaks_blocks() {
+    Prop::new("kv ledger conservation").cases(48).check(|rng, size| {
+        let mem = MemoryConfig { total_tokens: 16 * (8 + size * 4), ..Default::default() };
+        let pool = mem.total_tokens;
+        let mut ledger = KvLedger::new(mem, pool);
+        let total = ledger.total_blocks();
+        let mut live: Vec<usize> = vec![];
+        for op in 0..200 {
+            match rng.below(3) {
+                0 => {
+                    let id = op;
+                    let tokens = 1 + rng.below(200);
+                    if ledger.grow_to(id, tokens) {
+                        if !live.contains(&id) {
+                            live.push(id);
+                        }
+                    }
+                }
+                1 => {
+                    if let Some(&id) = live.get(rng.below(live.len().max(1)).min(live.len().saturating_sub(1))) {
+                        let extra = 1 + rng.below(100);
+                        let _ = ledger.grow_to(id, extra + 16);
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let id = live.swap_remove(rng.below(live.len()));
+                        ledger.release(id);
+                    }
+                }
+            }
+            let held: usize = live.iter().map(|&id| ledger.held_blocks(id)).sum();
+            prop_assert!(
+                held + ledger.free_blocks() == total,
+                "leak: held {held} + free {} != total {total}",
+                ledger.free_blocks()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn admission_scan_respects_all_caps() {
+    Prop::new("admission caps").cases(48).check(|rng, size| {
+        let n = 4 + size * 3;
+        let a_max = 1 + rng.below(8);
+        let max_running = 1 + rng.below(16);
+        let mut requests: Vec<Request> = (0..n)
+            .map(|i| {
+                Request::new(i, rng.below(6), 8, 0.0, 8 + rng.below(64), 4 + rng.below(16))
+            })
+            .collect();
+        let mut waiting: VecDeque<usize> = (0..n).collect();
+        let mem = MemoryConfig { total_tokens: 2048, ..Default::default() };
+        let mut ledger = KvLedger::new(mem, 2048);
+        let mut cache = SimAdapterCache::new(a_max);
+        let limits = AdmissionLimits { max_running, max_prefill_tokens: 512, unified: false };
+        let res = scan_admissions(&mut waiting, &mut requests, &mut ledger, &mut cache, 0, limits);
+        prop_assert!(res.admitted.len() <= max_running, "over running cap");
+        prop_assert!(cache.resident_count() <= a_max, "over A_max");
+        prop_assert!(
+            res.admitted.len() + waiting.len() == n,
+            "requests lost: {} + {} != {n}",
+            res.admitted.len(),
+            waiting.len()
+        );
+        // No admitted request is still waiting.
+        for id in &res.admitted {
+            prop_assert!(!waiting.contains(id), "request {id} both admitted and waiting");
+        }
+        // Admitted requests hold KV; waiting ones hold none.
+        for id in &res.admitted {
+            prop_assert!(ledger.held_blocks(*id) > 0, "admitted {id} without KV");
+        }
+        for id in &waiting {
+            prop_assert!(ledger.held_blocks(*id) == 0, "waiting {id} holds KV");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn priority_sorting_is_a_size_sorted_permutation() {
+    Prop::new("priority sorting").cases(64).check(|rng, size| {
+        let n = 1 + size * 2;
+        let adapters: Vec<AdapterSpec> = (0..n)
+            .map(|id| AdapterSpec {
+                id,
+                rank: *rng.choose(&[8, 16, 32]),
+                rate: rng.range_f64(0.001, 2.0),
+            })
+            .collect();
+        let sorted = greedy::priority_sorting(&adapters);
+        prop_assert!(sorted.len() == n, "length changed");
+        let mut ids: Vec<usize> = sorted.iter().map(|a| a.id).collect();
+        ids.sort();
+        prop_assert!(ids == (0..n).collect::<Vec<_>>(), "not a permutation");
+        prop_assert!(
+            sorted.windows(2).all(|w| w[0].rank >= w[1].rank),
+            "sizes not descending"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn twin_runs_are_deterministic() {
+    Prop::new("twin determinism").cases(12).check(|rng, size| {
+        let n = 4 + size;
+        let adapters = WorkloadSpec::heterogeneous(n, &[8, 16], &[0.2, 0.1], rng.next_u64());
+        let spec = WorkloadSpec::sharegpt_like(adapters, 8.0, rng.next_u64());
+        let cfg = EngineConfig { a_max: n.min(16), s_max_rank: 16, ..Default::default() };
+        let calib = Calibration::default();
+        let a = dt::run_twin(&cfg, &calib, &spec, LengthVariant::Original);
+        let b = dt::run_twin(&cfg, &calib, &spec, LengthVariant::Original);
+        let (ra, rb) = (a.report.unwrap(), b.report.unwrap());
+        prop_assert!(
+            (ra.throughput_tok_s - rb.throughput_tok_s).abs() < 1e-9,
+            "throughput diverged"
+        );
+        prop_assert!(ra.completed == rb.completed, "completed diverged");
+        Ok(())
+    });
+}
+
+#[test]
+fn json_roundtrip_random_documents() {
+    Prop::new("json roundtrip").cases(64).check(|rng, size| {
+        fn gen(rng: &mut Rng, depth: usize) -> Json {
+            match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.bool(0.5)),
+                2 => Json::Num((rng.range(-1_000_000, 1_000_000) as f64) / 64.0),
+                3 => Json::Str(format!("s{}-\"quote\"\n{}", rng.below(100), rng.below(10))),
+                4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth + 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(5))
+                        .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let doc = gen(rng, size.min(2));
+        let pretty = Json::parse(&doc.pretty()).map_err(|e| e.to_string())?;
+        let compact = Json::parse(&doc.to_string()).map_err(|e| e.to_string())?;
+        prop_assert!(pretty == doc, "pretty roundtrip mismatch");
+        prop_assert!(compact == doc, "compact roundtrip mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn workload_traces_are_reproducible_and_ordered() {
+    Prop::new("trace invariants").cases(32).check(|rng, size| {
+        let n = 1 + size;
+        let adapters = WorkloadSpec::heterogeneous(n, &[8, 32], &[0.5, 0.05], rng.next_u64());
+        let spec = WorkloadSpec::sharegpt_like(adapters, 20.0, rng.next_u64());
+        let t1 = spec.trace();
+        let t2 = spec.trace();
+        prop_assert!(t1 == t2, "trace not deterministic");
+        prop_assert!(
+            t1.windows(2).all(|w| w[0].time_s <= w[1].time_s),
+            "trace unsorted"
+        );
+        prop_assert!(
+            t1.iter().all(|a| a.time_s < spec.horizon_s),
+            "arrival beyond horizon"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn greedy_placement_assigns_each_adapter_once_with_valid_a_max() {
+    // Analytic models via distilled trees (same approach as unit tests).
+    use adapter_serving::ml::refine::FlatTree;
+    use adapter_serving::ml::tree::{Criterion, Tree, TreeParams};
+    use adapter_serving::ml::{MlModels, Predictor, N_FEATURES};
+    let mut xs = vec![];
+    let mut thr = vec![];
+    let mut st = vec![];
+    let mut rng = Rng::new(5);
+    for _ in 0..3000 {
+        let sum_rate = rng.range_f64(0.0, 40.0);
+        let a_max = *rng.choose(&[8.0, 16.0, 32.0, 64.0, 96.0, 128.0]);
+        let mut x = vec![0.0; N_FEATURES];
+        x[1] = sum_rate;
+        x[6] = a_max;
+        xs.push(x);
+        let cap = 1200.0 - 2.0 * a_max;
+        thr.push((sum_rate * 96.0).min(cap));
+        st.push((sum_rate * 96.0 > cap) as i32 as f64);
+    }
+    let models = MlModels {
+        throughput: Predictor::Flat(FlatTree::compile(&Tree::fit(&xs, &thr, &TreeParams::default()))),
+        starvation: Predictor::Flat(FlatTree::compile(&Tree::fit(
+            &xs,
+            &st,
+            &TreeParams { criterion: Criterion::Gini, ..Default::default() },
+        ))),
+        scaler: None,
+    };
+    Prop::new("greedy placement completeness").cases(24).check(|rng, size| {
+        let n = 2 + size * 2;
+        let adapters: Vec<AdapterSpec> = (0..n)
+            .map(|id| AdapterSpec {
+                id,
+                rank: *rng.choose(&[8, 16, 32]),
+                rate: rng.range_f64(0.001, 0.08),
+            })
+            .collect();
+        match greedy::place(&adapters, 4, &models) {
+            Err(_) => Ok(()), // starvation is a legal outcome
+            Ok(p) => {
+                prop_assert!(p.assignment.len() == n, "missing assignments");
+                for a in &adapters {
+                    prop_assert!(p.assignment.contains_key(&a.id), "adapter {} lost", a.id);
+                }
+                for g in 0..4 {
+                    if !p.adapters_on(g).is_empty() {
+                        prop_assert!(
+                            TESTING_POINTS.contains(&p.a_max[g]),
+                            "a_max {} not a testing point",
+                            p.a_max[g]
+                        );
+                    }
+                }
+                Ok(())
+            }
+        }
+    });
+}
