@@ -3,22 +3,22 @@
 //! compare throughput / ITL / TTFT (a single-scenario preview of Table 1).
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example digital_twin
+//! cargo run --release --example digital_twin
 //! ```
 
 use adapter_serving::config::EngineConfig;
 use adapter_serving::dt;
 use adapter_serving::engine::Engine;
-use adapter_serving::runtime::{Manifest, ModelRuntime};
+use adapter_serving::runtime::{load_backend, Manifest};
 use adapter_serving::util::stats;
 use adapter_serving::workload::WorkloadSpec;
 
 fn main() -> anyhow::Result<()> {
-    let mut rt = ModelRuntime::load(&Manifest::default_dir(), "pico-llama")?;
+    let mut rt = load_backend(&Manifest::default_dir(), "pico-llama")?;
     let base = EngineConfig::default();
 
     println!("calibrating digital twin (engine micro-benchmarks) ...");
-    let calib = dt::calibrate(&mut rt, &base, true)?;
+    let calib = dt::calibrate(rt.as_mut(), &base, true)?;
     println!(
         "  Lat_model = ({:.3e}·B + {:.3e}·bucket + {:.3e}) · ({:.3e}·A_B + {:.3})",
         calib.k_backbone[0],
@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
         let trace = spec.trace();
         let cfg = EngineConfig { a_max: n_adapters.min(32), s_max_rank: 16, ..Default::default() };
 
-        let mut engine = Engine::new(cfg.clone(), &mut rt);
+        let mut engine = Engine::new(cfg.clone(), rt.as_mut());
         let er = engine.run_trace(&spec, &trace)?;
         let erep = er.report.expect("engine feasible");
 

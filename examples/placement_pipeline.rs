@@ -11,13 +11,14 @@
 //!      compare against MaxBase and Random baselines.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example placement_pipeline
+//! cargo run --release --example placement_pipeline
 //! ```
 
 use adapter_serving::cluster;
 use adapter_serving::config::EngineConfig;
 use adapter_serving::experiments::{ExpContext, Scale};
 use adapter_serving::placement::{baselines, greedy};
+use adapter_serving::runtime::Backend;
 use adapter_serving::workload::WorkloadSpec;
 use std::time::Instant;
 
@@ -26,16 +27,16 @@ fn main() -> anyhow::Result<()> {
     let ctx = ExpContext::new(Scale::Quick);
     let model = "pico-llama";
 
-    println!("[1/6] loading AOT artifacts ({model}) ...");
-    let mut rt = ctx.load_runtime(model)?;
+    println!("[1/6] loading the execution backend ({model}) ...");
+    let mut rt: Box<dyn Backend> = ctx.load_runtime(model)?;
     println!(
-        "      {} decode + {} prefill executables compiled",
-        rt.meta.decode_buckets.len(),
-        rt.meta.prefill_buckets.len()
+        "      {} decode + {} prefill buckets available",
+        rt.meta().decode_buckets.len(),
+        rt.meta().prefill_buckets.len()
     );
 
     println!("[2/6] calibrating the Digital Twin ...");
-    let calib = ctx.calibration(&mut rt)?;
+    let calib = ctx.calibration(rt.as_mut())?;
     println!(
         "      Lat_load rank8={:.1}ms rank32={:.1}ms; decode table {} pts",
         calib.lat_load(8) * 1e3,
@@ -70,9 +71,10 @@ fn main() -> anyhow::Result<()> {
         placement.a_max
     );
 
-    println!("[6/6] validating on the real serving engine ...");
+    println!("[6/6] validating on the real serving engine (per-GPU parallel) ...");
     let base = EngineConfig { model: model.to_string(), ..Default::default() };
-    let rep = cluster::run_on_engine(&mut rt, &base, &placement, &spec)?;
+    let make = || ctx.load_runtime(model);
+    let rep = cluster::run_on_engine(&make, &base, &placement, &spec)?;
     println!(
         "      Proposed: {} GPUs, {:.0} tok/s, itl {:.2} ms, feasible={}",
         rep.gpus_used,
@@ -84,7 +86,7 @@ fn main() -> anyhow::Result<()> {
     // Baselines for contrast.
     let tpr = 385.0;
     if let Ok(p) = baselines::max_base(&adapters, 4, 1200.0, tpr, false) {
-        let r = cluster::run_on_engine(&mut rt, &base, &p, &spec)?;
+        let r = cluster::run_on_engine(&make, &base, &p, &spec)?;
         println!(
             "      MaxBase : {} GPUs, {:.0} tok/s, feasible={}",
             r.gpus_used,
@@ -93,7 +95,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
     if let Ok(p) = baselines::random(&adapters, 4, 5) {
-        let r = cluster::run_on_engine(&mut rt, &base, &p, &spec)?;
+        let r = cluster::run_on_engine(&make, &base, &p, &spec)?;
         println!(
             "      Random  : {} GPUs, {:.0} tok/s, feasible={}",
             r.gpus_used,

@@ -1,25 +1,26 @@
-//! Quickstart: load the AOT-compiled pico model, serve a small multi-LoRA
-//! workload on one simulated GPU, and print the serving report.
+//! Quickstart: load the pico model (pure-Rust reference backend by
+//! default; PJRT artifacts when built with `--features pjrt`), serve a
+//! small multi-LoRA workload on one simulated GPU, and print the report.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use adapter_serving::config::EngineConfig;
 use adapter_serving::engine::Engine;
-use adapter_serving::runtime::{Manifest, ModelRuntime};
+use adapter_serving::runtime::{load_backend, Backend, Manifest};
 use adapter_serving::workload::WorkloadSpec;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = Manifest::default_dir();
-    println!("loading model pico-llama from {} ...", artifacts.display());
-    let mut rt = ModelRuntime::load(&artifacts, "pico-llama")?;
+    println!("loading model pico-llama (artifacts dir: {}) ...", artifacts.display());
+    let mut rt: Box<dyn Backend> = load_backend(&artifacts, "pico-llama")?;
     println!(
-        "compiled {} decode + {} prefill executables (window={}, slots={})",
-        rt.meta.decode_buckets.len(),
-        rt.meta.prefill_buckets.len(),
-        rt.meta.window,
-        rt.meta.slots,
+        "{} decode + {} prefill buckets (window={}, slots={})",
+        rt.meta().decode_buckets.len(),
+        rt.meta().prefill_buckets.len(),
+        rt.meta().window,
+        rt.meta().slots,
     );
 
     // 16 adapters, mixed ranks, ShareGPT-like lengths, 10 simulated seconds.
@@ -33,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let cfg = EngineConfig { a_max: 16, ..Default::default() };
-    let mut engine = Engine::new(cfg, &mut rt);
+    let mut engine = Engine::new(cfg, rt.as_mut());
     let result = engine.run(&spec)?;
     let report = result.report.expect("feasible configuration");
     println!("--- report ---");

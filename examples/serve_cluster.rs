@@ -3,23 +3,22 @@
 //! placement, and report per-GPU and aggregate serving metrics.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_cluster
+//! cargo run --release --example serve_cluster
 //! ```
 
 use adapter_serving::cluster;
 use adapter_serving::config::EngineConfig;
 use adapter_serving::experiments::{ExpContext, Scale};
 use adapter_serving::placement::greedy;
-use adapter_serving::runtime::ModelRuntime;
 use adapter_serving::workload::WorkloadSpec;
 
 fn main() -> anyhow::Result<()> {
     let ctx = ExpContext::new(Scale::Quick);
     let model = "pico-llama";
-    let mut rt: ModelRuntime = ctx.load_runtime(model)?;
+    let mut rt = ctx.load_runtime(model)?;
 
     // Pipeline: calibrate → DT dataset → RF models (all cached in results/).
-    let calib = ctx.calibration(&mut rt)?;
+    let calib = ctx.calibration(rt.as_mut())?;
     let models = ctx.trained_models(&calib)?;
 
     // A mixed workload: 96 adapters across ranks and rates.
@@ -43,8 +42,9 @@ fn main() -> anyhow::Result<()> {
     }
 
     let base = EngineConfig { model: model.to_string(), ..Default::default() };
-    println!("serving (real engine per GPU) ...");
-    let rep = cluster::run_on_engine(&mut rt, &base, &placement, &spec)?;
+    println!("serving (real engine per GPU, one backend each, in parallel) ...");
+    let make = || ctx.load_runtime(model);
+    let rep = cluster::run_on_engine(&make, &base, &placement, &spec)?;
     for (g, r) in rep.per_gpu.iter().enumerate() {
         if let Some(r) = r {
             println!("  gpu{g}: {}", r.summary());

@@ -1,4 +1,22 @@
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
+
+# Skip-not-fail dependency gating: the Python suite exercises the JAX/Pallas
+# compile path, which is optional — the Rust tier-1 gate runs on the pure
+# reference backend.  Entries must name the test *files* individually:
+# pytest only consults collect_ignore during directory traversal, so a
+# directory entry would not suppress an explicitly passed path like
+# `pytest python/tests` (CI's invocation).  With every module ignored,
+# that invocation collects nothing and exits 5, which CI maps to "skip".
+collect_ignore = []
+if importlib.util.find_spec("jax") is None:
+    collect_ignore = [
+        "tests/test_aot.py",
+        "tests/test_kernels.py",
+        "tests/test_model.py",
+    ]
+elif importlib.util.find_spec("hypothesis") is None:
+    collect_ignore.append("tests/test_kernels.py")

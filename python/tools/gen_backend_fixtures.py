@@ -1,0 +1,282 @@
+"""Generate JAX ground-truth fixtures for the Rust reference backend.
+
+The Rust crate's default backend (``rust/src/runtime/reference.rs``) is a
+CPU port of the pico model (``compile/model.py``) with the pure-jnp kernel
+semantics of ``compile/kernels/ref.py``.  This tool runs the *actual* JAX
+implementations on a tiny configuration and dumps inputs + outputs to
+``rust/tests/fixtures/reference_backend.json``; the conformance test
+(``rust/tests/backend_conformance.rs``) replays them through the Rust port
+and asserts numeric agreement.
+
+Greedy-sampling fixtures are only emitted when the winning logit's margin
+over the runner-up is comfortably above float32 noise, so the exact-token
+assertions on the Rust side can never flake on near-ties; the seeds below
+were chosen to satisfy that margin.
+
+Run from the repository root (JAX required):
+
+    python python/tools/gen_backend_fixtures.py
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from compile import model as M  # noqa: E402
+from compile.config import tiny_config  # noqa: E402
+from compile.kernels.ref import decode_attention_ref, sgmv_ref  # noqa: E402
+
+# The margin (in logits) the winning token must have over the runner-up for
+# the fixture to pin exact argmax equality.  f32 reassociation noise in the
+# Rust port is ~1e-5 on this configuration; 5e-3 gives ~500x headroom.
+MIN_LOGIT_GAP = 5e-3
+
+
+def flat(a):
+    return [float(x) for x in np.asarray(a, np.float32).reshape(-1)]
+
+
+def ints(a):
+    return [int(x) for x in np.asarray(a).reshape(-1)]
+
+
+# --------------------------------------------------------------------------
+# Instrumented forwards: identical math to model.decode_step / model.prefill
+# (use_pallas=False path) but also returning the final logits, so the
+# generator can verify the greedy-sampling margin.  Cross-checked against
+# the real entry points below to guard against drift.
+# --------------------------------------------------------------------------
+
+def decode_logits(cfg, params, banks, tokens, k_win, v_win, ctx, slot):
+    p = dict(zip(M.param_names(cfg), params))
+    a_q, b_q, a_v, b_v = banks
+    B = tokens.shape[0]
+    nh, dh, W = cfg.n_heads, cfg.head_dim, cfg.window
+    h = p["embed"][tokens]
+    for l in range(cfg.n_layers):
+        x = M._rms_norm(h, p[f"l{l}.ln1"])
+        q = x @ p[f"l{l}.wq"] + sgmv_ref(x, a_q[l], b_q[l], slot)
+        k_new = x @ p[f"l{l}.wk"]
+        v_new = x @ p[f"l{l}.wv"] + sgmv_ref(x, a_v[l], b_v[l], slot)
+        kw = M._insert_row(k_win[l], k_new, ctx)
+        vw = M._insert_row(v_win[l], v_new, ctx)
+        attn = decode_attention_ref(
+            q.reshape(B, nh, dh),
+            kw.reshape(B, W, nh, dh),
+            vw.reshape(B, W, nh, dh),
+            ctx + 1,
+        )
+        h = h + attn @ p[f"l{l}.wo"]
+        x2 = M._rms_norm(h, p[f"l{l}.ln2"])
+        h = h + jax.nn.silu(x2 @ p[f"l{l}.w_up"]) @ p[f"l{l}.w_down"]
+    return M._rms_norm(h, p["final_ln"]) @ p["embed"].T
+
+
+def prefill_logits(cfg, params, banks, tokens, true_len, slot):
+    p = dict(zip(M.param_names(cfg), params))
+    a_q, b_q, a_v, b_v = banks
+    S = tokens.shape[0]
+    nh, dh = cfg.n_heads, cfg.head_dim
+    scale = 1.0 / (dh**0.5)
+    h = p["embed"][tokens]
+    slot_vec = jnp.full((S,), slot, dtype=jnp.int32)
+    pos = jnp.arange(S)
+    mask = (pos[None, :] <= pos[:, None]) & (pos[None, :] < true_len)
+    for l in range(cfg.n_layers):
+        x = M._rms_norm(h, p[f"l{l}.ln1"])
+        q = x @ p[f"l{l}.wq"] + sgmv_ref(x, a_q[l], b_q[l], slot_vec)
+        k = x @ p[f"l{l}.wk"]
+        v = x @ p[f"l{l}.wv"] + sgmv_ref(x, a_v[l], b_v[l], slot_vec)
+        s = jnp.einsum("ihd,jhd->hij", q.reshape(S, nh, dh), k.reshape(S, nh, dh)) * scale
+        s = jnp.where(mask[None, :, :], s, jnp.float32(-1e30))
+        pw = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("hij,jhd->ihd", pw, v.reshape(S, nh, dh)).reshape(S, nh * dh)
+        h = h + attn @ p[f"l{l}.wo"]
+        x2 = M._rms_norm(h, p[f"l{l}.ln2"])
+        h = h + jax.nn.silu(x2 @ p[f"l{l}.w_up"]) @ p[f"l{l}.w_down"]
+    last = jnp.take(h, true_len - 1, axis=0)
+    return M._rms_norm(last, p["final_ln"]) @ p["embed"].T
+
+
+def logit_gap(logits):
+    top2 = np.sort(np.asarray(logits, np.float32))[..., -2:]
+    return float(np.min(top2[..., 1] - top2[..., 0]))
+
+
+def main():
+    cfg = tiny_config(
+        name="tiny-fixture",
+        d_model=16,
+        n_heads=2,
+        head_dim=8,
+        vocab=32,
+        window=8,
+        slots=4,
+        max_rank=4,
+        mlp_mult=2,
+        seed=20260731,
+        decode_buckets=(1, 2, 4),
+        prefill_buckets=(8,),
+    )
+    params = M.init_params(cfg)
+    plist = M.params_list(cfg, params)
+
+    # Two synthetic adapters in slots 1 and 2 (slot 0 stays the zero
+    # adapter), exactly as the Rust side writes them via write_bank_slot.
+    banks_np = M.zero_banks(cfg)
+    adapters = {1: M.make_adapter(cfg, rank=2, seed=11), 2: M.make_adapter(cfg, rank=4, seed=12)}
+    for slot, ad in adapters.items():
+        for proj in ("q", "v"):
+            banks_np[f"bank_a_{proj}"][:, slot] = ad[f"a_{proj}"]
+            banks_np[f"bank_b_{proj}"][:, slot] = ad[f"b_{proj}"]
+    banks = [banks_np[n] for n in M.BANK_NAMES]
+
+    rng = np.random.default_rng(2)
+
+    # ---- decode fixture -------------------------------------------------
+    B = 4
+    tokens = rng.integers(0, cfg.vocab, B).astype(np.int32)
+    ctx = np.array([3, 0, 5, 7], np.int32)  # includes 0 and window-1
+    slot = np.array([0, 2, 1, 2], np.int32)  # zero adapter + both slabs
+    k_win = rng.normal(0, 0.5, (cfg.n_layers, B, cfg.window, cfg.d_model)).astype(np.float32)
+    v_win = rng.normal(0, 0.5, (cfg.n_layers, B, cfg.window, cfg.d_model)).astype(np.float32)
+    # Poison the invalid window region (position ctx is overwritten by the
+    # step's K/V insert; positions > ctx are masked): any masking bug on
+    # the Rust side produces wildly wrong outputs instead of subtle ones.
+    for b in range(B):
+        k_win[:, b, ctx[b]:, :] = 1e3
+        v_win[:, b, ctx[b]:, :] = -1e3
+
+    nt, nk, nv = M.decode_step(
+        cfg, plist, banks, tokens, k_win, v_win, ctx, slot, use_pallas=False
+    )
+    logits = decode_logits(cfg, plist, banks, tokens, k_win, v_win, ctx, slot)
+    assert ints(jnp.argmax(logits, axis=-1)) == ints(nt), "instrumented decode drifted"
+    gap = logit_gap(logits)
+    assert gap > MIN_LOGIT_GAP, f"decode logit gap {gap} too small; pick new seeds"
+
+    decode_fx = {
+        "bucket": B,
+        "tokens": ints(tokens),
+        "ctx": ints(ctx),
+        "slot": ints(slot),
+        "k_win": flat(k_win),
+        "v_win": flat(v_win),
+        "next_tokens": ints(nt),
+        "new_k": flat(nk),
+        "new_v": flat(nv),
+        "min_logit_gap": gap,
+    }
+
+    # ---- prefill fixture ------------------------------------------------
+    S, true_len, p_slot = 8, 5, 1
+    p_tokens = np.zeros(S, np.int32)
+    p_tokens[:true_len] = rng.integers(0, cfg.vocab, true_len)
+    pk, pv, p_next = M.prefill(
+        cfg, plist, banks, p_tokens, np.int32(true_len), np.int32(p_slot), use_pallas=False
+    )
+    p_logits = prefill_logits(cfg, plist, banks, p_tokens, true_len, p_slot)
+    assert int(jnp.argmax(p_logits)) == int(p_next), "instrumented prefill drifted"
+    p_gap = logit_gap(p_logits)
+    assert p_gap > MIN_LOGIT_GAP, f"prefill logit gap {p_gap} too small; pick new seeds"
+
+    prefill_fx = {
+        "bucket": S,
+        "true_len": true_len,
+        "slot": p_slot,
+        "tokens": ints(p_tokens),
+        "k": flat(pk),
+        "v": flat(pv),
+        "next_token": int(p_next),
+        "min_logit_gap": p_gap,
+    }
+
+    # ---- kernel micro-fixtures (straight from kernels/ref.py) -----------
+    sg_B, sg_S, sg_d, sg_r = 3, 3, 8, 2
+    sg_x = rng.normal(0, 1, (sg_B, sg_d)).astype(np.float32)
+    sg_a = rng.normal(0, 0.3, (sg_S, sg_d, sg_r)).astype(np.float32)
+    sg_b = rng.normal(0, 0.3, (sg_S, sg_r, sg_d)).astype(np.float32)
+    sg_idx = np.array([0, 2, 1], np.int32)
+    sg_out = sgmv_ref(sg_x, sg_a, sg_b, sg_idx)
+    sgmv_fx = {
+        "n_rows": sg_B,
+        "n_slots": sg_S,
+        "d": sg_d,
+        "r": sg_r,
+        "x": flat(sg_x),
+        "a_bank": flat(sg_a),
+        "b_bank": flat(sg_b),
+        "idx": ints(sg_idx),
+        "out": flat(sg_out),
+    }
+
+    at_B, at_h, at_dh, at_W = 2, 2, 4, 5
+    at_q = rng.normal(0, 1, (at_B, at_h, at_dh)).astype(np.float32)
+    at_k = rng.normal(0, 0.7, (at_B, at_W, at_h, at_dh)).astype(np.float32)
+    at_v = rng.normal(0, 0.7, (at_B, at_W, at_h, at_dh)).astype(np.float32)
+    at_ctx = np.array([2, 5], np.int32)  # valid-entry counts (partial + full)
+    at_out = decode_attention_ref(at_q, at_k, at_v, at_ctx)
+    attention_fx = {
+        "n_rows": at_B,
+        "n_heads": at_h,
+        "head_dim": at_dh,
+        "window": at_W,
+        "q": flat(at_q),
+        "k_win": flat(at_k),
+        "v_win": flat(at_v),
+        "ctx": ints(at_ctx),
+        "out": flat(at_out),
+    }
+
+    meta_entry = {
+        "config": cfg.to_dict(),
+        "params_file": "",
+        "param_names": M.param_names(cfg),
+        "decode": {},
+        "prefill": {},
+        "use_pallas": False,
+    }
+    bank_slots = [
+        {
+            "slot": slot_id,
+            "a_q": flat(ad["a_q"]),
+            "b_q": flat(ad["b_q"]),
+            "a_v": flat(ad["a_v"]),
+            "b_v": flat(ad["b_v"]),
+        }
+        for slot_id, ad in sorted(adapters.items())
+    ]
+
+    fixture = {
+        "generator": "python/tools/gen_backend_fixtures.py",
+        "jax_version": jax.__version__,
+        "meta": meta_entry,
+        "params": [flat(p) for p in plist],
+        "bank_slots": bank_slots,
+        "decode": decode_fx,
+        "prefill": prefill_fx,
+        "sgmv": sgmv_fx,
+        "attention": attention_fx,
+    }
+
+    out = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "..", "..", "rust", "tests", "fixtures", "reference_backend.json",
+    )
+    out = os.path.normpath(out)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(fixture, f, separators=(",", ":"))
+    size_kb = os.path.getsize(out) / 1024
+    print(f"wrote {out} ({size_kb:.0f} KiB; decode gap {gap:.4f}, prefill gap {p_gap:.4f})")
+
+
+if __name__ == "__main__":
+    main()

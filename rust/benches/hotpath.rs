@@ -1,23 +1,27 @@
 //! Hot-path micro-benchmarks (criterion-free harness, see util::bench):
-//! PJRT decode/prefill per bucket, KV window gather, bank upload, twin
-//! iteration, ML inference.  `cargo bench` → bench_output.txt.
+//! backend decode/prefill per bucket, KV window gather, bank write, twin
+//! iteration, parallel vs serial cluster validation, ML inference.
+//! `cargo bench` → bench_output.txt.
 
+use adapter_serving::cluster;
 use adapter_serving::config::EngineConfig;
 use adapter_serving::dt::{self, Calibration};
 use adapter_serving::engine::kv::RequestKv;
 use adapter_serving::ml;
-use adapter_serving::runtime::{Manifest, ModelRuntime};
+use adapter_serving::placement::Placement;
+use adapter_serving::runtime::{load_backend, Backend, Manifest};
 use adapter_serving::util::bench::bench_auto;
 use adapter_serving::util::rng::Rng;
+use adapter_serving::util::threadpool::default_workers;
 use adapter_serving::workload::WorkloadSpec;
 
 fn main() -> anyhow::Result<()> {
     println!("# hotpath micro-benchmarks");
-    let mut rt = ModelRuntime::load(&Manifest::default_dir(), "pico-llama")?;
-    let meta = rt.meta.clone();
+    let mut rt: Box<dyn Backend> = load_backend(&Manifest::default_dir(), "pico-llama")?;
+    let meta = rt.meta().clone();
     let (l, d, w) = (meta.n_layers, meta.d_model, meta.window);
 
-    // --- L3+L2+L1: PJRT decode per bucket -------------------------------
+    // --- backend decode per bucket --------------------------------------
     for bucket in [1usize, 8, 64] {
         let tokens = vec![1i32; bucket];
         let k_win = vec![0.1f32; l * bucket * w * d];
@@ -73,6 +77,45 @@ fn main() -> anyhow::Result<()> {
     bench_auto("twin_run_64_adapters_30s", 2.0, || {
         let _ = dt::run_twin(&cfg, &calib, &spec, dt::LengthVariant::Mean);
     });
+
+    // --- Cluster validation: serial vs parallel twin sweep ----------------
+    // Acceptance gate for the parallel path: identical ClusterReport
+    // aggregates (asserted in cluster::tests) at a >=2x wall-clock win on
+    // a 4-GPU placement when >=4 cores are available (capped by cores).
+    let cl_adapters = WorkloadSpec::heterogeneous(96, &[8, 16], &[0.2, 0.1], 7);
+    let cl_spec = WorkloadSpec::sharegpt_like(cl_adapters.clone(), 30.0, 8);
+    let mut placement = Placement { assignment: Default::default(), a_max: vec![24, 24, 24, 24] };
+    for a in &cl_adapters {
+        placement.assignment.insert(a.id, a.id % 4);
+    }
+    let base = EngineConfig::default();
+    let serial = bench_auto("cluster_twin_4gpu_serial", 2.0, || {
+        let _ = cluster::run_on_twin_with_workers(
+            &calib,
+            &base,
+            &placement,
+            &cl_spec,
+            dt::LengthVariant::Original,
+            1,
+        );
+    });
+    let workers = default_workers().min(4);
+    let parallel = bench_auto(&format!("cluster_twin_4gpu_parallel_w{workers}"), 2.0, || {
+        let _ = cluster::run_on_twin_with_workers(
+            &calib,
+            &base,
+            &placement,
+            &cl_spec,
+            dt::LengthVariant::Original,
+            workers,
+        );
+    });
+    println!(
+        "bench cluster_twin_4gpu speedup: {:.2}x over serial ({} workers, {} cores)",
+        serial.mean_s / parallel.mean_s.max(1e-12),
+        workers,
+        default_workers(),
+    );
 
     // --- ML inference -----------------------------------------------------
     let mut rng = Rng::new(1);

@@ -4,15 +4,18 @@
 //! Deployment model (paper §8.1): one engine instance per GPU, requests
 //! routed statically by the placement's adapter→GPU assignment (the vLLM-
 //! router pattern).  Because routing is static, per-GPU serving is
-//! independent and the cluster run is the composition of per-GPU runs over
-//! the workload subsets.
+//! independent *by construction*, so validation fans the per-GPU runs out
+//! over [`parallel_map`]: each GPU gets its own backend instance (engine
+//! path) or its own twin simulation, with the same deterministic per-GPU
+//! seeds and the same `per_gpu` report ordering as a serial sweep.
 
 use crate::config::EngineConfig;
 use crate::dt::{Calibration, LengthVariant};
 use crate::engine::metrics::Report;
 use crate::engine::Engine;
 use crate::placement::Placement;
-use crate::runtime::ModelRuntime;
+use crate::runtime::Backend;
+use crate::util::threadpool::{default_workers, parallel_map};
 use crate::workload::WorkloadSpec;
 use anyhow::Result;
 
@@ -72,7 +75,12 @@ impl ClusterReport {
 
 /// Per-GPU engine config for a placement (paper: S_max is the max adapter
 /// size of the scenario; A_max comes from the placement).
-fn gpu_config(base: &EngineConfig, placement: &Placement, g: usize, spec: &WorkloadSpec) -> EngineConfig {
+fn gpu_config(
+    base: &EngineConfig,
+    placement: &Placement,
+    g: usize,
+    spec: &WorkloadSpec,
+) -> EngineConfig {
     let s_max = spec.adapters.iter().map(|a| a.rank).max().unwrap_or(8);
     let mut cfg = base.clone();
     cfg.a_max = placement.a_max[g].max(1);
@@ -81,34 +89,66 @@ fn gpu_config(base: &EngineConfig, placement: &Placement, g: usize, spec: &Workl
     cfg
 }
 
+/// The non-empty GPUs of a placement, in GPU order (the report order).
+fn gpu_jobs(placement: &Placement) -> Vec<(usize, Vec<usize>)> {
+    (0..placement.a_max.len())
+        .map(|g| (g, placement.adapters_on(g)))
+        .filter(|(_, ids)| !ids.is_empty())
+        .collect()
+}
+
 /// Validate a placement on the real engine (the paper's methodology: "the
 /// pipeline output is validated by executing the real LLM-adapter serving
-/// system").
-pub fn run_on_engine(
-    rt: &mut ModelRuntime,
+/// system").  Per-GPU engines are independent, so the runs execute in
+/// parallel; `make_backend` is called once per GPU *inside* its worker
+/// thread (backends need not be `Send` — PJRT handles are not).
+pub fn run_on_engine<F>(
+    make_backend: &F,
     base: &EngineConfig,
     placement: &Placement,
     spec: &WorkloadSpec,
-) -> Result<ClusterReport> {
+) -> Result<ClusterReport>
+where
+    F: Fn() -> Result<Box<dyn Backend>> + Sync,
+{
+    run_on_engine_with_workers(make_backend, base, placement, spec, default_workers())
+}
+
+/// [`run_on_engine`] with an explicit worker count.  `1` recovers the
+/// serial measurement path: engine latencies are *measured* wall time, so
+/// concurrent runs time-share cores and inflate each other's measurements;
+/// use serial when validation metrics must match a dedicated-GPU run.
+pub fn run_on_engine_with_workers<F>(
+    make_backend: &F,
+    base: &EngineConfig,
+    placement: &Placement,
+    spec: &WorkloadSpec,
+    workers: usize,
+) -> Result<ClusterReport>
+where
+    F: Fn() -> Result<Box<dyn Backend>> + Sync,
+{
     let t0 = std::time::Instant::now();
-    let gpus = placement.a_max.len();
-    let mut per_gpu: Vec<Option<Report>> = Vec::with_capacity(gpus);
-    for g in 0..gpus {
-        let ids = placement.adapters_on(g);
-        if ids.is_empty() {
-            continue;
-        }
+    let jobs = gpu_jobs(placement);
+    let workers = workers.min(jobs.len().max(1));
+    let results: Vec<Result<Option<Report>>> = parallel_map(jobs, workers, |(g, ids)| {
+        let mut rt = make_backend()?;
         let sub = spec.subset(&ids, spec.seed ^ (g as u64) << 8);
         let cfg = gpu_config(base, placement, g, spec);
-        let mut engine = Engine::new(cfg, rt);
+        let mut engine = Engine::new(cfg, rt.as_mut());
         let res = engine.run(&sub)?;
-        per_gpu.push(res.report);
+        Ok(res.report)
+    });
+    let mut per_gpu: Vec<Option<Report>> = Vec::with_capacity(results.len());
+    for r in results {
+        per_gpu.push(r?);
     }
     let used = placement.gpus_used();
     Ok(ClusterReport::aggregate(per_gpu, t0.elapsed().as_secs_f64(), used))
 }
 
-/// Validate a placement on the Digital Twin (fast path for sweeps).
+/// Validate a placement on the Digital Twin (fast path for sweeps),
+/// parallelized across GPUs with the default worker count.
 pub fn run_on_twin(
     calib: &Calibration,
     base: &EngineConfig,
@@ -116,19 +156,28 @@ pub fn run_on_twin(
     spec: &WorkloadSpec,
     variant: LengthVariant,
 ) -> ClusterReport {
+    run_on_twin_with_workers(calib, base, placement, spec, variant, default_workers())
+}
+
+/// [`run_on_twin`] with an explicit worker count (`1` = the serial path;
+/// results are identical for any worker count — twin runs are
+/// deterministic and [`parallel_map`] preserves order and per-GPU seeds).
+pub fn run_on_twin_with_workers(
+    calib: &Calibration,
+    base: &EngineConfig,
+    placement: &Placement,
+    spec: &WorkloadSpec,
+    variant: LengthVariant,
+    workers: usize,
+) -> ClusterReport {
     let t0 = std::time::Instant::now();
-    let gpus = placement.a_max.len();
-    let mut per_gpu: Vec<Option<Report>> = Vec::with_capacity(gpus);
-    for g in 0..gpus {
-        let ids = placement.adapters_on(g);
-        if ids.is_empty() {
-            continue;
-        }
+    let jobs = gpu_jobs(placement);
+    let workers = workers.min(jobs.len().max(1));
+    let per_gpu: Vec<Option<Report>> = parallel_map(jobs, workers, |(g, ids)| {
         let sub = spec.subset(&ids, spec.seed ^ (g as u64) << 8);
         let cfg = gpu_config(base, placement, g, spec);
-        let res = crate::dt::run_twin(&cfg, calib, &sub, variant);
-        per_gpu.push(res.report);
-    }
+        crate::dt::run_twin(&cfg, calib, &sub, variant).report
+    });
     let used = placement.gpus_used();
     ClusterReport::aggregate(per_gpu, t0.elapsed().as_secs_f64(), used)
 }
@@ -136,8 +185,6 @@ pub fn run_on_twin(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::placement::Placement;
-    use crate::workload::WorkloadSpec;
 
     #[test]
     fn twin_cluster_aggregates_two_gpus() {
@@ -157,6 +204,83 @@ mod tests {
         assert_eq!(rep.gpus_used, 2);
         assert!(rep.feasible(), "starved={} mem={}", rep.starved, rep.memory_error);
         assert!(rep.total_throughput_tok_s > 0.0);
+    }
+
+    /// Satellite gate: the parallel twin sweep must be *byte-identical*
+    /// to the serial path — same per-GPU reports, same aggregates (the
+    /// only permitted difference is `wall_s`, which measures real time).
+    #[test]
+    fn parallel_twin_matches_serial_byte_identically() {
+        let adapters = WorkloadSpec::heterogeneous(32, &[8, 16], &[0.2, 0.1], 5);
+        let spec = WorkloadSpec::sharegpt_like(adapters.clone(), 10.0, 6);
+        let mut placement =
+            Placement { assignment: Default::default(), a_max: vec![8, 8, 8, 8] };
+        for a in &adapters {
+            placement.assignment.insert(a.id, a.id % 4);
+        }
+        let calib = Calibration::default();
+        let base = EngineConfig::default();
+        let serial = run_on_twin_with_workers(
+            &calib,
+            &base,
+            &placement,
+            &spec,
+            LengthVariant::Original,
+            1,
+        );
+        let parallel = run_on_twin_with_workers(
+            &calib,
+            &base,
+            &placement,
+            &spec,
+            LengthVariant::Original,
+            4,
+        );
+        assert_eq!(serial.gpus_used, parallel.gpus_used);
+        assert_eq!(serial.memory_error, parallel.memory_error);
+        assert_eq!(serial.starved, parallel.starved);
+        assert_eq!(
+            serial.total_throughput_tok_s.to_bits(),
+            parallel.total_throughput_tok_s.to_bits()
+        );
+        assert_eq!(serial.itl_mean_s.to_bits(), parallel.itl_mean_s.to_bits());
+        assert_eq!(serial.ttft_mean_s.to_bits(), parallel.ttft_mean_s.to_bits());
+        assert_eq!(serial.per_gpu.len(), parallel.per_gpu.len());
+        for (s, p) in serial.per_gpu.iter().zip(&parallel.per_gpu) {
+            match (s, p) {
+                (Some(s), Some(p)) => {
+                    assert_eq!(s.throughput_tok_s.to_bits(), p.throughput_tok_s.to_bits());
+                    assert_eq!(s.itl_mean_s.to_bits(), p.itl_mean_s.to_bits());
+                    assert_eq!(s.ttft_mean_s.to_bits(), p.ttft_mean_s.to_bits());
+                    assert_eq!(s.completed, p.completed);
+                    assert_eq!(s.input_tokens, p.input_tokens);
+                    assert_eq!(s.output_tokens, p.output_tokens);
+                    assert_eq!(s.preemptions, p.preemptions);
+                    assert_eq!(s.swap_ins, p.swap_ins);
+                    assert_eq!(s.starved, p.starved);
+                }
+                (None, None) => {}
+                _ => panic!("per-GPU feasibility diverged between serial and parallel"),
+            }
+        }
+    }
+
+    #[test]
+    fn engine_cluster_runs_with_reference_backend_factory() {
+        let adapters = WorkloadSpec::homogeneous(6, 8, 0.5);
+        let spec = WorkloadSpec::fixed_len(adapters.clone(), 24, 6, 2.0, 3);
+        let mut placement =
+            Placement { assignment: Default::default(), a_max: vec![3, 3] };
+        for a in &adapters {
+            placement.assignment.insert(a.id, a.id % 2);
+        }
+        let base = EngineConfig { a_max: 3, s_max_rank: 8, ..Default::default() };
+        let missing = std::path::Path::new("/nonexistent");
+        let make = || crate::runtime::load_backend(missing, "pico-llama");
+        let rep = run_on_engine(&make, &base, &placement, &spec).expect("cluster run");
+        assert_eq!(rep.per_gpu.len(), 2);
+        assert_eq!(rep.gpus_used, 2);
+        assert!(!rep.memory_error);
     }
 
     #[test]

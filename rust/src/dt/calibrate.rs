@@ -12,7 +12,7 @@
 use super::perf_model::Calibration;
 use crate::config::EngineConfig;
 use crate::engine::Engine;
-use crate::runtime::ModelRuntime;
+use crate::runtime::Backend;
 use crate::util::stats;
 use crate::workload::{AdapterSpec, WorkloadSpec};
 use anyhow::Result;
@@ -20,8 +20,12 @@ use std::collections::BTreeMap;
 
 /// Run the calibration suite against the engine.  `fast` trims repetitions
 /// (used by tests and the quick experiment scale).
-pub fn calibrate(rt: &mut ModelRuntime, base_cfg: &EngineConfig, fast: bool) -> Result<Calibration> {
-    let meta = rt.meta.clone();
+pub fn calibrate(
+    rt: &mut dyn Backend,
+    base_cfg: &EngineConfig,
+    fast: bool,
+) -> Result<Calibration> {
+    let meta = rt.meta().clone();
     let decode_buckets = meta.decode_buckets.clone();
     let prefill_buckets = meta.prefill_buckets.clone();
     let out_tokens = if fast { 24 } else { 80 };
@@ -75,7 +79,7 @@ pub fn calibrate(rt: &mut ModelRuntime, base_cfg: &EngineConfig, fast: bool) -> 
         cfg.a_max = b.max(1);
         cfg.max_num_seqs = b;
         let bucket = decode_buckets.iter().copied().find(|&x| x >= b).unwrap_or(b);
-        let profile = run_trace_collect(rt, &cfg, &spec, &trace)?;
+        let profile = run_trace_collect(&mut *rt, &cfg, &spec, &trace)?;
         let decode_ts: Vec<f64> = profile
             .iter()
             .filter(|r| !r.prefill && r.batch == b)
@@ -95,7 +99,10 @@ pub fn calibrate(rt: &mut ModelRuntime, base_cfg: &EngineConfig, fast: bool) -> 
     let (k4a, k4b, k5) = (beta_b[0], beta_b[1], beta_b[2]);
 
     // ---- 2. Adapter-count overhead at fixed batch ---------------------
-    let fixed_b = *decode_buckets.iter().find(|&&b| b >= 32).unwrap_or(&decode_buckets[decode_buckets.len() - 1]);
+    let fixed_b = *decode_buckets
+        .iter()
+        .find(|&&b| b >= 32)
+        .unwrap_or(&decode_buckets[decode_buckets.len() - 1]);
     // Denominator must be the backbone latency at exactly the same batch.
     let backbone_at_b = pts_b
         .iter()
@@ -127,7 +134,7 @@ pub fn calibrate(rt: &mut ModelRuntime, base_cfg: &EngineConfig, fast: bool) -> 
         let mut cfg = base_cfg.clone();
         cfg.a_max = a_b.max(1);
         cfg.max_num_seqs = fixed_b;
-        let profile = run_trace_collect(rt, &cfg, &spec, &trace)?;
+        let profile = run_trace_collect(&mut *rt, &cfg, &spec, &trace)?;
         let ts: Vec<f64> = profile
             .iter()
             .filter(|r| !r.prefill && r.batch == fixed_b && r.adapters_in_batch == a_b)
@@ -154,7 +161,7 @@ pub fn calibrate(rt: &mut ModelRuntime, base_cfg: &EngineConfig, fast: bool) -> 
     let spec = WorkloadSpec::sharegpt_like(adapters, if fast { 4.0 } else { 12.0 }, 17);
     let mut cfg = base_cfg.clone();
     cfg.a_max = 16;
-    let mut engine = Engine::new(cfg, rt);
+    let mut engine = Engine::new(cfg, &mut *rt);
     let res = engine.run(&spec)?;
     let mut rows: Vec<Vec<f64>> = Vec::new();
     let mut ys: Vec<f64> = Vec::new();
@@ -195,7 +202,7 @@ pub fn calibrate(rt: &mut ModelRuntime, base_cfg: &EngineConfig, fast: bool) -> 
         let mut cfg = base_cfg.clone();
         cfg.a_max = 2;
         let profile_events = {
-            let mut engine = Engine::new(cfg, rt);
+            let mut engine = Engine::new(cfg, &mut *rt);
             let res = engine.run_trace(&spec, &trace)?;
             res.profiler.load_events
         };
@@ -247,7 +254,7 @@ pub fn calibrate(rt: &mut ModelRuntime, base_cfg: &EngineConfig, fast: bool) -> 
 
 /// Run the engine over an explicit trace and return the iteration records.
 fn run_trace_collect(
-    rt: &mut ModelRuntime,
+    rt: &mut dyn Backend,
     cfg: &EngineConfig,
     spec: &WorkloadSpec,
     trace: &[crate::workload::Arrival],

@@ -158,10 +158,23 @@ pub fn run_trace(
             }
             metrics.on_decode_tokens(1, sim_time);
             running.push(id);
-            finish_if_done(id, sim_time, &mut requests, &mut running, &mut ledger, &mut cache, &mut metrics);
+            finish_if_done(
+                id,
+                sim_time,
+                &mut requests,
+                &mut running,
+                &mut ledger,
+                &mut cache,
+                &mut metrics,
+            );
         } else if !running.is_empty() {
-            let preempted =
-                grow_or_preempt(&mut running, &mut requests, &mut ledger, &mut cache, limits.unified);
+            let preempted = grow_or_preempt(
+                &mut running,
+                &mut requests,
+                &mut ledger,
+                &mut cache,
+                limits.unified,
+            );
             for id in preempted {
                 metrics.preemptions += 1;
                 waiting.push_front(id);
@@ -183,7 +196,15 @@ pub fn run_trace(
             }
             metrics.on_decode_tokens(ids.len(), sim_time);
             for id in ids {
-                finish_if_done(id, sim_time, &mut requests, &mut running, &mut ledger, &mut cache, &mut metrics);
+                finish_if_done(
+                    id,
+                    sim_time,
+                    &mut requests,
+                    &mut running,
+                    &mut ledger,
+                    &mut cache,
+                    &mut metrics,
+                );
             }
         } else {
             match trace.get(next_arrival).map(|a| a.time_s) {

@@ -164,7 +164,15 @@ impl RequestKv {
 
     /// Copy the last `n` tokens of layer `l` into `dst` (length `n * d`),
     /// the dense window tile for the decode kernel.
-    pub fn gather_window(&self, layer: usize, n_layers: usize, d: usize, n: usize, dst_k: &mut [f32], dst_v: &mut [f32]) {
+    pub fn gather_window(
+        &self,
+        layer: usize,
+        n_layers: usize,
+        d: usize,
+        n: usize,
+        dst_k: &mut [f32],
+        dst_v: &mut [f32],
+    ) {
         debug_assert!(n <= self.tokens);
         let start = self.tokens - n;
         for (i, t) in (start..self.tokens).enumerate() {

@@ -4,12 +4,12 @@
 //! argument).
 //!
 //! Per iteration: inject arrivals → scheduler (admission scan, shared with
-//! the Digital Twin) → adapter swap-ins → execute (PJRT prefill or decode
-//! on the AOT-compiled pico model) → bookkeeping.  Time is a **virtual
-//! clock**: simulated time advances by the *measured wall time* of each
-//! component, so saturation dynamics match a real deployment without idle
-//! waiting, and a 60 s horizon plays back in however long the compute
-//! takes.
+//! the Digital Twin) → adapter swap-ins → execute (prefill or decode on
+//! the pico model through the pluggable [`Backend`]) → bookkeeping.  Time
+//! is a **virtual clock**: simulated time advances by the *measured wall
+//! time* of each component, so saturation dynamics match a real deployment
+//! without idle waiting, and a 60 s horizon plays back in however long the
+//! compute takes.
 
 pub mod adapter_cache;
 pub mod kv;
@@ -19,7 +19,7 @@ pub mod request;
 pub mod scheduler;
 
 use crate::config::EngineConfig;
-use crate::runtime::ModelRuntime;
+use crate::runtime::Backend;
 use crate::util::rng::Rng;
 use crate::workload::{Arrival, WorkloadSpec};
 use adapter_cache::{PhysBank, PhysSlot, SimAdapterCache};
@@ -48,10 +48,10 @@ impl RunResult {
     }
 }
 
-/// One simulated GPU running the AOT-compiled model via PJRT.
+/// One simulated GPU running the pico model through a [`Backend`].
 pub struct Engine<'rt> {
     pub cfg: EngineConfig,
-    rt: &'rt mut ModelRuntime,
+    rt: &'rt mut dyn Backend,
     phys_bank: Option<PhysBank>,
     /// Bucket used by the previous decode step.  Stale window content is
     /// harmless (the attention kernel masks positions >= ctx per row), so
@@ -61,7 +61,7 @@ pub struct Engine<'rt> {
 }
 
 impl<'rt> Engine<'rt> {
-    pub fn new(cfg: EngineConfig, rt: &'rt mut ModelRuntime) -> Engine<'rt> {
+    pub fn new(cfg: EngineConfig, rt: &'rt mut dyn Backend) -> Engine<'rt> {
         Engine { cfg, rt, phys_bank: None, last_bucket: 0 }
     }
 
@@ -81,7 +81,7 @@ impl<'rt> Engine<'rt> {
             return Ok(RunResult::memory_error(wall0.elapsed().as_secs_f64()));
         };
         let mut st = SimState::new(&self.cfg, pool, trace, spec);
-        let meta = self.rt.meta.clone();
+        let meta = self.rt.meta().clone();
         let max_running = self.cfg.max_num_seqs.min(self.rt.max_decode_bucket());
         let limits = AdmissionLimits {
             max_running,
@@ -198,8 +198,8 @@ impl<'rt> Engine<'rt> {
                     _ => break,
                 }
             }
-            st.metrics
-                .sample_queues(st.sim_time, st.running.len() + st.prefill_queue.len(), st.waiting.len());
+            let active = st.running.len() + st.prefill_queue.len();
+            st.metrics.sample_queues(st.sim_time, active, st.waiting.len());
         }
 
         let report = st.metrics.report(spec.horizon_s, spec.incoming_token_rate());
@@ -237,13 +237,13 @@ impl<'rt> Engine<'rt> {
         // The physical bank lives alongside the runtime (one per engine).
         // Lazily initialized to the runtime's slot count.
         if self.phys_bank.is_none() {
-            self.phys_bank = Some(PhysBank::new(self.rt.meta.slots));
+            self.phys_bank = Some(PhysBank::new(self.rt.meta().slots));
         }
         self.phys_bank.as_mut().unwrap()
     }
 
     fn do_prefill(&mut self, id: usize, st: &mut SimState, max_prefill: usize) -> Result<f64> {
-        let meta = self.rt.meta.clone();
+        let meta = self.rt.meta().clone();
         let r = &st.requests[id];
         let prompt = r.prompt_tokens(meta.vocab, max_prefill);
         let true_len = prompt.len();
@@ -289,7 +289,7 @@ impl<'rt> Engine<'rt> {
         k_win: &mut [f32],
         v_win: &mut [f32],
     ) -> Result<(f64, f64, usize, usize)> {
-        let meta = self.rt.meta.clone();
+        let meta = self.rt.meta().clone();
         let (nl, d, w) = (meta.n_layers, meta.d_model, meta.window);
         let batch = st.running.len();
         let bucket = self
@@ -384,7 +384,7 @@ impl<'rt> Engine<'rt> {
     }
 
     fn rewrite_slot(&mut self, adapter_id: usize, rank: usize, slot: usize) -> Result<()> {
-        let m = &self.rt.meta;
+        let m = self.rt.meta();
         let (l, d, rmax) = (m.n_layers, m.d_model, m.max_rank);
         let mut wrng = Rng::new(0xA0A0_0000 ^ adapter_id as u64);
         let gen = |rng: &mut Rng, n: usize, active: usize, stride: usize| -> Vec<f32> {

@@ -34,7 +34,7 @@ fn scenario(n: usize, rates: &str, sizes: &str, seed: u64) -> Vec<AdapterSpec> {
 }
 
 /// Estimate the backbone's max throughput (for MaxBase) from calibration.
-fn backbone_max_tok_s(ctx: &ExpContext, rt: &mut crate::runtime::ModelRuntime) -> Result<f64> {
+fn backbone_max_tok_s(ctx: &ExpContext, rt: &mut dyn crate::runtime::Backend) -> Result<f64> {
     let calib = ctx.calibration(rt)?;
     let best = calib
         .decode_buckets
@@ -54,7 +54,7 @@ fn tokens_per_request(spec: &WorkloadSpec) -> f64 {
 /// infeasible, timelimit}.
 fn validate(
     ctx: &ExpContext,
-    rt: &mut crate::runtime::ModelRuntime,
+    rt: &mut dyn crate::runtime::Backend,
     base: &EngineConfig,
     res: &PlacementResult,
     spec: &WorkloadSpec,
@@ -67,9 +67,12 @@ fn validate(
         Err(_) => Ok(("-".into(), "-".into(), "-".into(), "infeasible".into())),
         Ok(p) => {
             let rep = if on_engine {
-                cluster::run_on_engine(rt, base, p, spec)?
+                // One backend instance per GPU, created in its worker.
+                let model = rt.meta().name.clone();
+                let make = move || ctx.load_runtime(&model);
+                cluster::run_on_engine(&make, base, p, spec)?
             } else {
-                let calib = ctx.calibration(rt)?;
+                let calib = ctx.calibration(&mut *rt)?;
                 cluster::run_on_twin(&calib, base, p, spec, LengthVariant::Original)
             };
             let status = if rep.memory_error {
@@ -94,8 +97,11 @@ fn validate(
 pub fn fig10(ctx: &ExpContext) -> Result<()> {
     let dir = ctx.exp_dir("fig10");
     let mut rows = vec![];
-    let counts: Vec<usize> =
-        if ctx.scale.is_quick() { vec![8, 16, 32, 64, 96] } else { vec![8, 16, 32, 64, 96, 128, 160, 192] };
+    let counts: Vec<usize> = if ctx.scale.is_quick() {
+        vec![8, 16, 32, 64, 96]
+    } else {
+        vec![8, 16, 32, 64, 96, 128, 160, 192]
+    };
     // Allocations validated on the real engine at full scale, on the twin
     // at quick scale (the twin's fidelity is established by table1).
     let on_engine = !ctx.scale.is_quick();
@@ -107,7 +113,8 @@ pub fn fig10(ctx: &ExpContext) -> Result<()> {
         for (rates, sizes) in [("low", "low"), ("low", "high")] {
             for &n in &counts {
                 let adapters = scenario(n, rates, sizes, 40 + n as u64);
-                let spec = WorkloadSpec::sharegpt_like(adapters.clone(), ctx.horizon(), 41 + n as u64);
+                let spec =
+                    WorkloadSpec::sharegpt_like(adapters.clone(), ctx.horizon(), 41 + n as u64);
                 let tpr = tokens_per_request(&spec);
                 let base = EngineConfig { model: model.clone(), ..Default::default() };
                 for (method, res) in [
@@ -139,7 +146,17 @@ pub fn fig10(ctx: &ExpContext) -> Result<()> {
     write_csv(
         &dir,
         "fig10.csv",
-        &["model", "scenario", "n_adapters", "method", "throughput", "a_max", "status", "gpus", "itl_ms"],
+        &[
+            "model",
+            "scenario",
+            "n_adapters",
+            "method",
+            "throughput",
+            "a_max",
+            "status",
+            "gpus",
+            "itl_ms",
+        ],
         &rows,
     )?;
     println!("fig10: wrote {}", dir.display());
@@ -152,10 +169,38 @@ pub fn fig11(ctx: &ExpContext) -> Result<()> {
     let gpus = 4;
     let mut rows = vec![];
     let scenarios: Vec<(&str, &str, Vec<usize>)> = vec![
-        ("low", "low", if ctx.scale.is_quick() { vec![16, 64, 160, 320] } else { vec![16, 32, 64, 96, 128, 192, 256, 320, 384] }),
-        ("mixed", "mixed", if ctx.scale.is_quick() { vec![16, 48, 96, 160] } else { vec![16, 32, 64, 96, 128, 160, 192, 256] }),
-        ("low", "high", if ctx.scale.is_quick() { vec![16, 48, 96] } else { vec![16, 32, 64, 96, 128, 160] }),
-        ("mixed", "low", if ctx.scale.is_quick() { vec![16, 48, 96, 160] } else { vec![16, 32, 64, 96, 128, 192, 256] }),
+        (
+            "low",
+            "low",
+            if ctx.scale.is_quick() {
+                vec![16, 64, 160, 320]
+            } else {
+                vec![16, 32, 64, 96, 128, 192, 256, 320, 384]
+            },
+        ),
+        (
+            "mixed",
+            "mixed",
+            if ctx.scale.is_quick() {
+                vec![16, 48, 96, 160]
+            } else {
+                vec![16, 32, 64, 96, 128, 160, 192, 256]
+            },
+        ),
+        (
+            "low",
+            "high",
+            if ctx.scale.is_quick() { vec![16, 48, 96] } else { vec![16, 32, 64, 96, 128, 160] },
+        ),
+        (
+            "mixed",
+            "low",
+            if ctx.scale.is_quick() {
+                vec![16, 48, 96, 160]
+            } else {
+                vec![16, 32, 64, 96, 128, 192, 256]
+            },
+        ),
     ];
     // Validation on the twin for the sweep (engine at full scale).
     let on_engine = !ctx.scale.is_quick();
@@ -178,7 +223,8 @@ pub fn fig11(ctx: &ExpContext) -> Result<()> {
                 ("MaxBase*", baselines::max_base(&adapters, gpus, bb, tpr, true)),
                 ("Random", baselines::random(&adapters, gpus, 7 + n as u64)),
             ] {
-                let (g, thr, itl, status) = validate(ctx, &mut rt, &base, &res, &spec, on_engine)?;
+                let (g, thr, itl, status) =
+                    validate(ctx, &mut rt, &base, &res, &spec, on_engine)?;
                 println!(
                     "  fig11 s{si} ({model},{rates}-rate/{sizes}-size) A={n} {method}: gpus={g} {status}"
                 );
@@ -199,7 +245,17 @@ pub fn fig11(ctx: &ExpContext) -> Result<()> {
     write_csv(
         &dir,
         "fig11.csv",
-        &["scenario", "model", "family", "n_adapters", "method", "gpus_used", "throughput", "itl_ms", "status"],
+        &[
+            "scenario",
+            "model",
+            "family",
+            "n_adapters",
+            "method",
+            "gpus_used",
+            "throughput",
+            "itl_ms",
+            "status",
+        ],
         &rows,
     )?;
     println!("fig11: wrote {}", dir.display());
@@ -270,8 +326,20 @@ pub fn fig12(ctx: &ExpContext) -> Result<()> {
     let mut rows = vec![];
     let on_engine = !ctx.scale.is_quick();
     let scenarios: Vec<(&str, &str, Vec<usize>)> = vec![
-        ("mixed", "mixed", if ctx.scale.is_quick() { vec![16, 48, 96, 192, 320] } else { vec![16, 32, 64, 96, 128, 192, 256, 320, 384] }),
-        ("high", "low", if ctx.scale.is_quick() { vec![4, 8, 16, 24] } else { vec![4, 8, 12, 16, 24, 32] }),
+        (
+            "mixed",
+            "mixed",
+            if ctx.scale.is_quick() {
+                vec![16, 48, 96, 192, 320]
+            } else {
+                vec![16, 32, 64, 96, 128, 192, 256, 320, 384]
+            },
+        ),
+        (
+            "high",
+            "low",
+            if ctx.scale.is_quick() { vec![4, 8, 16, 24] } else { vec![4, 8, 12, 16, 24, 32] },
+        ),
     ];
     for (si, (rates, sizes, counts)) in scenarios.iter().enumerate() {
         for &n in counts {
@@ -307,7 +375,16 @@ pub fn fig12(ctx: &ExpContext) -> Result<()> {
     write_csv(
         &dir,
         "fig12.csv",
-        &["scenario", "family", "n_adapters", "method", "gpus_used", "throughput", "itl_ms", "status"],
+        &[
+            "scenario",
+            "family",
+            "n_adapters",
+            "method",
+            "gpus_used",
+            "throughput",
+            "itl_ms",
+            "status",
+        ],
         &rows,
     )?;
     println!("fig12: wrote {}", dir.display());
@@ -340,7 +417,8 @@ pub fn figa13(ctx: &ExpContext) -> Result<()> {
                 .report
                 .map(|r| (r.throughput_tok_s, r.starved))
                 .unwrap_or((0.0, true));
-            println!("  figa13 rate={rate} A={n}: thr={thr:.0}{}", if starved { " STARVED" } else { "" });
+            let tag = if starved { " STARVED" } else { "" };
+            println!("  figa13 rate={rate} A={n}: thr={thr:.0}{tag}");
             rows.push(vec![
                 format!("{rate}"),
                 n.to_string(),

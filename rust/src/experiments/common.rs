@@ -6,7 +6,7 @@ use crate::config::EngineConfig;
 use crate::dt::{self, Calibration};
 use crate::engine::Engine;
 use crate::ml::{self, dataset, GridSpec, MlModels, Predictor, Sample};
-use crate::runtime::{Manifest, ModelRuntime};
+use crate::runtime::{self, Backend, Manifest};
 use crate::util::csv::Table;
 use crate::util::json::Json;
 use crate::workload::{AdapterSpec, WorkloadSpec};
@@ -69,8 +69,10 @@ impl ExpContext {
         }
     }
 
-    pub fn load_runtime(&self, model: &str) -> Result<ModelRuntime> {
-        ModelRuntime::load(&self.artifacts, model)
+    /// Load the execution backend for `model` (see
+    /// [`runtime::load_backend`] for the selection order).
+    pub fn load_runtime(&self, model: &str) -> Result<Box<dyn Backend>> {
+        runtime::load_backend(&self.artifacts, model)
     }
 
     // ------------------------------------------------------------------
@@ -78,15 +80,17 @@ impl ExpContext {
     // ------------------------------------------------------------------
 
     /// Calibration, cached at results/calibration_<model>.json.
-    pub fn calibration(&self, rt: &mut ModelRuntime) -> Result<Calibration> {
-        let path = self.out_dir.join(format!("calibration_{}.json", rt.meta.name));
+    pub fn calibration(&self, rt: &mut dyn Backend) -> Result<Calibration> {
+        let model = rt.meta().name.clone();
+        let path = self.out_dir.join(format!("calibration_{model}.json"));
         if path.exists() {
-            if let Ok(c) = Calibration::load_file(&path, &rt.meta.name) {
+            if let Ok(c) = Calibration::load_file(&path, &model) {
                 return Ok(c);
             }
         }
-        eprintln!("[common] calibrating {} ...", rt.meta.name);
-        let calib = dt::calibrate(rt, &EngineConfig { model: rt.meta.name.clone(), ..Default::default() }, self.scale.is_quick())?;
+        eprintln!("[common] calibrating {model} ...");
+        let cfg = EngineConfig { model: model.clone(), ..Default::default() };
+        let calib = dt::calibrate(rt, &cfg, self.scale.is_quick())?;
         std::fs::create_dir_all(&self.out_dir).ok();
         calib.to_json().write_file(&path)?;
         Ok(calib)
@@ -116,8 +120,11 @@ impl ExpContext {
         }
         let samples = self.dataset(calib)?;
         eprintln!("[common] training RF models for {} ...", calib.model);
-        let (thr, _) = ml::train(&samples, ml::Task::Throughput, ml::ModelType::RandomForest, self.scale.is_quick(), 7);
-        let (st, _) = ml::train(&samples, ml::Task::Starvation, ml::ModelType::RandomForest, self.scale.is_quick(), 7);
+        let quick = self.scale.is_quick();
+        let (thr, _) =
+            ml::train(&samples, ml::Task::Throughput, ml::ModelType::RandomForest, quick, 7);
+        let (st, _) =
+            ml::train(&samples, ml::Task::Starvation, ml::ModelType::RandomForest, quick, 7);
         let models = MlModels { throughput: thr, starvation: st, scaler: None };
         ml::save_models(&models, &path)?;
         Ok(models)
@@ -208,14 +215,15 @@ fn scenario_grid(quick: bool) -> Vec<(usize, Vec<usize>, Vec<f64>, usize)> {
 
 /// Run (or load from cache) the engine ground-truth for the validation
 /// scenarios of one model.
-pub fn validation_runs(ctx: &ExpContext, rt: &mut ModelRuntime) -> Result<Vec<ValScenario>> {
-    let model = rt.meta.name.clone();
+pub fn validation_runs(ctx: &ExpContext, rt: &mut dyn Backend) -> Result<Vec<ValScenario>> {
+    let model = rt.meta().name.clone();
     let path = ctx.out_dir.join(format!("validation_{model}.csv"));
     if path.exists() {
         return load_validation(&path);
     }
     let mut out = vec![];
-    for (i, (n, sizes, rates, a_max)) in scenario_grid(ctx.scale.is_quick()).into_iter().enumerate() {
+    let grid = scenario_grid(ctx.scale.is_quick());
+    for (i, (n, sizes, rates, a_max)) in grid.into_iter().enumerate() {
         let mut sc = ValScenario {
             n_adapters: n,
             sizes,
@@ -234,7 +242,7 @@ pub fn validation_runs(ctx: &ExpContext, rt: &mut ModelRuntime) -> Result<Vec<Va
             "[validation {}] scenario {i}: A={n} sizes={:?} rates={:?} a_max={a_max}",
             model, sc.sizes, sc.rates
         );
-        let mut engine = Engine::new(cfg, rt);
+        let mut engine = Engine::new(cfg, &mut *rt);
         let res = engine.run(&spec)?;
         match res.report {
             Some(rep) => {
@@ -318,7 +326,12 @@ pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
 }
 
 /// Write rows to CSV under the experiment dir.
-pub fn write_csv(dir: &std::path::Path, name: &str, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+pub fn write_csv(
+    dir: &std::path::Path,
+    name: &str,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> Result<()> {
     let mut t = Table::new(header);
     for r in rows {
         t.push(r.clone());

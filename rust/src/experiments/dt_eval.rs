@@ -23,8 +23,8 @@ pub fn table1(ctx: &ExpContext) -> Result<()> {
         let scenarios = validation_runs(ctx, &mut rt)?;
 
         // -------- Predictable arrivals --------
-        let mut acc: std::collections::HashMap<&str, (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)> =
-            Default::default();
+        type Acc6 = (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>);
+        let mut acc: std::collections::HashMap<&str, Acc6> = Default::default();
         let mut twin_walls = vec![];
         let mut engine_walls = vec![];
         for sc in &scenarios {
@@ -72,9 +72,9 @@ pub fn table1(ctx: &ExpContext) -> Result<()> {
         }
 
         // -------- Unpredictable arrivals --------
-        let mut acc_u: std::collections::HashMap<&str, (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>)> =
-            Default::default();
-        let counts: Vec<usize> = if ctx.scale.is_quick() { vec![32, 64] } else { vec![32, 64, 128] };
+        let mut acc_u: std::collections::HashMap<&str, Acc6> = Default::default();
+        let counts: Vec<usize> =
+            if ctx.scale.is_quick() { vec![32, 64] } else { vec![32, 64, 128] };
         for (i, &n) in counts.iter().enumerate() {
             let adapters = WorkloadSpec::homogeneous(n, 8, 0.1);
             let mut spec = WorkloadSpec::sharegpt_like(adapters, ctx.horizon(), 3000 + i as u64);
@@ -145,13 +145,23 @@ pub fn table1(ctx: &ExpContext) -> Result<()> {
         &["model", "req-lengths", "arrivals", "thr SMAPE", "ITL SMAPE", "TTFT SMAPE"],
         &table_rows,
     );
-    write_csv(&dir, "table1.csv", &["model", "req_lengths", "arrivals", "smape_thr", "smape_itl", "smape_ttft"], &csv_rows)?;
+    write_csv(
+        &dir,
+        "table1.csv",
+        &["model", "req_lengths", "arrivals", "smape_thr", "smape_itl", "smape_ttft"],
+        &csv_rows,
+    )?;
     print_table(
         "Table 2 — DT execution time & resources (paper: ~39s for 1h horizon, ~90x, ~200MB)",
         &["model", "twin wall (s)", "engine wall (s)", "speedup", "proc peak RSS (MB)"],
         &t2_rows,
     );
-    write_csv(&ctx.exp_dir("table2"), "table2.csv", &["model", "twin_wall_s", "engine_wall_s", "speedup", "peak_rss_mb"], &t2_rows)?;
+    write_csv(
+        &ctx.exp_dir("table2"),
+        "table2.csv",
+        &["model", "twin_wall_s", "engine_wall_s", "speedup", "peak_rss_mb"],
+        &t2_rows,
+    )?;
     Ok(())
 }
 
@@ -203,7 +213,17 @@ pub fn fig8(ctx: &ExpContext) -> Result<()> {
     write_csv(
         &dir,
         "fig8.csv",
-        &["rate", "n_adapters", "thr_engine", "thr_twin", "thr_ml", "itl_engine", "itl_twin", "ttft_engine", "ttft_twin"],
+        &[
+            "rate",
+            "n_adapters",
+            "thr_engine",
+            "thr_twin",
+            "thr_ml",
+            "itl_engine",
+            "itl_twin",
+            "ttft_engine",
+            "ttft_twin",
+        ],
         &rows,
     )?;
     println!("fig8: wrote {}", dir.display());
@@ -246,14 +266,16 @@ pub fn fig9(ctx: &ExpContext) -> Result<()> {
     write_csv(&dir, "fig9_arrivals.csv", &["adapter", "time_s", "rate_req_s"], &arr_rows)?;
 
     // Right panel: running/waiting over time, engine vs twin.
-    let cfg = EngineConfig { model: model.to_string(), a_max: 32, s_max_rank: 8, ..Default::default() };
+    let cfg =
+        EngineConfig { model: model.to_string(), a_max: 32, s_max_rank: 8, ..Default::default() };
     let mut engine = Engine::new(cfg.clone(), &mut rt);
     let eres = engine.run_trace(&spec, &trace)?;
     let tres = dt::run_twin_trace(&cfg, &calib, &spec, &trace);
     let mut q_rows = vec![];
     // Engine metrics are inside RunResult's report; queue traces come from
     // the collectors — subsample to ~200 points each.
-    let dump = |rows: &mut Vec<Vec<String>>, who: &str, samples: &[crate::engine::metrics::QueueSample]| {
+    type Samples<'a> = &'a [crate::engine::metrics::QueueSample];
+    let dump = |rows: &mut Vec<Vec<String>>, who: &str, samples: Samples<'_>| {
         let step = (samples.len() / 200).max(1);
         for s in samples.iter().step_by(step) {
             rows.push(vec![

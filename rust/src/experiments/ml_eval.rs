@@ -80,7 +80,12 @@ pub fn table3(ctx: &ExpContext) -> Result<()> {
         &["model", "estimator", "thr SMAPE %", "thr time ms", "starv F1", "starv time ms"],
         &rows,
     );
-    write_csv(&dir, "table3.csv", &["model", "estimator", "smape", "thr_time_ms", "f1", "st_time_ms"], &rows)?;
+    write_csv(
+        &dir,
+        "table3.csv",
+        &["model", "estimator", "smape", "thr_time_ms", "f1", "st_time_ms"],
+        &rows,
+    )?;
     Ok(())
 }
 
@@ -177,7 +182,16 @@ pub fn table4(ctx: &ExpContext) -> Result<()> {
     }
     print_table(
         "Table 4 — refinement phase (paper: 32/16 rules, ~+6.7% SMAPE, -0.025 F1, up to 2120x faster inference)",
-        &["model", "variant", "thr rules", "thr SMAPE %", "thr time ms", "st rules", "st F1", "st time ms"],
+        &[
+            "model",
+            "variant",
+            "thr rules",
+            "thr SMAPE %",
+            "thr time ms",
+            "st rules",
+            "st F1",
+            "st time ms",
+        ],
         &rows,
     );
     write_csv(

@@ -17,7 +17,11 @@ type ExpFn = fn(&ExpContext) -> Result<()>;
 /// (id, paper artifact, runner)
 pub const REGISTRY: &[(&str, &str, ExpFn)] = &[
     ("fig1", "Fig. 1 — the adapter caching problem (throughput vs adapters)", profiling::fig1),
-    ("fig4", "Fig. 4 — memory overhead: batch/throughput vs loaded adapters; ITL vs batch", profiling::fig4),
+    (
+        "fig4",
+        "Fig. 4 — memory overhead: batch/throughput vs loaded adapters; ITL vs batch",
+        profiling::fig4,
+    ),
     ("fig5", "Fig. 5 — compute overhead vs adapters in batch", profiling::fig5),
     ("fig6", "Fig. 6 — adapter load time relative to request latency", profiling::fig6),
     ("fig7", "Fig. 7 — scheduler time share vs (adapters, A_max)", profiling::fig7),

@@ -15,8 +15,11 @@ use anyhow::Result;
 pub fn fig1(ctx: &ExpContext) -> Result<()> {
     let dir = ctx.exp_dir("fig1");
     let mut rt = ctx.load_runtime("pico-llama")?;
-    let counts: Vec<usize> =
-        if ctx.scale.is_quick() { vec![8, 48, 96, 128] } else { vec![8, 16, 32, 48, 64, 96, 128, 160, 192] };
+    let counts: Vec<usize> = if ctx.scale.is_quick() {
+        vec![8, 48, 96, 128]
+    } else {
+        vec![8, 16, 32, 48, 64, 96, 128, 160, 192]
+    };
     let mut rows = vec![];
     let mut run = |panel: &str,
                    label: String,
@@ -24,7 +27,7 @@ pub fn fig1(ctx: &ExpContext) -> Result<()> {
                    rank: usize,
                    rate: f64,
                    a_max: usize,
-                   rt: &mut crate::runtime::ModelRuntime|
+                   rt: &mut dyn crate::runtime::Backend|
      -> Result<()> {
         let adapters = WorkloadSpec::homogeneous(n, rank, rate);
         let spec = WorkloadSpec::sharegpt_like(adapters, ctx.horizon(), 42 + n as u64);
@@ -74,7 +77,12 @@ pub fn fig1(ctx: &ExpContext) -> Result<()> {
             run("amax", format!("amax={a_max}"), n, 8, 0.05, a_max.min(n), &mut rt)?;
         }
     }
-    write_csv(&dir, "fig1.csv", &["panel", "line", "n_adapters", "throughput", "starved", "oom"], &rows)?;
+    write_csv(
+        &dir,
+        "fig1.csv",
+        &["panel", "line", "n_adapters", "throughput", "starved", "oom"],
+        &rows,
+    )?;
     println!("fig1: wrote {}", dir.join("fig1.csv").display());
     Ok(())
 }
@@ -86,8 +94,11 @@ pub fn fig4(ctx: &ExpContext) -> Result<()> {
     let dir = ctx.exp_dir("fig4");
     let mut rows = vec![];
     let mut itl_rows = vec![];
-    let loaded: Vec<usize> =
-        if ctx.scale.is_quick() { vec![0, 64, 128] } else { vec![0, 16, 32, 64, 96, 128, 160, 192, 256] };
+    let loaded: Vec<usize> = if ctx.scale.is_quick() {
+        vec![0, 64, 128]
+    } else {
+        vec![0, 16, 32, 64, 96, 128, 160, 192, 256]
+    };
     let models: Vec<String> =
         if ctx.scale.is_quick() { vec!["pico-llama".into()] } else { ctx.models.clone() };
     for model in &models {
@@ -115,7 +126,14 @@ pub fn fig4(ctx: &ExpContext) -> Result<()> {
                 };
                 if cfg.kv_pool_tokens().is_none() {
                     println!("  fig4 {model} rank={rank} loaded={a}: OOM");
-                    rows.push(vec![model.clone(), rank.to_string(), a.to_string(), "0".into(), "0".into(), "1".into()]);
+                    rows.push(vec![
+                        model.clone(),
+                        rank.to_string(),
+                        a.to_string(),
+                        "0".into(),
+                        "0".into(),
+                        "1".into(),
+                    ]);
                     continue;
                 }
                 let mut engine = Engine::new(cfg, &mut rt);
@@ -157,7 +175,12 @@ pub fn fig4(ctx: &ExpContext) -> Result<()> {
             }
         }
     }
-    write_csv(&dir, "fig4_batch_throughput.csv", &["model", "rank", "loaded_adapters", "max_batch", "throughput", "oom"], &rows)?;
+    write_csv(
+        &dir,
+        "fig4_batch_throughput.csv",
+        &["model", "rank", "loaded_adapters", "max_batch", "throughput", "oom"],
+        &rows,
+    )?;
     write_csv(&dir, "fig4_itl_vs_batch.csv", &["model", "rank", "batch", "itl_s"], &itl_rows)?;
     println!("fig4: wrote {}", dir.display());
     Ok(())
@@ -228,7 +251,12 @@ pub fn fig5(ctx: &ExpContext) -> Result<()> {
             ]);
         }
     }
-    write_csv(&dir, "fig5.csv", &["rank", "adapters_in_batch", "itl_s", "itl_overhead", "throughput_slowdown"], &rows)?;
+    write_csv(
+        &dir,
+        "fig5.csv",
+        &["rank", "adapters_in_batch", "itl_s", "itl_overhead", "throughput_slowdown"],
+        &rows,
+    )?;
     println!("fig5: wrote {}", dir.display());
     Ok(())
 }
@@ -267,7 +295,20 @@ pub fn fig6(ctx: &ExpContext) -> Result<()> {
             }
         }
     }
-    write_csv(&dir, "fig6.csv", &["rank", "input_len", "output_len", "storage", "load_s", "request_latency_s", "relative_pct"], &rows)?;
+    write_csv(
+        &dir,
+        "fig6.csv",
+        &[
+            "rank",
+            "input_len",
+            "output_len",
+            "storage",
+            "load_s",
+            "request_latency_s",
+            "relative_pct",
+        ],
+        &rows,
+    )?;
     println!("fig6: wrote {}", dir.display());
     Ok(())
 }
@@ -277,7 +318,8 @@ pub fn fig7(ctx: &ExpContext) -> Result<()> {
     let dir = ctx.exp_dir("fig7");
     let mut rt = ctx.load_runtime("pico-llama")?;
     let mut rows = vec![];
-    let counts: Vec<usize> = if ctx.scale.is_quick() { vec![64, 192] } else { vec![64, 128, 256, 384] };
+    let counts: Vec<usize> =
+        if ctx.scale.is_quick() { vec![64, 192] } else { vec![64, 128, 256, 384] };
     for &n in &counts {
         for a_max in [8usize, 32, 128] {
             if a_max > n {

@@ -17,7 +17,7 @@ use adapter_serving::engine::Engine;
 use adapter_serving::experiments::{self, ExpContext, Scale};
 use adapter_serving::ml;
 use adapter_serving::placement::greedy;
-use adapter_serving::runtime::{Manifest, ModelRuntime};
+use adapter_serving::runtime::{self, Manifest};
 use adapter_serving::util::cli::Args;
 use adapter_serving::workload::WorkloadSpec;
 use anyhow::{anyhow, Result};
@@ -97,12 +97,15 @@ fn serve(args: &Args, twin: bool) -> Result<()> {
         let calib = load_or_default_calibration(args, &cfg.model)?;
         let res = dt::run_twin(&cfg, &calib, &spec, dt::LengthVariant::Original);
         match res.report {
-            Some(r) => println!("twin: {} ({} iterations in {:.4}s)", r.summary(), res.iterations, res.wall_s),
+            Some(r) => {
+                let (iters, wall) = (res.iterations, res.wall_s);
+                println!("twin: {} ({iters} iterations in {wall:.4}s)", r.summary())
+            }
             None => println!("twin: MEMORY ERROR (A_max×S_max exceeds GPU memory)"),
         }
     } else {
-        let mut rt = ModelRuntime::load(&Manifest::default_dir(), &cfg.model)?;
-        let mut engine = Engine::new(cfg, &mut rt);
+        let mut rt = runtime::load_backend(&Manifest::default_dir(), &cfg.model)?;
+        let mut engine = Engine::new(cfg, rt.as_mut());
         let res = engine.run(&spec)?;
         match res.report {
             Some(r) => println!("engine: {} (wall {:.2}s)", r.summary(), res.wall_s),
@@ -127,9 +130,9 @@ fn load_or_default_calibration(args: &Args, model: &str) -> Result<Calibration> 
 fn calibrate_cmd(args: &Args) -> Result<()> {
     let model = args.get_or("model", "pico-llama").to_string();
     let out = PathBuf::from(args.get_or("out", &format!("results/calibration_{model}.json")));
-    let mut rt = ModelRuntime::load(&Manifest::default_dir(), &model)?;
+    let mut rt = runtime::load_backend(&Manifest::default_dir(), &model)?;
     let cfg = EngineConfig { model: model.clone(), ..Default::default() };
-    let calib = dt::calibrate(&mut rt, &cfg, args.flag("fast"))?;
+    let calib = dt::calibrate(rt.as_mut(), &cfg, args.flag("fast"))?;
     calib.to_json().write_file(&out)?;
     println!("wrote {}", out.display());
     Ok(())
@@ -160,7 +163,8 @@ fn train_cmd(args: &Args) -> Result<()> {
     let out = PathBuf::from(args.get_or("out", &format!("results/models_{model}.json")));
     let samples = ml::dataset::load(&ds_path)?;
     let quick = !args.flag("full");
-    let (thr, s1) = ml::train(&samples, ml::Task::Throughput, ml::ModelType::RandomForest, quick, 7);
+    let (thr, s1) =
+        ml::train(&samples, ml::Task::Throughput, ml::ModelType::RandomForest, quick, 7);
     let (st, s2) = ml::train(&samples, ml::Task::Starvation, ml::ModelType::RandomForest, quick, 7);
     println!("RF throughput cv-score {s1:.2}; starvation macro-F1 {s2:.3}");
     ml::save_models(&ml::MlModels { throughput: thr, starvation: st, scaler: None }, &out)?;

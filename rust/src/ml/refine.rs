@@ -97,7 +97,8 @@ mod tests {
         let xs: Vec<Vec<f64>> = (0..500)
             .map(|_| vec![rng.f64() * 10.0, rng.f64() * 10.0, rng.f64()])
             .collect();
-        let ys: Vec<f64> = xs.iter().map(|x| x[0] * 2.0 + (x[1] > 5.0) as i32 as f64 * 10.0).collect();
+        let ys: Vec<f64> =
+            xs.iter().map(|x| x[0] * 2.0 + (x[1] > 5.0) as i32 as f64 * 10.0).collect();
         (xs, ys)
     }
 

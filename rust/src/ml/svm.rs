@@ -297,7 +297,8 @@ mod tests {
             ys.push((x[0] + x[1] > 0.0) as i32 as f64);
             xs.push(x);
         }
-        let svc = Svc::fit(&xs, &ys, &SvcParams { kernel: Kernel::Linear, c: 10.0, ..Default::default() });
+        let params = SvcParams { kernel: Kernel::Linear, c: 10.0, ..Default::default() };
+        let svc = Svc::fit(&xs, &ys, &params);
         let acc: f64 = xs
             .iter()
             .zip(&ys)
@@ -367,7 +368,13 @@ mod tests {
         let svr = Svr::fit(
             &xs,
             &ys,
-            &SvrParams { kernel: Kernel::Rbf { gamma: 2.0 }, c: 50.0, epsilon: 0.02, iters: 300, lr: 0.1 },
+            &SvrParams {
+                kernel: Kernel::Rbf { gamma: 2.0 },
+                c: 50.0,
+                epsilon: 0.02,
+                iters: 300,
+                lr: 0.1,
+            },
         );
         let mae: f64 = xs
             .iter()

@@ -201,8 +201,9 @@ impl Tree {
             t.left[cand.node] = l_node as u32;
             t.right[cand.node] = r_node as u32;
             leaves += 1; // one leaf became two
-            frontier.push(BuildNode { idx: li, depth: cand.depth + 1, node: l_node, impurity: l_imp });
-            frontier.push(BuildNode { idx: ri, depth: cand.depth + 1, node: r_node, impurity: r_imp });
+            let depth = cand.depth + 1;
+            frontier.push(BuildNode { idx: li, depth, node: l_node, impurity: l_imp });
+            frontier.push(BuildNode { idx: ri, depth, node: r_node, impurity: r_imp });
         }
         t
     }
@@ -338,7 +339,8 @@ mod tests {
     #[test]
     fn fits_xor_exactly() {
         let (xs, ys) = xor_data();
-        let t = Tree::fit(&xs, &ys, &TreeParams { criterion: Criterion::Gini, ..Default::default() });
+        let params = TreeParams { criterion: Criterion::Gini, ..Default::default() };
+        let t = Tree::fit(&xs, &ys, &params);
         for (x, y) in xs.iter().zip(&ys) {
             assert_eq!(t.predict_one(x) >= 0.5, *y >= 0.5);
         }
@@ -393,7 +395,8 @@ mod tests {
     #[test]
     fn rules_cover_all_leaves() {
         let (xs, ys) = xor_data();
-        let t = Tree::fit(&xs, &ys, &TreeParams { criterion: Criterion::Gini, ..Default::default() });
+        let params = TreeParams { criterion: Criterion::Gini, ..Default::default() };
+        let t = Tree::fit(&xs, &ys, &params);
         let rules = t.rules(&["a", "b"]);
         assert_eq!(rules.len(), t.n_leaves());
         assert!(rules.iter().all(|r| r.contains('→')));

@@ -97,8 +97,8 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, models: &MlModels) -> Placem
             return Err(PlacementError::Starvation);
         };
         states[g].provisional.push(a); // ProvisionalInclude
-        let at_testing_point =
-            testing.contains(&states[g].count()) || states[g].count() >= *TESTING_POINTS.last().unwrap();
+        let at_testing_point = testing.contains(&states[g].count())
+            || states[g].count() >= *TESTING_POINTS.last().unwrap();
         if at_testing_point {
             let (ok, p_new) = test_allocation(&states[g], models);
             if ok {

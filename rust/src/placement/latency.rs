@@ -56,8 +56,9 @@ mod tests {
             xs.push(x);
             st.push((sum_rate > starve_above_rate) as i32 as f64);
         }
-        let t = Tree::fit(&xs, &st, &TreeParams { criterion: Criterion::Gini, ..Default::default() });
-        let thr = Tree::fit(&xs, &vec![100.0; 500], &TreeParams::default());
+        let params = TreeParams { criterion: Criterion::Gini, ..Default::default() };
+        let t = Tree::fit(&xs, &st, &params);
+        let thr = Tree::fit(&xs, &[100.0; 500], &TreeParams::default());
         MlModels {
             throughput: Predictor::Tree(thr),
             starvation: Predictor::Flat(FlatTree::compile(&t)),

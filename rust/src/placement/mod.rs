@@ -61,13 +61,26 @@ impl Placement {
 }
 
 /// Why a placement attempt failed.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum PlacementError {
-    #[error("starvation: no feasible allocation within the available GPUs")]
     Starvation,
-    #[error("placement algorithm exceeded its time limit")]
     TimeLimit,
 }
+
+impl std::fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlacementError::Starvation => {
+                write!(f, "starvation: no feasible allocation within the available GPUs")
+            }
+            PlacementError::TimeLimit => {
+                write!(f, "placement algorithm exceeded its time limit")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
 
 pub type PlacementResult = Result<Placement, PlacementError>;
 

@@ -18,6 +18,11 @@ pub struct ModelMeta {
     pub window: usize,
     pub slots: usize,
     pub max_rank: usize,
+    /// Hidden width of the MLP block (config.mlp_dim; defaults to 4·d).
+    pub mlp_dim: usize,
+    /// Backbone init seed (the reference backend synthesizes its own
+    /// deterministic weights from this when no params file is present).
+    pub seed: u64,
     pub decode_buckets: Vec<usize>,
     pub prefill_buckets: Vec<usize>,
     pub param_names: Vec<String>,
@@ -28,6 +33,50 @@ pub struct ModelMeta {
 }
 
 impl ModelMeta {
+    /// Built-in configurations mirroring `python/compile/config.py`, so the
+    /// reference backend serves the pico models from a bare checkout (no
+    /// `make artifacts` required).  Returns `None` for unknown model names.
+    pub fn builtin(name: &str) -> Option<ModelMeta> {
+        let (d_model, n_heads, seed) = match name {
+            "pico-llama" => (128usize, 4usize, 1234u64),
+            "pico-qwen" => (160, 5, 4321),
+            _ => return None,
+        };
+        let n_layers = 2;
+        Some(ModelMeta {
+            name: name.to_string(),
+            d_model,
+            n_layers,
+            n_heads,
+            head_dim: 32,
+            vocab: 512,
+            window: 128,
+            slots: 64,
+            max_rank: 32,
+            mlp_dim: 4 * d_model,
+            seed,
+            decode_buckets: vec![1, 2, 4, 8, 16, 32, 64],
+            prefill_buckets: vec![32, 64, 128, 256],
+            param_names: Self::default_param_names(n_layers),
+            params_file: String::new(),
+            decode_artifacts: BTreeMap::new(),
+            prefill_artifacts: BTreeMap::new(),
+            use_pallas: false,
+        })
+    }
+
+    /// The deterministic parameter order of `python/compile/model.py`.
+    pub fn default_param_names(n_layers: usize) -> Vec<String> {
+        let mut names = vec!["embed".to_string()];
+        for l in 0..n_layers {
+            for suffix in ["ln1", "wq", "wk", "wv", "wo", "ln2", "w_up", "w_down"] {
+                names.push(format!("l{l}.{suffix}"));
+            }
+        }
+        names.push("final_ln".to_string());
+        names
+    }
+
     /// Elements of one A-bank tensor `[L, S, d, r]`.
     pub fn bank_a_len(&self) -> usize {
         self.n_layers * self.slots * self.d_model * self.max_rank
@@ -44,13 +93,16 @@ impl ModelMeta {
         2 * self.n_layers * self.d_model
     }
 
-    fn from_json(name: &str, j: &Json) -> Result<ModelMeta> {
+    /// Parse one manifest entry (public so fixture-driven tests can build
+    /// backend configurations from manifest-shaped JSON).
+    pub fn from_json(name: &str, j: &Json) -> Result<ModelMeta> {
         let cfg = j.req("config")?;
         let get = |k: &str| -> Result<usize> {
             cfg.req(k)?
                 .as_usize()
                 .ok_or_else(|| anyhow!("config.{k} not a number"))
         };
+        let d_model = get("d_model")?;
         let artifacts = |key: &str| -> Result<BTreeMap<usize, String>> {
             let obj = j
                 .req(key)?
@@ -67,7 +119,7 @@ impl ModelMeta {
         };
         Ok(ModelMeta {
             name: name.to_string(),
-            d_model: get("d_model")?,
+            d_model,
             n_layers: get("n_layers")?,
             n_heads: get("n_heads")?,
             head_dim: get("head_dim")?,
@@ -75,6 +127,8 @@ impl ModelMeta {
             window: get("window")?,
             slots: get("slots")?,
             max_rank: get("max_rank")?,
+            mlp_dim: cfg.get("mlp_dim").and_then(Json::as_usize).unwrap_or(4 * d_model),
+            seed: cfg.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64,
             decode_buckets: cfg
                 .req("decode_buckets")?
                 .usize_vec()
@@ -159,6 +213,24 @@ mod tests {
         assert_eq!(m.decode_artifacts[&2], "d2.hlo.txt");
         assert_eq!(m.bank_a_len(), 2 * 64 * 128 * 32);
         assert_eq!(m.kv_f32_per_token(), 2 * 2 * 128);
+    }
+
+    #[test]
+    fn mlp_dim_defaults_to_four_d() {
+        let m = ModelMeta::from_json("pico", &example_entry()).unwrap();
+        assert_eq!(m.mlp_dim, 4 * 128);
+    }
+
+    #[test]
+    fn builtin_matches_python_config() {
+        let m = ModelMeta::builtin("pico-llama").unwrap();
+        assert_eq!((m.d_model, m.n_heads, m.seed), (128, 4, 1234));
+        assert_eq!(m.param_names.len(), 2 + 8 * m.n_layers);
+        assert_eq!(m.param_names[0], "embed");
+        assert_eq!(m.param_names.last().unwrap(), "final_ln");
+        let q = ModelMeta::builtin("pico-qwen").unwrap();
+        assert_eq!((q.d_model, q.n_heads), (160, 5));
+        assert!(ModelMeta::builtin("nope").is_none());
     }
 
     #[test]

@@ -1,22 +1,37 @@
-//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
-//! and executes them from the Rust request path.
+//! Pluggable execution backends for the serving engine.
 //!
-//! Flow (see /opt/xla-example/load_hlo for the reference pattern):
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `client.compile` → `execute_b`.
+//! The engine consumes the model through the [`Backend`] trait: persistent
+//! backbone/adapter-bank state, bucketed `prefill`/`decode` entry points,
+//! and bucket introspection derived from the artifact [`Manifest`].  Two
+//! implementations exist:
 //!
-//! Backbone parameters and the adapter bank are *persistent device buffers*;
-//! per-step inputs (tokens, KV windows, context lengths, slot indices) are
-//! uploaded per call.  Python never runs here.
+//! - [`reference`] (default) — a pure-Rust CPU port of the pico model
+//!   (`python/compile/model.py` + `kernels/ref.py` semantics: bucketed
+//!   execution, persistent param/bank state, greedy sampling).  Zero
+//!   external native dependencies; works from a bare checkout.
+//! - [`pjrt`] (cargo feature `pjrt`) — the PJRT CPU client executing the
+//!   AOT-compiled HLO artifacts produced by `python/compile/aot.py`.
+//!
+//! Backend selection ([`load_backend`]): the `ADAPTER_SERVING_BACKEND` env
+//! var (`reference`/`pjrt`) wins; otherwise PJRT is used when the feature
+//! is compiled in and an artifact manifest exists, else the reference
+//! backend (from the manifest's config when present, from the built-in
+//! pico configs otherwise).
 
 pub mod manifest;
+pub mod reference;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use manifest::{Manifest, ModelMeta};
+pub use reference::ReferenceBackend;
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::BTreeMap;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use anyhow::{anyhow, Result};
 use std::path::Path;
-use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 /// Outputs of one decode step.
 pub struct DecodeOut {
@@ -38,171 +53,35 @@ pub struct PrefillOut {
     pub next_token: i32,
 }
 
-/// A loaded model: compiled executables per bucket plus persistent device
-/// state (backbone params, adapter bank).
-pub struct ModelRuntime {
-    pub meta: ModelMeta,
-    client: PjRtClient,
-    /// Backbone parameters, in manifest order, resident on device.
-    params: Vec<PjRtBuffer>,
-    /// Compiled decode executables keyed by batch bucket (ascending).
-    decode: BTreeMap<usize, PjRtLoadedExecutable>,
-    /// Compiled prefill executables keyed by sequence bucket (ascending).
-    prefill: BTreeMap<usize, PjRtLoadedExecutable>,
-    /// Host-side adapter bank (4 tensors, see ModelMeta::bank_dims).
-    bank_host: [Vec<f32>; 4],
-    /// Device-resident adapter bank.
-    bank_dev: Option<[PjRtBuffer; 4]>,
-    bank_dirty: bool,
-}
+/// The execution surface the engine consumes: one loaded model with
+/// persistent device state (backbone params, adapter bank) and bucketed
+/// prefill/decode execution.
+///
+/// Implementations are single-GPU by construction; the cluster layer runs
+/// one backend instance per simulated GPU (paper §8.1 deployment model).
+pub trait Backend {
+    /// Static model description (dims, buckets, bank geometry).
+    fn meta(&self) -> &ModelMeta;
 
-impl ModelRuntime {
-    /// Load one model from the artifact directory, compiling all buckets.
-    pub fn load(artifacts_dir: &Path, model: &str) -> Result<ModelRuntime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        Self::load_with_manifest(&manifest, model)
-    }
-
-    pub fn load_with_manifest(manifest: &Manifest, model: &str) -> Result<ModelRuntime> {
-        let meta = manifest
-            .models
-            .get(model)
-            .ok_or_else(|| anyhow!("model '{model}' not in manifest"))?
-            .clone();
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
-
-        // Backbone params from npz, uploaded once.
-        let names: Vec<&str> = meta.param_names.iter().map(|s| s.as_str()).collect();
-        let params_path = manifest.dir.join(&meta.params_file);
-        let literals = Literal::read_npz_by_name(&params_path, &(), &names)
-            .map_err(|e| anyhow!("reading {}: {e}", params_path.display()))?;
-        let mut params = Vec::with_capacity(literals.len());
-        for lit in &literals {
-            params.push(
-                client
-                    .buffer_from_host_literal(None, lit)
-                    .map_err(|e| anyhow!("uploading params: {e}"))?,
-            );
-        }
-
-        let mut decode = BTreeMap::new();
-        for (&b, rel) in &meta.decode_artifacts {
-            decode.insert(b, compile_hlo(&client, &manifest.dir.join(rel))?);
-        }
-        let mut prefill = BTreeMap::new();
-        for (&s, rel) in &meta.prefill_artifacts {
-            prefill.insert(s, compile_hlo(&client, &manifest.dir.join(rel))?);
-        }
-
-        let bank_host = [
-            vec![0f32; meta.bank_a_len()],
-            vec![0f32; meta.bank_b_len()],
-            vec![0f32; meta.bank_a_len()],
-            vec![0f32; meta.bank_b_len()],
-        ];
-        let mut rt = ModelRuntime {
-            meta,
-            client,
-            params,
-            decode,
-            prefill,
-            bank_host,
-            bank_dev: None,
-            bank_dirty: true,
-        };
-        rt.upload_bank()?;
-        Ok(rt)
-    }
-
-    /// Smallest compiled decode bucket that fits `batch`.
-    pub fn decode_bucket(&self, batch: usize) -> Option<usize> {
-        self.decode.range(batch..).next().map(|(&b, _)| b)
-    }
-
-    /// Largest compiled decode bucket (engine batch-size cap).
-    pub fn max_decode_bucket(&self) -> usize {
-        self.decode.keys().next_back().copied().unwrap_or(0)
-    }
-
-    /// Smallest compiled prefill bucket that fits `len`.
-    pub fn prefill_bucket(&self, len: usize) -> Option<usize> {
-        self.prefill.range(len..).next().map(|(&s, _)| s)
-    }
-
-    pub fn max_prefill_bucket(&self) -> usize {
-        self.prefill.keys().next_back().copied().unwrap_or(0)
-    }
-
-    // ------------------------------------------------------------------
-    // Adapter bank management
-    // ------------------------------------------------------------------
-
-    /// Write one adapter's (padded) weights into physical slot `slot` of the
-    /// host bank.  `a_q`/`b_q`/`a_v`/`b_v` must have per-layer shapes
+    /// Write one adapter's (padded) weights into physical slot `slot` of
+    /// the host bank.  `a_q`/`b_q`/`a_v`/`b_v` have per-layer shapes
     /// `[d, r]` / `[r, d]` flattened, stacked over layers.
-    pub fn write_bank_slot(
+    fn write_bank_slot(
         &mut self,
         slot: usize,
         a_q: &[f32],
         b_q: &[f32],
         a_v: &[f32],
         b_v: &[f32],
-    ) -> Result<()> {
-        let m = &self.meta;
-        anyhow::ensure!(slot < m.slots, "slot {slot} out of range ({})", m.slots);
-        let a_layer = m.d_model * m.max_rank; // per-layer A elements
-        let b_layer = m.max_rank * m.d_model;
-        anyhow::ensure!(a_q.len() == m.n_layers * a_layer, "a_q size");
-        anyhow::ensure!(b_q.len() == m.n_layers * b_layer, "b_q size");
-        for l in 0..m.n_layers {
-            // bank layout: [L, S, d, r] — slab for (l, slot) is contiguous.
-            let a_off = (l * m.slots + slot) * a_layer;
-            let b_off = (l * m.slots + slot) * b_layer;
-            self.bank_host[0][a_off..a_off + a_layer]
-                .copy_from_slice(&a_q[l * a_layer..(l + 1) * a_layer]);
-            self.bank_host[1][b_off..b_off + b_layer]
-                .copy_from_slice(&b_q[l * b_layer..(l + 1) * b_layer]);
-            self.bank_host[2][a_off..a_off + a_layer]
-                .copy_from_slice(&a_v[l * a_layer..(l + 1) * a_layer]);
-            self.bank_host[3][b_off..b_off + b_layer]
-                .copy_from_slice(&b_v[l * b_layer..(l + 1) * b_layer]);
-        }
-        self.bank_dirty = true;
-        Ok(())
-    }
+    ) -> Result<()>;
 
-    /// Re-upload the host bank to the device if dirty.  Returns true if an
-    /// upload actually happened (the engine charges this as swap-in cost).
-    pub fn upload_bank(&mut self) -> Result<bool> {
-        if !self.bank_dirty && self.bank_dev.is_some() {
-            return Ok(false);
-        }
-        let m = &self.meta;
-        let a_dims = [m.n_layers, m.slots, m.d_model, m.max_rank];
-        let b_dims = [m.n_layers, m.slots, m.max_rank, m.d_model];
-        let up = |data: &[f32], dims: &[usize]| -> Result<PjRtBuffer> {
-            self.client
-                .buffer_from_host_buffer(data, dims, None)
-                .map_err(|e| anyhow!("bank upload: {e}"))
-        };
-        self.bank_dev = Some([
-            up(&self.bank_host[0], &a_dims)?,
-            up(&self.bank_host[1], &b_dims)?,
-            up(&self.bank_host[2], &a_dims)?,
-            up(&self.bank_host[3], &b_dims)?,
-        ]);
-        self.bank_dirty = false;
-        Ok(true)
-    }
+    /// Publish host-bank writes to the execution state.  Returns true if
+    /// an upload actually happened (the engine charges this as swap-in
+    /// cost), false if the bank was already clean.
+    fn upload_bank(&mut self) -> Result<bool>;
 
-    // ------------------------------------------------------------------
-    // Execution
-    // ------------------------------------------------------------------
-
-    /// Execute one decode step on the bucket that fits `tokens.len()`.
-    /// All slices are padded to the chosen bucket by the caller's engine;
-    /// this method checks exact arity against the bucket.
-    pub fn decode(
+    /// Execute one decode step on `bucket` (the caller pads the batch).
+    fn decode(
         &mut self,
         bucket: usize,
         tokens: &[i32],
@@ -210,98 +89,125 @@ impl ModelRuntime {
         v_win: &[f32],
         ctx: &[i32],
         slot: &[i32],
-    ) -> Result<DecodeOut> {
-        let m = &self.meta;
-        let (l, d, w) = (m.n_layers, m.d_model, m.window);
-        anyhow::ensure!(tokens.len() == bucket, "tokens len");
-        anyhow::ensure!(ctx.len() == bucket && slot.len() == bucket, "ctx/slot len");
-        anyhow::ensure!(k_win.len() == l * bucket * w * d, "k_win len");
-        anyhow::ensure!(v_win.len() == l * bucket * w * d, "v_win len");
-        self.upload_bank()?;
-        let exe = self
-            .decode
-            .get(&bucket)
-            .ok_or_else(|| anyhow!("no decode bucket {bucket}"))?;
+    ) -> Result<DecodeOut>;
 
-        let c = &self.client;
-        let up_f32 = |data: &[f32], dims: &[usize]| c.buffer_from_host_buffer(data, dims, None);
-        let up_i32 = |data: &[i32], dims: &[usize]| c.buffer_from_host_buffer(data, dims, None);
-        let dyn_bufs = [
-            up_i32(tokens, &[bucket]).map_err(|e| anyhow!("tokens: {e}"))?,
-            up_f32(k_win, &[l, bucket, w, d]).map_err(|e| anyhow!("k_win: {e}"))?,
-            up_f32(v_win, &[l, bucket, w, d]).map_err(|e| anyhow!("v_win: {e}"))?,
-            up_i32(ctx, &[bucket]).map_err(|e| anyhow!("ctx: {e}"))?,
-            up_i32(slot, &[bucket]).map_err(|e| anyhow!("slot: {e}"))?,
-        ];
-        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.params.len() + 9);
-        args.extend(self.params.iter());
-        args.extend(self.bank_dev.as_ref().unwrap().iter());
-        args.extend(dyn_bufs.iter());
-
-        let result = exe
-            .execute_b(&args)
-            .map_err(|e| anyhow!("decode execute: {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("decode readback: {e}"))?;
-        let (t0, t1, t2) = lit.to_tuple3().map_err(|e| anyhow!("decode tuple: {e}"))?;
-        Ok(DecodeOut {
-            next_tokens: t0.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?,
-            new_k: t1.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
-            new_v: t2.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
-        })
-    }
-
-    /// Execute a prefill on the bucket that fits `tokens.len()` (already
-    /// padded by the caller).
-    pub fn prefill(
+    /// Execute one prefill on `bucket` (the caller pads the prompt).
+    fn prefill(
         &mut self,
         bucket: usize,
         tokens: &[i32],
         true_len: usize,
         slot: i32,
-    ) -> Result<PrefillOut> {
-        anyhow::ensure!(tokens.len() == bucket, "tokens len");
-        anyhow::ensure!(true_len >= 1 && true_len <= bucket, "true_len");
-        self.upload_bank()?;
-        let exe = self
-            .prefill
-            .get(&bucket)
-            .ok_or_else(|| anyhow!("no prefill bucket {bucket}"))?;
-        let c = &self.client;
-        let dyn_bufs = [
-            c.buffer_from_host_buffer(tokens, &[bucket], None)
-                .map_err(|e| anyhow!("tokens: {e}"))?,
-            c.buffer_from_host_buffer(&[true_len as i32], &[], None)
-                .map_err(|e| anyhow!("true_len: {e}"))?,
-            c.buffer_from_host_buffer(&[slot], &[], None)
-                .map_err(|e| anyhow!("slot: {e}"))?,
-        ];
-        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.params.len() + 7);
-        args.extend(self.params.iter());
-        args.extend(self.bank_dev.as_ref().unwrap().iter());
-        args.extend(dyn_bufs.iter());
+    ) -> Result<PrefillOut>;
 
-        let result = exe
-            .execute_b(&args)
-            .map_err(|e| anyhow!("prefill execute: {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("prefill readback: {e}"))?;
-        let (t0, t1, t2) = lit.to_tuple3().map_err(|e| anyhow!("prefill tuple: {e}"))?;
-        Ok(PrefillOut {
-            k: t0.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
-            v: t1.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
-            next_token: t2.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?[0],
-        })
+    /// Smallest available decode bucket that fits `batch`.
+    fn decode_bucket(&self, batch: usize) -> Option<usize> {
+        self.meta().decode_buckets.iter().copied().find(|&b| b >= batch)
+    }
+
+    /// Largest available decode bucket (engine batch-size cap).
+    fn max_decode_bucket(&self) -> usize {
+        self.meta().decode_buckets.last().copied().unwrap_or(0)
+    }
+
+    /// Smallest available prefill bucket that fits `len`.
+    fn prefill_bucket(&self, len: usize) -> Option<usize> {
+        self.meta().prefill_buckets.iter().copied().find(|&s| s >= len)
+    }
+
+    fn max_prefill_bucket(&self) -> usize {
+        self.meta().prefill_buckets.last().copied().unwrap_or(0)
     }
 }
 
-fn compile_hlo(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(path)
-        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client
-        .compile(&comp)
-        .with_context(|| format!("compiling {}", path.display()))
+/// Load the backend for `model`, honoring `ADAPTER_SERVING_BACKEND`.
+/// See the module docs for the selection order.
+pub fn load_backend(artifacts_dir: &Path, model: &str) -> Result<Box<dyn Backend>> {
+    let requested = std::env::var("ADAPTER_SERVING_BACKEND").unwrap_or_default();
+    if !matches!(requested.as_str(), "" | "reference" | "pjrt") {
+        return Err(anyhow!(
+            "unrecognized ADAPTER_SERVING_BACKEND='{requested}' \
+             (expected 'reference' or 'pjrt')"
+        ));
+    }
+    let have_manifest = artifacts_dir.join("manifest.json").exists();
+
+    #[cfg(feature = "pjrt")]
+    {
+        if requested != "reference" && have_manifest {
+            return Ok(Box::new(PjrtBackend::load(artifacts_dir, model)?));
+        }
+    }
+    if requested == "pjrt" {
+        return Err(anyhow!(
+            "ADAPTER_SERVING_BACKEND=pjrt needs a build with `--features pjrt` \
+             and an artifact manifest in {}",
+            artifacts_dir.display()
+        ));
+    }
+
+    let meta = if have_manifest {
+        let manifest = Manifest::load(artifacts_dir)?;
+        manifest
+            .models
+            .get(model)
+            .cloned()
+            .ok_or_else(|| anyhow!("model '{model}' not in manifest"))?
+    } else {
+        ModelMeta::builtin(model).ok_or_else(|| {
+            anyhow!(
+                "model '{model}' has no built-in config and no artifact \
+                 manifest exists at {}",
+                artifacts_dir.display()
+            )
+        })?
+    };
+    Ok(Box::new(ReferenceBackend::try_new(meta)?))
+}
+
+/// Shared host-bank slot write (layout `[L, S, d, r]` / `[L, S, r, d]`;
+/// the slab for `(layer, slot)` is contiguous).  Used by every backend.
+pub(crate) fn write_bank_slot_host(
+    bank: &mut [Vec<f32>; 4],
+    meta: &ModelMeta,
+    slot: usize,
+    a_q: &[f32],
+    b_q: &[f32],
+    a_v: &[f32],
+    b_v: &[f32],
+) -> Result<()> {
+    anyhow::ensure!(slot < meta.slots, "slot {slot} out of range ({})", meta.slots);
+    let a_layer = meta.d_model * meta.max_rank;
+    let b_layer = meta.max_rank * meta.d_model;
+    anyhow::ensure!(a_q.len() == meta.n_layers * a_layer, "a_q size");
+    anyhow::ensure!(b_q.len() == meta.n_layers * b_layer, "b_q size");
+    anyhow::ensure!(a_v.len() == meta.n_layers * a_layer, "a_v size");
+    anyhow::ensure!(b_v.len() == meta.n_layers * b_layer, "b_v size");
+    for l in 0..meta.n_layers {
+        let a_off = (l * meta.slots + slot) * a_layer;
+        let b_off = (l * meta.slots + slot) * b_layer;
+        bank[0][a_off..a_off + a_layer].copy_from_slice(&a_q[l * a_layer..(l + 1) * a_layer]);
+        bank[1][b_off..b_off + b_layer].copy_from_slice(&b_q[l * b_layer..(l + 1) * b_layer]);
+        bank[2][a_off..a_off + a_layer].copy_from_slice(&a_v[l * a_layer..(l + 1) * a_layer]);
+        bank[3][b_off..b_off + b_layer].copy_from_slice(&b_v[l * b_layer..(l + 1) * b_layer]);
+    }
+    Ok(())
+}
+
+/// Arity checks shared by the backends' `decode` implementations.
+pub(crate) fn check_decode_args(
+    meta: &ModelMeta,
+    bucket: usize,
+    tokens: &[i32],
+    k_win: &[f32],
+    v_win: &[f32],
+    ctx: &[i32],
+    slot: &[i32],
+) -> Result<()> {
+    let (l, d, w) = (meta.n_layers, meta.d_model, meta.window);
+    anyhow::ensure!(tokens.len() == bucket, "tokens len");
+    anyhow::ensure!(ctx.len() == bucket && slot.len() == bucket, "ctx/slot len");
+    anyhow::ensure!(k_win.len() == l * bucket * w * d, "k_win len");
+    anyhow::ensure!(v_win.len() == l * bucket * w * d, "v_win len");
+    Ok(())
 }

@@ -1,0 +1,262 @@
+//! PJRT runtime backend (cargo feature `pjrt`): loads the AOT artifacts
+//! produced by `python/compile/aot.py` and executes them from the Rust
+//! request path.
+//!
+//! Flow: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute_b`.
+//!
+//! Backbone parameters and the adapter bank are *persistent device
+//! buffers*; per-step inputs (tokens, KV windows, context lengths, slot
+//! indices) are uploaded per call.  Python never runs here.
+//!
+//! The `xla` dependency resolves to the in-tree `rust/xla-stub` crate by
+//! default, which keeps this module type-checked while reporting at
+//! runtime that the native PJRT build is not vendored (DESIGN.md §2.3).
+
+use super::manifest::{Manifest, ModelMeta};
+use super::{check_decode_args, write_bank_slot_host, Backend, DecodeOut, PrefillOut};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// A loaded model: compiled executables per bucket plus persistent device
+/// state (backbone params, adapter bank).
+pub struct PjrtBackend {
+    meta: ModelMeta,
+    client: PjRtClient,
+    /// Backbone parameters, in manifest order, resident on device.
+    params: Vec<PjRtBuffer>,
+    /// Compiled decode executables keyed by batch bucket (ascending).
+    decode: BTreeMap<usize, PjRtLoadedExecutable>,
+    /// Compiled prefill executables keyed by sequence bucket (ascending).
+    prefill: BTreeMap<usize, PjRtLoadedExecutable>,
+    /// Host-side adapter bank (4 tensors, see ModelMeta::bank_dims).
+    bank_host: [Vec<f32>; 4],
+    /// Device-resident adapter bank.
+    bank_dev: Option<[PjRtBuffer; 4]>,
+    bank_dirty: bool,
+}
+
+impl PjrtBackend {
+    /// Load one model from the artifact directory, compiling all buckets.
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Self::load_with_manifest(&manifest, model)
+    }
+
+    pub fn load_with_manifest(manifest: &Manifest, model: &str) -> Result<PjrtBackend> {
+        let meta = manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("model '{model}' not in manifest"))?
+            .clone();
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+
+        // Backbone params from npz, uploaded once.
+        let names: Vec<&str> = meta.param_names.iter().map(|s| s.as_str()).collect();
+        let params_path = manifest.dir.join(&meta.params_file);
+        let literals = Literal::read_npz_by_name(&params_path, &(), &names)
+            .map_err(|e| anyhow!("reading {}: {e}", params_path.display()))?;
+        let mut params = Vec::with_capacity(literals.len());
+        for lit in &literals {
+            params.push(
+                client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("uploading params: {e}"))?,
+            );
+        }
+
+        let mut decode = BTreeMap::new();
+        for (&b, rel) in &meta.decode_artifacts {
+            decode.insert(b, compile_hlo(&client, &manifest.dir.join(rel))?);
+        }
+        let mut prefill = BTreeMap::new();
+        for (&s, rel) in &meta.prefill_artifacts {
+            prefill.insert(s, compile_hlo(&client, &manifest.dir.join(rel))?);
+        }
+
+        let bank_host = [
+            vec![0f32; meta.bank_a_len()],
+            vec![0f32; meta.bank_b_len()],
+            vec![0f32; meta.bank_a_len()],
+            vec![0f32; meta.bank_b_len()],
+        ];
+        let mut rt = PjrtBackend {
+            meta,
+            client,
+            params,
+            decode,
+            prefill,
+            bank_host,
+            bank_dev: None,
+            bank_dirty: true,
+        };
+        rt.upload_bank()?;
+        Ok(rt)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Smallest compiled decode bucket that fits `batch`.
+    fn decode_bucket(&self, batch: usize) -> Option<usize> {
+        self.decode.range(batch..).next().map(|(&b, _)| b)
+    }
+
+    /// Largest compiled decode bucket (engine batch-size cap).
+    fn max_decode_bucket(&self) -> usize {
+        self.decode.keys().next_back().copied().unwrap_or(0)
+    }
+
+    /// Smallest compiled prefill bucket that fits `len`.
+    fn prefill_bucket(&self, len: usize) -> Option<usize> {
+        self.prefill.range(len..).next().map(|(&s, _)| s)
+    }
+
+    fn max_prefill_bucket(&self) -> usize {
+        self.prefill.keys().next_back().copied().unwrap_or(0)
+    }
+
+    fn write_bank_slot(
+        &mut self,
+        slot: usize,
+        a_q: &[f32],
+        b_q: &[f32],
+        a_v: &[f32],
+        b_v: &[f32],
+    ) -> Result<()> {
+        write_bank_slot_host(&mut self.bank_host, &self.meta, slot, a_q, b_q, a_v, b_v)?;
+        self.bank_dirty = true;
+        Ok(())
+    }
+
+    /// Re-upload the host bank to the device if dirty.  Returns true if an
+    /// upload actually happened (the engine charges this as swap-in cost).
+    fn upload_bank(&mut self) -> Result<bool> {
+        if !self.bank_dirty && self.bank_dev.is_some() {
+            return Ok(false);
+        }
+        let m = &self.meta;
+        let a_dims = [m.n_layers, m.slots, m.d_model, m.max_rank];
+        let b_dims = [m.n_layers, m.slots, m.max_rank, m.d_model];
+        let up = |data: &[f32], dims: &[usize]| -> Result<PjRtBuffer> {
+            self.client
+                .buffer_from_host_buffer(data, dims, None)
+                .map_err(|e| anyhow!("bank upload: {e}"))
+        };
+        self.bank_dev = Some([
+            up(&self.bank_host[0], &a_dims)?,
+            up(&self.bank_host[1], &b_dims)?,
+            up(&self.bank_host[2], &a_dims)?,
+            up(&self.bank_host[3], &b_dims)?,
+        ]);
+        self.bank_dirty = false;
+        Ok(true)
+    }
+
+    /// Execute one decode step on the bucket that fits `tokens.len()`.
+    /// All slices are padded to the chosen bucket by the caller's engine;
+    /// this method checks exact arity against the bucket.
+    fn decode(
+        &mut self,
+        bucket: usize,
+        tokens: &[i32],
+        k_win: &[f32],
+        v_win: &[f32],
+        ctx: &[i32],
+        slot: &[i32],
+    ) -> Result<DecodeOut> {
+        check_decode_args(&self.meta, bucket, tokens, k_win, v_win, ctx, slot)?;
+        let (l, d, w) = (self.meta.n_layers, self.meta.d_model, self.meta.window);
+        self.upload_bank()?;
+        let exe = self
+            .decode
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no decode bucket {bucket}"))?;
+
+        let c = &self.client;
+        let up_f32 = |data: &[f32], dims: &[usize]| c.buffer_from_host_buffer(data, dims, None);
+        let up_i32 = |data: &[i32], dims: &[usize]| c.buffer_from_host_buffer(data, dims, None);
+        let dyn_bufs = [
+            up_i32(tokens, &[bucket]).map_err(|e| anyhow!("tokens: {e}"))?,
+            up_f32(k_win, &[l, bucket, w, d]).map_err(|e| anyhow!("k_win: {e}"))?,
+            up_f32(v_win, &[l, bucket, w, d]).map_err(|e| anyhow!("v_win: {e}"))?,
+            up_i32(ctx, &[bucket]).map_err(|e| anyhow!("ctx: {e}"))?,
+            up_i32(slot, &[bucket]).map_err(|e| anyhow!("slot: {e}"))?,
+        ];
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.params.len() + 9);
+        args.extend(self.params.iter());
+        args.extend(self.bank_dev.as_ref().unwrap().iter());
+        args.extend(dyn_bufs.iter());
+
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("decode execute: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("decode readback: {e}"))?;
+        let (t0, t1, t2) = lit.to_tuple3().map_err(|e| anyhow!("decode tuple: {e}"))?;
+        Ok(DecodeOut {
+            next_tokens: t0.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?,
+            new_k: t1.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            new_v: t2.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+        })
+    }
+
+    /// Execute a prefill on the bucket that fits `tokens.len()` (already
+    /// padded by the caller).
+    fn prefill(
+        &mut self,
+        bucket: usize,
+        tokens: &[i32],
+        true_len: usize,
+        slot: i32,
+    ) -> Result<PrefillOut> {
+        anyhow::ensure!(tokens.len() == bucket, "tokens len");
+        anyhow::ensure!(true_len >= 1 && true_len <= bucket, "true_len");
+        self.upload_bank()?;
+        let exe = self
+            .prefill
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no prefill bucket {bucket}"))?;
+        let c = &self.client;
+        let dyn_bufs = [
+            c.buffer_from_host_buffer(tokens, &[bucket], None)
+                .map_err(|e| anyhow!("tokens: {e}"))?,
+            c.buffer_from_host_buffer(&[true_len as i32], &[], None)
+                .map_err(|e| anyhow!("true_len: {e}"))?,
+            c.buffer_from_host_buffer(&[slot], &[], None)
+                .map_err(|e| anyhow!("slot: {e}"))?,
+        ];
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.params.len() + 7);
+        args.extend(self.params.iter());
+        args.extend(self.bank_dev.as_ref().unwrap().iter());
+        args.extend(dyn_bufs.iter());
+
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("prefill execute: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("prefill readback: {e}"))?;
+        let (t0, t1, t2) = lit.to_tuple3().map_err(|e| anyhow!("prefill tuple: {e}"))?;
+        Ok(PrefillOut {
+            k: t0.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            v: t1.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            next_token: t2.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?[0],
+        })
+    }
+}
+
+fn compile_hlo(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}

@@ -1,0 +1,650 @@
+//! The default pure-Rust execution backend: a CPU port of the pico
+//! transformer (`python/compile/model.py`) with the pure-jnp kernel
+//! semantics of `python/compile/kernels/ref.py`.
+//!
+//! Semantics mirrored exactly (conformance-tested against JAX-generated
+//! fixtures in `rust/tests/backend_conformance.rs`):
+//!
+//! - bucketed execution: decode/prefill always compute the full padded
+//!   bucket, so latency scales with the bucket (CUDA-graph style), which
+//!   is what the Digital Twin's `K4·B + K5·bucket` model calibrates to;
+//! - persistent state: backbone params and the `[L, S, d, r]` adapter bank
+//!   live in the backend across calls; slot 0 is the all-zero adapter;
+//! - per-request LoRA on the q and v projections via the gathered low-rank
+//!   product (`sgmv_ref`), sliding-window masked attention for decode,
+//!   causal+valid masked attention for prefill, greedy (argmax) sampling
+//!   with first-index tie-breaking like `jnp.argmax`.
+//!
+//! Backbone weights are synthesized deterministically from the manifest
+//! seed (serving dynamics never depend on weight values, only on compute
+//! shape); [`ReferenceBackend::with_params`] accepts explicit weights for
+//! conformance testing.
+
+use super::manifest::ModelMeta;
+use super::{check_decode_args, write_bank_slot_host, Backend, DecodeOut, PrefillOut};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+const EPS: f32 = 1e-6;
+
+/// Per-call scratch buffers for the residual/MLP half of a layer.
+struct Scratch {
+    proj: Vec<f32>,
+    x2: Vec<f32>,
+    up: Vec<f32>,
+    down: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(d: usize, m: usize) -> Scratch {
+        Scratch { proj: vec![0f32; d], x2: vec![0f32; d], up: vec![0f32; m], down: vec![0f32; d] }
+    }
+}
+
+/// Pure-Rust model state.
+pub struct ReferenceBackend {
+    meta: ModelMeta,
+    /// Backbone parameters, flattened row-major, in manifest order.
+    params: Vec<Vec<f32>>,
+    /// Adapter bank `[a_q, b_q, a_v, b_v]` with layouts
+    /// `[L, S, d, r]` / `[L, S, r, d]`.
+    bank: [Vec<f32>; 4],
+    bank_dirty: bool,
+}
+
+impl ReferenceBackend {
+    /// Build the backend with synthesized deterministic weights.  Panics
+    /// on an internally inconsistent meta; callers handling untrusted
+    /// manifests use [`ReferenceBackend::try_new`].
+    pub fn new(meta: ModelMeta) -> ReferenceBackend {
+        Self::try_new(meta).expect("model meta is internally consistent")
+    }
+
+    /// Fallible [`ReferenceBackend::new`]: returns Err for metas whose
+    /// dimensions are inconsistent (e.g. `d_model != n_heads * head_dim`).
+    pub fn try_new(meta: ModelMeta) -> Result<ReferenceBackend> {
+        let params = synth_params(&meta);
+        Self::with_params(meta, params)
+    }
+
+    /// Build the backend from explicit parameters in manifest order
+    /// (`embed`, per-layer `ln1,wq,wk,wv,wo,ln2,w_up,w_down`, `final_ln`).
+    pub fn with_params(meta: ModelMeta, params: Vec<Vec<f32>>) -> Result<ReferenceBackend> {
+        let (d, m, v, nl) = (meta.d_model, meta.mlp_dim, meta.vocab, meta.n_layers);
+        anyhow::ensure!(params.len() == 2 + 8 * nl, "expected {} param tensors", 2 + 8 * nl);
+        anyhow::ensure!(params[0].len() == v * d, "embed shape");
+        anyhow::ensure!(params[1 + 8 * nl].len() == d, "final_ln shape");
+        for l in 0..nl {
+            let base = 1 + 8 * l;
+            let want = [d, d * d, d * d, d * d, d * d, d, d * m, m * d];
+            for (i, &len) in want.iter().enumerate() {
+                anyhow::ensure!(params[base + i].len() == len, "layer {l} tensor {i} shape");
+            }
+        }
+        anyhow::ensure!(d == meta.n_heads * meta.head_dim, "d_model != n_heads*head_dim");
+        let bank = [
+            vec![0f32; meta.bank_a_len()],
+            vec![0f32; meta.bank_b_len()],
+            vec![0f32; meta.bank_a_len()],
+            vec![0f32; meta.bank_b_len()],
+        ];
+        Ok(ReferenceBackend { meta, params, bank, bank_dirty: true })
+    }
+
+    fn embed(&self) -> &[f32] {
+        &self.params[0]
+    }
+
+    fn final_ln(&self) -> &[f32] {
+        &self.params[1 + 8 * self.meta.n_layers]
+    }
+
+    /// Per-layer tensor accessor; `which` indexes
+    /// ln1, wq, wk, wv, wo, ln2, w_up, w_down.
+    fn layer(&self, l: usize, which: usize) -> &[f32] {
+        &self.params[1 + 8 * l + which]
+    }
+
+    /// LoRA slab for `(kind, layer, slot)` where kind indexes
+    /// a_q, b_q, a_v, b_v.
+    fn bank_slab(&self, kind: usize, l: usize, slot: usize) -> &[f32] {
+        let per = self.meta.d_model * self.meta.max_rank;
+        let off = (l * self.meta.slots + slot) * per;
+        &self.bank[kind][off..off + per]
+    }
+
+    /// Projection half of one transformer layer: per-row RMS-norm and
+    /// q/k/v projections (q and v with the row's LoRA slab) into the
+    /// `*_all` buffers.  The attention + residual/MLP half runs per row in
+    /// the caller, which owns the window layout.
+    #[allow(clippy::too_many_arguments)]
+    fn run_layer(
+        &self,
+        l: usize,
+        slot_of_row: &dyn Fn(usize) -> usize,
+        h: &[f32],
+        rows: usize,
+        q_all: &mut [f32],
+        k_all: &mut [f32],
+        v_all: &mut [f32],
+    ) {
+        let (d, r) = (self.meta.d_model, self.meta.max_rank);
+        let mut x = vec![0f32; d];
+        for row in 0..rows {
+            let hb = &h[row * d..(row + 1) * d];
+            rms_norm(hb, self.layer(l, 0), &mut x);
+            let s = slot_of_row(row);
+            let q = &mut q_all[row * d..(row + 1) * d];
+            matvec(&x, self.layer(l, 1), d, d, q);
+            sgmv_ref(&x, self.bank_slab(0, l, s), self.bank_slab(1, l, s), d, r, q);
+            let k = &mut k_all[row * d..(row + 1) * d];
+            matvec(&x, self.layer(l, 2), d, d, k);
+            let v = &mut v_all[row * d..(row + 1) * d];
+            matvec(&x, self.layer(l, 3), d, d, v);
+            sgmv_ref(&x, self.bank_slab(2, l, s), self.bank_slab(3, l, s), d, r, v);
+        }
+    }
+
+    /// Residual attention-output + MLP half of a layer for one row.
+    /// `s` is caller-owned scratch: this runs inside the timed hot loop
+    /// the virtual clock charges, so it must not hit the allocator.
+    fn finish_row(&self, l: usize, attn: &[f32], h: &mut [f32], s: &mut Scratch) {
+        let (d, m) = (self.meta.d_model, self.meta.mlp_dim);
+        matvec(attn, self.layer(l, 4), d, d, &mut s.proj);
+        for (hi, pi) in h.iter_mut().zip(&s.proj) {
+            *hi += pi;
+        }
+        rms_norm(h, self.layer(l, 5), &mut s.x2);
+        matvec(&s.x2, self.layer(l, 6), d, m, &mut s.up);
+        for u in s.up.iter_mut() {
+            *u = silu(*u);
+        }
+        matvec(&s.up, self.layer(l, 7), m, d, &mut s.down);
+        for (hi, di) in h.iter_mut().zip(&s.down) {
+            *hi += di;
+        }
+    }
+
+    /// Greedy sampling: argmax over tied-embedding logits, first max wins
+    /// (matching `jnp.argmax`).
+    fn sample(&self, h: &[f32]) -> i32 {
+        let (d, v) = (self.meta.d_model, self.meta.vocab);
+        let mut x = vec![0f32; d];
+        rms_norm(h, self.final_ln(), &mut x);
+        let embed = self.embed();
+        let mut best = f32::NEG_INFINITY;
+        let mut arg = 0usize;
+        for t in 0..v {
+            let row = &embed[t * d..(t + 1) * d];
+            let logit: f32 = x.iter().zip(row).map(|(a, b)| a * b).sum();
+            if logit > best {
+                best = logit;
+                arg = t;
+            }
+        }
+        arg as i32
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn write_bank_slot(
+        &mut self,
+        slot: usize,
+        a_q: &[f32],
+        b_q: &[f32],
+        a_v: &[f32],
+        b_v: &[f32],
+    ) -> Result<()> {
+        write_bank_slot_host(&mut self.bank, &self.meta, slot, a_q, b_q, a_v, b_v)?;
+        self.bank_dirty = true;
+        Ok(())
+    }
+
+    fn upload_bank(&mut self) -> Result<bool> {
+        // The host bank *is* the execution state; "upload" just tracks the
+        // dirty bit so the engine's swap-in accounting stays meaningful.
+        let uploaded = self.bank_dirty;
+        self.bank_dirty = false;
+        Ok(uploaded)
+    }
+
+    fn decode(
+        &mut self,
+        bucket: usize,
+        tokens: &[i32],
+        k_win: &[f32],
+        v_win: &[f32],
+        ctx: &[i32],
+        slot: &[i32],
+    ) -> Result<DecodeOut> {
+        let meta = &self.meta;
+        check_decode_args(meta, bucket, tokens, k_win, v_win, ctx, slot)?;
+        let (nl, d, w) = (meta.n_layers, meta.d_model, meta.window);
+        let (nh, dh) = (meta.n_heads, meta.head_dim);
+        for row in 0..bucket {
+            anyhow::ensure!(
+                (0..meta.vocab as i32).contains(&tokens[row]),
+                "token out of vocab"
+            );
+            anyhow::ensure!((0..meta.slots as i32).contains(&slot[row]), "slot out of range");
+            anyhow::ensure!((0..w as i32).contains(&ctx[row]), "ctx out of window");
+        }
+
+        let embed = self.embed();
+        let mut h = vec![0f32; bucket * d];
+        for row in 0..bucket {
+            let t = tokens[row] as usize;
+            h[row * d..(row + 1) * d].copy_from_slice(&embed[t * d..(t + 1) * d]);
+        }
+
+        let mut new_k = vec![0f32; nl * bucket * d];
+        let mut new_v = vec![0f32; nl * bucket * d];
+        let mut q_all = vec![0f32; bucket * d];
+        let mut k_all = vec![0f32; bucket * d];
+        let mut v_all = vec![0f32; bucket * d];
+        let mut win_k = vec![0f32; w * d];
+        let mut win_v = vec![0f32; w * d];
+        let mut attn = vec![0f32; d];
+        let mut scratch = Scratch::new(d, meta.mlp_dim);
+
+        for l in 0..nl {
+            let slot_of = |row: usize| slot[row] as usize;
+            self.run_layer(l, &slot_of, &h, bucket, &mut q_all, &mut k_all, &mut v_all);
+            for row in 0..bucket {
+                let n = ctx[row] as usize;
+                // Window = the n cached rows followed by this step's K/V
+                // (model.py `_insert_row` at position ctx, attend ctx+1).
+                let src = (l * bucket + row) * w * d;
+                win_k[..n * d].copy_from_slice(&k_win[src..src + n * d]);
+                win_v[..n * d].copy_from_slice(&v_win[src..src + n * d]);
+                let k_new = &k_all[row * d..(row + 1) * d];
+                let v_new = &v_all[row * d..(row + 1) * d];
+                win_k[n * d..(n + 1) * d].copy_from_slice(k_new);
+                win_v[n * d..(n + 1) * d].copy_from_slice(v_new);
+                attention_ref(
+                    &q_all[row * d..(row + 1) * d],
+                    &win_k[..(n + 1) * d],
+                    &win_v[..(n + 1) * d],
+                    nh,
+                    dh,
+                    n + 1,
+                    &mut attn,
+                );
+                self.finish_row(l, &attn, &mut h[row * d..(row + 1) * d], &mut scratch);
+                let out = (l * bucket + row) * d;
+                new_k[out..out + d].copy_from_slice(k_new);
+                new_v[out..out + d].copy_from_slice(v_new);
+            }
+        }
+
+        let next_tokens: Vec<i32> =
+            (0..bucket).map(|row| self.sample(&h[row * d..(row + 1) * d])).collect();
+        Ok(DecodeOut { next_tokens, new_k, new_v })
+    }
+
+    fn prefill(
+        &mut self,
+        bucket: usize,
+        tokens: &[i32],
+        true_len: usize,
+        slot: i32,
+    ) -> Result<PrefillOut> {
+        let meta = &self.meta;
+        anyhow::ensure!(tokens.len() == bucket, "tokens len");
+        anyhow::ensure!(true_len >= 1 && true_len <= bucket, "true_len");
+        anyhow::ensure!((0..meta.slots as i32).contains(&slot), "slot out of range");
+        for &t in tokens {
+            anyhow::ensure!((0..meta.vocab as i32).contains(&t), "token out of vocab");
+        }
+        let (nl, d) = (meta.n_layers, meta.d_model);
+        let (nh, dh) = (meta.n_heads, meta.head_dim);
+        let s = bucket;
+
+        let embed = self.embed();
+        let mut h = vec![0f32; s * d];
+        for (row, &t) in tokens.iter().enumerate() {
+            h[row * d..(row + 1) * d].copy_from_slice(&embed[t as usize * d..(t as usize + 1) * d]);
+        }
+
+        let mut out_k = vec![0f32; nl * s * d];
+        let mut out_v = vec![0f32; nl * s * d];
+        let mut q_all = vec![0f32; s * d];
+        let mut k_all = vec![0f32; s * d];
+        let mut v_all = vec![0f32; s * d];
+        let mut attn = vec![0f32; d];
+        let mut scratch = Scratch::new(d, meta.mlp_dim);
+
+        for l in 0..nl {
+            let slot_of = |_row: usize| slot as usize;
+            self.run_layer(l, &slot_of, &h, s, &mut q_all, &mut k_all, &mut v_all);
+            for row in 0..s {
+                // Causal & valid mask: keys j with j <= row and j < true_len.
+                // true_len >= 1 guarantees at least one valid key per row.
+                let n = (row + 1).min(true_len);
+                attention_ref(
+                    &q_all[row * d..(row + 1) * d],
+                    &k_all[..n * d],
+                    &v_all[..n * d],
+                    nh,
+                    dh,
+                    n,
+                    &mut attn,
+                );
+                self.finish_row(l, &attn, &mut h[row * d..(row + 1) * d], &mut scratch);
+            }
+            let base = l * s * d;
+            out_k[base..base + s * d].copy_from_slice(&k_all);
+            out_v[base..base + s * d].copy_from_slice(&v_all);
+        }
+
+        let last = true_len - 1;
+        let next_token = self.sample(&h[last * d..(last + 1) * d]);
+        Ok(PrefillOut { k: out_k, v: out_v, next_token })
+    }
+}
+
+// ----------------------------------------------------------------------
+// Kernel oracles (ports of python/compile/kernels/ref.py; public so the
+// conformance tests can exercise them against JAX-generated fixtures)
+// ----------------------------------------------------------------------
+
+/// `out += (x · a) · b` for one row: the per-row gathered low-rank product
+/// of `kernels.ref.sgmv_ref`.  `a` is `[d, r]`, `b` is `[r, d]`, flattened.
+pub fn sgmv_ref(x: &[f32], a: &[f32], b: &[f32], d: usize, r: usize, out: &mut [f32]) {
+    let mut t = vec![0f32; r];
+    for i in 0..d {
+        let xi = x[i];
+        if xi != 0.0 {
+            let row = &a[i * r..(i + 1) * r];
+            for (tj, aj) in t.iter_mut().zip(row) {
+                *tj += xi * aj;
+            }
+        }
+    }
+    for (j, &tj) in t.iter().enumerate() {
+        if tj != 0.0 {
+            let row = &b[j * d..(j + 1) * d];
+            for (oi, bi) in out.iter_mut().zip(row) {
+                *oi += tj * bi;
+            }
+        }
+    }
+}
+
+/// Masked softmax attention for one query row over `n` valid window
+/// entries: the semantics of `kernels.ref.decode_attention_ref`.  `q` is
+/// `[n_heads*head_dim]`; `win_k`/`win_v` hold `n` contiguous rows of the
+/// same layout; `out` (same length as `q`) is overwritten.
+pub fn attention_ref(
+    q: &[f32],
+    win_k: &[f32],
+    win_v: &[f32],
+    n_heads: usize,
+    head_dim: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let d = n_heads * head_dim;
+    debug_assert!(win_k.len() >= n * d && win_v.len() >= n * d);
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let mut scores = vec![0f32; n];
+    for hh in 0..n_heads {
+        let q_h = &q[hh * head_dim..(hh + 1) * head_dim];
+        let mut max = f32::NEG_INFINITY;
+        for (j, sj) in scores.iter_mut().enumerate() {
+            let k_h = &win_k[j * d + hh * head_dim..j * d + (hh + 1) * head_dim];
+            let dot: f32 = q_h.iter().zip(k_h).map(|(a, b)| a * b).sum();
+            *sj = dot * scale;
+            if *sj > max {
+                max = *sj;
+            }
+        }
+        let mut denom = 0f32;
+        for sj in scores.iter_mut() {
+            *sj = (*sj - max).exp();
+            denom += *sj;
+        }
+        let o = &mut out[hh * head_dim..(hh + 1) * head_dim];
+        o.fill(0.0);
+        for (j, &p) in scores.iter().enumerate() {
+            let wgt = p / denom;
+            let v_h = &win_v[j * d + hh * head_dim..j * d + (hh + 1) * head_dim];
+            for (oi, vi) in o.iter_mut().zip(v_h) {
+                *oi += wgt * vi;
+            }
+        }
+    }
+}
+
+/// `out = x · w` with `w` row-major `[d_in, d_out]` (overwrites `out`).
+fn matvec(x: &[f32], w: &[f32], d_in: usize, d_out: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for i in 0..d_in {
+        let xi = x[i];
+        if xi != 0.0 {
+            let row = &w[i * d_out..(i + 1) * d_out];
+            for (oj, wj) in out.iter_mut().zip(row) {
+                *oj += xi * wj;
+            }
+        }
+    }
+}
+
+/// RMS norm: `out = x * w / sqrt(mean(x^2) + eps)` (model.py `_rms_norm`).
+fn rms_norm(x: &[f32], w: &[f32], out: &mut [f32]) {
+    let mean: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (mean + EPS).sqrt();
+    for ((o, &xi), &wi) in out.iter_mut().zip(x).zip(w) {
+        *o = xi * wi * inv;
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Deterministic backbone weights in manifest parameter order: norm
+/// weights are ones, projection matrices N(0, 0.05) from the model seed
+/// (weight *values* never affect serving dynamics, only compute shape).
+fn synth_params(meta: &ModelMeta) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(meta.seed ^ name_seed(&meta.name) ^ 0x5EED_BACC);
+    let (d, m, v) = (meta.d_model, meta.mlp_dim, meta.vocab);
+    let mut normal = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * 0.05) as f32).collect()
+    };
+    let mut out = vec![normal(v * d)];
+    for _ in 0..meta.n_layers {
+        out.push(vec![1f32; d]); // ln1
+        out.push(normal(d * d)); // wq
+        out.push(normal(d * d)); // wk
+        out.push(normal(d * d)); // wv
+        out.push(normal(d * d)); // wo
+        out.push(vec![1f32; d]); // ln2
+        out.push(normal(d * m)); // w_up
+        out.push(normal(m * d)); // w_down
+    }
+    out.push(vec![1f32; d]); // final_ln
+    out
+}
+
+fn name_seed(name: &str) -> u64 {
+    // FNV-1a over the model name, so pico-llama and pico-qwen get
+    // independent weight streams even with equal manifest seeds.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_meta() -> ModelMeta {
+        let mut m = ModelMeta::builtin("pico-llama").unwrap();
+        m.d_model = 32;
+        m.n_heads = 2;
+        m.head_dim = 16;
+        m.vocab = 64;
+        m.window = 16;
+        m.slots = 4;
+        m.max_rank = 4;
+        m.mlp_dim = 64;
+        m.decode_buckets = vec![1, 2, 4];
+        m.prefill_buckets = vec![8, 16];
+        m
+    }
+
+    fn adapter_slab(meta: &ModelMeta, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let a: Vec<f32> = (0..meta.n_layers * meta.d_model * meta.max_rank)
+            .map(|_| (rng.normal() * 0.02) as f32)
+            .collect();
+        let b: Vec<f32> = (0..meta.n_layers * meta.max_rank * meta.d_model)
+            .map(|_| (rng.normal() * 0.02) as f32)
+            .collect();
+        (a, b)
+    }
+
+    #[test]
+    fn decode_is_deterministic_and_shaped() {
+        let meta = tiny_meta();
+        let mut rt = ReferenceBackend::new(meta.clone());
+        let b = 2usize;
+        let n = meta.n_layers * b * meta.window * meta.d_model;
+        let k = vec![0.01f32; n];
+        let v = vec![0.02f32; n];
+        let o1 = rt.decode(b, &[3, 5], &k, &v, &[4, 4], &[0, 0]).unwrap();
+        let o2 = rt.decode(b, &[3, 5], &k, &v, &[4, 4], &[0, 0]).unwrap();
+        assert_eq!(o1.next_tokens, o2.next_tokens);
+        assert_eq!(o1.new_k, o2.new_k);
+        assert_eq!(o1.new_k.len(), meta.n_layers * b * meta.d_model);
+        assert!(o1.next_tokens.iter().all(|&t| (0..meta.vocab as i32).contains(&t)));
+        assert!(o1.new_k.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn zero_slot_equals_backbone_only() {
+        // Writing an adapter into slot 1 must not change slot-0 rows.
+        let meta = tiny_meta();
+        let mut rt = ReferenceBackend::new(meta.clone());
+        let n = meta.n_layers * 2 * meta.window * meta.d_model;
+        let (k, v) = (vec![0.01f32; n], vec![0.02f32; n]);
+        let before = rt.decode(2, &[7, 7], &k, &v, &[3, 3], &[0, 0]).unwrap();
+        let (a, b) = adapter_slab(&meta, 9);
+        rt.write_bank_slot(1, &a, &b, &a, &b).unwrap();
+        rt.upload_bank().unwrap();
+        let after = rt.decode(2, &[7, 7], &k, &v, &[3, 3], &[0, 1]).unwrap();
+        // Row 0 still on the zero adapter: bit-identical.
+        assert_eq!(before.next_tokens[0], after.next_tokens[0]);
+        let d = meta.d_model;
+        assert_eq!(before.new_v[..d], after.new_v[..d]);
+        // Row 1 now runs through the LoRA path: its V projection changes.
+        assert_ne!(before.new_v[d..2 * d], after.new_v[d..2 * d]);
+    }
+
+    #[test]
+    fn identical_rows_identical_outputs() {
+        let meta = tiny_meta();
+        let mut rt = ReferenceBackend::new(meta.clone());
+        let b = 4usize;
+        let n = meta.n_layers * b * meta.window * meta.d_model;
+        let mut k = vec![0f32; n];
+        for (i, x) in k.iter_mut().enumerate() {
+            *x = ((i % 97) as f32) * 1e-3;
+        }
+        // Same window content for every row.
+        let (nl, w, d) = (meta.n_layers, meta.window, meta.d_model);
+        let mut kk = vec![0f32; n];
+        let mut vv = vec![0f32; n];
+        for l in 0..nl {
+            for row in 0..b {
+                for j in 0..w * d {
+                    kk[(l * b + row) * w * d + j] = k[l * w * d + j];
+                    vv[(l * b + row) * w * d + j] = -k[l * w * d + j];
+                }
+            }
+        }
+        let out = rt.decode(b, &[9, 9, 9, 9], &kk, &vv, &[6, 6, 6, 6], &[0, 0, 0, 0]).unwrap();
+        for row in 1..b {
+            assert_eq!(out.next_tokens[row], out.next_tokens[0]);
+            for l in 0..nl {
+                let a0 = (l * b) * d;
+                let ar = (l * b + row) * d;
+                assert_eq!(out.new_k[a0..a0 + d], out.new_k[ar..ar + d]);
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_longer_prefill() {
+        // The first decode step after a prefill of length n must agree
+        // with a prefill of the (n+1)-token prompt: decode attention over
+        // the full cached history is causal attention at position n.
+        let meta = tiny_meta();
+        let mut rt = ReferenceBackend::new(meta.clone());
+        let (nl, d) = (meta.n_layers, meta.d_model);
+        let bucket = 8usize;
+        let n = 5usize;
+        let prompt = [3i32, 14, 9, 1, 60];
+        let mut padded = vec![0i32; bucket];
+        padded[..n].copy_from_slice(&prompt);
+        let pre = rt.prefill(bucket, &padded, n, 0).unwrap();
+
+        // Seed the decode window from the prefill K/V ([L, S, d] layout).
+        let w = meta.window;
+        let mut k_win = vec![0f32; nl * w * d];
+        let mut v_win = vec![0f32; nl * w * d];
+        for l in 0..nl {
+            for t in 0..n {
+                let src = (l * bucket + t) * d;
+                let dst = (l * w + t) * d;
+                k_win[dst..dst + d].copy_from_slice(&pre.k[src..src + d]);
+                v_win[dst..dst + d].copy_from_slice(&pre.v[src..src + d]);
+            }
+        }
+        let dec =
+            rt.decode(1, &[pre.next_token], &k_win, &v_win, &[n as i32], &[0]).unwrap();
+
+        // Longer prefill over prompt + generated token.
+        let mut padded2 = vec![0i32; bucket];
+        padded2[..n].copy_from_slice(&prompt);
+        padded2[n] = pre.next_token;
+        let pre2 = rt.prefill(bucket, &padded2, n + 1, 0).unwrap();
+        assert_eq!(dec.next_tokens[0], pre2.next_token);
+        for l in 0..nl {
+            let from_dec = &dec.new_k[l * d..(l + 1) * d];
+            let from_pre = &pre2.k[(l * bucket + n) * d..(l * bucket + n) * d + d];
+            for (a, b) in from_dec.iter().zip(from_pre) {
+                assert!((a - b).abs() < 1e-4, "k row mismatch: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_introspection_follows_meta() {
+        let rt = ReferenceBackend::new(tiny_meta());
+        assert_eq!(rt.decode_bucket(3), Some(4));
+        assert_eq!(rt.decode_bucket(5), None);
+        assert_eq!(rt.max_decode_bucket(), 4);
+        assert_eq!(rt.prefill_bucket(8), Some(8));
+        assert_eq!(rt.max_prefill_bucket(), 16);
+    }
+
+    #[test]
+    fn rejects_malformed_inputs() {
+        let meta = tiny_meta();
+        let mut rt = ReferenceBackend::new(meta.clone());
+        let n = meta.n_layers * meta.window * meta.d_model;
+        let (k, v) = (vec![0f32; n], vec![0f32; n]);
+        assert!(rt.decode(1, &[0, 0], &k, &v, &[0], &[0]).is_err()); // tokens len
+        assert!(rt.decode(1, &[0], &k, &v, &[0], &[99]).is_err()); // bad slot
+        assert!(rt.prefill(8, &[0i32; 8], 0, 0).is_err()); // true_len 0
+    }
+}

@@ -136,7 +136,8 @@ impl WorkloadSpec {
     /// mean — the Digital Twin's "Mean" input variant (Table 1).
     pub fn trace_mean_lengths(&self) -> Vec<Arrival> {
         let mut t = self.trace();
-        let (mi, mo) = (self.input_len.mean_clipped() as usize, self.output_len.mean_clipped() as usize);
+        let mi = self.input_len.mean_clipped() as usize;
+        let mo = self.output_len.mean_clipped() as usize;
         for a in &mut t {
             a.input_len = mi.max(1);
             a.output_len = mo.max(1);

@@ -1,28 +1,24 @@
-//! Integration tests over the real PJRT runtime and the serving engine.
-//! These require `make artifacts` to have run (skipped gracefully if the
-//! artifact directory is missing, e.g. in a bare checkout).
+//! Integration tests over the execution backend and the serving engine.
+//! They run against whatever backend `runtime::load_backend` selects: the
+//! pure-Rust reference backend on a bare checkout, PJRT when the `pjrt`
+//! feature is enabled and `make artifacts` has produced a manifest.
 
 use adapter_serving::config::EngineConfig;
 use adapter_serving::dt::{self, LengthVariant};
 use adapter_serving::engine::Engine;
-use adapter_serving::runtime::{Manifest, ModelRuntime};
+use adapter_serving::runtime::{load_backend, Backend, Manifest};
 use adapter_serving::workload::{Arrival, WorkloadSpec};
 
-/// PJRT handles are not Send, so each test loads its own runtime (compiles
-/// the artifact buckets fresh; a few seconds per test).
-fn runtime() -> Option<ModelRuntime> {
-    let dir = Manifest::default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts missing; skipping runtime integration tests");
-        return None;
-    }
-    Some(ModelRuntime::load(&dir, "pico-llama").expect("runtime load"))
+/// Backends are not required to be Send (PJRT handles are not), so each
+/// test loads its own instance.
+fn runtime() -> Box<dyn Backend> {
+    load_backend(&Manifest::default_dir(), "pico-llama").expect("backend load")
 }
 
 #[test]
 fn decode_executes_all_buckets_with_sane_outputs() {
-    let Some(mut rt) = runtime() else { return };
-    let meta = rt.meta.clone();
+    let mut rt = runtime();
+    let meta = rt.meta().clone();
     for &b in &[1usize, 2, 64] {
         let tokens = vec![3i32; b];
         let n = meta.n_layers * b * meta.window * meta.d_model;
@@ -42,8 +38,8 @@ fn decode_executes_all_buckets_with_sane_outputs() {
 fn identical_rows_produce_identical_outputs() {
     // Batch invariance: two identical requests in one batch must get the
     // same next token and K/V rows (checks slot/window indexing).
-    let Some(mut rt) = runtime() else { return };
-    let meta = rt.meta.clone();
+    let mut rt = runtime();
+    let meta = rt.meta().clone();
     let b = 4usize;
     let (l, d, w) = (meta.n_layers, meta.d_model, meta.window);
     let mut k = vec![0f32; l * b * w * d];
@@ -75,8 +71,8 @@ fn identical_rows_produce_identical_outputs() {
 
 #[test]
 fn prefill_roundtrip_through_runtime() {
-    let Some(mut rt) = runtime() else { return };
-    let meta = rt.meta.clone();
+    let mut rt = runtime();
+    let meta = rt.meta().clone();
     let bucket = 32usize;
     let mut tokens = vec![0i32; bucket];
     for (i, t) in tokens.iter_mut().enumerate().take(10) {
@@ -89,11 +85,17 @@ fn prefill_roundtrip_through_runtime() {
 
 #[test]
 fn engine_completes_requests_and_counts_tokens_exactly() {
-    let Some(mut rt) = runtime() else { return };
+    let mut rt = runtime();
     let adapters = vec![adapter_serving::workload::AdapterSpec { id: 0, rank: 8, rate: 0.0 }];
     let spec = WorkloadSpec::fixed_len(adapters, 40, 12, 1e9, 1);
     let trace: Vec<Arrival> = (0..6)
-        .map(|i| Arrival { request_id: i, time_s: 0.0, adapter_id: 0, input_len: 40, output_len: 12 })
+        .map(|i| Arrival {
+            request_id: i,
+            time_s: 0.0,
+            adapter_id: 0,
+            input_len: 40,
+            output_len: 12,
+        })
         .collect();
     let cfg = EngineConfig { a_max: 4, s_max_rank: 8, ..Default::default() };
     let mut engine = Engine::new(cfg, &mut rt);
@@ -107,13 +109,19 @@ fn engine_completes_requests_and_counts_tokens_exactly() {
 
 #[test]
 fn engine_preempts_and_recovers_under_memory_pressure() {
-    let Some(mut rt) = runtime() else { return };
+    let mut rt = runtime();
     let adapters = vec![adapter_serving::workload::AdapterSpec { id: 0, rank: 8, rate: 0.0 }];
     let mut spec = WorkloadSpec::fixed_len(adapters, 96, 64, 1e9, 1);
     // Tiny pool: 512 tokens → ~3 concurrent requests of 160 tokens.
     spec.horizon_s = 1e9;
     let trace: Vec<Arrival> = (0..8)
-        .map(|i| Arrival { request_id: i, time_s: 0.0, adapter_id: 0, input_len: 96, output_len: 64 })
+        .map(|i| Arrival {
+            request_id: i,
+            time_s: 0.0,
+            adapter_id: 0,
+            input_len: 96,
+            output_len: 64,
+        })
         .collect();
     let mut cfg = EngineConfig { a_max: 4, s_max_rank: 8, ..Default::default() };
     cfg.mem.total_tokens = 512;
@@ -126,7 +134,7 @@ fn engine_preempts_and_recovers_under_memory_pressure() {
 
 #[test]
 fn engine_reports_memory_error_for_over_reservation() {
-    let Some(mut rt) = runtime() else { return };
+    let mut rt = runtime();
     let spec = WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(4, 32, 0.1), 5.0, 1);
     let cfg = EngineConfig { a_max: 384, s_max_rank: 32, ..Default::default() };
     let mut engine = Engine::new(cfg, &mut rt);
@@ -137,7 +145,7 @@ fn engine_reports_memory_error_for_over_reservation() {
 
 #[test]
 fn engine_and_twin_agree_on_feasibility_of_the_same_trace() {
-    let Some(mut rt) = runtime() else { return };
+    let mut rt = runtime();
     // Light load (~350 tok/s, well under capacity) so the *default*
     // calibration's pessimism cannot flip feasibility; exact-latency
     // agreement is covered by the table1 experiment with a fitted

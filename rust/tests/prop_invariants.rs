@@ -36,7 +36,8 @@ fn kv_ledger_never_leaks_blocks() {
                     }
                 }
                 1 => {
-                    if let Some(&id) = live.get(rng.below(live.len().max(1)).min(live.len().saturating_sub(1))) {
+                    let pick = rng.below(live.len().max(1)).min(live.len().saturating_sub(1));
+                    if let Some(&id) = live.get(pick) {
                         let extra = 1 + rng.below(100);
                         let _ = ledger.grow_to(id, extra + 16);
                     }
@@ -212,7 +213,11 @@ fn greedy_placement_assigns_each_adapter_once_with_valid_a_max() {
         st.push((sum_rate * 96.0 > cap) as i32 as f64);
     }
     let models = MlModels {
-        throughput: Predictor::Flat(FlatTree::compile(&Tree::fit(&xs, &thr, &TreeParams::default()))),
+        throughput: Predictor::Flat(FlatTree::compile(&Tree::fit(
+            &xs,
+            &thr,
+            &TreeParams::default(),
+        ))),
         starvation: Predictor::Flat(FlatTree::compile(&Tree::fit(
             &xs,
             &st,

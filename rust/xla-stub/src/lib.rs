@@ -1,0 +1,168 @@
+//! API-compatible stub of the `xla-rs` PJRT bindings.
+//!
+//! The real crate links against a native `xla_extension` build that is not
+//! vendored in this repository.  This stub mirrors exactly the surface the
+//! `adapter_serving::runtime::pjrt` backend consumes so the PJRT code path
+//! stays type-checked (`cargo check --features pjrt`) on every change;
+//! every runtime entry point returns [`Error::Unavailable`].  Deploying the
+//! real backend means pointing the `xla` path dependency at a vendored
+//! xla-rs checkout instead — no source changes on the adapter_serving side.
+
+use std::path::Path;
+
+/// Error type standing in for `xla::Error`.
+#[derive(Debug)]
+pub enum Error {
+    /// The stub was invoked at runtime.
+    Unavailable(&'static str),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real xla-rs crate (vendor it \
+                 over rust/xla-stub; see DESIGN.md §2.3)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Element types transferable to/from device buffers.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host-side literal (stub: never instantiated).
+#[derive(Debug)]
+pub struct Literal {
+    _opaque: (),
+}
+
+impl Literal {
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple3(self) -> Result<(Literal, Literal, Literal)> {
+        Err(Error::Unavailable("Literal::to_tuple3"))
+    }
+}
+
+/// Deserialization from raw byte containers (npy/npz readers in xla-rs).
+pub trait FromRawBytes: Sized {
+    type Context;
+
+    fn read_npz_by_name<P: AsRef<Path>>(
+        path: P,
+        context: &Self::Context,
+        names: &[&str],
+    ) -> Result<Vec<Self>>;
+}
+
+impl FromRawBytes for Literal {
+    type Context = ();
+
+    fn read_npz_by_name<P: AsRef<Path>>(
+        _path: P,
+        _context: &Self::Context,
+        _names: &[&str],
+    ) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::read_npz_by_name"))
+    }
+}
+
+/// One PJRT device (stub: never instantiated).
+#[derive(Debug)]
+pub struct PjRtDevice {
+    _opaque: (),
+}
+
+/// Device-resident buffer (stub: never instantiated).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _opaque: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (stub: never instantiated).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _opaque: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _opaque: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unavailable("PjRtClient::buffer_from_host_literal"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _opaque: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _opaque: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _opaque: () }
+    }
+}
