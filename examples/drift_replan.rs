@@ -1,0 +1,81 @@
+//! ROLLING-HORIZON REPLANNING WALKTHROUGH (DESIGN.md §7): serve a
+//! drifting workload epoch-by-epoch and watch the placement adapt.
+//!
+//!   1. calibrate the Digital Twin and train the RF models (cached by the
+//!      experiment context, same pipeline as `placement_pipeline`);
+//!   2. build the burst-churn drift scenario the `drift` experiment uses,
+//!      scaled to the calibrated backbone (heavy adapters retire
+//!      mid-horizon, a lighter wave arrives later);
+//!   3. run the horizon under three policies — plan-once static,
+//!      migration-aware incremental replan, oracle-per-epoch — and compare
+//!      GPU-epochs, migrations and feasibility.
+//!
+//! ```sh
+//! cargo run --release --example drift_replan
+//! ```
+
+use adapter_serving::cluster::epochs::{run_epochs_on_twin, ReplanPolicy};
+use adapter_serving::config::EngineConfig;
+use adapter_serving::dt::LengthVariant;
+use adapter_serving::experiments::drift::burst_churn;
+use adapter_serving::experiments::{ExpContext, Scale};
+use adapter_serving::placement::replan::ReplanParams;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = ExpContext::new(Scale::Quick);
+    let model = "pico-llama";
+    let (epochs, epoch_s, gpus) = (6usize, 5.0, 4usize);
+
+    println!("[1/3] calibrating the twin + training the RF models (cached) ...");
+    let mut rt = ctx.load_runtime(model)?;
+    let calib = ctx.calibration(rt.as_mut())?;
+    let models = ctx.trained_models(&calib)?;
+    let base = EngineConfig { model: model.to_string(), ..Default::default() };
+    let params = ReplanParams::from_calibration(&calib, epoch_s);
+    println!(
+        "      migration cost model: rank8 = {:.2} ms, rank32 = {:.2} ms",
+        params.cost.load_s(8) * 1e3,
+        params.cost.load_s(32) * 1e3
+    );
+
+    println!("[2/3] building the burst-churn drift scenario (scaled to this backbone) ...");
+    let drift = burst_churn(epochs, epoch_s, &calib);
+    for e in 0..epochs {
+        let s = drift.epoch_spec(e);
+        println!(
+            "      epoch {e}: {} adapters, {:.0} tok/s incoming",
+            s.adapters.len(),
+            s.incoming_token_rate()
+        );
+    }
+
+    println!("[3/3] serving the horizon under each policy (twin, per-GPU parallel) ...");
+    let cost = params.cost;
+    for (name, policy) in [
+        ("static", ReplanPolicy::Static),
+        ("replan", ReplanPolicy::Replan(params.clone())),
+        ("oracle", ReplanPolicy::Oracle(cost)),
+    ] {
+        let rep = run_epochs_on_twin(
+            &calib,
+            &base,
+            &drift,
+            gpus,
+            &models,
+            &policy,
+            LengthVariant::Original,
+        )?;
+        let gpus_per_epoch: Vec<usize> = rep.per_epoch.iter().map(|r| r.gpus_used).collect();
+        println!(
+            "      {name:>6}: GPUs/epoch {gpus_per_epoch:?} → {} GPU-epochs, \
+             {} migrations ({:.1} ms), {} infeasible, unserved {:.0} tok",
+            rep.gpu_epochs,
+            rep.total_migrations,
+            rep.total_migration_cost_s * 1e3,
+            rep.infeasible_epochs,
+            rep.final_backlog_tokens
+        );
+    }
+    println!("done — `adapterd experiment drift` writes this comparison to results/drift/");
+    Ok(())
+}

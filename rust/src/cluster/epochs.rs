@@ -1,0 +1,482 @@
+//! Rolling-horizon epoch runner (DESIGN.md §7): drives the cluster layer
+//! epoch-by-epoch over a drifting workload, re-planning placements online.
+//!
+//! Each epoch of a [`DriftSpec`] is planned under a [`ReplanPolicy`]
+//! (plan-once static, migration-aware incremental replan, or an oracle
+//! that re-runs Alg. 1 from scratch with free migrations), then served on
+//! the engine or the Digital Twin through the existing per-GPU parallel
+//! cluster runners.  State carried across epoch boundaries:
+//!
+//! - the **previous placement** — the incremental replanner's starting
+//!   point, and the migration baseline for every policy's accounting;
+//! - the **queue backlog** (tokens): each epoch's unserved demand,
+//!   `max(0, incoming − served)·epoch_s`, accumulates across the horizon
+//!   instead of being dropped, so a starved epoch leaves a visible
+//!   deficit in every later record and `final_backlog_tokens` is the
+//!   horizon's total unserved demand.  Unserved *requests* are accounted,
+//!   not re-injected into later epochs (re-injection with a KV-handoff
+//!   cost model is a ROADMAP item); KV state itself is never shipped
+//!   between epochs — migrated requests re-prefill, matching the engine's
+//!   recompute-preemption semantics (§3.2).
+//!
+//! When planning fails for an epoch (predicted starvation), the runner
+//! keeps serving on the stale placement — what a production control loop
+//! would do — and flags the epoch infeasible if demand goes unserved.
+
+use super::{run_on_engine, run_on_twin, ClusterReport};
+use crate::config::EngineConfig;
+use crate::dt::{Calibration, LengthVariant};
+use crate::placement::replan::{replan, MigrationCost, ReplanParams};
+use crate::placement::{greedy, Placement};
+use crate::runtime::Backend;
+use crate::workload::drift::DriftSpec;
+use crate::workload::WorkloadSpec;
+use anyhow::Result;
+use std::time::Instant;
+
+/// How each epoch's placement is derived from the previous one.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReplanPolicy {
+    /// Plan once for the union workload (every adapter that ever appears,
+    /// at its peak rate) and hold that placement for the whole horizon —
+    /// the static-provisioning baseline.
+    Static,
+    /// Migration-aware incremental replanning per epoch
+    /// ([`crate::placement::replan`]).
+    Replan(ReplanParams),
+    /// Fresh Alg. 1 run per epoch, ignoring the previous placement when
+    /// planning (migrations are free): the per-epoch GPU-count lower
+    /// bound.  The [`MigrationCost`] model is still used to *report* the
+    /// migration burden this policy silently incurs, comparably to
+    /// `Replan`.
+    Oracle(MigrationCost),
+}
+
+/// One epoch's outcome.
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    /// Epoch index within the horizon.
+    pub epoch: usize,
+    /// Adapters active in this epoch.
+    pub adapters: usize,
+    /// Whether any placement (fresh or carried-over) was available.
+    pub planned: bool,
+    /// Whether a *fresh* plan was produced this epoch (false when serving
+    /// continued on a stale placement after a planning failure).
+    pub replanned: bool,
+    /// GPUs provisioned by the active placement.
+    pub gpus_used: usize,
+    /// Adapters that changed GPU relative to the previous epoch.
+    pub migrations: usize,
+    /// Modeled migration latency this epoch (seconds).
+    pub migration_cost_s: f64,
+    /// Wall-clock spent planning this epoch (seconds).
+    pub plan_wall_s: f64,
+    /// Aggregate served throughput (tok/s).
+    pub throughput_tok_s: f64,
+    /// Aggregate incoming token rate, including demand for adapters the
+    /// active placement does not cover (tok/s).
+    pub incoming_tok_s: f64,
+    /// Any GPU starved, or some active adapter had no GPU at all.
+    pub starved: bool,
+    /// Any GPU hit the static-reservation memory error.
+    pub memory_error: bool,
+    /// Cumulative unserved demand carried *into* this epoch (tokens).
+    pub carried_in_backlog_tokens: f64,
+    /// Cumulative unserved demand at the end of this epoch (tokens).
+    pub backlog_tokens: f64,
+}
+
+impl EpochRecord {
+    /// An epoch is feasible when it had a placement and served its demand
+    /// without starvation or memory errors.
+    pub fn feasible(&self) -> bool {
+        self.planned && !self.starved && !self.memory_error
+    }
+}
+
+/// Horizon-level aggregate over all epochs.
+#[derive(Debug, Clone)]
+pub struct DriftReport {
+    /// Per-epoch records, in epoch order.
+    pub per_epoch: Vec<EpochRecord>,
+    /// Σ provisioned GPUs over epochs — the cost metric the drift
+    /// experiment compares across policies.
+    pub gpu_epochs: usize,
+    /// Σ migrations over epochs.
+    pub total_migrations: usize,
+    /// Σ modeled migration latency (seconds).
+    pub total_migration_cost_s: f64,
+    /// Number of infeasible epochs (see [`EpochRecord::feasible`]).
+    pub infeasible_epochs: usize,
+    /// Mean served throughput across epochs (tok/s).
+    pub mean_throughput_tok_s: f64,
+    /// Total unserved demand over the whole horizon (tokens).
+    pub final_backlog_tokens: f64,
+}
+
+impl DriftReport {
+    /// True when every epoch was feasible.
+    pub fn feasible(&self) -> bool {
+        self.infeasible_epochs == 0
+    }
+
+    fn from_records(per_epoch: Vec<EpochRecord>) -> DriftReport {
+        let n = per_epoch.len().max(1) as f64;
+        DriftReport {
+            gpu_epochs: per_epoch.iter().map(|r| r.gpus_used).sum(),
+            total_migrations: per_epoch.iter().map(|r| r.migrations).sum(),
+            total_migration_cost_s: per_epoch.iter().map(|r| r.migration_cost_s).sum(),
+            infeasible_epochs: per_epoch.iter().filter(|r| !r.feasible()).count(),
+            mean_throughput_tok_s: per_epoch.iter().map(|r| r.throughput_tok_s).sum::<f64>() / n,
+            final_backlog_tokens: per_epoch.last().map(|r| r.backlog_tokens).unwrap_or(0.0),
+            per_epoch,
+        }
+    }
+}
+
+/// Migrations of `next` relative to `prev` over the epoch's adapter set,
+/// costed with the fig6 load-time model.
+fn migration_diff(
+    prev: Option<&Placement>,
+    next: &Placement,
+    adapters: &[crate::workload::AdapterSpec],
+    cost: &MigrationCost,
+) -> (usize, f64) {
+    let Some(prev) = prev else {
+        return (0, 0.0);
+    };
+    let mut migrations = 0;
+    let mut total = 0.0;
+    for a in adapters {
+        if let (Some(&pg), Some(&ng)) = (prev.assignment.get(&a.id), next.assignment.get(&a.id)) {
+            if pg != ng {
+                migrations += 1;
+                total += cost.load_s(a.rank);
+            }
+        }
+    }
+    (migrations, total)
+}
+
+/// Run the rolling horizon, serving each epoch with `serve` (engine or
+/// twin — both delegate to the per-GPU parallel cluster runners).
+fn run_epochs_with<F>(
+    drift: &DriftSpec,
+    gpus: usize,
+    models: &crate::ml::MlModels,
+    policy: &ReplanPolicy,
+    mut serve: F,
+) -> Result<DriftReport>
+where
+    F: FnMut(&Placement, &WorkloadSpec) -> Result<ClusterReport>,
+{
+    let cost_model = match policy {
+        ReplanPolicy::Replan(p) => p.cost,
+        ReplanPolicy::Oracle(c) => *c,
+        ReplanPolicy::Static => MigrationCost::default(), // never charged: 0 migrations
+    };
+    let t_static = Instant::now();
+    let static_placement: Option<Placement> = match policy {
+        ReplanPolicy::Static => greedy::place(&drift.union_adapters(), gpus, models).ok(),
+        _ => None,
+    };
+    // The plan-once cost is real planning work: charge it to epoch 0.
+    let static_plan_s =
+        if matches!(policy, ReplanPolicy::Static) { t_static.elapsed().as_secs_f64() } else { 0.0 };
+
+    let mut prev: Option<Placement> = None;
+    let mut backlog = 0.0f64;
+    let mut records: Vec<EpochRecord> = Vec::with_capacity(drift.epochs);
+
+    for epoch in 0..drift.epochs {
+        let spec = drift.epoch_spec(epoch);
+        let t_plan = Instant::now();
+        let (fresh, migrations, migration_cost_s) = match policy {
+            ReplanPolicy::Static => (static_placement.clone(), 0, 0.0),
+            ReplanPolicy::Oracle(_) => match greedy::place(&spec.adapters, gpus, models) {
+                Ok(p) => {
+                    let (m, c) = migration_diff(prev.as_ref(), &p, &spec.adapters, &cost_model);
+                    (Some(p), m, c)
+                }
+                Err(_) => (None, 0, 0.0),
+            },
+            ReplanPolicy::Replan(params) => {
+                match replan(prev.as_ref(), &spec.adapters, gpus, models, params) {
+                    Ok(out) => (Some(out.placement), out.migrations, out.migration_cost_s),
+                    Err(_) => (None, 0, 0.0),
+                }
+            }
+        };
+        let plan_wall_s =
+            t_plan.elapsed().as_secs_f64() + if epoch == 0 { static_plan_s } else { 0.0 };
+        // Static merely clones its plan-once placement after epoch 0 —
+        // that is not a fresh planner invocation.
+        let replanned = match policy {
+            ReplanPolicy::Static => epoch == 0 && fresh.is_some(),
+            _ => fresh.is_some(),
+        };
+        // Planning failure: keep serving on the stale placement.
+        let active: Option<Placement> = fresh.or_else(|| prev.clone());
+
+        let mut throughput = 0.0;
+        let mut incoming = 0.0;
+        let mut starved = false;
+        let mut memory_error = false;
+        let mut gpus_used = 0;
+        if let Some(p) = &active {
+            let rep = serve(p, &spec)?;
+            gpus_used = p.gpus_used();
+            throughput = rep.total_throughput_tok_s;
+            starved = rep.starved;
+            memory_error = rep.memory_error;
+            // Incoming demand: realized rate per healthy GPU; for a GPU
+            // that hit the memory error (report None) charge its assigned
+            // adapters' expected demand — it served nothing, but its load
+            // must still enter the backlog.  `gpu_jobs` is the same
+            // ordering the cluster runners built `per_gpu` from.
+            for ((_, ids), r) in super::gpu_jobs(p).iter().zip(&rep.per_gpu) {
+                match r {
+                    Some(r) => incoming += r.incoming_token_rate,
+                    None => incoming += spec.subset(ids, 0).incoming_token_rate(),
+                }
+            }
+            // Demand for adapters the placement does not cover is unserved
+            // by definition: count it as incoming and flag starvation.
+            let missing: Vec<usize> = spec
+                .adapters
+                .iter()
+                .map(|a| a.id)
+                .filter(|id| !p.assignment.contains_key(id))
+                .collect();
+            if !missing.is_empty() {
+                incoming += spec.subset(&missing, 0).incoming_token_rate();
+                starved = true;
+            }
+        } else {
+            incoming = spec.incoming_token_rate();
+            starved = !spec.adapters.is_empty();
+        }
+
+        let carried_in = backlog;
+        backlog += (incoming - throughput).max(0.0) * drift.epoch_s;
+        records.push(EpochRecord {
+            epoch,
+            adapters: spec.adapters.len(),
+            planned: active.is_some(),
+            replanned,
+            gpus_used,
+            migrations,
+            migration_cost_s,
+            plan_wall_s,
+            throughput_tok_s: throughput,
+            incoming_tok_s: incoming,
+            starved,
+            memory_error,
+            carried_in_backlog_tokens: carried_in,
+            backlog_tokens: backlog,
+        });
+        prev = active;
+    }
+    Ok(DriftReport::from_records(records))
+}
+
+/// Serve the rolling horizon on the Digital Twin (fast path: sweeps and
+/// the quick-scale drift experiment).
+pub fn run_epochs_on_twin(
+    calib: &Calibration,
+    base: &EngineConfig,
+    drift: &DriftSpec,
+    gpus: usize,
+    models: &crate::ml::MlModels,
+    policy: &ReplanPolicy,
+    variant: LengthVariant,
+) -> Result<DriftReport> {
+    run_epochs_with(drift, gpus, models, policy, |p, spec| {
+        Ok(run_on_twin(calib, base, p, spec, variant))
+    })
+}
+
+/// Serve the rolling horizon on the real engine (one backend per GPU per
+/// epoch, created inside the worker threads — see [`run_on_engine`]).
+pub fn run_epochs_on_engine<F>(
+    make_backend: &F,
+    base: &EngineConfig,
+    drift: &DriftSpec,
+    gpus: usize,
+    models: &crate::ml::MlModels,
+    policy: &ReplanPolicy,
+) -> Result<DriftReport>
+where
+    F: Fn() -> Result<Box<dyn Backend>> + Sync,
+{
+    run_epochs_with(drift, gpus, models, policy, |p, spec| {
+        run_on_engine(make_backend, base, p, spec)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::MlModels;
+    use crate::workload::drift::{AdapterPhase, RateDrift};
+    use crate::workload::{AdapterSpec, WorkloadSpec};
+
+    /// Shared analytic stand-in models (see `placement::test_models`).
+    fn fake_models() -> MlModels {
+        crate::placement::test_models::analytic_models(21)
+    }
+
+    /// A burst-then-quiet churn: heavy burst adapters in epochs [0, 2),
+    /// light base adapters for the whole 4-epoch horizon.
+    fn burst_drift() -> DriftSpec {
+        let mut phases: Vec<AdapterPhase> = (0..8)
+            .map(|id| AdapterPhase {
+                adapter: AdapterSpec { id, rank: 8, rate: 0.05 },
+                arrive_epoch: 0,
+                retire_epoch: usize::MAX,
+            })
+            .collect();
+        for i in 0..80 {
+            phases.push(AdapterPhase {
+                adapter: AdapterSpec { id: 8 + i, rank: 8, rate: 0.2 },
+                arrive_epoch: 0,
+                retire_epoch: 2,
+            });
+        }
+        DriftSpec { phases, drift: RateDrift::None, epochs: 4, epoch_s: 5.0, seed: 77 }
+    }
+
+    #[test]
+    fn steady_workload_replans_without_migrations() {
+        let models = fake_models();
+        let drift = DriftSpec::steady(WorkloadSpec::homogeneous(16, 8, 0.05), 3, 5.0, 5);
+        let rep = run_epochs_on_twin(
+            &Calibration::default(),
+            &EngineConfig::default(),
+            &drift,
+            4,
+            &models,
+            &ReplanPolicy::Replan(ReplanParams::default()),
+            LengthVariant::Original,
+        )
+        .unwrap();
+        assert_eq!(rep.per_epoch.len(), 3);
+        assert_eq!(rep.total_migrations, 0);
+        let g0 = rep.per_epoch[0].gpus_used;
+        assert!(rep.per_epoch.iter().all(|r| r.gpus_used == g0));
+        assert!(rep.per_epoch.iter().all(|r| r.replanned));
+    }
+
+    #[test]
+    fn static_policy_holds_one_placement() {
+        let models = fake_models();
+        let rep = run_epochs_on_twin(
+            &Calibration::default(),
+            &EngineConfig::default(),
+            &burst_drift(),
+            4,
+            &models,
+            &ReplanPolicy::Static,
+            LengthVariant::Original,
+        )
+        .unwrap();
+        assert_eq!(rep.total_migrations, 0);
+        let g0 = rep.per_epoch[0].gpus_used;
+        assert!(g0 >= 2, "union burst workload must need >1 GPU, got {g0}");
+        assert!(rep.per_epoch.iter().all(|r| r.gpus_used == g0));
+    }
+
+    #[test]
+    fn replan_uses_fewer_gpu_epochs_than_static_under_churn() {
+        let models = fake_models();
+        let calib = Calibration::default();
+        let base = EngineConfig::default();
+        let drift = burst_drift();
+        let stat = run_epochs_on_twin(
+            &calib,
+            &base,
+            &drift,
+            4,
+            &models,
+            &ReplanPolicy::Static,
+            LengthVariant::Original,
+        )
+        .unwrap();
+        let repl = run_epochs_on_twin(
+            &calib,
+            &base,
+            &drift,
+            4,
+            &models,
+            &ReplanPolicy::Replan(ReplanParams::default()),
+            LengthVariant::Original,
+        )
+        .unwrap();
+        let orac = run_epochs_on_twin(
+            &calib,
+            &base,
+            &drift,
+            4,
+            &models,
+            &ReplanPolicy::Oracle(MigrationCost::default()),
+            LengthVariant::Original,
+        )
+        .unwrap();
+        // The burst retires after epoch 2: replanning must shed GPUs.
+        assert!(
+            repl.gpu_epochs < stat.gpu_epochs,
+            "replan {} !< static {}",
+            repl.gpu_epochs,
+            stat.gpu_epochs
+        );
+        // The oracle is the per-epoch lower bound.
+        assert!(orac.gpu_epochs <= repl.gpu_epochs);
+        // Quiet epochs shrink to fewer GPUs than the burst epochs.
+        assert!(repl.per_epoch[3].gpus_used < repl.per_epoch[0].gpus_used);
+    }
+
+    #[test]
+    fn backlog_accounting_carries_across_epochs() {
+        let models = fake_models();
+        let rep = run_epochs_on_twin(
+            &Calibration::default(),
+            &EngineConfig::default(),
+            &burst_drift(),
+            4,
+            &models,
+            &ReplanPolicy::Replan(ReplanParams::default()),
+            LengthVariant::Original,
+        )
+        .unwrap();
+        for w in rep.per_epoch.windows(2) {
+            assert_eq!(
+                w[1].carried_in_backlog_tokens.to_bits(),
+                w[0].backlog_tokens.to_bits(),
+                "backlog must be carried verbatim across the boundary"
+            );
+        }
+        assert!(rep.per_epoch.iter().all(|r| r.backlog_tokens >= 0.0));
+        assert_eq!(rep.final_backlog_tokens.to_bits(), rep.per_epoch[3].backlog_tokens.to_bits());
+    }
+
+    #[test]
+    fn epoch_runner_works_on_engine_backend() {
+        let models = fake_models();
+        let drift = DriftSpec::steady(WorkloadSpec::homogeneous(4, 8, 0.2), 2, 2.0, 9);
+        let base = EngineConfig::default();
+        let missing = std::path::Path::new("/nonexistent");
+        let make = || crate::runtime::load_backend(missing, "pico-llama");
+        let rep = run_epochs_on_engine(
+            &make,
+            &base,
+            &drift,
+            2,
+            &models,
+            &ReplanPolicy::Replan(ReplanParams::default()),
+        )
+        .unwrap();
+        assert_eq!(rep.per_epoch.len(), 2);
+        assert!(rep.per_epoch.iter().all(|r| r.planned));
+    }
+}

@@ -8,6 +8,11 @@
 //! over [`parallel_map`]: each GPU gets its own backend instance (engine
 //! path) or its own twin simulation, with the same deterministic per-GPU
 //! seeds and the same `per_gpu` report ordering as a serial sweep.
+//!
+//! [`epochs`] lifts these one-shot runners into a rolling-horizon control
+//! loop that replans placements as the workload drifts (DESIGN.md §7).
+
+pub mod epochs;
 
 use crate::config::EngineConfig;
 use crate::dt::{Calibration, LengthVariant};
@@ -22,21 +27,26 @@ use anyhow::Result;
 /// Aggregated result of serving one workload under one placement.
 #[derive(Debug, Clone)]
 pub struct ClusterReport {
+    /// Per-GPU serving reports in GPU order (`None` = memory error).
     pub per_gpu: Vec<Option<Report>>,
     /// Any GPU hit the static-reservation memory error.
     pub memory_error: bool,
     /// Any GPU starved (paper: allocations are validated per GPU).
     pub starved: bool,
+    /// Sum of per-GPU throughputs (tok/s).
     pub total_throughput_tok_s: f64,
     /// Request-weighted mean ITL across GPUs (s).
     pub itl_mean_s: f64,
+    /// Request-weighted mean TTFT across GPUs (s).
     pub ttft_mean_s: f64,
+    /// GPUs the placement actually provisioned.
     pub gpus_used: usize,
     /// Total wall-clock of the validation runs.
     pub wall_s: f64,
 }
 
 impl ClusterReport {
+    /// Neither starved nor out of memory — the paper's feasibility test.
     pub fn feasible(&self) -> bool {
         !self.memory_error && !self.starved
     }
@@ -102,6 +112,25 @@ fn gpu_jobs(placement: &Placement) -> Vec<(usize, Vec<usize>)> {
 /// system").  Per-GPU engines are independent, so the runs execute in
 /// parallel; `make_backend` is called once per GPU *inside* its worker
 /// thread (backends need not be `Send` — PJRT handles are not).
+///
+/// ```no_run
+/// use adapter_serving::cluster::run_on_engine;
+/// use adapter_serving::config::EngineConfig;
+/// use adapter_serving::placement::Placement;
+/// use adapter_serving::runtime::{load_backend, Manifest};
+/// use adapter_serving::workload::WorkloadSpec;
+/// # fn main() -> anyhow::Result<()> {
+/// let spec = WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(4, 8, 0.2), 5.0, 3);
+/// let mut p = Placement { assignment: Default::default(), a_max: vec![4] };
+/// for a in &spec.adapters {
+///     p.assignment.insert(a.id, 0);
+/// }
+/// let make = || load_backend(&Manifest::default_dir(), "pico-llama");
+/// let rep = run_on_engine(&make, &EngineConfig::default(), &p, &spec)?;
+/// println!("served {:.0} tok/s on {} GPU(s)", rep.total_throughput_tok_s, rep.gpus_used);
+/// # Ok(())
+/// # }
+/// ```
 pub fn run_on_engine<F>(
     make_backend: &F,
     base: &EngineConfig,
@@ -149,6 +178,23 @@ where
 
 /// Validate a placement on the Digital Twin (fast path for sweeps),
 /// parallelized across GPUs with the default worker count.
+///
+/// ```
+/// use adapter_serving::cluster::run_on_twin;
+/// use adapter_serving::config::EngineConfig;
+/// use adapter_serving::dt::{Calibration, LengthVariant};
+/// use adapter_serving::placement::Placement;
+/// use adapter_serving::workload::WorkloadSpec;
+/// let spec = WorkloadSpec::fixed_len(WorkloadSpec::homogeneous(4, 8, 0.2), 64, 16, 5.0, 3);
+/// let mut p = Placement { assignment: Default::default(), a_max: vec![2, 2] };
+/// for a in &spec.adapters {
+///     p.assignment.insert(a.id, a.id % 2);
+/// }
+/// let rep = run_on_twin(&Calibration::default(), &EngineConfig::default(), &p, &spec,
+///                       LengthVariant::Original);
+/// assert_eq!(rep.gpus_used, 2);
+/// assert!(rep.total_throughput_tok_s > 0.0);
+/// ```
 pub fn run_on_twin(
     calib: &Calibration,
     base: &EngineConfig,

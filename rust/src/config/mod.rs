@@ -56,6 +56,7 @@ impl MemoryConfig {
         }
     }
 
+    /// Serialize to the JSON config format.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("total_tokens", Json::Num(self.total_tokens as f64)),
@@ -65,6 +66,7 @@ impl MemoryConfig {
         ])
     }
 
+    /// Parse from JSON; absent keys fall back to the defaults.
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
         let d = MemoryConfig::default();
         Ok(MemoryConfig {
@@ -89,6 +91,7 @@ pub struct EngineConfig {
     /// Per-adapter memory footprint cap as a rank (the paper's S_max);
     /// vLLM reserves this uniformly for every slot.
     pub s_max_rank: usize,
+    /// The simulated-GPU memory ledger configuration.
     pub mem: MemoryConfig,
     /// vLLM's max_num_seqs: cap on requests in the running batch.  Also
     /// bounded by the largest compiled decode bucket.
@@ -100,6 +103,7 @@ pub struct EngineConfig {
     pub load_disk_mult: f64,
     /// Whether adapters are preloaded in CPU memory (vs loaded from disk).
     pub preload_cpu: bool,
+    /// Engine-instance seed (per-GPU seeds are derived from it).
     pub seed: u64,
 }
 
@@ -129,6 +133,7 @@ impl EngineConfig {
         }
     }
 
+    /// Serialize to the JSON config format.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::Str(self.model.clone())),
@@ -143,6 +148,7 @@ impl EngineConfig {
         ])
     }
 
+    /// Parse from JSON; absent keys fall back to the defaults.
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
         let d = EngineConfig::default();
         Ok(EngineConfig {
@@ -164,10 +170,12 @@ impl EngineConfig {
         })
     }
 
+    /// Load a config file written by [`EngineConfig::save`].
     pub fn load(path: &Path) -> anyhow::Result<Self> {
         Self::from_json(&Json::read_file(path)?)
     }
 
+    /// Persist the config as JSON.
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
         self.to_json().write_file(path)
     }
@@ -176,11 +184,14 @@ impl EngineConfig {
 /// A multi-GPU deployment: `gpus` engines sharing one compiled model.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
+    /// Number of simulated GPUs (one engine instance each).
     pub gpus: usize,
+    /// The per-GPU engine configuration.
     pub engine: EngineConfig,
 }
 
 impl ClusterConfig {
+    /// Bundle a GPU count with its per-GPU engine configuration.
     pub fn new(gpus: usize, engine: EngineConfig) -> Self {
         ClusterConfig { gpus, engine }
     }

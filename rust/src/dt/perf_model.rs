@@ -20,6 +20,7 @@ use std::collections::BTreeMap;
 /// Calibrated constants for one (backbone model, hardware) pair.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Calibration {
+    /// The backbone model these constants were fitted for.
     pub model: String,
     /// Scheduler: K1·B + K2·R_P + K3·R_P·(A_B/A) + bias (seconds).
     pub k_sched: [f64; 4],
@@ -113,10 +114,12 @@ impl Calibration {
             .unwrap_or_else(|| self.prefill_buckets.last().copied().unwrap_or(len))
     }
 
+    /// Largest compiled decode bucket (the engine's batch-size cap).
     pub fn max_decode_bucket(&self) -> usize {
         self.decode_buckets.last().copied().unwrap_or(64)
     }
 
+    /// Largest compiled prefill bucket (prompt-length cap).
     pub fn max_prefill_bucket(&self) -> usize {
         self.prefill_buckets.last().copied().unwrap_or(256)
     }
@@ -186,6 +189,8 @@ impl Calibration {
     }
 
     // ------------------------------------------------------------------
+
+    /// Serialize to the calibration JSON format.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::Str(self.model.clone())),
@@ -216,6 +221,7 @@ impl Calibration {
         ])
     }
 
+    /// Parse a calibration written by [`Calibration::to_json`].
     pub fn from_json(j: &Json) -> anyhow::Result<Calibration> {
         let arr = |k: &str, n: usize| -> anyhow::Result<Vec<f64>> {
             let v = j.req(k)?.f64_vec().ok_or_else(|| anyhow::anyhow!("{k} not array"))?;
@@ -253,6 +259,8 @@ impl Calibration {
         })
     }
 
+    /// Load a calibration file (either a single calibration or a map keyed
+    /// by model name).
     pub fn load_file(path: &std::path::Path, model: &str) -> anyhow::Result<Calibration> {
         let j = Json::read_file(path)?;
         // File may hold one calibration or a map keyed by model.

@@ -33,7 +33,9 @@ pub enum LengthVariant {
 
 /// Result of a twin run.
 pub struct TwinResult {
+    /// Serving report; `None` on memory error.
     pub report: Option<Report>,
+    /// Static reservation exceeded GPU memory (infeasible configuration).
     pub memory_error: bool,
     /// Wall-clock seconds the simulation itself took (Table 2).
     pub wall_s: f64,

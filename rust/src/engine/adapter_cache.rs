@@ -12,7 +12,9 @@ use std::collections::HashMap;
 /// A swap-in event (for load-latency accounting).
 #[derive(Debug, Clone, PartialEq)]
 pub struct LoadEvent {
+    /// The adapter that was swapped in.
     pub adapter_id: usize,
+    /// Its LoRA rank (drives the modeled PCIe transfer latency).
     pub rank: usize,
 }
 
@@ -33,18 +35,22 @@ struct AdapterState {
 }
 
 impl SimAdapterCache {
+    /// An empty cache bounded by `a_max` resident adapters.
     pub fn new(a_max: usize) -> SimAdapterCache {
         SimAdapterCache { a_max, resident: HashMap::new(), tick: 0 }
     }
 
+    /// The configured residency bound (the paper's `A_max`).
     pub fn a_max(&self) -> usize {
         self.a_max
     }
 
+    /// Whether `adapter` is currently resident.
     pub fn loaded(&self, adapter: usize) -> bool {
         self.resident.contains_key(&adapter)
     }
 
+    /// Number of resident adapters.
     pub fn resident_count(&self) -> usize {
         self.resident.len()
     }
@@ -103,6 +109,7 @@ impl SimAdapterCache {
         }
     }
 
+    /// Number of in-flight requests currently using `adapter`.
     pub fn active_count(&self, adapter: usize) -> usize {
         self.resident.get(&adapter).map(|s| s.active).unwrap_or(0)
     }
@@ -132,10 +139,13 @@ pub enum PhysSlot {
 }
 
 impl PhysBank {
+    /// A bank with `slots` physical slots (slot 0 reserved for the zero
+    /// adapter).
     pub fn new(slots: usize) -> PhysBank {
         PhysBank { slots, map: HashMap::new(), owner: vec![None; slots], tick: 0 }
     }
 
+    /// The reserved all-zero adapter slot (backbone-only batch rows).
     pub fn zero_slot() -> usize {
         0
     }
@@ -172,6 +182,7 @@ impl PhysBank {
         }
     }
 
+    /// The physical slot currently holding `adapter`, if resident.
     pub fn slot_of(&self, adapter: usize) -> Option<usize> {
         self.map.get(&adapter).copied()
     }

@@ -40,14 +40,17 @@ impl KvLedger {
         }
     }
 
+    /// Tokens per KV block (vLLM paged-attention granularity).
     pub fn block_tokens(&self) -> usize {
         self.mem.block_tokens
     }
 
+    /// Total pool size in blocks.
     pub fn total_blocks(&self) -> usize {
         self.total_blocks
     }
 
+    /// Blocks currently unallocated.
     pub fn free_blocks(&self) -> usize {
         self.free_blocks
     }
@@ -69,6 +72,7 @@ impl KvLedger {
         true
     }
 
+    /// Release a unified-mode adapter charge (eviction).
     pub fn release_adapter(&mut self, rank: usize) {
         let blocks = self.blocks_for(self.mem.adapter_tokens(rank).ceil() as usize);
         self.free_blocks = (self.free_blocks + blocks).min(self.total_blocks);
@@ -101,6 +105,7 @@ impl KvLedger {
         }
     }
 
+    /// Blocks currently held by request `id`.
     pub fn held_blocks(&self, id: usize) -> usize {
         self.held.get(&id).copied().unwrap_or(0)
     }
@@ -116,8 +121,11 @@ impl KvLedger {
 /// building the decode window).
 #[derive(Debug, Default, Clone)]
 pub struct RequestKv {
+    /// Key pages, `[token, layer, d]` flattened.
     pub k: Vec<f32>,
+    /// Value pages, `[token, layer, d]` flattened.
     pub v: Vec<f32>,
+    /// Tokens currently stored.
     pub tokens: usize,
 }
 
@@ -156,6 +164,8 @@ impl RequestKv {
         self.tokens = true_len;
     }
 
+    /// Drop all stored KV (request finished or preempted; vLLM recompute
+    /// semantics re-prefill on resume).
     pub fn clear(&mut self) {
         self.k.clear();
         self.v.clear();

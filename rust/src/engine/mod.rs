@@ -36,13 +36,16 @@ use std::time::Instant;
 pub struct RunResult {
     /// None on memory error (the paper's infeasible configurations).
     pub report: Option<Report>,
+    /// Static reservation exceeded GPU memory before serving started.
     pub memory_error: bool,
+    /// Per-iteration component profile of the run.
     pub profiler: Profiler,
     /// Wall-clock time the run took (Table 2 compares DT time against this).
     pub wall_s: f64,
 }
 
 impl RunResult {
+    /// The result of a run that failed the static reservation check.
     pub fn memory_error(wall_s: f64) -> RunResult {
         RunResult { report: None, memory_error: true, profiler: Profiler::default(), wall_s }
     }
@@ -50,6 +53,7 @@ impl RunResult {
 
 /// One simulated GPU running the pico model through a [`Backend`].
 pub struct Engine<'rt> {
+    /// The engine configuration this instance serves under.
     pub cfg: EngineConfig,
     rt: &'rt mut dyn Backend,
     phys_bank: Option<PhysBank>,
@@ -61,6 +65,8 @@ pub struct Engine<'rt> {
 }
 
 impl<'rt> Engine<'rt> {
+    /// Create an engine over a backend ("one GPU" — the backend instance
+    /// is exclusively owned for the engine's lifetime).
     pub fn new(cfg: EngineConfig, rt: &'rt mut dyn Backend) -> Engine<'rt> {
         Engine { cfg, rt, phys_bank: None, last_bucket: 0 }
     }

@@ -8,6 +8,7 @@
 /// One engine iteration's profile record.
 #[derive(Debug, Clone, Default)]
 pub struct IterRecord {
+    /// Simulated time at the end of the iteration (s).
     pub sim_time_s: f64,
     /// Batch size fed to the decode step (0 for prefill iterations).
     pub batch: usize,
@@ -38,16 +39,19 @@ pub struct IterRecord {
 /// Collects iteration records; cheap to keep always-on.
 #[derive(Debug, Default)]
 pub struct Profiler {
+    /// One record per engine iteration, in execution order.
     pub iters: Vec<IterRecord>,
     /// (rank, modeled_s, measured_upload_s) per swap-in.
     pub load_events: Vec<(usize, f64, f64)>,
 }
 
 impl Profiler {
+    /// Append one iteration record.
     pub fn record(&mut self, rec: IterRecord) {
         self.iters.push(rec);
     }
 
+    /// Append one swap-in event (modeled PCIe + measured upload time).
     pub fn record_load(&mut self, rank: usize, modeled_s: f64, upload_s: f64) {
         self.load_events.push((rank, modeled_s, upload_s));
     }
@@ -57,14 +61,17 @@ impl Profiler {
         self.iters.iter().filter(|r| !r.prefill && r.batch > 0)
     }
 
+    /// Total measured scheduler time (s).
     pub fn total_sched_s(&self) -> f64 {
         self.iters.iter().map(|r| r.sched_s).sum()
     }
 
+    /// Total measured execute time (s).
     pub fn total_exec_s(&self) -> f64 {
         self.iters.iter().map(|r| r.exec_s).sum()
     }
 
+    /// Total swap-in cost charged (s).
     pub fn total_load_s(&self) -> f64 {
         self.iters.iter().map(|r| r.load_s).sum()
     }

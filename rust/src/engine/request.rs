@@ -2,6 +2,7 @@
 
 use super::kv::RequestKv;
 
+/// Lifecycle state of one request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ReqState {
     /// In the waiting queue (never scheduled, or preempted).
@@ -10,33 +11,48 @@ pub enum ReqState {
     Prefilling,
     /// In the running batch, generating tokens.
     Running,
+    /// Generation budget reached; metrics recorded.
     Finished,
 }
 
+/// One request flowing through the continuous-batching loop.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Request id (= position in the arrival trace).
     pub id: usize,
+    /// The adapter this request targets.
     pub adapter_id: usize,
+    /// The adapter's LoRA rank (0 = backbone-only request).
     pub rank: usize,
+    /// Arrival time (simulated seconds).
     pub arrival_s: f64,
+    /// Prompt length (tokens).
     pub input_len: usize,
     /// Target number of generated tokens (benchmark-style fixed budget,
     /// vLLM `ignore_eos`; the paper's traces fix output lengths the same way).
     pub output_len: usize,
+    /// Current lifecycle state.
     pub state: ReqState,
     /// Tokens currently represented in (simulated and host) KV.
     pub context_len: usize,
+    /// Tokens generated so far.
     pub generated: usize,
+    /// Most recent token (decode input for the next step).
     pub last_token: i32,
+    /// Simulated time the first token was produced, once known.
     pub first_token_s: Option<f64>,
     /// Sim-time stamps of generated tokens (ITL = successive diffs).
     pub token_times: Vec<f64>,
+    /// Simulated finish time, once finished.
     pub finish_s: Option<f64>,
+    /// Times this request was preempted.
     pub preemptions: usize,
+    /// The request's real host-side KV pages.
     pub kv: RequestKv,
 }
 
 impl Request {
+    /// A fresh request in the `Waiting` state.
     pub fn new(
         id: usize,
         adapter_id: usize,
@@ -76,6 +92,7 @@ impl Request {
             .collect()
     }
 
+    /// Whether the generation budget has been reached.
     pub fn is_done(&self) -> bool {
         self.generated >= self.output_len
     }
@@ -89,6 +106,7 @@ impl Request {
         Some(d / (self.token_times.len() - 1) as f64)
     }
 
+    /// Time to first token (s), once the first token exists.
     pub fn ttft(&self) -> Option<f64> {
         self.first_token_s.map(|t| t - self.arrival_s)
     }

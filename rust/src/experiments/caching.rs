@@ -36,17 +36,12 @@ fn scenario(n: usize, rates: &str, sizes: &str, seed: u64) -> Vec<AdapterSpec> {
 /// Estimate the backbone's max throughput (for MaxBase) from calibration.
 fn backbone_max_tok_s(ctx: &ExpContext, rt: &mut dyn crate::runtime::Backend) -> Result<f64> {
     let calib = ctx.calibration(rt)?;
-    let best = calib
-        .decode_buckets
-        .iter()
-        .map(|&b| b as f64 / calib.lat_model(b, b, 0).max(1e-9))
-        .fold(0.0, f64::max);
-    Ok(best)
+    Ok(super::common::backbone_max_tok_s(&calib))
 }
 
 /// Mean tokens per request under the ShareGPT-like length model.
 fn tokens_per_request(spec: &WorkloadSpec) -> f64 {
-    spec.input_len.mean_clipped() + spec.output_len.mean_clipped()
+    super::common::tokens_per_request(spec)
 }
 
 /// Validate a placement result; returns row fields

@@ -13,6 +13,7 @@ use crate::workload::{AdapterSpec, WorkloadSpec};
 use anyhow::Result;
 use std::path::PathBuf;
 
+/// Experiment scale selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scale {
     /// Minutes-scale runs used by `cargo bench` and CI.
@@ -22,6 +23,7 @@ pub enum Scale {
 }
 
 impl Scale {
+    /// Parse a `--scale` CLI value ("full" → Full, everything else Quick).
     pub fn parse(s: &str) -> Scale {
         if s.eq_ignore_ascii_case("full") {
             Scale::Full
@@ -30,20 +32,29 @@ impl Scale {
         }
     }
 
+    /// Whether this is the quick (CI) scale.
     pub fn is_quick(&self) -> bool {
         matches!(self, Scale::Quick)
     }
 }
 
+/// Shared experiment state: scale, output/artifact dirs, and the cached
+/// pipeline stages (calibration → dataset → trained models).
 pub struct ExpContext {
+    /// Quick (CI) or full (paper-scale) sweeps.
     pub scale: Scale,
+    /// Where `results/<id>/` artifacts are written.
     pub out_dir: PathBuf,
+    /// AOT artifact directory for backend loading.
     pub artifacts: PathBuf,
+    /// Worker threads for parallel sweeps.
     pub workers: usize,
+    /// Backbone models the experiment iterates over.
     pub models: Vec<String>,
 }
 
 impl ExpContext {
+    /// A context with default dirs (`results/`, `$ADAPTER_SERVING_ARTIFACTS`).
     pub fn new(scale: Scale) -> ExpContext {
         ExpContext {
             scale,
@@ -54,6 +65,7 @@ impl ExpContext {
         }
     }
 
+    /// `results/<id>/`, created on first use.
     pub fn exp_dir(&self, id: &str) -> PathBuf {
         let d = self.out_dir.join(id);
         std::fs::create_dir_all(&d).ok();
@@ -158,28 +170,40 @@ impl ExpContext {
 /// One validation scenario: spec parameters + (cached) engine ground truth.
 #[derive(Debug, Clone)]
 pub struct ValScenario {
+    /// Adapter count of the scenario.
     pub n_adapters: usize,
+    /// Size (rank) candidate set.
     pub sizes: Vec<usize>,
+    /// Rate candidate set (req/s).
     pub rates: Vec<f64>,
+    /// The engine's `A_max` for this scenario.
     pub a_max: usize,
+    /// Scenario seed (adapters + trace derive from it).
     pub seed: u64,
-    // Engine measurements:
+    /// Measured engine throughput (tok/s).
     pub throughput: f64,
+    /// Measured mean inter-token latency (s).
     pub itl_s: f64,
+    /// Measured mean time-to-first-token (s).
     pub ttft_s: f64,
+    /// Whether the engine run starved.
     pub starved: bool,
+    /// Wall-clock of the engine run (s) — the Table 2 cost baseline.
     pub engine_wall_s: f64,
 }
 
 impl ValScenario {
+    /// The scenario's heterogeneous adapter population.
     pub fn adapters(&self) -> Vec<AdapterSpec> {
         WorkloadSpec::heterogeneous(self.n_adapters, &self.sizes, &self.rates, self.seed)
     }
 
+    /// The scenario's workload over `horizon` seconds.
     pub fn spec(&self, horizon: f64) -> WorkloadSpec {
         WorkloadSpec::sharegpt_like(self.adapters(), horizon, self.seed ^ 0x77)
     }
 
+    /// The engine configuration the scenario runs under.
     pub fn config(&self, model: &str) -> EngineConfig {
         EngineConfig {
             model: model.to_string(),
@@ -304,6 +328,23 @@ fn load_validation(path: &std::path::Path) -> Result<Vec<ValScenario>> {
         });
     }
     Ok(out)
+}
+
+/// Rough single-GPU decode ceiling implied by a calibration: the best
+/// bucket's tokens per second at zero adapter overhead.  The MaxBase
+/// provisioning metric (Fig. 10/11) and the drift-scenario scale both
+/// derive from this single definition.
+pub fn backbone_max_tok_s(calib: &Calibration) -> f64 {
+    calib
+        .decode_buckets
+        .iter()
+        .map(|&b| b as f64 / calib.lat_model(b, b, 0).max(1e-9))
+        .fold(1.0, f64::max)
+}
+
+/// Mean tokens per request (clipped input + output means) of a workload.
+pub fn tokens_per_request(spec: &WorkloadSpec) -> f64 {
+    spec.input_len.mean_clipped() + spec.output_len.mean_clipped()
 }
 
 /// Pretty table printer for report rows.

@@ -1,0 +1,204 @@
+//! The drift experiment (DESIGN.md §5/§7): GPUs over time under workload
+//! drift — static provisioning vs migration-aware replanning vs an
+//! oracle that replans from scratch every epoch.
+//!
+//! Scenario: a burst-churn workload.  A light base adapter population
+//! lives for the whole horizon; a heavy burst population retires a third
+//! of the way in, and a second, lighter wave arrives mid-horizon.  A
+//! static deployment must provision the union peak for every epoch; the
+//! incremental replanner sheds (and re-adds) GPUs as demand drifts.
+//! Regenerates `results/drift/drift.csv` + `summary.json`.
+
+use super::common::{
+    backbone_max_tok_s, print_table, tokens_per_request, write_csv, write_summary, ExpContext,
+};
+use crate::cluster::epochs::{run_epochs_on_engine, run_epochs_on_twin, DriftReport, ReplanPolicy};
+use crate::config::EngineConfig;
+use crate::dt::{Calibration, LengthVariant};
+use crate::placement::replan::ReplanParams;
+use crate::util::json::Json;
+use crate::workload::drift::{AdapterPhase, DriftSpec, RateDrift};
+use crate::workload::{AdapterSpec, WorkloadSpec};
+use anyhow::Result;
+
+/// Deterministic burst-churn scenario, scaled to the calibrated backbone
+/// ([`backbone_max_tok_s`] — used so the burst needs >1 GPU everywhere
+/// without exceeding the 4-GPU cluster):
+/// 16 base adapters for the whole horizon (~8% of one GPU's decode
+/// ceiling), 96 heavy burst adapters (~100% of one ceiling in aggregate —
+/// more than one GPU can actually serve, well under four) retiring at
+/// `epochs/3 + 1`, and 24 light adapters (~6%) arriving after the burst
+/// clears.  Public so `examples/drift_replan.rs` drives the same scenario.
+pub fn burst_churn(epochs: usize, epoch_s: f64, calib: &Calibration) -> DriftSpec {
+    let bb = backbone_max_tok_s(calib);
+    let tpr = tokens_per_request(&WorkloadSpec::sharegpt_like(vec![], 1.0, 0));
+    let base_rate = 0.08 * bb / (16.0 * tpr);
+    let burst_rate = 1.0 * bb / (96.0 * tpr);
+    let wave_rate = 0.06 * bb / (24.0 * tpr);
+    let mut phases: Vec<AdapterPhase> = (0..16)
+        .map(|id| AdapterPhase {
+            adapter: AdapterSpec { id, rank: 8, rate: base_rate },
+            arrive_epoch: 0,
+            retire_epoch: usize::MAX,
+        })
+        .collect();
+    let burst_until = epochs / 3 + 1;
+    for i in 0..96 {
+        phases.push(AdapterPhase {
+            adapter: AdapterSpec { id: 16 + i, rank: 8, rate: burst_rate },
+            arrive_epoch: 0,
+            retire_epoch: burst_until,
+        });
+    }
+    for i in 0..24 {
+        phases.push(AdapterPhase {
+            adapter: AdapterSpec { id: 112 + i, rank: 8, rate: wave_rate },
+            arrive_epoch: (burst_until + 1).min(epochs),
+            retire_epoch: usize::MAX,
+        });
+    }
+    DriftSpec { phases, drift: RateDrift::None, epochs, epoch_s, seed: 0xD21F }
+}
+
+fn epoch_status(r: &crate::cluster::epochs::EpochRecord) -> &'static str {
+    if !r.planned {
+        "unplanned"
+    } else if r.memory_error {
+        "oom"
+    } else if r.starved {
+        "starved"
+    } else {
+        "ok"
+    }
+}
+
+/// "Fig. D" (beyond-paper artifact): GPUs over time, static vs replan vs
+/// oracle-per-epoch on a churn workload.
+pub fn drift(ctx: &ExpContext) -> Result<()> {
+    let dir = ctx.exp_dir("drift");
+    // Single-backbone experiment (like figa13): honour `--model`, default
+    // to pico-llama.
+    let model = ctx.models.first().map(String::as_str).unwrap_or("pico-llama");
+    let gpus = 4;
+    let mut rt = ctx.load_runtime(model)?;
+    let calib = ctx.calibration(&mut rt)?;
+    let models = ctx.trained_models(&calib)?;
+    let epochs = if ctx.scale.is_quick() { 6 } else { 8 };
+    let epoch_s = ctx.horizon() / 2.0;
+    let spec = burst_churn(epochs, epoch_s, &calib);
+    let base = EngineConfig { model: model.to_string(), ..Default::default() };
+    let params = ReplanParams::from_calibration(&calib, epoch_s);
+    // Twin at quick scale (fidelity pinned by table1), engine at full.
+    let on_engine = !ctx.scale.is_quick();
+
+    let cost = params.cost;
+    let policies: Vec<(&str, ReplanPolicy)> = vec![
+        ("static", ReplanPolicy::Static),
+        ("replan", ReplanPolicy::Replan(params)),
+        ("oracle", ReplanPolicy::Oracle(cost)),
+    ];
+    let mut rows = vec![];
+    let mut reports: Vec<(&str, DriftReport)> = vec![];
+    for (name, policy) in &policies {
+        let rep = if on_engine {
+            let make = || ctx.load_runtime(model);
+            run_epochs_on_engine(&make, &base, &spec, gpus, &models, policy)?
+        } else {
+            let variant = LengthVariant::Original;
+            run_epochs_on_twin(&calib, &base, &spec, gpus, &models, policy, variant)?
+        };
+        for r in &rep.per_epoch {
+            rows.push(vec![
+                name.to_string(),
+                r.epoch.to_string(),
+                r.adapters.to_string(),
+                r.gpus_used.to_string(),
+                r.migrations.to_string(),
+                format!("{:.3}", r.migration_cost_s * 1e3),
+                format!("{:.3}", r.plan_wall_s * 1e3),
+                format!("{:.1}", r.throughput_tok_s),
+                format!("{:.1}", r.incoming_tok_s),
+                format!("{:.0}", r.backlog_tokens),
+                epoch_status(r).to_string(),
+            ]);
+        }
+        println!(
+            "  drift {name}: {} GPU-epochs, {} migrations ({:.1} ms), {} infeasible epochs",
+            rep.gpu_epochs,
+            rep.total_migrations,
+            rep.total_migration_cost_s * 1e3,
+            rep.infeasible_epochs
+        );
+        reports.push((*name, rep));
+    }
+
+    print_table(
+        "drift — GPUs over time: static vs replan vs oracle-per-epoch",
+        &[
+            "policy",
+            "epoch",
+            "adapters",
+            "gpus",
+            "migrations",
+            "mig_cost_ms",
+            "plan_ms",
+            "throughput",
+            "incoming",
+            "backlog",
+            "status",
+        ],
+        &rows,
+    );
+    write_csv(
+        &dir,
+        "drift.csv",
+        &[
+            "policy",
+            "epoch",
+            "adapters",
+            "gpus_used",
+            "migrations",
+            "migration_cost_ms",
+            "plan_ms",
+            "throughput",
+            "incoming_tok_s",
+            "backlog_tokens",
+            "status",
+        ],
+        &rows,
+    )?;
+
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("epochs", Json::Num(epochs as f64)),
+        ("epoch_s", Json::Num(epoch_s)),
+        ("gpus", Json::Num(gpus as f64)),
+        ("backend", Json::Str(if on_engine { "engine" } else { "twin" }.into())),
+    ];
+    for (name, rep) in &reports {
+        fields.push((
+            *name,
+            Json::obj(vec![
+                ("gpu_epochs", Json::Num(rep.gpu_epochs as f64)),
+                ("migrations", Json::Num(rep.total_migrations as f64)),
+                ("migration_cost_s", Json::Num(rep.total_migration_cost_s)),
+                ("infeasible_epochs", Json::Num(rep.infeasible_epochs as f64)),
+                ("mean_throughput_tok_s", Json::Num(rep.mean_throughput_tok_s)),
+                ("final_backlog_tokens", Json::Num(rep.final_backlog_tokens)),
+            ]),
+        ));
+    }
+    let stat = reports.iter().find(|(n, _)| *n == "static").map(|(_, r)| r.gpu_epochs);
+    let repl =
+        reports.iter().find(|(n, _)| *n == "replan").map(|(_, r)| (r.gpu_epochs, r.feasible()));
+    if let (Some(sg), Some((rg, rfeasible))) = (stat, repl) {
+        let saved = sg as f64 - rg as f64;
+        println!(
+            "  drift: replan saves {saved} GPU-epochs vs static ({:.0}%), feasible={rfeasible}",
+            100.0 * saved / sg.max(1) as f64
+        );
+        fields.push(("replan_saves_gpu_epochs", Json::Num(saved)));
+    }
+    write_summary(&dir, fields)?;
+    println!("drift: wrote {}", dir.display());
+    Ok(())
+}

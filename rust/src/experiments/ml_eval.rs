@@ -27,6 +27,7 @@ fn bench_predict(p: &Predictor, xs: &[Vec<f64>], reps: usize) -> f64 {
     t0.elapsed().as_secs_f64() * 1e3 / (reps * xs.len()) as f64
 }
 
+/// Table 3: accuracy and inference time of KNN / RF / SVM on both tasks.
 pub fn table3(ctx: &ExpContext) -> Result<()> {
     let dir = ctx.exp_dir("table3");
     let mut rows = vec![];
@@ -89,6 +90,7 @@ pub fn table3(ctx: &ExpContext) -> Result<()> {
     Ok(())
 }
 
+/// Table 4: the refinement phase (Small Tree / Small Tree**).
 pub fn table4(ctx: &ExpContext) -> Result<()> {
     let dir = ctx.exp_dir("table4");
     let mut rows = vec![];

@@ -4,6 +4,7 @@
 
 pub mod caching;
 pub mod common;
+pub mod drift;
 pub mod dt_eval;
 pub mod ml_eval;
 pub mod profiling;
@@ -12,6 +13,8 @@ pub use common::{ExpContext, Scale};
 
 use anyhow::Result;
 
+/// An experiment entry point: renders one paper artifact into
+/// `results/<id>/`.
 type ExpFn = fn(&ExpContext) -> Result<()>;
 
 /// (id, paper artifact, runner)
@@ -35,8 +38,10 @@ pub const REGISTRY: &[(&str, &str, ExpFn)] = &[
     ("table5", "Table 5 — placement algorithm runtimes", caching::table5),
     ("fig12", "Fig. 12 — Proposed vs dLoRA vs ProposedLat", caching::fig12),
     ("figa13", "Fig. A.13 — S-LoRA unified-memory mode", caching::figa13),
+    ("drift", "GPUs over time: static vs replan vs oracle under churn", drift::drift),
 ];
 
+/// Run experiment `id` (or every experiment with `"all"`).
 pub fn run(id: &str, ctx: &ExpContext) -> Result<()> {
     if id == "all" {
         for (name, desc, f) in REGISTRY {
@@ -51,4 +56,42 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown experiment '{id}' (see list-experiments)"))?;
     println!("########## {id}: {desc}");
     f(ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::REGISTRY;
+
+    /// Doc-drift guard: the `list-experiments` registry and the DESIGN.md
+    /// §5 experiment index must stay in sync, id for id, in order.
+    #[test]
+    fn design_md_experiment_index_matches_registry() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../DESIGN.md");
+        let md = std::fs::read_to_string(path).expect("DESIGN.md readable");
+        let section = md
+            .split("## §5")
+            .nth(1)
+            .expect("DESIGN.md has a §5 section")
+            .split("\n## §")
+            .next()
+            .unwrap();
+        let doc_ids: Vec<&str> = section
+            .lines()
+            .filter_map(|l| {
+                let l = l.trim();
+                let cell = l.strip_prefix('|')?.split('|').next()?.trim();
+                if cell.is_empty() || cell == "id" || cell.starts_with('-') {
+                    return None;
+                }
+                Some(cell)
+            })
+            .collect();
+        let registry_ids: Vec<&str> = REGISTRY.iter().map(|(id, _, _)| *id).collect();
+        assert_eq!(
+            doc_ids, registry_ids,
+            "DESIGN.md §5 experiment table is out of sync with experiments::REGISTRY — \
+             update the table (and §7 if the experiment is drift-related) when adding \
+             or removing experiments"
+        );
+    }
 }

@@ -11,14 +11,24 @@
 //!   engine (the paper's "real system" stand-in);
 //! - [`dt`] — the Digital Twin and its four predictive performance models;
 //! - [`ml`] — from-scratch ML (RF/KNN/SVM + refinement) trained on DT data;
-//! - [`placement`] — the greedy adapter-caching algorithm and baselines;
+//! - [`placement`] — the greedy adapter-caching algorithm, baselines, and
+//!   the migration-aware incremental replanner ([`placement::replan`]);
 //! - [`cluster`] — multi-GPU routing driven by placement decisions, with
-//!   per-GPU validation runs parallelized over the thread pool;
+//!   per-GPU validation runs parallelized over the thread pool, plus the
+//!   rolling-horizon epoch runner ([`cluster::epochs`], DESIGN.md §7);
 //! - [`experiments`] — regenerates every table and figure of the paper.
 //!
+//! The three-layer public API is *workload* ([`workload::WorkloadSpec`],
+//! [`workload::drift::DriftSpec`]) → *placement* ([`placement::Placement`])
+//! → *cluster* ([`cluster::run_on_engine`] / [`cluster::run_on_twin`] /
+//! [`cluster::epochs::run_epochs_on_twin`]).
+//!
 //! See DESIGN.md for the system inventory, the backend feature matrix and
-//! the per-experiment index.
+//! the per-experiment index; `#![warn(missing_docs)]` plus the CI docs job
+//! (`cargo doc --no-deps` under `RUSTDOCFLAGS="-D warnings"`) keep this
+//! surface documented.
 
+#![warn(missing_docs)]
 // Numeric hot loops (runtime::reference, ml) index several parallel slices
 // by design, and the execution surfaces mirror fixed multi-tensor kernel
 // signatures; these style lints fight both patterns.

@@ -7,6 +7,7 @@
 //!   dataset          generate the DT training set
 //!   train            train + persist the RF model pair
 //!   place            compute a placement for a workload (greedy pipeline)
+//!   drift            rolling-horizon replanning demo (= `experiment drift`)
 //!   experiment <id>  regenerate a paper table/figure (or `all`)
 //!   list-experiments list experiment ids
 //!   artifacts-info   show the AOT artifact manifest
@@ -23,14 +24,17 @@ use adapter_serving::workload::WorkloadSpec;
 use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
 
-const USAGE: &str = "usage: adapterd <serve|twin|calibrate|dataset|train|place|experiment|list-experiments|artifacts-info> [options]
+const USAGE: &str = "usage: adapterd <serve|twin|calibrate|dataset|train|place|drift|experiment|list-experiments|artifacts-info> [options]
 common options:
   --model <pico-llama|pico-qwen>   backbone (default pico-llama)
   --adapters N --rank R --rate X   synthetic workload shape
   --a-max N --s-max-rank R         engine configuration
   --horizon S                      simulated seconds (default 15)
   --scale <quick|full>             experiment scale (default quick)
-  --out PATH                       output file/directory";
+  --out PATH                       output file/directory
+environment:
+  ADAPTER_SERVING_BACKEND=reference|pjrt   execution backend override
+  ADAPTER_SERVING_ARTIFACTS=DIR            AOT artifact dir (default ./artifacts)";
 
 fn main() -> Result<()> {
     let mut raw: Vec<String> = std::env::args().skip(1).collect();
@@ -47,6 +51,7 @@ fn main() -> Result<()> {
         "dataset" => dataset_cmd(&args),
         "train" => train_cmd(&args),
         "place" => place_cmd(&args),
+        "drift" => drift_cmd(&args),
         "experiment" => experiment_cmd(&args),
         "list-experiments" => {
             for (id, desc, _) in experiments::REGISTRY {
@@ -192,6 +197,19 @@ fn place_cmd(args: &Args) -> Result<()> {
         Err(e) => println!("placement failed: {e}"),
     }
     Ok(())
+}
+
+/// `adapterd drift` — the rolling-horizon re-placement loop on a churn
+/// workload (shorthand for `adapterd experiment drift`).
+fn drift_cmd(args: &Args) -> Result<()> {
+    let mut ctx = ExpContext::new(Scale::parse(args.get_or("scale", "quick")));
+    if let Some(out) = args.get("out") {
+        ctx.out_dir = PathBuf::from(out);
+    }
+    if let Some(m) = args.get("model") {
+        ctx.models = vec![m.to_string()];
+    }
+    experiments::run("drift", &ctx)
 }
 
 fn experiment_cmd(args: &Args) -> Result<()> {

@@ -15,8 +15,11 @@ use std::path::Path;
 /// One training sample.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Sample {
+    /// Feature vector ([`FEATURE_NAMES`] order).
     pub x: Vec<f64>,
+    /// DT-simulated throughput label (tok/s).
     pub throughput: f64,
+    /// DT-simulated starvation label.
     pub starved: bool,
     /// Static reservation exceeded GPU memory (labelled starved too, with
     /// zero throughput, so the classifier learns to reject these configs).
@@ -26,13 +29,19 @@ pub struct Sample {
 /// Sweep specification.
 #[derive(Debug, Clone)]
 pub struct GridSpec {
+    /// Adapter size (rank) candidate set.
     pub sizes: Vec<usize>,
+    /// Arrival rate candidate set (req/s).
     pub rates: Vec<f64>,
+    /// Adapter counts swept.
     pub adapter_counts: Vec<usize>,
+    /// `A_max` values swept.
     pub a_max_values: Vec<usize>,
+    /// Simulated horizon per scenario (s).
     pub horizon_s: f64,
     /// Cap on the number of scenarios (deterministically subsampled).
     pub max_scenarios: usize,
+    /// Sweep seed (scenario subsampling + per-scenario workloads).
     pub seed: u64,
 }
 
@@ -126,6 +135,7 @@ pub fn generate(
     })
 }
 
+/// Persist samples as CSV (feature columns + labels).
 pub fn save(samples: &[Sample], path: &Path) -> anyhow::Result<()> {
     let mut cols: Vec<&str> = FEATURE_NAMES.to_vec();
     cols.extend(["throughput", "starved", "memory_error"]);
@@ -140,6 +150,7 @@ pub fn save(samples: &[Sample], path: &Path) -> anyhow::Result<()> {
     t.write_file(path)
 }
 
+/// Load a dataset written by [`save`].
 pub fn load(path: &Path) -> anyhow::Result<Vec<Sample>> {
     let t = Table::read_file(path)?;
     let nf = FEATURE_NAMES.len();

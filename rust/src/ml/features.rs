@@ -15,6 +15,7 @@ pub const FEATURE_NAMES: [&str; 7] = [
     "a_max",
 ];
 
+/// Number of features (the trained-model input arity).
 pub const N_FEATURES: usize = FEATURE_NAMES.len();
 
 /// Build the 7-feature vector for an adapter set under a given `A_max`.

@@ -3,12 +3,16 @@
 use super::tree::{Tree, TreeParams};
 use crate::util::rng::Rng;
 
+/// Forest hyperparameters.
 #[derive(Debug, Clone)]
 pub struct ForestParams {
+    /// Number of trees in the ensemble.
     pub n_estimators: usize,
+    /// Per-tree hyperparameters.
     pub tree: TreeParams,
     /// Bootstrap sample fraction.
     pub subsample: f64,
+    /// Bagging seed (per-tree seeds derive from it).
     pub seed: u64,
 }
 
@@ -18,12 +22,15 @@ impl Default for ForestParams {
     }
 }
 
+/// A fitted random forest.
 #[derive(Debug, Clone, Default)]
 pub struct Forest {
+    /// The fitted trees (predictions are averaged).
     pub trees: Vec<Tree>,
 }
 
 impl Forest {
+    /// Fit on row-major `xs` (n × d) and labels `ys`.
     pub fn fit(xs: &[Vec<f64>], ys: &[f64], params: &ForestParams) -> Forest {
         let n = xs.len();
         let mut rng = Rng::new(params.seed ^ 0xF0_4E57);
@@ -60,6 +67,7 @@ impl Forest {
         self.trees.iter().map(|t| t.predict_one(x)).sum::<f64>() / self.trees.len() as f64
     }
 
+    /// Predict for a batch of feature vectors.
     pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
         xs.iter().map(|x| self.predict_one(x)).collect()
     }

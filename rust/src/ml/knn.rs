@@ -1,12 +1,15 @@
 //! K-nearest-neighbours over a kd-tree (the paper's KNN config: kd_tree
 //! algorithm, leaf_size 8, n_neighbors 1, uniform weights, Minkowski p).
 
+/// KNN hyperparameters.
 #[derive(Debug, Clone)]
 pub struct KnnParams {
+    /// Number of neighbours (the paper uses 1).
     pub k: usize,
     /// Minkowski exponent (1 = Manhattan, 2 = Euclidean) — the paper's
     /// only tuned KNN hyperparameter.
     pub p: f64,
+    /// kd-tree leaf capacity.
     pub leaf_size: usize,
 }
 
@@ -23,15 +26,18 @@ enum Node {
     Split { axis: usize, mid: f64, left: Box<Node>, right: Box<Node> },
 }
 
+/// A fitted KNN model (kd-tree over the training points).
 #[derive(Debug, Clone)]
 pub struct Knn {
     points: Vec<Vec<f64>>,
     labels: Vec<f64>,
     root: Node,
+    /// The hyperparameters the model was fitted with.
     pub params: KnnParams,
 }
 
 impl Knn {
+    /// Build the kd-tree over row-major `xs` with labels `ys`.
     pub fn fit(xs: &[Vec<f64>], ys: &[f64], params: &KnnParams) -> Knn {
         assert_eq!(xs.len(), ys.len());
         assert!(!xs.is_empty());
@@ -90,6 +96,7 @@ impl Knn {
         nb.iter().map(|&(i, _)| self.labels[i]).sum::<f64>() / nb.len().max(1) as f64
     }
 
+    /// Predict for a batch of feature vectors.
     pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
         xs.iter().map(|x| self.predict_one(x)).collect()
     }

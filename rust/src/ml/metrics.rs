@@ -31,6 +31,7 @@ pub fn macro_f1(actual: &[f64], predicted: &[f64]) -> f64 {
     (f1_for(1.0) + f1_for(0.0)) / 2.0
 }
 
+/// Fraction of matching binary labels (threshold 0.5).
 pub fn accuracy(actual: &[f64], predicted: &[f64]) -> f64 {
     if actual.is_empty() {
         return 0.0;
@@ -43,6 +44,7 @@ pub fn accuracy(actual: &[f64], predicted: &[f64]) -> f64 {
         / actual.len() as f64
 }
 
+/// Mean squared error.
 pub fn mse(actual: &[f64], predicted: &[f64]) -> f64 {
     if actual.is_empty() {
         return 0.0;

@@ -15,15 +15,22 @@ use std::path::Path;
 /// Any trained model, normalized to `predict_one(&[f64]) -> f64`
 /// (regression value, or class-1 probability / label for classification).
 pub enum Predictor {
+    /// Random forest (the deployed pipeline default).
     Forest(Forest),
+    /// Single CART tree.
     Tree(Tree),
+    /// Compiled flat-array tree (Small Tree**, §6.1).
     Flat(FlatTree),
+    /// k-nearest-neighbours (Table 3 comparison).
     Knn(Box<Knn>),
+    /// SVM classifier (Table 3 comparison).
     Svc(Box<Svc>),
+    /// SVM regressor (Table 3 comparison).
     Svr(Box<Svr>),
 }
 
 impl Predictor {
+    /// Predict for one feature vector.
     pub fn predict_one(&self, x: &[f64]) -> f64 {
         match self {
             Predictor::Forest(m) => m.predict_one(x),
@@ -35,10 +42,12 @@ impl Predictor {
         }
     }
 
+    /// Predict for a batch of feature vectors.
     pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
         xs.iter().map(|x| self.predict_one(x)).collect()
     }
 
+    /// Short tag of the underlying model family (for reports).
     pub fn kind(&self) -> &'static str {
         match self {
             Predictor::Forest(_) => "forest",
@@ -53,13 +62,33 @@ impl Predictor {
 
 /// The deployed model pair (paper §6): a throughput regressor and a
 /// starvation classifier, with an optional shared scaler.
+///
+/// ```
+/// use adapter_serving::ml::tree::{Tree, TreeParams};
+/// use adapter_serving::ml::{MlModels, Predictor};
+/// // Fit a toy pair: throughput = 2·x0, never starving.
+/// let xs: Vec<Vec<f64>> = (0..50).map(|i| vec![i as f64]).collect();
+/// let thr: Vec<f64> = xs.iter().map(|x| x[0] * 2.0).collect();
+/// let st = vec![0.0; 50];
+/// let models = MlModels {
+///     throughput: Predictor::Tree(Tree::fit(&xs, &thr, &TreeParams::default())),
+///     starvation: Predictor::Tree(Tree::fit(&xs, &st, &TreeParams::default())),
+///     scaler: None,
+/// };
+/// assert!(models.predict_throughput(&[10.0]) > 0.0);
+/// assert!(!models.predict_starvation(&[10.0]));
+/// ```
 pub struct MlModels {
+    /// Throughput regressor (tok/s).
     pub throughput: Predictor,
+    /// Starvation classifier (class-1 probability ≥ 0.5 → starved).
     pub starvation: Predictor,
+    /// Optional feature scaler applied before both models.
     pub scaler: Option<Scaler>,
 }
 
 impl MlModels {
+    /// Predicted throughput (tok/s) for a feature vector.
     pub fn predict_throughput(&self, x: &[f64]) -> f64 {
         match &self.scaler {
             Some(s) => self.throughput.predict_one(&s.transform_one(x)),
@@ -67,6 +96,7 @@ impl MlModels {
         }
     }
 
+    /// Predicted starvation verdict for a feature vector.
     pub fn predict_starvation(&self, x: &[f64]) -> bool {
         let p = match &self.scaler {
             Some(s) => self.starvation.predict_one(&s.transform_one(x)),
@@ -80,6 +110,7 @@ impl MlModels {
 // JSON persistence (tree family)
 // ---------------------------------------------------------------------
 
+/// Serialize a tree's flat arrays to JSON.
 pub fn tree_to_json(t: &Tree) -> Json {
     Json::obj(vec![
         ("feature", Json::arr_f64(&t.feature.iter().map(|&v| v as f64).collect::<Vec<_>>())),
@@ -91,6 +122,7 @@ pub fn tree_to_json(t: &Tree) -> Json {
     ])
 }
 
+/// Parse a tree written by [`tree_to_json`].
 pub fn tree_from_json(j: &Json) -> Result<Tree> {
     let f = |k: &str| -> Result<Vec<f64>> {
         j.req(k)?.f64_vec().ok_or_else(|| anyhow!("{k} not an array"))
@@ -105,10 +137,12 @@ pub fn tree_from_json(j: &Json) -> Result<Tree> {
     })
 }
 
+/// Serialize a forest (array of trees) to JSON.
 pub fn forest_to_json(f: &Forest) -> Json {
     Json::Arr(f.trees.iter().map(tree_to_json).collect())
 }
 
+/// Parse a forest written by [`forest_to_json`].
 pub fn forest_from_json(j: &Json) -> Result<Forest> {
     let arr = j.as_arr().ok_or_else(|| anyhow!("forest not an array"))?;
     Ok(Forest { trees: arr.iter().map(tree_from_json).collect::<Result<_>>()? })
@@ -138,6 +172,7 @@ pub fn save_models(models: &MlModels, path: &Path) -> Result<()> {
     Json::obj(fields).write_file(path)
 }
 
+/// Load a model pair persisted by [`save_models`].
 pub fn load_models(path: &Path) -> Result<MlModels> {
     let j = Json::read_file(path)?;
     let dec = |j: &Json| -> Result<Predictor> {

@@ -45,6 +45,7 @@ struct FlatNode {
 }
 
 impl FlatTree {
+    /// Compile a fitted [`Tree`] into the flat evaluator.
     pub fn compile(t: &Tree) -> FlatTree {
         FlatTree {
             nodes: (0..t.feature.len())
@@ -58,6 +59,7 @@ impl FlatTree {
         }
     }
 
+    /// Predict for one feature vector (the Table 4 hot loop).
     #[inline]
     pub fn predict_one(&self, x: &[f64]) -> f64 {
         let mut node = 0usize;
@@ -78,10 +80,12 @@ impl FlatTree {
         }
     }
 
+    /// Predict for a batch of feature vectors.
     pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
         xs.iter().map(|x| self.predict_one(x)).collect()
     }
 
+    /// Number of packed nodes.
     pub fn n_nodes(&self) -> usize {
         self.nodes.len()
     }

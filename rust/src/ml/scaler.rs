@@ -4,13 +4,17 @@
 use crate::util::json::Json;
 use crate::util::stats;
 
+/// Per-feature standardization parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Scaler {
+    /// Per-feature means.
     pub mean: Vec<f64>,
+    /// Per-feature standard deviations (floored at 1e-12).
     pub std: Vec<f64>,
 }
 
 impl Scaler {
+    /// Fit means and deviations on row-major `xs`.
     pub fn fit(xs: &[Vec<f64>]) -> Scaler {
         let d = xs[0].len();
         let mut mean = vec![0.0; d];
@@ -23,6 +27,7 @@ impl Scaler {
         Scaler { mean, std }
     }
 
+    /// Standardize one feature vector.
     pub fn transform_one(&self, x: &[f64]) -> Vec<f64> {
         x.iter()
             .enumerate()
@@ -30,10 +35,12 @@ impl Scaler {
             .collect()
     }
 
+    /// Standardize a batch of feature vectors.
     pub fn transform(&self, xs: &[Vec<f64>]) -> Vec<Vec<f64>> {
         xs.iter().map(|x| self.transform_one(x)).collect()
     }
 
+    /// Serialize for model persistence.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("mean", Json::arr_f64(&self.mean)),
@@ -41,6 +48,7 @@ impl Scaler {
         ])
     }
 
+    /// Parse a scaler written by [`Scaler::to_json`].
     pub fn from_json(j: &Json) -> anyhow::Result<Scaler> {
         Ok(Scaler {
             mean: j.req("mean")?.f64_vec().ok_or_else(|| anyhow::anyhow!("mean"))?,

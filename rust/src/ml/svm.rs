@@ -7,15 +7,36 @@
 
 use crate::util::rng::Rng;
 
+/// SVM kernel (the paper's Appendix B candidate set).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Kernel {
+    /// Plain dot product.
     Linear,
-    Rbf { gamma: f64 },
-    Poly { gamma: f64, degree: f64, coef0: f64 },
-    Sigmoid { gamma: f64, coef0: f64 },
+    /// Gaussian radial basis function.
+    Rbf {
+        /// Width parameter.
+        gamma: f64,
+    },
+    /// Polynomial kernel `(γ·⟨a,b⟩ + c₀)^degree`.
+    Poly {
+        /// Scale of the dot product.
+        gamma: f64,
+        /// Polynomial degree.
+        degree: f64,
+        /// Constant offset.
+        coef0: f64,
+    },
+    /// Sigmoid kernel `tanh(γ·⟨a,b⟩ + c₀)`.
+    Sigmoid {
+        /// Scale of the dot product.
+        gamma: f64,
+        /// Constant offset.
+        coef0: f64,
+    },
 }
 
 impl Kernel {
+    /// Evaluate the kernel on two feature vectors.
     pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
         let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
         match *self {
@@ -51,12 +72,18 @@ impl Kernel {
 // SVC (simplified SMO, Platt 1998 via the CS229 simplification)
 // ---------------------------------------------------------------------
 
+/// SVC hyperparameters.
 #[derive(Debug, Clone)]
 pub struct SvcParams {
+    /// Box constraint (regularization strength).
     pub c: f64,
+    /// The kernel.
     pub kernel: Kernel,
+    /// KKT violation tolerance.
     pub tol: f64,
+    /// SMO passes without progress before stopping.
     pub max_passes: usize,
+    /// Seed for the SMO partner choice.
     pub seed: u64,
 }
 
@@ -66,6 +93,7 @@ impl Default for SvcParams {
     }
 }
 
+/// A fitted SVM binary classifier.
 #[derive(Debug, Clone)]
 pub struct Svc {
     support: Vec<Vec<f64>>,
@@ -167,6 +195,7 @@ impl Svc {
         Svc { support, alpha_y, b, kernel: p.kernel }
     }
 
+    /// Signed distance to the separating surface.
     pub fn decision(&self, x: &[f64]) -> f64 {
         let mut s = self.b;
         for (sv, ay) in self.support.iter().zip(&self.alpha_y) {
@@ -180,10 +209,12 @@ impl Svc {
         (self.decision(x) >= 0.0) as i32 as f64
     }
 
+    /// Predict classes for a batch of feature vectors.
     pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
         xs.iter().map(|x| self.predict_one(x)).collect()
     }
 
+    /// Number of support vectors kept.
     pub fn n_support(&self) -> usize {
         self.support.len()
     }
@@ -193,12 +224,18 @@ impl Svc {
 // ε-SVR via projected gradient ascent on the dual
 // ---------------------------------------------------------------------
 
+/// ε-SVR hyperparameters.
 #[derive(Debug, Clone)]
 pub struct SvrParams {
+    /// Box constraint (regularization strength).
     pub c: f64,
+    /// Width of the insensitive tube.
     pub epsilon: f64,
+    /// The kernel.
     pub kernel: Kernel,
+    /// Coordinate-descent sweeps.
     pub iters: usize,
+    /// Nominal learning rate (scaled by the kernel diagonal).
     pub lr: f64,
 }
 
@@ -208,6 +245,7 @@ impl Default for SvrParams {
     }
 }
 
+/// A fitted SVM regressor.
 #[derive(Debug, Clone)]
 pub struct Svr {
     support: Vec<Vec<f64>>,
@@ -217,6 +255,7 @@ pub struct Svr {
 }
 
 impl Svr {
+    /// Fit on row-major `xs` (n × d) and targets `ys`.
     pub fn fit(xs: &[Vec<f64>], ys: &[f64], p: &SvrParams) -> Svr {
         let n = xs.len();
         // K + 1 absorbs the bias term (equivalent to an appended constant
@@ -269,6 +308,7 @@ impl Svr {
         Svr { support, beta: sbeta, b, kernel: p.kernel }
     }
 
+    /// Predict the regression value for one feature vector.
     pub fn predict_one(&self, x: &[f64]) -> f64 {
         let mut s = self.b;
         for (sv, bt) in self.support.iter().zip(&self.beta) {
@@ -277,6 +317,7 @@ impl Svr {
         s
     }
 
+    /// Predict for a batch of feature vectors.
     pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
         xs.iter().map(|x| self.predict_one(x)).collect()
     }

@@ -13,20 +13,28 @@ use super::scaler::Scaler;
 use super::svm::{Kernel, Svc, SvcParams, Svr, SvrParams};
 use super::tree::{Criterion, TreeParams};
 
+/// Prediction task (the deployed pair trains one model per task).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Task {
+    /// Throughput regression (tok/s).
     Throughput,
+    /// Starvation binary classification.
     Starvation,
 }
 
+/// Model family to grid-search (Table 3 compares all three).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ModelType {
+    /// k-nearest-neighbours.
     Knn,
+    /// Random forest (the deployed choice).
     RandomForest,
+    /// Support vector machine.
     Svm,
 }
 
 impl ModelType {
+    /// Short display name (Table 3 rows).
     pub fn name(&self) -> &'static str {
         match self {
             ModelType::Knn => "KNN",
@@ -36,6 +44,7 @@ impl ModelType {
     }
 }
 
+/// Extract the label column for `task`.
 pub fn labels(samples: &[Sample], task: Task) -> Vec<f64> {
     samples
         .iter()
@@ -46,6 +55,7 @@ pub fn labels(samples: &[Sample], task: Task) -> Vec<f64> {
         .collect()
 }
 
+/// Extract the feature matrix.
 pub fn xs(samples: &[Sample]) -> Vec<Vec<f64>> {
     samples.iter().map(|s| s.x.clone()).collect()
 }

@@ -39,9 +39,13 @@ impl Criterion {
 /// Hyperparameters (sklearn-compatible subset used in Appendix B).
 #[derive(Debug, Clone)]
 pub struct TreeParams {
+    /// Split quality criterion.
     pub criterion: Criterion,
+    /// Depth cap (None = unbounded).
     pub max_depth: Option<usize>,
+    /// Minimum samples required to split a node.
     pub min_samples_split: usize,
+    /// Minimum samples required in each child.
     pub min_samples_leaf: usize,
     /// Number of features considered per split (None = all); RF sets this
     /// to sqrt/log2 of the feature count.
@@ -49,6 +53,7 @@ pub struct TreeParams {
     /// Maximum number of leaves (best-first growth); the refinement phase
     /// uses this to cap the rule count.
     pub max_leaves: Option<usize>,
+    /// Seed for feature subsampling.
     pub seed: u64,
 }
 
@@ -71,11 +76,17 @@ impl Default for TreeParams {
 /// basis of the "compiled" Small Tree** evaluator (the paper's Numba step).
 #[derive(Debug, Clone, Default)]
 pub struct Tree {
+    /// Split feature per node (−1 marks a leaf).
     pub feature: Vec<i32>,
+    /// Split threshold per node (`x[f] ≤ t` goes left).
     pub threshold: Vec<f64>,
+    /// Left child index per node.
     pub left: Vec<u32>,
+    /// Right child index per node.
     pub right: Vec<u32>,
+    /// Leaf prediction (mean label / class-1 probability) per node.
     pub value: Vec<f64>,
+    /// Training samples that reached each node.
     pub n_samples: Vec<u32>,
 }
 
@@ -87,6 +98,7 @@ struct BuildNode {
 }
 
 impl Tree {
+    /// Number of nodes (inner + leaves).
     pub fn n_nodes(&self) -> usize {
         self.feature.len()
     }
@@ -96,6 +108,7 @@ impl Tree {
         self.feature.iter().filter(|&&f| f < 0).count()
     }
 
+    /// Maximum root-to-leaf depth.
     pub fn depth(&self) -> usize {
         fn rec(t: &Tree, node: usize) -> usize {
             if t.feature[node] < 0 {
@@ -111,6 +124,7 @@ impl Tree {
         }
     }
 
+    /// Predict for one feature vector (root-to-leaf walk).
     pub fn predict_one(&self, x: &[f64]) -> f64 {
         let mut node = 0usize;
         loop {
@@ -126,6 +140,7 @@ impl Tree {
         }
     }
 
+    /// Predict for a batch of feature vectors.
     pub fn predict(&self, xs: &[Vec<f64>]) -> Vec<f64> {
         xs.iter().map(|x| self.predict_one(x)).collect()
     }

@@ -15,6 +15,7 @@ use super::{Placement, PlacementError, PlacementResult};
 use crate::workload::AdapterSpec;
 use std::time::Instant;
 
+/// dLoRA reproduction knobs.
 pub struct DloraParams {
     /// Wall-clock budget for the refinement (the paper's 1 h, scaled).
     pub time_limit_s: f64,
@@ -38,6 +39,8 @@ fn objective(loads: &[f64], mem: &[f64]) -> f64 {
     max_load + 0.1 * var.sqrt() + 1e-4 * max_mem
 }
 
+/// dLoRA proactive placement: balanced greedy assignment + best-swap local
+/// search under a wall-clock budget.
 pub fn place(adapters: &[AdapterSpec], gpus: usize, params: &DloraParams) -> PlacementResult {
     let t0 = Instant::now();
     // Phase 1: greedy balanced assignment (rate-descending, least-loaded).

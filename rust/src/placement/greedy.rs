@@ -163,46 +163,12 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, models: &MlModels) -> Placem
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ml::refine::FlatTree;
-    use crate::ml::tree::{Tree, TreeParams};
-    use crate::ml::Predictor;
 
-    /// Analytic stand-in models: capacity 1000 tok/s minus an A_max tax;
-    /// starvation when demand (sum_rate × 96 tok) exceeds capacity.
+    /// Shared analytic stand-in models (see `placement::test_models`):
+    /// capacity 1000 tok/s minus an A_max tax; starvation when demand
+    /// (sum_rate × 96 tok) exceeds capacity.
     fn fake_models() -> MlModels {
-        // Build trivial trees by fitting on synthetic data reproducing the
-        // analytic rule, so we exercise the real Predictor machinery.
-        let mut xs = vec![];
-        let mut thr = vec![];
-        let mut st = vec![];
-        let mut rng = crate::util::rng::Rng::new(1);
-        for _ in 0..4000 {
-            let sum_rate = rng.range_f64(0.0, 30.0);
-            let a_max = *rng.choose(&[8.0, 16.0, 32.0, 64.0, 96.0, 128.0, 160.0, 192.0, 256.0]);
-            let n = rng.range(1, 384) as f64;
-            let demand = sum_rate * 96.0;
-            let capacity = 1000.0 - a_max * 2.0;
-            let mut x = vec![0.0; crate::ml::N_FEATURES];
-            x[0] = n;
-            x[1] = sum_rate;
-            x[3] = 8.0;
-            x[4] = 8.0;
-            x[6] = a_max;
-            xs.push(x);
-            thr.push(demand.min(capacity));
-            st.push((demand > capacity || a_max < (n / 8.0).min(64.0)) as i32 as f64);
-        }
-        let t_thr = Tree::fit(&xs, &thr, &TreeParams::default());
-        let t_st = Tree::fit(
-            &xs,
-            &st,
-            &TreeParams { criterion: crate::ml::tree::Criterion::Gini, ..Default::default() },
-        );
-        MlModels {
-            throughput: Predictor::Flat(FlatTree::compile(&t_thr)),
-            starvation: Predictor::Flat(FlatTree::compile(&t_st)),
-            scaler: None,
-        }
+        crate::placement::test_models::analytic_models(1)
     }
 
     fn adapters(n: usize, rate: f64) -> Vec<AdapterSpec> {

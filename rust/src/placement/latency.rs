@@ -8,6 +8,7 @@ use super::{Placement, PlacementError, PlacementResult};
 use crate::ml::{features, MlModels};
 use crate::workload::AdapterSpec;
 
+/// ProposedLat: least-loaded spreading with a post-hoc ML starvation veto.
 pub fn place(adapters: &[AdapterSpec], gpus: usize, models: &MlModels) -> PlacementResult {
     let mut placement = Placement { assignment: Default::default(), a_max: vec![0; gpus] };
     let mut loads = vec![0.0f64; gpus];

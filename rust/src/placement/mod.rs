@@ -5,12 +5,15 @@
 //! - [`greedy`] — the paper's contribution (Algorithms 1 & 2);
 //! - [`baselines`] — MaxBase, MaxBase*, Random (§8.4);
 //! - [`dlora`] — the dLoRA proactive placement reimplementation (§8.4.3);
-//! - [`latency`] — the ProposedLat latency-oriented variant (§8.4.4).
+//! - [`latency`] — the ProposedLat latency-oriented variant (§8.4.4);
+//! - [`replan`] — migration-aware incremental re-placement for drifting
+//!   workloads (DESIGN.md §7).
 
 pub mod baselines;
 pub mod dlora;
 pub mod greedy;
 pub mod latency;
+pub mod replan;
 
 use crate::workload::AdapterSpec;
 use std::collections::HashMap;
@@ -19,6 +22,16 @@ use std::collections::HashMap;
 pub const TESTING_POINTS: [usize; 11] = [8, 16, 32, 64, 96, 128, 160, 192, 256, 320, 384];
 
 /// A complete placement decision.
+///
+/// ```
+/// use adapter_serving::placement::Placement;
+/// let mut p = Placement { assignment: Default::default(), a_max: vec![8, 8, 0, 0] };
+/// p.assignment.insert(0, 0); // adapter 0 → GPU 0
+/// p.assignment.insert(1, 0);
+/// p.assignment.insert(2, 1);
+/// assert_eq!(p.gpus_used(), 2);
+/// assert_eq!(p.adapters_on(0), vec![0, 1]);
+/// ```
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Placement {
     /// adapter id → GPU index.
@@ -28,6 +41,7 @@ pub struct Placement {
 }
 
 impl Placement {
+    /// Number of GPUs with at least one adapter assigned.
     pub fn gpus_used(&self) -> usize {
         let mut used: Vec<bool> = vec![false; self.a_max.len()];
         for &g in self.assignment.values() {
@@ -63,7 +77,9 @@ impl Placement {
 /// Why a placement attempt failed.
 #[derive(Debug, Clone, PartialEq)]
 pub enum PlacementError {
+    /// No starvation-free allocation exists within the available GPUs.
     Starvation,
+    /// The algorithm exceeded its wall-clock budget (dLoRA reproduction).
     TimeLimit,
 }
 
@@ -82,7 +98,54 @@ impl std::fmt::Display for PlacementError {
 
 impl std::error::Error for PlacementError {}
 
+/// Alias returned by every placement algorithm in this module.
 pub type PlacementResult = Result<Placement, PlacementError>;
+
+/// Shared test support: the analytic stand-in ML models used by the
+/// greedy, replan and epoch-runner tests.
+#[cfg(test)]
+pub(crate) mod test_models {
+    use crate::ml::refine::FlatTree;
+    use crate::ml::tree::{Criterion, Tree, TreeParams};
+    use crate::ml::{MlModels, Predictor};
+    use crate::util::rng::Rng;
+
+    /// Analytic stand-in models fitted on synthetic data: capacity
+    /// 1000 − 2·A_max tok/s; starvation when demand (sum_rate × 96 tok)
+    /// exceeds capacity or `A_max` is under-provisioned for the adapter
+    /// count.  Trees are trained so the real `Predictor` machinery is
+    /// exercised.
+    pub(crate) fn analytic_models(seed: u64) -> MlModels {
+        let mut xs = vec![];
+        let mut thr = vec![];
+        let mut st = vec![];
+        let mut rng = Rng::new(seed);
+        for _ in 0..4000 {
+            let sum_rate = rng.range_f64(0.0, 30.0);
+            let a_max = *rng.choose(&[8.0, 16.0, 32.0, 64.0, 96.0, 128.0, 160.0, 192.0, 256.0]);
+            let n = rng.range(1, 384) as f64;
+            let demand = sum_rate * 96.0;
+            let capacity = 1000.0 - a_max * 2.0;
+            let mut x = vec![0.0; crate::ml::N_FEATURES];
+            x[0] = n;
+            x[1] = sum_rate;
+            x[3] = 8.0;
+            x[4] = 8.0;
+            x[6] = a_max;
+            xs.push(x);
+            thr.push(demand.min(capacity));
+            st.push((demand > capacity || a_max < (n / 8.0).min(64.0)) as i32 as f64);
+        }
+        let t_thr = Tree::fit(&xs, &thr, &TreeParams::default());
+        let t_st =
+            Tree::fit(&xs, &st, &TreeParams { criterion: Criterion::Gini, ..Default::default() });
+        MlModels {
+            throughput: Predictor::Flat(FlatTree::compile(&t_thr)),
+            starvation: Predictor::Flat(FlatTree::compile(&t_st)),
+            scaler: None,
+        }
+    }
+}
 
 #[cfg(test)]
 mod tests {

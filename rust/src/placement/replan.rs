@@ -1,0 +1,463 @@
+//! Migration-aware incremental re-placement (DESIGN.md §7).
+//!
+//! [`replan`] re-runs the caching greedy's ML-probe machinery (Alg. 1/2)
+//! for the *next* epoch of a drifting workload, starting from the previous
+//! epoch's [`Placement`] instead of from scratch:
+//!
+//! 1. **sticky grouping** — every adapter that survived the epoch boundary
+//!    stays provisionally on its current GPU;
+//! 2. **per-GPU repair** — each group is probed at the testing points; while
+//!    starvation is predicted, the lowest-priority adapter is evicted back
+//!    into the pending pool;
+//! 3. **sticky packing** — pending adapters (newcomers + evictions) are
+//!    placed in priority order.  An adapter keeps its previous GPU when
+//!    that GPU is feasible and its predicted throughput is within
+//!    [`ReplanParams::slack`] of the best candidate, or when the migration
+//!    would not amortize within one epoch under the [`MigrationCost`]
+//!    model (the fig6 adapter load-time profile); otherwise it moves to the
+//!    best already-used feasible GPU, opening a fresh GPU only as a last
+//!    resort;
+//! 4. **drain** — the smallest surviving group is migrated onto the other
+//!    used GPUs when every member fits, freeing whole GPUs as demand
+//!    recedes.
+//!
+//! Migrations and their modeled cost are reported relative to the previous
+//! placement, so the epoch runner ([`crate::cluster::epochs`]) can account
+//! for them in the horizon aggregate.
+
+use super::{greedy, Placement, PlacementError, TESTING_POINTS};
+use crate::dt::Calibration;
+use crate::ml::{features, MlModels};
+use crate::workload::AdapterSpec;
+use std::collections::HashSet;
+
+/// Linear model of the cost of migrating (re-loading) one adapter:
+/// `base_s + per_rank_s · rank` seconds, fitted to the calibration's
+/// profiled per-rank load times (the fig6 measurement).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationCost {
+    /// Fixed per-migration cost (seconds).
+    pub base_s: f64,
+    /// Additional cost per unit of LoRA rank (seconds).
+    pub per_rank_s: f64,
+}
+
+impl Default for MigrationCost {
+    fn default() -> Self {
+        // Ballpark of `Calibration::default().load_s_by_rank`.
+        MigrationCost { base_s: 3e-3, per_rank_s: 3.75e-4 }
+    }
+}
+
+impl MigrationCost {
+    /// Least-squares fit over the calibration's profiled
+    /// `load_s_by_rank` points; falls back to the default when the
+    /// calibration has no load profile.
+    pub fn from_calibration(c: &Calibration) -> MigrationCost {
+        let pts: Vec<(f64, f64)> = c.load_s_by_rank.iter().map(|(&r, &s)| (r as f64, s)).collect();
+        match pts.len() {
+            0 => MigrationCost::default(),
+            1 => MigrationCost { base_s: 0.0, per_rank_s: pts[0].1 / pts[0].0.max(1.0) },
+            _ => {
+                let n = pts.len() as f64;
+                let sx: f64 = pts.iter().map(|p| p.0).sum();
+                let sy: f64 = pts.iter().map(|p| p.1).sum();
+                let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+                let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+                let denom = n * sxx - sx * sx;
+                if denom.abs() < 1e-12 {
+                    return MigrationCost::default();
+                }
+                let slope = (n * sxy - sx * sy) / denom;
+                let base = (sy - slope * sx) / n;
+                MigrationCost { base_s: base.max(0.0), per_rank_s: slope.max(0.0) }
+            }
+        }
+    }
+
+    /// Modeled load (= migration) latency for an adapter of `rank`.
+    pub fn load_s(&self, rank: usize) -> f64 {
+        (self.base_s + self.per_rank_s * rank as f64).max(0.0)
+    }
+}
+
+/// Tuning knobs of the incremental replanner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplanParams {
+    /// Relative throughput slack within which an adapter stays on its
+    /// current GPU (0.05 = stay unless moving is predicted to be >5%
+    /// better).
+    pub slack: f64,
+    /// Epoch length used to amortize migration costs (seconds).
+    pub epoch_s: f64,
+    /// Adapter migration cost model (fig6 load-time profile).
+    pub cost: MigrationCost,
+}
+
+impl Default for ReplanParams {
+    fn default() -> Self {
+        ReplanParams { slack: 0.05, epoch_s: 10.0, cost: MigrationCost::default() }
+    }
+}
+
+impl ReplanParams {
+    /// Params with the migration cost fitted from a calibration and the
+    /// amortization window set to the epoch length.
+    pub fn from_calibration(c: &Calibration, epoch_s: f64) -> ReplanParams {
+        ReplanParams { slack: 0.05, epoch_s, cost: MigrationCost::from_calibration(c) }
+    }
+}
+
+/// Result of one incremental replanning step.
+#[derive(Debug, Clone)]
+pub struct ReplanOutcome {
+    /// The placement for the new epoch.
+    pub placement: Placement,
+    /// Adapters that moved to a different GPU than in the previous epoch.
+    pub migrations: usize,
+    /// Total modeled migration latency (seconds, [`MigrationCost`]).
+    pub migration_cost_s: f64,
+    /// Adapters that kept their previous GPU.
+    pub stayed: usize,
+    /// Adapters that did not exist in the previous placement.
+    pub added: usize,
+    /// Previous-placement adapters absent from the new workload.
+    pub removed: usize,
+}
+
+/// Best non-starving `A_max` testing point for an adapter group:
+/// `(a_max, predicted_throughput)`, or `None` when every testing point
+/// predicts starvation (the group cannot be served by one GPU).
+fn probe(group: &[AdapterSpec], models: &MlModels) -> Option<(usize, f64)> {
+    let mut best: Option<(usize, f64)> = None;
+    for &p in TESTING_POINTS.iter() {
+        let x = features(group, p);
+        if models.predict_starvation(&x) {
+            continue;
+        }
+        let t = models.predict_throughput(&x);
+        let better = match best {
+            None => true,
+            Some((_, bt)) => t > bt,
+        };
+        if better {
+            best = Some((p, t));
+        }
+    }
+    best
+}
+
+/// Incrementally re-place `adapters` on `gpus` GPUs starting from `prev`
+/// (pass `None` for a cold start, which reduces to [`greedy::place`]).
+///
+/// Fails with [`PlacementError::Starvation`] when some pending adapter fits
+/// on no GPU under the starvation model — the same criterion as Alg. 1.
+pub fn replan(
+    prev: Option<&Placement>,
+    adapters: &[AdapterSpec],
+    gpus: usize,
+    models: &MlModels,
+    params: &ReplanParams,
+) -> Result<ReplanOutcome, PlacementError> {
+    let Some(prev) = prev else {
+        let placement = greedy::place(adapters, gpus, models)?;
+        return Ok(ReplanOutcome {
+            placement,
+            migrations: 0,
+            migration_cost_s: 0.0,
+            stayed: 0,
+            added: adapters.len(),
+            removed: 0,
+        });
+    };
+
+    let current_ids: HashSet<usize> = adapters.iter().map(|a| a.id).collect();
+    let removed = prev.assignment.keys().filter(|id| !current_ids.contains(*id)).count();
+
+    // 1. Sticky grouping: survivors keep their GPU, the rest go pending.
+    let mut groups: Vec<Vec<AdapterSpec>> = vec![Vec::new(); gpus];
+    let mut pending: Vec<AdapterSpec> = Vec::new();
+    for a in adapters {
+        match prev.assignment.get(&a.id) {
+            Some(&g) if g < gpus => groups[g].push(a.clone()),
+            _ => pending.push(a.clone()),
+        }
+    }
+
+    // 2. Per-GPU repair: evict lowest-priority adapters while the group
+    //    starves at every testing point.
+    let mut a_max = vec![0usize; gpus];
+    for g in 0..gpus {
+        if groups[g].is_empty() {
+            continue;
+        }
+        groups[g] = greedy::priority_sorting(&groups[g]);
+        loop {
+            match probe(&groups[g], models) {
+                Some((p, _)) => {
+                    a_max[g] = p;
+                    break;
+                }
+                None => {
+                    let evicted = groups[g].pop().expect("non-empty group");
+                    pending.push(evicted);
+                    if groups[g].is_empty() {
+                        a_max[g] = 0;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    // 3. Sticky packing of pending adapters in priority order.
+    for a in greedy::priority_sorting(&pending) {
+        // All empty GPUs are identical candidates: probe one representative.
+        let empty_eval = probe(std::slice::from_ref(&a), models);
+        let mut evals: Vec<Option<(usize, f64)>> = Vec::with_capacity(gpus);
+        for g in 0..gpus {
+            if groups[g].is_empty() {
+                evals.push(empty_eval);
+                continue;
+            }
+            let mut cand = groups[g].clone();
+            cand.push(a.clone());
+            evals.push(probe(&cand, models));
+        }
+        let t_best =
+            evals.iter().flatten().map(|&(_, t)| t).fold(f64::NEG_INFINITY, f64::max);
+        if t_best == f64::NEG_INFINITY {
+            return Err(PlacementError::Starvation);
+        }
+        let prev_gpu = prev.assignment.get(&a.id).copied().filter(|&g| g < gpus);
+        let sticky = prev_gpu.and_then(|g| evals[g].map(|e| (g, e)));
+        let chosen = match sticky {
+            Some((g, (_, t_prev)))
+                if t_prev >= (1.0 - params.slack) * t_best
+                    || (t_best - t_prev) * params.epoch_s
+                        <= params.cost.load_s(a.rank) * t_best.max(0.0) =>
+            {
+                g
+            }
+            _ => {
+                // Migrate: best already-used feasible GPU, else the first
+                // fresh one (GPU-count minimization).
+                let mut best_used: Option<(usize, f64)> = None;
+                for g in 0..gpus {
+                    if groups[g].is_empty() {
+                        continue;
+                    }
+                    if let Some((_, t)) = evals[g] {
+                        let better = match best_used {
+                            None => true,
+                            Some((_, bt)) => t > bt,
+                        };
+                        if better {
+                            best_used = Some((g, t));
+                        }
+                    }
+                }
+                match best_used {
+                    Some((g, _)) => g,
+                    None => (0..gpus)
+                        .find(|&g| groups[g].is_empty() && evals[g].is_some())
+                        .ok_or(PlacementError::Starvation)?,
+                }
+            }
+        };
+        a_max[chosen] = evals[chosen].expect("chosen GPU is feasible").0;
+        groups[chosen].push(a);
+    }
+
+    // 4. Drain: try to empty the smallest surviving group onto the other
+    //    used GPUs, bounded by one epoch of *cumulative* migration time
+    //    across all drains of this replan step.
+    let mut total_drain_cost = 0.0f64;
+    loop {
+        let Some(src) = (0..gpus)
+            .filter(|&g| !groups[g].is_empty())
+            .min_by_key(|&g| groups[g].len())
+        else {
+            break;
+        };
+        let targets: Vec<usize> =
+            (0..gpus).filter(|&g| g != src && !groups[g].is_empty()).collect();
+        if targets.is_empty() {
+            break;
+        }
+        let movers = greedy::priority_sorting(&groups[src]);
+        let mut tentative = groups.clone();
+        tentative[src].clear();
+        let mut placed: Vec<(AdapterSpec, usize, usize)> = Vec::new();
+        let mut drain_cost = 0.0;
+        let mut ok = true;
+        for a in movers {
+            let mut best: Option<(usize, usize, f64)> = None;
+            for &g in &targets {
+                let mut cand = tentative[g].clone();
+                cand.push(a.clone());
+                if let Some((p, t)) = probe(&cand, models) {
+                    let better = match best {
+                        None => true,
+                        Some((_, _, bt)) => t > bt,
+                    };
+                    if better {
+                        best = Some((g, p, t));
+                    }
+                }
+            }
+            match best {
+                Some((g, p, _)) => {
+                    tentative[g].push(a.clone());
+                    drain_cost += params.cost.load_s(a.rank);
+                    placed.push((a, g, p));
+                }
+                None => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok || total_drain_cost + drain_cost > params.epoch_s {
+            break;
+        }
+        total_drain_cost += drain_cost;
+        for (a, g, p) in placed {
+            groups[g].push(a);
+            a_max[g] = p;
+        }
+        groups[src].clear();
+        a_max[src] = 0;
+    }
+
+    // Assemble and account against the previous placement.
+    let mut placement = Placement { assignment: Default::default(), a_max: a_max.clone() };
+    for (g, group) in groups.iter().enumerate() {
+        for a in group {
+            placement.assignment.insert(a.id, g);
+        }
+    }
+    if placement.assignment.len() != adapters.len() {
+        return Err(PlacementError::Starvation);
+    }
+    let mut migrations = 0;
+    let mut migration_cost_s = 0.0;
+    let mut stayed = 0;
+    let mut added = 0;
+    for a in adapters {
+        match prev.assignment.get(&a.id) {
+            None => added += 1,
+            Some(&pg) => {
+                if placement.assignment[&a.id] == pg {
+                    stayed += 1;
+                } else {
+                    migrations += 1;
+                    migration_cost_s += params.cost.load_s(a.rank);
+                }
+            }
+        }
+    }
+    Ok(ReplanOutcome { placement, migrations, migration_cost_s, stayed, added, removed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shared analytic stand-in models (see `placement::test_models`).
+    fn fake_models() -> MlModels {
+        crate::placement::test_models::analytic_models(11)
+    }
+
+    fn adapters(n: usize, rate: f64) -> Vec<AdapterSpec> {
+        (0..n).map(|id| AdapterSpec { id, rank: 8, rate }).collect()
+    }
+
+    #[test]
+    fn cold_start_matches_greedy() {
+        let models = fake_models();
+        let ads = adapters(16, 0.1);
+        let out = replan(None, &ads, 4, &models, &ReplanParams::default()).unwrap();
+        let fresh = greedy::place(&ads, 4, &models).unwrap();
+        assert_eq!(out.placement, fresh);
+        assert_eq!(out.migrations, 0);
+        assert_eq!(out.added, 16);
+    }
+
+    #[test]
+    fn unchanged_workload_replans_with_zero_migrations() {
+        let models = fake_models();
+        let ads = adapters(32, 0.1);
+        let p0 = greedy::place(&ads, 4, &models).unwrap();
+        let out = replan(Some(&p0), &ads, 4, &models, &ReplanParams::default()).unwrap();
+        assert_eq!(out.migrations, 0, "stable workload must not migrate");
+        assert_eq!(out.stayed, 32);
+        assert_eq!(out.migration_cost_s, 0.0);
+        for a in &ads {
+            assert_eq!(out.placement.assignment[&a.id], p0.assignment[&a.id]);
+        }
+    }
+
+    #[test]
+    fn retired_adapters_are_dropped_without_migrations() {
+        let models = fake_models();
+        let ads = adapters(32, 0.1);
+        let p0 = greedy::place(&ads, 4, &models).unwrap();
+        let survivors: Vec<AdapterSpec> = ads.iter().take(16).cloned().collect();
+        let out = replan(Some(&p0), &survivors, 4, &models, &ReplanParams::default()).unwrap();
+        assert_eq!(out.removed, 16);
+        assert_eq!(out.placement.assignment.len(), 16);
+        assert!(out.placement.gpus_used() <= p0.gpus_used());
+    }
+
+    #[test]
+    fn overload_triggers_eviction_and_migration() {
+        let models = fake_models();
+        // Previous epoch: everything on GPU 0 (feasible at low rate).
+        let low = adapters(48, 0.05);
+        let p0 = greedy::place(&low, 4, &models).unwrap();
+        assert_eq!(p0.gpus_used(), 1);
+        // Rates sextuple: demand 48×0.3×96 ≈ 1382 > capacity at every
+        // A_max, so the repair phase must evict and spill to a second GPU.
+        let high = adapters(48, 0.3);
+        let out = replan(Some(&p0), &high, 4, &models, &ReplanParams::default()).unwrap();
+        assert!(out.placement.gpus_used() >= 2, "gpus={}", out.placement.gpus_used());
+        assert!(out.migrations > 0, "overload must migrate someone");
+        assert!(out.migration_cost_s > 0.0);
+        assert_eq!(out.migrations + out.stayed, 48);
+    }
+
+    #[test]
+    fn infeasible_workload_errors() {
+        let models = fake_models();
+        let p0 = greedy::place(&adapters(8, 0.1), 4, &models).unwrap();
+        let impossible = adapters(384, 1.0);
+        let err = replan(Some(&p0), &impossible, 4, &models, &ReplanParams::default()).unwrap_err();
+        assert_eq!(err, PlacementError::Starvation);
+    }
+
+    #[test]
+    fn a_max_valid_on_used_gpus() {
+        let models = fake_models();
+        let ads = adapters(64, 0.1);
+        let p0 = greedy::place(&adapters(16, 0.1), 4, &models).unwrap();
+        let out = replan(Some(&p0), &ads, 4, &models, &ReplanParams::default()).unwrap();
+        for g in 0..4 {
+            if !out.placement.adapters_on(g).is_empty() {
+                assert!(TESTING_POINTS.contains(&out.placement.a_max[g]));
+            }
+        }
+    }
+
+    #[test]
+    fn migration_cost_fits_calibration_profile() {
+        let calib = Calibration::default();
+        let cost = MigrationCost::from_calibration(&calib);
+        for (&rank, &s) in &calib.load_s_by_rank {
+            let err = (cost.load_s(rank) - s).abs();
+            assert!(err < 0.005, "rank {rank}: fitted {} vs profiled {s}", cost.load_s(rank));
+        }
+        // Monotone in rank.
+        assert!(cost.load_s(32) > cost.load_s(8));
+    }
+}

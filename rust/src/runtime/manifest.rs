@@ -9,26 +9,42 @@ use std::path::{Path, PathBuf};
 /// Parsed per-model manifest entry.
 #[derive(Debug, Clone)]
 pub struct ModelMeta {
+    /// Model name (manifest key, e.g. "pico-llama").
     pub name: String,
+    /// Embedding width.
     pub d_model: usize,
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// Attention heads.
     pub n_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Sliding attention window (tokens).
     pub window: usize,
+    /// Physical adapter bank slots (slot 0 = zero adapter).
     pub slots: usize,
+    /// Maximum LoRA rank the bank is padded for.
     pub max_rank: usize,
     /// Hidden width of the MLP block (config.mlp_dim; defaults to 4·d).
     pub mlp_dim: usize,
     /// Backbone init seed (the reference backend synthesizes its own
     /// deterministic weights from this when no params file is present).
     pub seed: u64,
+    /// Compiled decode batch buckets, ascending.
     pub decode_buckets: Vec<usize>,
+    /// Compiled prefill (padded prompt) buckets, ascending.
     pub prefill_buckets: Vec<usize>,
+    /// Deterministic parameter order (matches `python/compile/model.py`).
     pub param_names: Vec<String>,
+    /// Path of the `.params.npz` weights file (empty for built-ins).
     pub params_file: String,
+    /// Decode HLO artifact path per bucket.
     pub decode_artifacts: BTreeMap<usize, String>,
+    /// Prefill HLO artifact path per bucket.
     pub prefill_artifacts: BTreeMap<usize, String>,
+    /// Whether the artifacts were compiled with the Pallas kernels.
     pub use_pallas: bool,
 }
 
@@ -159,11 +175,14 @@ impl ModelMeta {
 /// The whole artifact directory.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// The directory `manifest.json` was loaded from.
     pub dir: PathBuf,
+    /// Per-model entries, keyed by model name.
     pub models: BTreeMap<String, ModelMeta>,
 }
 
 impl Manifest {
+    /// Load `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let j = Json::read_file(&dir.join("manifest.json"))?;
         let models_j = j

@@ -115,6 +115,7 @@ pub trait Backend {
         self.meta().prefill_buckets.iter().copied().find(|&s| s >= len)
     }
 
+    /// Largest available prefill bucket (prompt-length cap).
     fn max_prefill_bucket(&self) -> usize {
         self.meta().prefill_buckets.last().copied().unwrap_or(0)
     }

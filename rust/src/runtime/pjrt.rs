@@ -45,6 +45,7 @@ impl PjrtBackend {
         Self::load_with_manifest(&manifest, model)
     }
 
+    /// Load one model from an already-parsed manifest.
     pub fn load_with_manifest(manifest: &Manifest, model: &str) -> Result<PjrtBackend> {
         let meta = manifest
             .models

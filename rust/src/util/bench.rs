@@ -7,16 +7,24 @@
 use super::stats;
 use std::time::Instant;
 
+/// Timing summary of one benchmark.
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
+    /// Mean per-iteration time (s).
     pub mean_s: f64,
+    /// Standard deviation (s).
     pub std_s: f64,
+    /// Median (s).
     pub p50_s: f64,
+    /// 95th percentile (s).
     pub p95_s: f64,
 }
 
 impl BenchResult {
+    /// Print the uniform one-line report format.
     pub fn report(&self) {
         println!(
             "bench {:<44} iters={:<5} mean={:>12} p50={:>12} p95={:>12} std={:>12}",
@@ -30,6 +38,7 @@ impl BenchResult {
     }
 }
 
+/// Human-friendly duration (`1.5ms`, `3.2us`, ...).
 pub fn fmt_dur(s: f64) -> String {
     if s >= 1.0 {
         format!("{s:.3}s")

@@ -5,10 +5,14 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command-line arguments.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Non-option arguments, in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -39,18 +43,22 @@ impl Args {
         out
     }
 
+    /// Whether `--name` was passed as a flag.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of option `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// The value of option `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Integer option with a default; errors on unparsable input.
     pub fn usize_or(&self, name: &str, default: usize) -> anyhow::Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -60,6 +68,7 @@ impl Args {
         }
     }
 
+    /// Float option with a default; errors on unparsable input.
     pub fn f64_or(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -69,6 +78,7 @@ impl Args {
         }
     }
 
+    /// Required option; errors when absent.
     pub fn require(&self, name: &str) -> anyhow::Result<&str> {
         self.get(name)
             .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))

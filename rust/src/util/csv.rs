@@ -6,24 +6,30 @@ use std::path::Path;
 /// Column-ordered CSV table.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Header names, in column order.
     pub columns: Vec<String>,
+    /// Data rows (each matches the column arity).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given header.
     pub fn new(columns: &[&str]) -> Table {
         Table { columns: columns.iter().map(|s| s.to_string()).collect(), rows: vec![] }
     }
 
+    /// Append a row (panics on arity mismatch).
     pub fn push(&mut self, row: Vec<String>) {
         assert_eq!(row.len(), self.columns.len(), "row arity mismatch");
         self.rows.push(row);
     }
 
+    /// Append a row of displayable values.
     pub fn push_display(&mut self, row: &[&dyn std::fmt::Display]) {
         self.push(row.iter().map(|v| v.to_string()).collect());
     }
 
+    /// Write the table as CSV, creating parent directories.
     pub fn write_file(&self, path: &Path) -> anyhow::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -37,6 +43,7 @@ impl Table {
         Ok(())
     }
 
+    /// Read a CSV file written by [`Table::write_file`].
     pub fn read_file(path: &Path) -> anyhow::Result<Table> {
         let s = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
@@ -57,6 +64,7 @@ impl Table {
         Ok(Table { columns, rows })
     }
 
+    /// Index of a named column.
     pub fn col_index(&self, name: &str) -> anyhow::Result<usize> {
         self.columns
             .iter()

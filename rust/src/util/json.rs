@@ -8,19 +8,29 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys for stable output).
     Obj(BTreeMap<String, Json>),
 }
 
+/// A parse failure with its byte position.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 
@@ -36,6 +46,8 @@ impl Json {
     // ------------------------------------------------------------------
     // Accessors
     // ------------------------------------------------------------------
+
+    /// Object field access (`None` on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -49,6 +61,7 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing json key '{key}'"))
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -56,10 +69,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -67,6 +82,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -74,6 +90,7 @@ impl Json {
         }
     }
 
+    /// Array slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -81,6 +98,7 @@ impl Json {
         }
     }
 
+    /// Object map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -88,11 +106,13 @@ impl Json {
         }
     }
 
+    /// Array of numbers (non-numbers silently dropped).
     pub fn f64_vec(&self) -> Option<Vec<f64>> {
         self.as_arr()
             .map(|v| v.iter().filter_map(Json::as_f64).collect())
     }
 
+    /// Array of usize (non-numbers silently dropped).
     pub fn usize_vec(&self) -> Option<Vec<usize>> {
         self.as_arr()
             .map(|v| v.iter().filter_map(Json::as_usize).collect())
@@ -101,14 +121,18 @@ impl Json {
     // ------------------------------------------------------------------
     // Builders
     // ------------------------------------------------------------------
+
+    /// Build an object from (key, value) pairs.
     pub fn obj(entries: Vec<(&str, Json)>) -> Json {
         Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a numeric array.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// Build a string array.
     pub fn arr_str(xs: &[String]) -> Json {
         Json::Arr(xs.iter().map(|x| Json::Str(x.clone())).collect())
     }
@@ -116,6 +140,8 @@ impl Json {
     // ------------------------------------------------------------------
     // Parse / write
     // ------------------------------------------------------------------
+
+    /// Parse a complete JSON document.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -127,12 +153,14 @@ impl Json {
         Ok(v)
     }
 
+    /// Read and parse a JSON file.
     pub fn read_file(path: &std::path::Path) -> anyhow::Result<Json> {
         let s = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
         Ok(Json::parse(&s).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?)
     }
 
+    /// Pretty-print to a file, creating parent directories.
     pub fn write_file(&self, path: &std::path::Path) -> anyhow::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -141,12 +169,15 @@ impl Json {
         Ok(())
     }
 
+    /// Compact single-line rendering.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, None, 0);
         out
     }
 
+    /// Two-space-indented rendering.
     pub fn pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, Some(2), 0);

@@ -8,21 +8,27 @@ use super::rng::Rng;
 
 /// Configuration for a property run.
 pub struct Prop {
+    /// Number of random cases to run.
     pub cases: usize,
+    /// Master seed (per-case seeds derive from it).
     pub seed: u64,
+    /// Property name (shown in the failure report).
     pub name: &'static str,
 }
 
 impl Prop {
+    /// A property with the default case count and seed.
     pub fn new(name: &'static str) -> Prop {
         Prop { cases: 64, seed: 0xC0FFEE, name }
     }
 
+    /// Override the case count.
     pub fn cases(mut self, n: usize) -> Prop {
         self.cases = n;
         self
     }
 
+    /// Override the master seed.
     pub fn seed(mut self, s: u64) -> Prop {
         self.seed = s;
         self

@@ -19,6 +19,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed a new generator (any seed value is fine, including 0).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let mut s = [0u64; 4];
@@ -33,6 +34,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = (self.s[0].wrapping_add(self.s[3]))
             .rotate_left(23)
@@ -70,6 +72,7 @@ impl Rng {
         lo + (self.next_u64() % ((hi - lo + 1) as u64)) as i64
     }
 
+    /// Bernoulli draw with success probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }
@@ -81,6 +84,7 @@ impl Rng {
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
 
+    /// Normal draw with the given mean and standard deviation.
     pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
         mean + std * self.normal()
     }

@@ -9,8 +9,11 @@ use crate::util::rng::Rng;
 /// two, clipped to [min_rate, max_rate].
 #[derive(Debug, Clone, PartialEq)]
 pub struct UnpredictableParams {
+    /// Seconds between regime re-draws.
     pub switch_interval_s: f64,
+    /// Lower clip for the drifting rate (req/s).
     pub min_rate: f64,
+    /// Upper clip for the drifting rate (req/s).
     pub max_rate: f64,
     /// CV of the lognormal inter-arrival regime (Poisson has CV 1).
     pub lognormal_cv: f64,
@@ -27,6 +30,7 @@ impl Default for UnpredictableParams {
     }
 }
 
+/// The arrival process shared by every adapter in a workload.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ArrivalModel {
     /// Stationary Poisson per adapter — the paper's predictable long-term

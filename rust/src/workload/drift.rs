@@ -1,0 +1,404 @@
+//! Drifting / phased workloads for the rolling-horizon re-placement loop
+//! (DESIGN.md §7).
+//!
+//! The paper's pipeline computes one placement for one static
+//! [`WorkloadSpec`]; production adapter traffic drifts: request rates ramp
+//! and oscillate diurnally, and adapters appear and retire as products
+//! launch and sunset.  A [`DriftSpec`] describes such a horizon as a
+//! sequence of `epochs` equal-length windows and compiles each epoch into
+//! an ordinary [`WorkloadSpec`] with a deterministic per-epoch seed, so
+//! every layer built for static workloads (engine, twin, placement,
+//! cluster) can be driven epoch-by-epoch without modification.
+//!
+//! Invariants (enforced by the property tests in this module and in
+//! `tests/prop_invariants.rs`):
+//!
+//! - compilation is deterministic given the seed;
+//! - the epoch windows partition the horizon exactly
+//!   (`epochs · epoch_s == horizon_s`, arrivals stay inside their epoch);
+//! - modulated rates never go negative;
+//! - a retired adapter receives no arrivals in any epoch at or after its
+//!   retirement.
+
+use super::{AdapterSpec, WorkloadSpec};
+use crate::util::rng::Rng;
+
+/// Multiplicative rate modulation applied on top of every phase's base
+/// rate, evaluated per epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RateDrift {
+    /// Rates are constant across the horizon.
+    None,
+    /// Linear ramp of the rate multiplier from `from` (first epoch) to
+    /// `to` (last epoch), evaluated at the epoch midpoint.
+    Ramp {
+        /// Multiplier at the start of the horizon.
+        from: f64,
+        /// Multiplier at the end of the horizon.
+        to: f64,
+    },
+    /// Diurnal modulation: `1 + amplitude · sin(2π · (e / period + phase))`
+    /// where `e` is the epoch index.
+    Diurnal {
+        /// Peak deviation from the base rate (0.3 = ±30%).
+        amplitude: f64,
+        /// Full oscillation period, in epochs.
+        period_epochs: f64,
+        /// Phase offset in fractions of a period.
+        phase: f64,
+    },
+}
+
+impl RateDrift {
+    /// Rate multiplier for `epoch` of `epochs`, clamped to be non-negative
+    /// (a ramp to a negative multiplier bottoms out at zero traffic).
+    pub fn factor(&self, epoch: usize, epochs: usize) -> f64 {
+        let f = match *self {
+            RateDrift::None => 1.0,
+            RateDrift::Ramp { from, to } => {
+                let t = (epoch as f64 + 0.5) / epochs.max(1) as f64;
+                from + (to - from) * t
+            }
+            RateDrift::Diurnal { amplitude, period_epochs, phase } => {
+                let x = epoch as f64 / period_epochs.max(1e-9) + phase;
+                1.0 + amplitude * (2.0 * std::f64::consts::PI * x).sin()
+            }
+        };
+        f.max(0.0)
+    }
+}
+
+/// One adapter's lifetime inside the horizon: active in epochs
+/// `[arrive_epoch, retire_epoch)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdapterPhase {
+    /// The adapter (id, rank, *base* rate before drift modulation).
+    pub adapter: AdapterSpec,
+    /// First epoch (inclusive) in which the adapter receives traffic.
+    pub arrive_epoch: usize,
+    /// First epoch (exclusive bound) in which the adapter is retired; use
+    /// `usize::MAX` (or any value ≥ `epochs`) for "never retires".
+    pub retire_epoch: usize,
+}
+
+impl AdapterPhase {
+    /// Whether the adapter is active (receives arrivals) in `epoch`.
+    pub fn active_in(&self, epoch: usize) -> bool {
+        epoch >= self.arrive_epoch && epoch < self.retire_epoch
+    }
+}
+
+/// A drifting workload over a rolling horizon of equal-length epochs.
+///
+/// ```
+/// use adapter_serving::workload::drift::DriftSpec;
+/// use adapter_serving::workload::WorkloadSpec;
+/// let adapters = WorkloadSpec::homogeneous(8, 8, 0.2);
+/// let drift = DriftSpec::ramp(adapters, 0.5, 1.5, 4, 10.0, 7);
+/// let specs = drift.compile();
+/// assert_eq!(specs.len(), 4);
+/// // The ramp raises traffic across the horizon.
+/// assert!(specs[0].total_rate() < specs[3].total_rate());
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftSpec {
+    /// Every adapter that ever exists in the horizon, with its lifetime.
+    pub phases: Vec<AdapterPhase>,
+    /// Rate modulation shared by all phases.
+    pub drift: RateDrift,
+    /// Number of equal-length epochs in the horizon.
+    pub epochs: usize,
+    /// Simulated duration of one epoch (seconds).
+    pub epoch_s: f64,
+    /// Master seed; per-epoch seeds are derived deterministically from it.
+    pub seed: u64,
+}
+
+impl DriftSpec {
+    /// No drift at all: every adapter alive for the whole horizon at a
+    /// constant rate (the degenerate case where replanning is a no-op).
+    pub fn steady(adapters: Vec<AdapterSpec>, epochs: usize, epoch_s: f64, seed: u64) -> DriftSpec {
+        DriftSpec {
+            phases: adapters
+                .into_iter()
+                .map(|adapter| AdapterPhase { adapter, arrive_epoch: 0, retire_epoch: usize::MAX })
+                .collect(),
+            drift: RateDrift::None,
+            epochs,
+            epoch_s,
+            seed,
+        }
+    }
+
+    /// Linear rate ramp over the whole adapter set (no churn).
+    pub fn ramp(
+        adapters: Vec<AdapterSpec>,
+        from: f64,
+        to: f64,
+        epochs: usize,
+        epoch_s: f64,
+        seed: u64,
+    ) -> DriftSpec {
+        let base = DriftSpec::steady(adapters, epochs, epoch_s, seed);
+        DriftSpec { drift: RateDrift::Ramp { from, to }, ..base }
+    }
+
+    /// Diurnal rate modulation over the whole adapter set (no churn).
+    pub fn diurnal(
+        adapters: Vec<AdapterSpec>,
+        amplitude: f64,
+        period_epochs: f64,
+        epochs: usize,
+        epoch_s: f64,
+        seed: u64,
+    ) -> DriftSpec {
+        DriftSpec {
+            drift: RateDrift::Diurnal { amplitude, period_epochs, phase: 0.0 },
+            ..DriftSpec::steady(adapters, epochs, epoch_s, seed)
+        }
+    }
+
+    /// Adapter-churn workload: `n_base` adapters (ids `0..n_base`) alive
+    /// for the whole horizon, plus `n_churn` adapters that appear at a
+    /// random epoch and retire after a random lifetime of at most half the
+    /// horizon.  Ranks and rates are sampled uniformly from the given sets
+    /// (the §8.2 Cartesian methodology).  Fully deterministic given `seed`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn churn(
+        n_base: usize,
+        n_churn: usize,
+        ranks: &[usize],
+        rates: &[f64],
+        epochs: usize,
+        epoch_s: f64,
+        seed: u64,
+    ) -> DriftSpec {
+        let mut rng = Rng::new(seed ^ 0xD21F7);
+        let mut phases: Vec<AdapterPhase> = (0..n_base)
+            .map(|id| AdapterPhase {
+                adapter: AdapterSpec { id, rank: *rng.choose(ranks), rate: *rng.choose(rates) },
+                arrive_epoch: 0,
+                retire_epoch: usize::MAX,
+            })
+            .collect();
+        let max_life = (epochs / 2).max(1);
+        for i in 0..n_churn {
+            let arrive = rng.below(epochs.max(1));
+            let life = 1 + rng.below(max_life);
+            phases.push(AdapterPhase {
+                adapter: AdapterSpec {
+                    id: n_base + i,
+                    rank: *rng.choose(ranks),
+                    rate: *rng.choose(rates),
+                },
+                arrive_epoch: arrive,
+                retire_epoch: (arrive + life).min(epochs),
+            });
+        }
+        DriftSpec { phases, drift: RateDrift::None, epochs, epoch_s, seed }
+    }
+
+    /// Total simulated horizon (seconds): the epochs partition it exactly.
+    pub fn horizon_s(&self) -> f64 {
+        self.epochs as f64 * self.epoch_s
+    }
+
+    /// Absolute start time of `epoch` within the horizon (seconds).
+    pub fn epoch_start_s(&self, epoch: usize) -> f64 {
+        epoch as f64 * self.epoch_s
+    }
+
+    /// The adapters active in `epoch`, with drift-modulated rates.
+    pub fn adapters_at(&self, epoch: usize) -> Vec<AdapterSpec> {
+        let f = self.drift.factor(epoch, self.epochs);
+        self.phases
+            .iter()
+            .filter(|p| p.active_in(epoch))
+            .map(|p| AdapterSpec {
+                id: p.adapter.id,
+                rank: p.adapter.rank,
+                rate: (p.adapter.rate * f).max(0.0),
+            })
+            .collect()
+    }
+
+    /// Compile `epoch` into an ordinary [`WorkloadSpec`] covering
+    /// `[epoch_start_s(epoch), epoch_start_s(epoch + 1))`, with a seed
+    /// derived deterministically from the master seed and the epoch index.
+    pub fn epoch_spec(&self, epoch: usize) -> WorkloadSpec {
+        let seed = self.seed ^ (epoch as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+        WorkloadSpec::sharegpt_like(self.adapters_at(epoch), self.epoch_s, seed)
+    }
+
+    /// Compile the whole horizon: one [`WorkloadSpec`] per epoch.
+    pub fn compile(&self) -> Vec<WorkloadSpec> {
+        (0..self.epochs).map(|e| self.epoch_spec(e)).collect()
+    }
+
+    /// The union workload: every adapter that is ever active, at its *peak*
+    /// drift-modulated rate.  This is what a static (plan-once) deployment
+    /// must provision for, and the baseline the drift experiment compares
+    /// replanning against.
+    pub fn union_adapters(&self) -> Vec<AdapterSpec> {
+        let mut out: Vec<AdapterSpec> = Vec::new();
+        for p in &self.phases {
+            let last = p.retire_epoch.min(self.epochs);
+            if p.arrive_epoch >= last {
+                continue;
+            }
+            let peak_factor = (p.arrive_epoch..last)
+                .map(|e| self.drift.factor(e, self.epochs))
+                .fold(0.0, f64::max);
+            out.push(AdapterSpec {
+                id: p.adapter.id,
+                rank: p.adapter.rank,
+                rate: (p.adapter.rate * peak_factor).max(0.0),
+            });
+        }
+        out.sort_by_key(|a| a.id);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn epoch_specs_are_deterministic() {
+        let d = DriftSpec::churn(8, 16, &[8, 16], &[0.1, 0.2], 6, 5.0, 42);
+        let a = d.compile();
+        let b = d.compile();
+        assert_eq!(a.len(), 6);
+        for (sa, sb) in a.iter().zip(&b) {
+            assert_eq!(sa.adapters, sb.adapters);
+            assert_eq!(sa.trace(), sb.trace());
+        }
+    }
+
+    #[test]
+    fn epochs_partition_horizon_exactly() {
+        let d = DriftSpec::steady(WorkloadSpec::homogeneous(4, 8, 0.5), 5, 7.0, 1);
+        assert!((d.horizon_s() - 35.0).abs() < 1e-12);
+        let total: f64 = d.compile().iter().map(|s| s.horizon_s).sum();
+        assert!((total - d.horizon_s()).abs() < 1e-9);
+        for (e, s) in d.compile().iter().enumerate() {
+            assert!((d.epoch_start_s(e + 1) - d.epoch_start_s(e) - s.horizon_s).abs() < 1e-12);
+            assert!(s.trace().iter().all(|a| a.time_s >= 0.0 && a.time_s < s.horizon_s));
+        }
+    }
+
+    #[test]
+    fn ramp_modulates_rates_monotonically() {
+        let d = DriftSpec::ramp(WorkloadSpec::homogeneous(4, 8, 1.0), 0.5, 2.0, 4, 5.0, 3);
+        let rates: Vec<f64> =
+            (0..4).map(|e| d.adapters_at(e).iter().map(|a| a.rate).sum()).collect();
+        assert!(rates.windows(2).all(|w| w[0] < w[1]), "{rates:?}");
+    }
+
+    #[test]
+    fn diurnal_oscillates_around_base() {
+        let d = DriftSpec::diurnal(WorkloadSpec::homogeneous(2, 8, 1.0), 0.5, 4.0, 8, 5.0, 3);
+        let rates: Vec<f64> =
+            (0..8).map(|e| d.adapters_at(e).iter().map(|a| a.rate).sum()).collect();
+        let max = rates.iter().cloned().fold(0.0, f64::max);
+        let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max > 2.0 && min < 2.0, "{rates:?}");
+    }
+
+    #[test]
+    fn union_covers_every_phase_at_peak_rate() {
+        let d = DriftSpec::churn(4, 8, &[8], &[0.1], 6, 5.0, 9);
+        let union = d.union_adapters();
+        assert_eq!(union.len(), 12);
+        let ids: Vec<usize> = union.iter().map(|a| a.id).collect();
+        assert_eq!(ids, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prop_epoch_traces_deterministic_under_seed() {
+        Prop::new("drift determinism").cases(24).check(|rng, size| {
+            let epochs = 2 + size % 6;
+            let d = DriftSpec::churn(
+                1 + size,
+                size,
+                &[8, 16, 32],
+                &[0.05, 0.1, 0.4],
+                epochs,
+                4.0,
+                rng.next_u64(),
+            );
+            let d2 = d.clone();
+            for e in 0..epochs {
+                prop_assert!(
+                    d.epoch_spec(e).trace() == d2.epoch_spec(e).trace(),
+                    "epoch {e} trace not deterministic"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_rates_stay_non_negative_through_ramps() {
+        Prop::new("drift non-negative rates").cases(48).check(|rng, size| {
+            let from = rng.range_f64(-1.0, 2.0);
+            let to = rng.range_f64(-2.0, 2.0);
+            let epochs = 1 + size % 8;
+            let d = DriftSpec::ramp(
+                WorkloadSpec::homogeneous(1 + size % 5, 8, 0.5),
+                from,
+                to,
+                epochs,
+                3.0,
+                rng.next_u64(),
+            );
+            for e in 0..epochs {
+                for a in d.adapters_at(e) {
+                    prop_assert!(a.rate >= 0.0, "negative rate {} in epoch {e}", a.rate);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_retired_adapters_get_no_arrivals() {
+        Prop::new("churned-out adapters silent").cases(24).check(|rng, size| {
+            let epochs = 2 + size % 6;
+            let d = DriftSpec::churn(
+                size % 4,
+                2 + size,
+                &[8, 16],
+                &[0.5, 1.0],
+                epochs,
+                4.0,
+                rng.next_u64(),
+            );
+            for e in 0..epochs {
+                let active: std::collections::HashSet<usize> =
+                    d.phases.iter().filter(|p| p.active_in(e)).map(|p| p.adapter.id).collect();
+                for arr in d.epoch_spec(e).trace() {
+                    prop_assert!(
+                        active.contains(&arr.adapter_id),
+                        "adapter {} got an arrival in epoch {e} outside its lifetime",
+                        arr.adapter_id
+                    );
+                }
+            }
+            // Specifically: after retire_epoch, never again.
+            for p in &d.phases {
+                for e in p.retire_epoch.min(epochs)..epochs {
+                    prop_assert!(
+                        !d.adapters_at(e).iter().any(|a| a.id == p.adapter.id),
+                        "adapter {} active after retirement",
+                        p.adapter.id
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -5,14 +5,31 @@ use crate::util::rng::Rng;
 /// Distribution of request input/output token lengths.
 #[derive(Debug, Clone, PartialEq)]
 pub enum LengthDist {
+    /// Every request has exactly this length.
     Fixed(usize),
     /// Lognormal parameterized by its *target* mean and coefficient of
     /// variation, clipped to [min, max].
-    LogNormal { mean: f64, cv: f64, min: usize, max: usize },
-    Uniform { lo: usize, hi: usize },
+    LogNormal {
+        /// Target (pre-clip) mean length.
+        mean: f64,
+        /// Coefficient of variation.
+        cv: f64,
+        /// Lower clip (tokens).
+        min: usize,
+        /// Upper clip (tokens).
+        max: usize,
+    },
+    /// Uniform over `[lo, hi]` inclusive.
+    Uniform {
+        /// Lower bound (tokens).
+        lo: usize,
+        /// Upper bound (tokens).
+        hi: usize,
+    },
 }
 
 impl LengthDist {
+    /// Draw one length.
     pub fn sample(&self, rng: &mut Rng) -> usize {
         match *self {
             LengthDist::Fixed(n) => n,

@@ -3,9 +3,12 @@
 //!
 //! A workload (paper §4) is "the required adapters, their sizes, and their
 //! request arrival rates", plus request length characteristics.  Traces are
-//! fully deterministic given the seed.
+//! fully deterministic given the seed.  [`drift`] extends the static model
+//! with phased/drifting horizons for the rolling re-placement loop
+//! (DESIGN.md §7).
 
 pub mod arrivals;
+pub mod drift;
 pub mod lengths;
 
 pub use arrivals::{ArrivalModel, UnpredictableParams};
@@ -16,32 +19,56 @@ use crate::util::rng::Rng;
 /// One adapter to serve: identity, LoRA rank ("size") and mean arrival rate.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AdapterSpec {
+    /// Stable adapter identity (routing key across the whole pipeline).
     pub id: usize,
+    /// LoRA rank — the paper's adapter "size".
     pub rank: usize,
     /// Mean request arrival rate (req/s).
     pub rate: f64,
 }
 
-/// A complete workload description.
+/// A complete workload description (paper §4): adapters, request-length
+/// marginals, the arrival process and the simulated horizon.  Traces are
+/// fully deterministic given `seed`.
+///
+/// ```
+/// use adapter_serving::workload::WorkloadSpec;
+/// let adapters = WorkloadSpec::homogeneous(4, 8, 0.5);
+/// let spec = WorkloadSpec::sharegpt_like(adapters, 10.0, 42);
+/// let trace = spec.trace();
+/// assert_eq!(trace, spec.trace()); // deterministic
+/// assert!(trace.windows(2).all(|w| w[0].time_s <= w[1].time_s));
+/// ```
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
+    /// The adapters receiving traffic.
     pub adapters: Vec<AdapterSpec>,
+    /// Prompt-length distribution (tokens).
     pub input_len: LengthDist,
+    /// Generation-length distribution (tokens).
     pub output_len: LengthDist,
+    /// The arrival process shared by all adapters.
     pub arrival: ArrivalModel,
     /// Simulated duration (the paper runs 1 h per configuration; we default
     /// to a compressed horizon — see DESIGN.md §1).
     pub horizon_s: f64,
+    /// Trace seed; every derived stream (per-adapter arrivals, lengths)
+    /// forks deterministically from it.
     pub seed: u64,
 }
 
 /// One request arrival in a generated trace.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Arrival {
+    /// Position in the time-sorted trace (also the engine's request id).
     pub request_id: usize,
+    /// Arrival time within the horizon (s).
     pub time_s: f64,
+    /// The adapter this request targets.
     pub adapter_id: usize,
+    /// Prompt length (tokens).
     pub input_len: usize,
+    /// Generation budget (tokens).
     pub output_len: usize,
 }
 
@@ -95,6 +122,7 @@ impl WorkloadSpec {
             .collect()
     }
 
+    /// Aggregate request rate over all adapters (req/s).
     pub fn total_rate(&self) -> f64 {
         self.adapters.iter().map(|a| a.rate).sum()
     }

@@ -1,6 +1,7 @@
 //! Property-based tests (seeded harness in util::prop) over the system's
 //! core invariants: memory conservation, scheduler admission soundness,
-//! placement completeness, serialization round-trips, twin determinism.
+//! placement completeness, serialization round-trips, twin determinism,
+//! and drift-workload epoch semantics (DESIGN.md §7).
 
 use adapter_serving::config::{EngineConfig, MemoryConfig};
 use adapter_serving::dt::{self, Calibration, LengthVariant};
@@ -13,6 +14,7 @@ use adapter_serving::prop_assert;
 use adapter_serving::util::json::Json;
 use adapter_serving::util::prop::Prop;
 use adapter_serving::util::rng::Rng;
+use adapter_serving::workload::drift::DriftSpec;
 use adapter_serving::workload::{AdapterSpec, WorkloadSpec};
 use std::collections::VecDeque;
 
@@ -187,6 +189,52 @@ fn workload_traces_are_reproducible_and_ordered() {
             t1.iter().all(|a| a.time_s < spec.horizon_s),
             "arrival beyond horizon"
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn drift_epochs_partition_horizon_deterministically_and_respect_lifetimes() {
+    Prop::new("drift epoch semantics").cases(24).check(|rng, size| {
+        let epochs = 2 + size % 6;
+        let epoch_s = 1.0 + rng.f64() * 9.0;
+        let d = DriftSpec::churn(
+            size % 5,
+            1 + size,
+            &[8, 16, 32],
+            &[0.05, 0.2, 0.8],
+            epochs,
+            epoch_s,
+            rng.next_u64(),
+        );
+        // Determinism under the seed.
+        let a = d.compile();
+        let b = d.compile();
+        prop_assert!(a.len() == epochs, "{} epochs compiled, expected {epochs}", a.len());
+        for (e, (sa, sb)) in a.iter().zip(&b).enumerate() {
+            prop_assert!(sa.trace() == sb.trace(), "epoch {e} not deterministic");
+        }
+        // Exact partition of the horizon.
+        let total: f64 = a.iter().map(|s| s.horizon_s).sum();
+        prop_assert!((total - d.horizon_s()).abs() < 1e-9, "partition leak: {total}");
+        for (e, s) in a.iter().enumerate() {
+            prop_assert!(
+                s.trace().iter().all(|arr| arr.time_s >= 0.0 && arr.time_s < s.horizon_s),
+                "epoch {e} arrival outside its window"
+            );
+            // Non-negative rates, and arrivals only for alive adapters.
+            prop_assert!(s.adapters.iter().all(|ad| ad.rate >= 0.0), "negative rate");
+            for p in &d.phases {
+                let alive = p.active_in(e);
+                if !alive {
+                    prop_assert!(
+                        !s.adapters.iter().any(|ad| ad.id == p.adapter.id),
+                        "retired/unarrived adapter {} present in epoch {e}",
+                        p.adapter.id
+                    );
+                }
+            }
+        }
         Ok(())
     });
 }
