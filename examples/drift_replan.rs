@@ -8,7 +8,10 @@
 //!      mid-horizon, a lighter wave arrives later);
 //!   3. run the horizon under three policies — plan-once static,
 //!      migration-aware incremental replan, oracle-per-epoch — and compare
-//!      GPU-epochs, migrations and feasibility.
+//!      GPU-epochs, migrations and feasibility;
+//!   4. re-run the replanning loop under the latency objective
+//!      (`MinLatency`) and show the GPU-epochs vs mean-ITL tradeoff the
+//!      `drift` experiment quantifies epoch by epoch.
 //!
 //! ```sh
 //! cargo run --release --example drift_replan
@@ -20,16 +23,17 @@ use adapter_serving::dt::LengthVariant;
 use adapter_serving::experiments::drift::burst_churn;
 use adapter_serving::experiments::{ExpContext, Scale};
 use adapter_serving::placement::replan::ReplanParams;
+use adapter_serving::placement::{MinGpus, MinLatency};
 
 fn main() -> anyhow::Result<()> {
     let ctx = ExpContext::new(Scale::Quick);
     let model = "pico-llama";
     let (epochs, epoch_s, gpus) = (6usize, 5.0, 4usize);
 
-    println!("[1/3] calibrating the twin + training the RF models (cached) ...");
+    println!("[1/4] calibrating the twin + training the RF models (cached) ...");
     let mut rt = ctx.load_runtime(model)?;
     let calib = ctx.calibration(rt.as_mut())?;
-    let models = ctx.trained_models(&calib)?;
+    let est = ctx.trained_estimator(&calib)?;
     let base = EngineConfig { model: model.to_string(), ..Default::default() };
     let params = ReplanParams::from_calibration(&calib, epoch_s);
     println!(
@@ -38,7 +42,7 @@ fn main() -> anyhow::Result<()> {
         params.cost.load_s(32) * 1e3
     );
 
-    println!("[2/3] building the burst-churn drift scenario (scaled to this backbone) ...");
+    println!("[2/4] building the burst-churn drift scenario (scaled to this backbone) ...");
     let drift = burst_churn(epochs, epoch_s, &calib);
     for e in 0..epochs {
         let s = drift.epoch_spec(e);
@@ -49,8 +53,9 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    println!("[3/3] serving the horizon under each policy (twin, per-GPU parallel) ...");
+    println!("[3/4] serving the horizon under each policy (twin, per-GPU parallel) ...");
     let cost = params.cost;
+    let mut replan_min_gpus = None;
     for (name, policy) in [
         ("static", ReplanPolicy::Static),
         ("replan", ReplanPolicy::Replan(params.clone())),
@@ -61,7 +66,8 @@ fn main() -> anyhow::Result<()> {
             &base,
             &drift,
             gpus,
-            &models,
+            &est,
+            &MinGpus,
             &policy,
             LengthVariant::Original,
         )?;
@@ -74,6 +80,33 @@ fn main() -> anyhow::Result<()> {
             rep.total_migration_cost_s * 1e3,
             rep.infeasible_epochs,
             rep.final_backlog_tokens
+        );
+        if name == "replan" {
+            replan_min_gpus = Some(rep);
+        }
+    }
+
+    println!("[4/4] the same replanning loop under each objective (GPUs vs ITL) ...");
+    let replan_min_latency = run_epochs_on_twin(
+        &calib,
+        &base,
+        &drift,
+        gpus,
+        &est,
+        &MinLatency,
+        &ReplanPolicy::Replan(params.clone()),
+        LengthVariant::Original,
+    )?;
+    let pairs = [
+        ("min-gpus", replan_min_gpus.expect("replan ran in step 3")),
+        ("min-latency", replan_min_latency),
+    ];
+    for (name, rep) in &pairs {
+        println!(
+            "      {name:>11}: {} GPU-epochs at {:.2} ms mean ITL ({} migrations)",
+            rep.gpu_epochs,
+            rep.mean_itl_s * 1e3,
+            rep.total_migrations
         );
     }
     println!("done — `adapterd experiment drift` writes this comparison to results/drift/");

@@ -1,14 +1,20 @@
-//! END-TO-END DRIVER: the full data-driven pipeline on a real workload,
-//! proving all layers compose (DESIGN.md §6, recorded in EXPERIMENTS.md):
+//! END-TO-END DRIVER: the full data-driven pipeline on a real workload
+//! through the typed `Pipeline` API (DESIGN.md §6/§8, recorded in
+//! EXPERIMENTS.md):
 //!
-//!   1. load the AOT-compiled model (L1 Pallas kernels + L2 JAX graph)
-//!      into the Rust PJRT runtime;
-//!   2. calibrate the Digital Twin from engine micro-benchmarks;
-//!   3. generate a training set with the DT;
-//!   4. train the RF throughput/starvation models (halving grid search);
-//!   5. run the greedy caching algorithm for a 4-GPU cluster;
-//!   6. validate the allocation by SERVING IT on the real engine, and
-//!      compare against MaxBase and Random baselines.
+//!   1. build a `Pipeline` for the backbone — every stage below is
+//!      served from the content-hashed artifact store when its inputs
+//!      are unchanged (`results/store/`);
+//!   2. calibrate the Digital Twin from engine micro-benchmarks
+//!      (`Calibrated`);
+//!   3. generate a training set with the DT (`Dataset`);
+//!   4. train the RF throughput/starvation models (`Trained`);
+//!   5. run the caching greedy for a 4-GPU cluster (`Planned`) — the
+//!      estimator and objective behind the planner are pluggable
+//!      (`--estimator`/`--objective` on `adapterd pipeline`);
+//!   6. validate the allocation by SERVING IT on the real engine, one
+//!      backend per GPU in parallel, against MaxBase and Random
+//!      baselines.
 //!
 //! ```sh
 //! cargo run --release --example placement_pipeline
@@ -17,8 +23,8 @@
 use adapter_serving::cluster;
 use adapter_serving::config::EngineConfig;
 use adapter_serving::experiments::{ExpContext, Scale};
-use adapter_serving::placement::{baselines, greedy};
-use adapter_serving::runtime::Backend;
+use adapter_serving::pipeline::Pipeline;
+use adapter_serving::placement::baselines;
 use adapter_serving::workload::WorkloadSpec;
 use std::time::Instant;
 
@@ -27,31 +33,35 @@ fn main() -> anyhow::Result<()> {
     let ctx = ExpContext::new(Scale::Quick);
     let model = "pico-llama";
 
-    println!("[1/6] loading the execution backend ({model}) ...");
-    let mut rt: Box<dyn Backend> = ctx.load_runtime(model)?;
-    println!(
-        "      {} decode + {} prefill buckets available",
-        rt.meta().decode_buckets.len(),
-        rt.meta().prefill_buckets.len()
-    );
+    println!("[1/6] building the typed pipeline for {model} ...");
+    let pipe: Pipeline = ctx.pipeline(model).gpus(4);
+    println!("      artifact store at {}", pipe.store().root().display());
 
     println!("[2/6] calibrating the Digital Twin ...");
-    let calib = ctx.calibration(rt.as_mut())?;
+    let calibrated = pipe.calibrate()?;
+    let calib = &calibrated.calibration;
     println!(
-        "      Lat_load rank8={:.1}ms rank32={:.1}ms; decode table {} pts",
+        "      {}; Lat_load rank8={:.1}ms rank32={:.1}ms; decode table {} pts",
+        if calibrated.cached { "cache hit" } else { "computed" },
         calib.lat_load(8) * 1e3,
         calib.lat_load(32) * 1e3,
         calib.decode_pts.len()
     );
 
     println!("[3/6] generating the DT training set ...");
-    let samples = ctx.dataset(&calib)?;
-    let starved = samples.iter().filter(|s| s.starved).count();
-    println!("      {} samples, {} starved ({:.0}%)", samples.len(), starved,
-             100.0 * starved as f64 / samples.len() as f64);
+    let dataset = pipe.dataset(&calibrated)?;
+    let starved = dataset.samples.iter().filter(|s| s.starved).count();
+    println!(
+        "      {}; {} samples, {} starved ({:.0}%)",
+        if dataset.cached { "cache hit" } else { "computed" },
+        dataset.samples.len(),
+        starved,
+        100.0 * starved as f64 / dataset.samples.len() as f64
+    );
 
     println!("[4/6] training RF models (successive halving, 5-fold CV) ...");
-    let models = ctx.trained_models(&calib)?;
+    let trained = pipe.train(&dataset)?;
+    println!("      {}", if trained.cached { "cache hit" } else { "computed" });
 
     println!("[5/6] greedy caching algorithm (Algorithms 1 & 2) ...");
     let adapters = WorkloadSpec::heterogeneous(128, &[8, 16, 32], &[0.15, 0.075, 0.0375], 21);
@@ -62,19 +72,22 @@ fn main() -> anyhow::Result<()> {
         spec.incoming_token_rate()
     );
     let tp = Instant::now();
-    let placement = greedy::place(&adapters, 4, &models)
+    let planned = pipe
+        .place(&trained, &adapters)
         .map_err(|e| anyhow::anyhow!("placement failed: {e}"))?;
     println!(
-        "      placed in {:.3}s → {} GPUs, A_max per GPU: {:?}",
+        "      placed in {:.3}s ({} objective, {} estimator) → {} GPUs, A_max per GPU: {:?}",
         tp.elapsed().as_secs_f64(),
-        placement.gpus_used(),
-        placement.a_max
+        planned.objective,
+        planned.estimator,
+        planned.placement.gpus_used(),
+        planned.placement.a_max
     );
 
     println!("[6/6] validating on the real serving engine (per-GPU parallel) ...");
     let base = EngineConfig { model: model.to_string(), ..Default::default() };
     let make = || ctx.load_runtime(model);
-    let rep = cluster::run_on_engine(&make, &base, &placement, &spec)?;
+    let rep = cluster::run_on_engine(&make, &base, &planned.placement, &spec)?;
     println!(
         "      Proposed: {} GPUs, {:.0} tok/s, itl {:.2} ms, feasible={}",
         rep.gpus_used,

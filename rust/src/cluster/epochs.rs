@@ -27,14 +27,16 @@ use super::{run_on_engine, run_on_twin, ClusterReport};
 use crate::config::EngineConfig;
 use crate::dt::{Calibration, LengthVariant};
 use crate::placement::replan::{replan, MigrationCost, ReplanParams};
-use crate::placement::{greedy, Placement};
+use crate::placement::{Objective, PerfEstimator, Placement};
 use crate::runtime::Backend;
 use crate::workload::drift::DriftSpec;
 use crate::workload::WorkloadSpec;
 use anyhow::Result;
 use std::time::Instant;
 
-/// How each epoch's placement is derived from the previous one.
+/// How each epoch's placement is derived from the previous one.  Every
+/// policy plans through the estimator/objective seams passed to the
+/// runner, so the same policy can minimize GPUs or latency.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ReplanPolicy {
     /// Plan once for the union workload (every adapter that ever appears,
@@ -44,9 +46,10 @@ pub enum ReplanPolicy {
     /// Migration-aware incremental replanning per epoch
     /// ([`crate::placement::replan`]).
     Replan(ReplanParams),
-    /// Fresh Alg. 1 run per epoch, ignoring the previous placement when
-    /// planning (migrations are free): the per-epoch GPU-count lower
-    /// bound.  The [`MigrationCost`] model is still used to *report* the
+    /// Fresh one-shot plan per epoch (the objective's cold-start planner
+    /// — Alg. 1 for `MinGpus`), ignoring the previous placement when
+    /// planning (migrations are free): the per-epoch cost lower bound.
+    /// The [`MigrationCost`] model is still used to *report* the
     /// migration burden this policy silently incurs, comparably to
     /// `Replan`.
     Oracle(MigrationCost),
@@ -77,6 +80,9 @@ pub struct EpochRecord {
     /// Aggregate incoming token rate, including demand for adapters the
     /// active placement does not cover (tok/s).
     pub incoming_tok_s: f64,
+    /// Request-weighted mean inter-token latency of the epoch's serving
+    /// run (seconds; 0 when nothing was served).
+    pub itl_mean_s: f64,
     /// Any GPU starved, or some active adapter had no GPU at all.
     pub starved: bool,
     /// Any GPU hit the static-reservation memory error.
@@ -111,6 +117,12 @@ pub struct DriftReport {
     pub infeasible_epochs: usize,
     /// Mean served throughput across epochs (tok/s).
     pub mean_throughput_tok_s: f64,
+    /// Mean of the per-epoch mean inter-token latencies over *planned*
+    /// epochs (seconds) — the cost metric the latency objective targets
+    /// over time.  Unplanned epochs serve nothing and are excluded: a
+    /// zero ITL for a failed epoch would flatter the failing policy on a
+    /// lower-is-better metric.
+    pub mean_itl_s: f64,
     /// Total unserved demand over the whole horizon (tokens).
     pub final_backlog_tokens: f64,
 }
@@ -123,12 +135,15 @@ impl DriftReport {
 
     fn from_records(per_epoch: Vec<EpochRecord>) -> DriftReport {
         let n = per_epoch.len().max(1) as f64;
+        let planned = per_epoch.iter().filter(|r| r.planned).count().max(1) as f64;
+        let itl_sum: f64 = per_epoch.iter().filter(|r| r.planned).map(|r| r.itl_mean_s).sum();
         DriftReport {
             gpu_epochs: per_epoch.iter().map(|r| r.gpus_used).sum(),
             total_migrations: per_epoch.iter().map(|r| r.migrations).sum(),
             total_migration_cost_s: per_epoch.iter().map(|r| r.migration_cost_s).sum(),
             infeasible_epochs: per_epoch.iter().filter(|r| !r.feasible()).count(),
             mean_throughput_tok_s: per_epoch.iter().map(|r| r.throughput_tok_s).sum::<f64>() / n,
+            mean_itl_s: itl_sum / planned,
             final_backlog_tokens: per_epoch.last().map(|r| r.backlog_tokens).unwrap_or(0.0),
             per_epoch,
         }
@@ -161,10 +176,14 @@ fn migration_diff(
 
 /// Run the rolling horizon, serving each epoch with `serve` (engine or
 /// twin — both delegate to the per-GPU parallel cluster runners).
+/// Planning — one-shot, incremental and oracle alike — goes through the
+/// `est`/`objective` seams, so the same control loop can minimize GPUs or
+/// latency with any estimator behind it.
 fn run_epochs_with<F>(
     drift: &DriftSpec,
     gpus: usize,
-    models: &crate::ml::MlModels,
+    est: &dyn PerfEstimator,
+    objective: &dyn Objective,
     policy: &ReplanPolicy,
     mut serve: F,
 ) -> Result<DriftReport>
@@ -178,7 +197,7 @@ where
     };
     let t_static = Instant::now();
     let static_placement: Option<Placement> = match policy {
-        ReplanPolicy::Static => greedy::place(&drift.union_adapters(), gpus, models).ok(),
+        ReplanPolicy::Static => objective.plan(&drift.union_adapters(), gpus, est).ok(),
         _ => None,
     };
     // The plan-once cost is real planning work: charge it to epoch 0.
@@ -194,7 +213,7 @@ where
         let t_plan = Instant::now();
         let (fresh, migrations, migration_cost_s) = match policy {
             ReplanPolicy::Static => (static_placement.clone(), 0, 0.0),
-            ReplanPolicy::Oracle(_) => match greedy::place(&spec.adapters, gpus, models) {
+            ReplanPolicy::Oracle(_) => match objective.plan(&spec.adapters, gpus, est) {
                 Ok(p) => {
                     let (m, c) = migration_diff(prev.as_ref(), &p, &spec.adapters, &cost_model);
                     (Some(p), m, c)
@@ -202,7 +221,7 @@ where
                 Err(_) => (None, 0, 0.0),
             },
             ReplanPolicy::Replan(params) => {
-                match replan(prev.as_ref(), &spec.adapters, gpus, models, params) {
+                match replan(prev.as_ref(), &spec.adapters, gpus, est, params, objective) {
                     Ok(out) => (Some(out.placement), out.migrations, out.migration_cost_s),
                     Err(_) => (None, 0, 0.0),
                 }
@@ -221,6 +240,7 @@ where
 
         let mut throughput = 0.0;
         let mut incoming = 0.0;
+        let mut itl_mean_s = 0.0;
         let mut starved = false;
         let mut memory_error = false;
         let mut gpus_used = 0;
@@ -228,6 +248,7 @@ where
             let rep = serve(p, &spec)?;
             gpus_used = p.gpus_used();
             throughput = rep.total_throughput_tok_s;
+            itl_mean_s = rep.itl_mean_s;
             starved = rep.starved;
             memory_error = rep.memory_error;
             // Incoming demand: realized rate per healthy GPU; for a GPU
@@ -271,6 +292,7 @@ where
             plan_wall_s,
             throughput_tok_s: throughput,
             incoming_tok_s: incoming,
+            itl_mean_s,
             starved,
             memory_error,
             carried_in_backlog_tokens: carried_in,
@@ -288,11 +310,12 @@ pub fn run_epochs_on_twin(
     base: &EngineConfig,
     drift: &DriftSpec,
     gpus: usize,
-    models: &crate::ml::MlModels,
+    est: &dyn PerfEstimator,
+    objective: &dyn Objective,
     policy: &ReplanPolicy,
     variant: LengthVariant,
 ) -> Result<DriftReport> {
-    run_epochs_with(drift, gpus, models, policy, |p, spec| {
+    run_epochs_with(drift, gpus, est, objective, policy, |p, spec| {
         Ok(run_on_twin(calib, base, p, spec, variant))
     })
 }
@@ -304,13 +327,14 @@ pub fn run_epochs_on_engine<F>(
     base: &EngineConfig,
     drift: &DriftSpec,
     gpus: usize,
-    models: &crate::ml::MlModels,
+    est: &dyn PerfEstimator,
+    objective: &dyn Objective,
     policy: &ReplanPolicy,
 ) -> Result<DriftReport>
 where
     F: Fn() -> Result<Box<dyn Backend>> + Sync,
 {
-    run_epochs_with(drift, gpus, models, policy, |p, spec| {
+    run_epochs_with(drift, gpus, est, objective, policy, |p, spec| {
         run_on_engine(make_backend, base, p, spec)
     })
 }
@@ -319,6 +343,7 @@ where
 mod tests {
     use super::*;
     use crate::ml::MlModels;
+    use crate::placement::{MinGpus, MinLatency};
     use crate::workload::drift::{AdapterPhase, RateDrift};
     use crate::workload::{AdapterSpec, WorkloadSpec};
 
@@ -357,6 +382,7 @@ mod tests {
             &drift,
             4,
             &models,
+            &MinGpus,
             &ReplanPolicy::Replan(ReplanParams::default()),
             LengthVariant::Original,
         )
@@ -377,6 +403,7 @@ mod tests {
             &burst_drift(),
             4,
             &models,
+            &MinGpus,
             &ReplanPolicy::Static,
             LengthVariant::Original,
         )
@@ -399,6 +426,7 @@ mod tests {
             &drift,
             4,
             &models,
+            &MinGpus,
             &ReplanPolicy::Static,
             LengthVariant::Original,
         )
@@ -409,6 +437,7 @@ mod tests {
             &drift,
             4,
             &models,
+            &MinGpus,
             &ReplanPolicy::Replan(ReplanParams::default()),
             LengthVariant::Original,
         )
@@ -419,6 +448,7 @@ mod tests {
             &drift,
             4,
             &models,
+            &MinGpus,
             &ReplanPolicy::Oracle(MigrationCost::default()),
             LengthVariant::Original,
         )
@@ -445,6 +475,7 @@ mod tests {
             &burst_drift(),
             4,
             &models,
+            &MinGpus,
             &ReplanPolicy::Replan(ReplanParams::default()),
             LengthVariant::Original,
         )
@@ -473,10 +504,58 @@ mod tests {
             &drift,
             2,
             &models,
+            &MinGpus,
             &ReplanPolicy::Replan(ReplanParams::default()),
         )
         .unwrap();
         assert_eq!(rep.per_epoch.len(), 2);
         assert!(rep.per_epoch.iter().all(|r| r.planned));
+    }
+
+    #[test]
+    fn min_latency_objective_keeps_the_cluster_spread() {
+        use crate::placement::{Estimate, OracleEstimator};
+        // An always-feasible estimator isolates the objective's shape from
+        // any model behaviour; serving still runs on the real twin.
+        let est = OracleEstimator::with_fallback(Estimate {
+            throughput_tok_s: 500.0,
+            starved: false,
+            memory_error: false,
+        });
+        let calib = Calibration::default();
+        let base = EngineConfig::default();
+        let drift = DriftSpec::steady(WorkloadSpec::homogeneous(16, 8, 0.05), 3, 5.0, 5);
+        let policy = ReplanPolicy::Replan(ReplanParams::default());
+        let spread = run_epochs_on_twin(
+            &calib,
+            &base,
+            &drift,
+            4,
+            &est,
+            &MinLatency,
+            &policy,
+            LengthVariant::Original,
+        )
+        .unwrap();
+        assert!(spread.per_epoch.iter().all(|r| r.gpus_used == 4), "MinLatency spreads");
+        assert_eq!(spread.total_migrations, 0, "steady workload must not migrate");
+        assert!(spread.mean_itl_s >= 0.0);
+        let packed = run_epochs_on_twin(
+            &calib,
+            &base,
+            &drift,
+            4,
+            &est,
+            &MinGpus,
+            &policy,
+            LengthVariant::Original,
+        )
+        .unwrap();
+        assert!(
+            packed.gpu_epochs < spread.gpu_epochs,
+            "MinGpus must provision fewer GPU-epochs: {} !< {}",
+            packed.gpu_epochs,
+            spread.gpu_epochs
+        );
     }
 }

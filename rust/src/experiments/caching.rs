@@ -103,7 +103,7 @@ pub fn fig10(ctx: &ExpContext) -> Result<()> {
     for model in &ctx.models {
         let mut rt = ctx.load_runtime(model)?;
         let calib = ctx.calibration(&mut rt)?;
-        let models = ctx.trained_models(&calib)?;
+        let est = ctx.trained_estimator(&calib)?;
         let bb = backbone_max_tok_s(ctx, &mut rt)?;
         for (rates, sizes) in [("low", "low"), ("low", "high")] {
             for &n in &counts {
@@ -113,7 +113,7 @@ pub fn fig10(ctx: &ExpContext) -> Result<()> {
                 let tpr = tokens_per_request(&spec);
                 let base = EngineConfig { model: model.clone(), ..Default::default() };
                 for (method, res) in [
-                    ("Proposed", greedy::place(&adapters, 1, &models)),
+                    ("Proposed", greedy::place(&adapters, 1, &est)),
                     ("MaxBase", baselines::max_base(&adapters, 1, bb, tpr, false)),
                     ("MaxBase*", baselines::max_base(&adapters, 1, bb, tpr, true)),
                 ] {
@@ -203,8 +203,8 @@ pub fn fig11(ctx: &ExpContext) -> Result<()> {
         let model = if si < 2 { "pico-qwen" } else { "pico-llama" };
         let mut rt = ctx.load_runtime(model)?;
         let calib = ctx.calibration(&mut rt)?;
-        let models = ctx.trained_models(&calib)?;
-        let fast = ctx.refined_models(&calib)?;
+        let est = ctx.trained_estimator(&calib)?;
+        let fast = ctx.refined_estimator(&calib)?;
         let bb = backbone_max_tok_s(ctx, &mut rt)?;
         for &n in counts {
             let adapters = scenario(n, rates, sizes, 70 + n as u64);
@@ -212,7 +212,7 @@ pub fn fig11(ctx: &ExpContext) -> Result<()> {
             let tpr = tokens_per_request(&spec);
             let base = EngineConfig { model: model.to_string(), ..Default::default() };
             for (method, res) in [
-                ("Proposed", greedy::place(&adapters, gpus, &models)),
+                ("Proposed", greedy::place(&adapters, gpus, &est)),
                 ("ProposedFast", greedy::place(&adapters, gpus, &fast)),
                 ("MaxBase", baselines::max_base(&adapters, gpus, bb, tpr, false)),
                 ("MaxBase*", baselines::max_base(&adapters, gpus, bb, tpr, true)),
@@ -264,8 +264,8 @@ pub fn table5(ctx: &ExpContext) -> Result<()> {
     for model in &ctx.models {
         let mut rt = ctx.load_runtime(model)?;
         let calib = ctx.calibration(&mut rt)?;
-        let models = ctx.trained_models(&calib)?;
-        let fast = ctx.refined_models(&calib)?;
+        let est = ctx.trained_estimator(&calib)?;
+        let fast = ctx.refined_estimator(&calib)?;
         let bb = backbone_max_tok_s(ctx, &mut rt)?;
         let n = 192;
         let adapters = scenario(n, "mixed", "mixed", 99);
@@ -288,7 +288,7 @@ pub fn table5(ctx: &ExpContext) -> Result<()> {
                     format!("{:.3e}", t),
                 ]);
             };
-            add("Proposed", time_it(&|| greedy::place(&adapters, gpus, &models)));
+            add("Proposed", time_it(&|| greedy::place(&adapters, gpus, &est)));
             if gpus == 4 {
                 add("ProposedFast", time_it(&|| greedy::place(&adapters, gpus, &fast)));
                 add("Random", time_it(&|| baselines::random(&adapters, gpus, 3)));
@@ -317,7 +317,7 @@ pub fn fig12(ctx: &ExpContext) -> Result<()> {
     let model = "pico-qwen";
     let mut rt = ctx.load_runtime(model)?;
     let calib = ctx.calibration(&mut rt)?;
-    let models = ctx.trained_models(&calib)?;
+    let est = ctx.trained_estimator(&calib)?;
     let mut rows = vec![];
     let on_engine = !ctx.scale.is_quick();
     let scenarios: Vec<(&str, &str, Vec<usize>)> = vec![
@@ -348,9 +348,9 @@ pub fn fig12(ctx: &ExpContext) -> Result<()> {
                 ..Default::default()
             };
             for (method, res) in [
-                ("Proposed", greedy::place(&adapters, gpus, &models)),
+                ("Proposed", greedy::place(&adapters, gpus, &est)),
                 ("dLoRAProactive", dlora::place(&adapters, gpus, &dl_params)),
-                ("ProposedLat", latency::place(&adapters, gpus, &models)),
+                ("ProposedLat", latency::place(&adapters, gpus, &est)),
             ] {
                 let (g, thr, itl, status) = validate(ctx, &mut rt, &base, &res, &spec, on_engine)?;
                 println!("  fig12 s{si} A={n} {method}: gpus={g} thr={thr} itl={itl}ms {status}");

@@ -1,42 +1,23 @@
-//! Shared infrastructure for the experiment harness: scales, cached
-//! pipeline artifacts (calibration, dataset, trained models), and the
-//! validation-scenario suite reused by Tables 1-4.
+//! Shared infrastructure for the experiment harness: the cached pipeline
+//! stages (now delegated to [`crate::pipeline::Pipeline`] and its
+//! artifact store) and the validation-scenario suite reused by Tables
+//! 1-4.
 
 use crate::config::EngineConfig;
-use crate::dt::{self, Calibration};
+use crate::dt::Calibration;
 use crate::engine::Engine;
-use crate::ml::{self, dataset, GridSpec, MlModels, Predictor, Sample};
+use crate::ml::{self, MlModels, Predictor, Sample};
+use crate::pipeline::Pipeline;
+use crate::placement::MlEstimator;
 use crate::runtime::{self, Backend, Manifest};
+use crate::util::cli::Args;
 use crate::util::csv::Table;
 use crate::util::json::Json;
 use crate::workload::{AdapterSpec, WorkloadSpec};
 use anyhow::Result;
 use std::path::PathBuf;
 
-/// Experiment scale selector.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Scale {
-    /// Minutes-scale runs used by `cargo bench` and CI.
-    Quick,
-    /// The full sweeps (hours on this CPU).
-    Full,
-}
-
-impl Scale {
-    /// Parse a `--scale` CLI value ("full" → Full, everything else Quick).
-    pub fn parse(s: &str) -> Scale {
-        if s.eq_ignore_ascii_case("full") {
-            Scale::Full
-        } else {
-            Scale::Quick
-        }
-    }
-
-    /// Whether this is the quick (CI) scale.
-    pub fn is_quick(&self) -> bool {
-        matches!(self, Scale::Quick)
-    }
-}
+pub use crate::pipeline::Scale;
 
 /// Shared experiment state: scale, output/artifact dirs, and the cached
 /// pipeline stages (calibration → dataset → trained models).
@@ -87,59 +68,67 @@ impl ExpContext {
         runtime::load_backend(&self.artifacts, model)
     }
 
+    /// A context from common CLI args: `--scale`, `--out`, `--model`
+    /// (shared by the `drift` and `experiment` subcommands).
+    pub fn from_args(args: &Args) -> ExpContext {
+        let mut ctx = ExpContext::new(Scale::parse(args.get_or("scale", "quick")));
+        if let Some(out) = args.get("out") {
+            ctx.out_dir = PathBuf::from(out);
+        }
+        if let Some(m) = args.get("model") {
+            ctx.models = vec![m.to_string()];
+        }
+        ctx
+    }
+
     // ------------------------------------------------------------------
-    // Cached pipeline stages
+    // Cached pipeline stages (delegated to the typed pipeline and its
+    // content-hashed artifact store under `<out_dir>/store/`)
     // ------------------------------------------------------------------
 
-    /// Calibration, cached at results/calibration_<model>.json.
+    /// The typed pipeline for one backbone, configured like this context.
+    pub fn pipeline(&self, model: &str) -> Pipeline {
+        Pipeline::for_model(model)
+            .scale(self.scale)
+            .out_dir(self.out_dir.clone())
+            .artifacts_dir(self.artifacts.clone())
+            .workers(self.workers)
+            .fast_calibration(self.scale.is_quick())
+    }
+
+    /// Calibration, cached in the artifact store.
     pub fn calibration(&self, rt: &mut dyn Backend) -> Result<Calibration> {
         let model = rt.meta().name.clone();
-        let path = self.out_dir.join(format!("calibration_{model}.json"));
-        if path.exists() {
-            if let Ok(c) = Calibration::load_file(&path, &model) {
-                return Ok(c);
-            }
-        }
-        eprintln!("[common] calibrating {model} ...");
-        let cfg = EngineConfig { model: model.clone(), ..Default::default() };
-        let calib = dt::calibrate(rt, &cfg, self.scale.is_quick())?;
-        std::fs::create_dir_all(&self.out_dir).ok();
-        calib.to_json().write_file(&path)?;
-        Ok(calib)
+        Ok(self.pipeline(&model).calibrate_with(rt)?.calibration)
     }
 
-    /// DT-generated training set, cached at results/dataset_<model>.csv.
+    /// DT-generated training set, cached in the artifact store.
     pub fn dataset(&self, calib: &Calibration) -> Result<Vec<Sample>> {
-        let path = self.out_dir.join(format!("dataset_{}.csv", calib.model));
-        if path.exists() {
-            return dataset::load(&path);
-        }
-        eprintln!("[common] generating dataset for {} via the Digital Twin ...", calib.model);
-        let grid = GridSpec::paper(self.scale.is_quick());
-        let base = EngineConfig { model: calib.model.clone(), ..Default::default() };
-        let samples = dataset::generate(calib, &base, &grid, self.workers);
-        dataset::save(&samples, &path)?;
-        Ok(samples)
+        let pipe = self.pipeline(&calib.model).calibration(calib.clone());
+        let calibrated = pipe.calibrate()?;
+        Ok(pipe.dataset(&calibrated)?.samples)
     }
 
-    /// Best RF model pair, cached at results/models_<model>.json.
+    /// Best RF model pair, cached in the artifact store.
     pub fn trained_models(&self, calib: &Calibration) -> Result<MlModels> {
-        let path = self.out_dir.join(format!("models_{}.json", calib.model));
-        if path.exists() {
-            if let Ok(m) = ml::load_models(&path) {
-                return Ok(m);
-            }
+        let pipe = self.pipeline(&calib.model).calibration(calib.clone());
+        let calibrated = pipe.calibrate()?;
+        if let Some(trained) = pipe.train_cached(&calibrated)? {
+            return Ok(trained.models);
         }
-        let samples = self.dataset(calib)?;
-        eprintln!("[common] training RF models for {} ...", calib.model);
-        let quick = self.scale.is_quick();
-        let (thr, _) =
-            ml::train(&samples, ml::Task::Throughput, ml::ModelType::RandomForest, quick, 7);
-        let (st, _) =
-            ml::train(&samples, ml::Task::Starvation, ml::ModelType::RandomForest, quick, 7);
-        let models = MlModels { throughput: thr, starvation: st, scaler: None };
-        ml::save_models(&models, &path)?;
-        Ok(models)
+        let dataset = pipe.dataset(&calibrated)?;
+        Ok(pipe.train(&dataset)?.models)
+    }
+
+    /// The trained model pair behind the [`MlEstimator`] seam — what the
+    /// placement call sites consume.
+    pub fn trained_estimator(&self, calib: &Calibration) -> Result<MlEstimator> {
+        Ok(MlEstimator::new(self.trained_models(calib)?))
+    }
+
+    /// The refined (Small Tree**) pair behind the [`MlEstimator`] seam.
+    pub fn refined_estimator(&self, calib: &Calibration) -> Result<MlEstimator> {
+        Ok(MlEstimator::new(self.refined_models(calib)?))
     }
 
     /// The refined (Small Tree**) model pair for ProposedFast.

@@ -1,13 +1,16 @@
-//! The drift experiment (DESIGN.md §5/§7): GPUs over time under workload
-//! drift — static provisioning vs migration-aware replanning vs an
-//! oracle that replans from scratch every epoch.
+//! The drift experiment (DESIGN.md §5/§7/§8): GPUs *and* ITL over time
+//! under workload drift — static provisioning vs migration-aware
+//! replanning vs an oracle that replans from scratch every epoch, each
+//! control loop run under both placement objectives (`MinGpus` vs
+//! `MinLatency`, the paper's §8.4.4 comparison extended over time).
 //!
 //! Scenario: a burst-churn workload.  A light base adapter population
 //! lives for the whole horizon; a heavy burst population retires a third
 //! of the way in, and a second, lighter wave arrives mid-horizon.  A
 //! static deployment must provision the union peak for every epoch; the
-//! incremental replanner sheds (and re-adds) GPUs as demand drifts.
-//! Regenerates `results/drift/drift.csv` + `summary.json`.
+//! incremental replanner sheds (and re-adds) GPUs as demand drifts; the
+//! latency objective holds the cluster spread and buys lower ITL for more
+//! GPU-epochs.  Regenerates `results/drift/drift.csv` + `summary.json`.
 
 use super::common::{
     backbone_max_tok_s, print_table, tokens_per_request, write_csv, write_summary, ExpContext,
@@ -16,6 +19,7 @@ use crate::cluster::epochs::{run_epochs_on_engine, run_epochs_on_twin, DriftRepo
 use crate::config::EngineConfig;
 use crate::dt::{Calibration, LengthVariant};
 use crate::placement::replan::ReplanParams;
+use crate::placement::{MinGpus, MinLatency, Objective};
 use crate::util::json::Json;
 use crate::workload::drift::{AdapterPhase, DriftSpec, RateDrift};
 use crate::workload::{AdapterSpec, WorkloadSpec};
@@ -72,8 +76,9 @@ fn epoch_status(r: &crate::cluster::epochs::EpochRecord) -> &'static str {
     }
 }
 
-/// "Fig. D" (beyond-paper artifact): GPUs over time, static vs replan vs
-/// oracle-per-epoch on a churn workload.
+/// "Fig. D" (beyond-paper artifact): GPUs and ITL over time, static vs
+/// replan vs oracle-per-epoch on a churn workload, under the
+/// GPU-minimizing and the ITL-minimizing objective.
 pub fn drift(ctx: &ExpContext) -> Result<()> {
     let dir = ctx.exp_dir("drift");
     // Single-backbone experiment (like figa13): honour `--model`, default
@@ -82,7 +87,7 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
     let gpus = 4;
     let mut rt = ctx.load_runtime(model)?;
     let calib = ctx.calibration(&mut rt)?;
-    let models = ctx.trained_models(&calib)?;
+    let est = ctx.trained_estimator(&calib)?;
     let epochs = if ctx.scale.is_quick() { 6 } else { 8 };
     let epoch_s = ctx.horizon() / 2.0;
     let spec = burst_churn(epochs, epoch_s, &calib);
@@ -92,49 +97,58 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
     let on_engine = !ctx.scale.is_quick();
 
     let cost = params.cost;
+    let objectives: Vec<(&str, &dyn Objective)> =
+        vec![("min_gpus", &MinGpus), ("min_latency", &MinLatency)];
     let policies: Vec<(&str, ReplanPolicy)> = vec![
         ("static", ReplanPolicy::Static),
         ("replan", ReplanPolicy::Replan(params)),
         ("oracle", ReplanPolicy::Oracle(cost)),
     ];
     let mut rows = vec![];
-    let mut reports: Vec<(&str, DriftReport)> = vec![];
-    for (name, policy) in &policies {
-        let rep = if on_engine {
-            let make = || ctx.load_runtime(model);
-            run_epochs_on_engine(&make, &base, &spec, gpus, &models, policy)?
-        } else {
-            let variant = LengthVariant::Original;
-            run_epochs_on_twin(&calib, &base, &spec, gpus, &models, policy, variant)?
-        };
-        for r in &rep.per_epoch {
-            rows.push(vec![
-                name.to_string(),
-                r.epoch.to_string(),
-                r.adapters.to_string(),
-                r.gpus_used.to_string(),
-                r.migrations.to_string(),
-                format!("{:.3}", r.migration_cost_s * 1e3),
-                format!("{:.3}", r.plan_wall_s * 1e3),
-                format!("{:.1}", r.throughput_tok_s),
-                format!("{:.1}", r.incoming_tok_s),
-                format!("{:.0}", r.backlog_tokens),
-                epoch_status(r).to_string(),
-            ]);
+    let mut reports: Vec<(String, DriftReport)> = vec![];
+    for (oname, objective) in &objectives {
+        for (pname, policy) in &policies {
+            let rep = if on_engine {
+                let make = || ctx.load_runtime(model);
+                run_epochs_on_engine(&make, &base, &spec, gpus, &est, *objective, policy)?
+            } else {
+                let variant = LengthVariant::Original;
+                run_epochs_on_twin(&calib, &base, &spec, gpus, &est, *objective, policy, variant)?
+            };
+            for r in &rep.per_epoch {
+                rows.push(vec![
+                    oname.to_string(),
+                    pname.to_string(),
+                    r.epoch.to_string(),
+                    r.adapters.to_string(),
+                    r.gpus_used.to_string(),
+                    r.migrations.to_string(),
+                    format!("{:.3}", r.migration_cost_s * 1e3),
+                    format!("{:.3}", r.plan_wall_s * 1e3),
+                    format!("{:.1}", r.throughput_tok_s),
+                    format!("{:.1}", r.incoming_tok_s),
+                    format!("{:.3}", r.itl_mean_s * 1e3),
+                    format!("{:.0}", r.backlog_tokens),
+                    epoch_status(r).to_string(),
+                ]);
+            }
+            println!(
+                "  drift {oname}/{pname}: {} GPU-epochs, mean ITL {:.2} ms, {} migrations \
+                 ({:.1} ms), {} infeasible epochs",
+                rep.gpu_epochs,
+                rep.mean_itl_s * 1e3,
+                rep.total_migrations,
+                rep.total_migration_cost_s * 1e3,
+                rep.infeasible_epochs
+            );
+            reports.push((format!("{oname}/{pname}"), rep));
         }
-        println!(
-            "  drift {name}: {} GPU-epochs, {} migrations ({:.1} ms), {} infeasible epochs",
-            rep.gpu_epochs,
-            rep.total_migrations,
-            rep.total_migration_cost_s * 1e3,
-            rep.infeasible_epochs
-        );
-        reports.push((*name, rep));
     }
 
     print_table(
-        "drift — GPUs over time: static vs replan vs oracle-per-epoch",
+        "drift — GPUs and ITL over time: {static,replan,oracle} x {min_gpus,min_latency}",
         &[
+            "objective",
             "policy",
             "epoch",
             "adapters",
@@ -144,6 +158,7 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
             "plan_ms",
             "throughput",
             "incoming",
+            "itl_ms",
             "backlog",
             "status",
         ],
@@ -153,6 +168,7 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
         &dir,
         "drift.csv",
         &[
+            "objective",
             "policy",
             "epoch",
             "adapters",
@@ -162,6 +178,7 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
             "plan_ms",
             "throughput",
             "incoming_tok_s",
+            "itl_ms",
             "backlog_tokens",
             "status",
         ],
@@ -174,29 +191,56 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
         ("gpus", Json::Num(gpus as f64)),
         ("backend", Json::Str(if on_engine { "engine" } else { "twin" }.into())),
     ];
-    for (name, rep) in &reports {
-        fields.push((
-            *name,
-            Json::obj(vec![
-                ("gpu_epochs", Json::Num(rep.gpu_epochs as f64)),
-                ("migrations", Json::Num(rep.total_migrations as f64)),
-                ("migration_cost_s", Json::Num(rep.total_migration_cost_s)),
-                ("infeasible_epochs", Json::Num(rep.infeasible_epochs as f64)),
-                ("mean_throughput_tok_s", Json::Num(rep.mean_throughput_tok_s)),
-                ("final_backlog_tokens", Json::Num(rep.final_backlog_tokens)),
-            ]),
-        ));
+    for (oname, _) in &objectives {
+        let mut policy_fields: Vec<(&str, Json)> = vec![];
+        for (pname, _) in &policies {
+            let key = format!("{oname}/{pname}");
+            let Some((_, rep)) = reports.iter().find(|(n, _)| *n == key) else {
+                continue;
+            };
+            policy_fields.push((
+                *pname,
+                Json::obj(vec![
+                    ("gpu_epochs", Json::Num(rep.gpu_epochs as f64)),
+                    ("migrations", Json::Num(rep.total_migrations as f64)),
+                    ("migration_cost_s", Json::Num(rep.total_migration_cost_s)),
+                    ("infeasible_epochs", Json::Num(rep.infeasible_epochs as f64)),
+                    ("mean_throughput_tok_s", Json::Num(rep.mean_throughput_tok_s)),
+                    ("mean_itl_s", Json::Num(rep.mean_itl_s)),
+                    ("final_backlog_tokens", Json::Num(rep.final_backlog_tokens)),
+                ]),
+            ));
+        }
+        fields.push((*oname, Json::obj(policy_fields)));
     }
-    let stat = reports.iter().find(|(n, _)| *n == "static").map(|(_, r)| r.gpu_epochs);
-    let repl =
-        reports.iter().find(|(n, _)| *n == "replan").map(|(_, r)| (r.gpu_epochs, r.feasible()));
-    if let (Some(sg), Some((rg, rfeasible))) = (stat, repl) {
-        let saved = sg as f64 - rg as f64;
+    let find = |key: &str| reports.iter().find(|(n, _)| n == key).map(|(_, r)| r);
+    if let (Some(stat), Some(repl)) = (find("min_gpus/static"), find("min_gpus/replan")) {
+        let saved = stat.gpu_epochs as f64 - repl.gpu_epochs as f64;
         println!(
-            "  drift: replan saves {saved} GPU-epochs vs static ({:.0}%), feasible={rfeasible}",
-            100.0 * saved / sg.max(1) as f64
+            "  drift: replan saves {saved} GPU-epochs vs static ({:.0}%), feasible={}",
+            100.0 * saved / stat.gpu_epochs.max(1) as f64,
+            repl.feasible()
         );
         fields.push(("replan_saves_gpu_epochs", Json::Num(saved)));
+    }
+    if let (Some(rg), Some(rl)) = (find("min_gpus/replan"), find("min_latency/replan")) {
+        println!(
+            "  drift: replan objectives — min_gpus {} GPU-epochs at {:.2} ms mean ITL vs \
+             min_latency {} GPU-epochs at {:.2} ms mean ITL",
+            rg.gpu_epochs,
+            rg.mean_itl_s * 1e3,
+            rl.gpu_epochs,
+            rl.mean_itl_s * 1e3
+        );
+        fields.push((
+            "replan_objective_tradeoff",
+            Json::obj(vec![
+                ("min_gpus_gpu_epochs", Json::Num(rg.gpu_epochs as f64)),
+                ("min_gpus_mean_itl_s", Json::Num(rg.mean_itl_s)),
+                ("min_latency_gpu_epochs", Json::Num(rl.gpu_epochs as f64)),
+                ("min_latency_mean_itl_s", Json::Num(rl.mean_itl_s)),
+            ]),
+        ));
     }
     write_summary(&dir, fields)?;
     println!("drift: wrote {}", dir.display());

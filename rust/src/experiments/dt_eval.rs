@@ -7,6 +7,7 @@ use super::common::{peak_rss_mb, print_table, validation_runs, write_csv, ExpCon
 use crate::config::EngineConfig;
 use crate::dt::{self, LengthVariant};
 use crate::engine::Engine;
+use crate::placement::PerfEstimator;
 use crate::util::stats;
 use crate::workload::{ArrivalModel, UnpredictableParams, WorkloadSpec};
 use anyhow::Result;
@@ -172,7 +173,7 @@ pub fn fig8(ctx: &ExpContext) -> Result<()> {
     let model = "pico-qwen";
     let mut rt = ctx.load_runtime(model)?;
     let calib = ctx.calibration(&mut rt)?;
-    let models = ctx.trained_models(&calib)?;
+    let est = ctx.trained_estimator(&calib)?;
     let counts: Vec<usize> =
         if ctx.scale.is_quick() { vec![8, 16, 32, 64] } else { vec![8, 16, 32, 64, 96, 128, 192] };
     let mut rows = vec![];
@@ -192,7 +193,7 @@ pub fn fig8(ctx: &ExpContext) -> Result<()> {
             let erep = eres.report.unwrap();
             let tres = dt::run_twin_trace(&cfg, &calib, &spec, &spec.trace_mean_lengths());
             let trep = tres.report.unwrap();
-            let ml_thr = models.predict_throughput(&crate::ml::features(&adapters, cfg.a_max));
+            let ml_thr = est.estimate(&adapters, cfg.a_max).throughput_tok_s;
             println!(
                 "  fig8 rate={rate} A={n}: engine={:.0} twin={:.0} ml={:.0} tok/s",
                 erep.throughput_tok_s, trep.throughput_tok_s, ml_thr

@@ -38,7 +38,11 @@ pub const REGISTRY: &[(&str, &str, ExpFn)] = &[
     ("table5", "Table 5 — placement algorithm runtimes", caching::table5),
     ("fig12", "Fig. 12 — Proposed vs dLoRA vs ProposedLat", caching::fig12),
     ("figa13", "Fig. A.13 — S-LoRA unified-memory mode", caching::figa13),
-    ("drift", "GPUs over time: static vs replan vs oracle under churn", drift::drift),
+    (
+        "drift",
+        "GPUs & ITL over time under churn: {static,replan,oracle} x {min-gpus,min-latency}",
+        drift::drift,
+    ),
 ];
 
 /// Run experiment `id` (or every experiment with `"all"`).

@@ -12,7 +12,12 @@
 //! - [`dt`] — the Digital Twin and its four predictive performance models;
 //! - [`ml`] — from-scratch ML (RF/KNN/SVM + refinement) trained on DT data;
 //! - [`placement`] — the greedy adapter-caching algorithm, baselines, and
-//!   the migration-aware incremental replanner ([`placement::replan`]);
+//!   the migration-aware incremental replanner ([`placement::replan`]),
+//!   generic over the [`placement::PerfEstimator`] and
+//!   [`placement::Objective`] trait seams;
+//! - [`pipeline`] — the typed end-to-end pipeline
+//!   (`Calibrated → Dataset → Trained → Planned → Validated`) over an
+//!   on-disk content-hashed artifact store (DESIGN.md §8);
 //! - [`cluster`] — multi-GPU routing driven by placement decisions, with
 //!   per-GPU validation runs parallelized over the thread pool, plus the
 //!   rolling-horizon epoch runner ([`cluster::epochs`], DESIGN.md §7);
@@ -21,7 +26,8 @@
 //! The three-layer public API is *workload* ([`workload::WorkloadSpec`],
 //! [`workload::drift::DriftSpec`]) → *placement* ([`placement::Placement`])
 //! → *cluster* ([`cluster::run_on_engine`] / [`cluster::run_on_twin`] /
-//! [`cluster::epochs::run_epochs_on_twin`]).
+//! [`cluster::epochs::run_epochs_on_twin`]); [`pipeline::Pipeline`] drives
+//! the data-driven chain that produces the placement in the first place.
 //!
 //! See DESIGN.md for the system inventory, the backend feature matrix and
 //! the per-experiment index; `#![warn(missing_docs)]` plus the CI docs job
@@ -40,6 +46,7 @@ pub mod dt;
 pub mod engine;
 pub mod experiments;
 pub mod ml;
+pub mod pipeline;
 pub mod placement;
 pub mod runtime;
 pub mod util;

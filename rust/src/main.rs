@@ -3,35 +3,49 @@
 //! Subcommands:
 //!   serve            run one engine over a synthetic workload, print report
 //!   twin             run the Digital Twin over the same kind of workload
+//!   pipeline         the full typed pipeline in one shot:
+//!                    calibrate → dataset → train → place → validate,
+//!                    with per-stage artifact-cache status
 //!   calibrate        run the DT parameterization suite, write calibration
 //!   dataset          generate the DT training set
 //!   train            train + persist the RF model pair
-//!   place            compute a placement for a workload (greedy pipeline)
+//!   place            compute a placement for a workload
 //!   drift            rolling-horizon replanning demo (= `experiment drift`)
 //!   experiment <id>  regenerate a paper table/figure (or `all`)
 //!   list-experiments list experiment ids
 //!   artifacts-info   show the AOT artifact manifest
+//!
+//! The per-stage subcommands (`calibrate`/`dataset`/`train`/`place`) are
+//! thin wrappers over [`adapter_serving::pipeline::Pipeline`] and share
+//! its content-hashed artifact store (`results/store/`), so any order of
+//! invocation reuses whatever stages are already cached.
 
 use adapter_serving::config::EngineConfig;
 use adapter_serving::dt::{self, Calibration};
 use adapter_serving::engine::Engine;
-use adapter_serving::experiments::{self, ExpContext, Scale};
+use adapter_serving::experiments::{self, ExpContext};
 use adapter_serving::ml;
-use adapter_serving::placement::greedy;
+use adapter_serving::pipeline::{EstimatorChoice, Pipeline, Scale};
+use adapter_serving::placement::{plan, MinGpus, MinLatency, Objective, Placement};
 use adapter_serving::runtime::{self, Manifest};
 use adapter_serving::util::cli::Args;
 use adapter_serving::workload::WorkloadSpec;
 use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
+use std::time::Instant;
 
-const USAGE: &str = "usage: adapterd <serve|twin|calibrate|dataset|train|place|drift|experiment|list-experiments|artifacts-info> [options]
+const USAGE: &str = "usage: adapterd <serve|twin|pipeline|calibrate|dataset|train|place|drift|experiment|list-experiments|artifacts-info> [options]
 common options:
   --model <pico-llama|pico-qwen>   backbone (default pico-llama)
   --adapters N --rank R --rate X   synthetic workload shape
   --a-max N --s-max-rank R         engine configuration
   --horizon S                      simulated seconds (default 15)
-  --scale <quick|full>             experiment scale (default quick)
+  --scale <quick|full>             pipeline/experiment scale (default quick)
+  --gpus N                         GPU budget for place/pipeline (default 4)
+  --objective <min-gpus|min-latency>   placement objective (default min-gpus)
+  --estimator <ml|twin>            placement estimator (default ml)
   --out PATH                       output file/directory
+values that start with '--' need the --key=VALUE form
 environment:
   ADAPTER_SERVING_BACKEND=reference|pjrt   execution backend override
   ADAPTER_SERVING_ARTIFACTS=DIR            AOT artifact dir (default ./artifacts)";
@@ -43,10 +57,11 @@ fn main() -> Result<()> {
         return Ok(());
     }
     let cmd = raw.remove(0);
-    let args = Args::parse(raw, &["full", "unified", "fast"]);
+    let args = Args::parse(raw, &["full", "unified", "fast"])?;
     match cmd.as_str() {
         "serve" => serve(&args, false),
         "twin" => serve(&args, true),
+        "pipeline" => pipeline_cmd(&args),
         "calibrate" => calibrate_cmd(&args),
         "dataset" => dataset_cmd(&args),
         "train" => train_cmd(&args),
@@ -86,6 +101,42 @@ fn workload(args: &Args) -> Result<WorkloadSpec> {
     let horizon = args.f64_or("horizon", 15.0)?;
     let seed = args.usize_or("seed", 42)? as u64;
     Ok(WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(n, rank, rate), horizon, seed))
+}
+
+/// The typed pipeline configured from the common CLI options.
+fn pipeline_from(args: &Args) -> Result<Pipeline> {
+    let model = args.get_or("model", "pico-llama").to_string();
+    let scale =
+        if args.flag("full") { Scale::Full } else { Scale::parse(args.get_or("scale", "quick")) };
+    let mut pipe = Pipeline::for_model(&model)
+        .scale(scale)
+        .gpus(args.usize_or("gpus", 4)?)
+        .fast_calibration(args.flag("fast") || scale.is_quick())
+        .boxed_objective(objective_from(args)?);
+    pipe = match args.get_or("estimator", "ml") {
+        "ml" => pipe.estimator(EstimatorChoice::Ml),
+        "twin" => pipe.estimator(EstimatorChoice::Twin),
+        other => return Err(anyhow!("unknown --estimator '{other}' (ml|twin)")),
+    };
+    // An explicit calibration file (e.g. a previous `calibrate --out`)
+    // is injected and keys the downstream stages by content.
+    if let Some(path) = args.get("calibration") {
+        let model = args.get_or("model", "pico-llama");
+        pipe = pipe.calibration(Calibration::load_file(Path::new(path), model)?);
+    }
+    Ok(pipe)
+}
+
+fn objective_from(args: &Args) -> Result<Box<dyn Objective>> {
+    match args.get_or("objective", "min-gpus") {
+        "min-gpus" => Ok(Box::new(MinGpus)),
+        "min-latency" => Ok(Box::new(MinLatency)),
+        other => Err(anyhow!("unknown --objective '{other}' (min-gpus|min-latency)")),
+    }
+}
+
+fn stage_line(name: &str, cached: bool) {
+    println!("{name}: {}", if cached { "cache hit" } else { "computed" });
 }
 
 fn serve(args: &Args, twin: bool) -> Result<()> {
@@ -132,59 +183,144 @@ fn load_or_default_calibration(args: &Args, model: &str) -> Result<Calibration> 
     }
 }
 
+/// `adapterd pipeline` — the whole chain in one shot, with per-stage
+/// artifact-cache status (the CI smoke asserts a second run is all
+/// cache hits).
+fn pipeline_cmd(args: &Args) -> Result<()> {
+    let t0 = Instant::now();
+    let pipe = pipeline_from(args)?;
+    let spec = workload(args)?;
+    println!(
+        "pipeline: {} adapters, {:.2} req/s total, {} GPUs, objective {}, estimator {}",
+        spec.adapters.len(),
+        spec.total_rate(),
+        args.usize_or("gpus", 4)?,
+        args.get_or("objective", "min-gpus"),
+        args.get_or("estimator", "ml"),
+    );
+    let calibrated = pipe.calibrate()?;
+    stage_line("calibrate", calibrated.cached);
+    let placed = if args.get_or("estimator", "ml") == "twin" {
+        // The twin estimator consults the DT directly: the dataset and
+        // training stages would be computed but never read, so skip them.
+        let calibration = calibrated.calibration.clone();
+        pipe.place_on_twin(&calibrated, &spec.adapters).map(|planned| (planned, calibration))
+    } else {
+        let dataset = pipe.dataset(&calibrated)?;
+        stage_line("dataset", dataset.cached);
+        let trained = pipe.train(&dataset)?;
+        stage_line("train", trained.cached);
+        pipe.place(&trained, &spec.adapters).map(|planned| (planned, trained.calibration))
+    };
+    match placed {
+        Ok((planned, calibration)) => {
+            println!(
+                "place: {} / {} GPUs (objective {}, estimator {})",
+                planned.placement.gpus_used(),
+                planned.gpus,
+                planned.objective,
+                planned.estimator
+            );
+            let validated = pipe.validate_with(&calibration, &planned, &spec)?;
+            let backend = if validated.on_engine { "engine" } else { "twin" };
+            println!(
+                "validate ({backend}): {:.0} tok/s, itl {:.2} ms, feasible={}",
+                validated.report.total_throughput_tok_s,
+                validated.report.itl_mean_s * 1e3,
+                validated.report.feasible()
+            );
+        }
+        Err(e) => println!("place: infeasible ({e})"),
+    }
+    println!("pipeline done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
 fn calibrate_cmd(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "pico-llama").to_string();
+    // The fast/full choice follows the shared rule in `pipeline_from`
+    // (quick scale or --fast ⇒ fast suite), so a calibration produced
+    // here is keyed identically to what `dataset`/`train`/`pipeline`
+    // will look up — any order of invocation reuses the store.  The
+    // full suite runs under `--scale full`.
+    let pipe = pipeline_from(args)?;
+    let calibrated = pipe.calibrate()?;
+    stage_line("calibrate", calibrated.cached);
+    let model = args.get_or("model", "pico-llama");
     let out = PathBuf::from(args.get_or("out", &format!("results/calibration_{model}.json")));
-    let mut rt = runtime::load_backend(&Manifest::default_dir(), &model)?;
-    let cfg = EngineConfig { model: model.clone(), ..Default::default() };
-    let calib = dt::calibrate(rt.as_mut(), &cfg, args.flag("fast"))?;
-    calib.to_json().write_file(&out)?;
+    calibrated.calibration.to_json().write_file(&out)?;
     println!("wrote {}", out.display());
     Ok(())
 }
 
 fn dataset_cmd(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "pico-llama").to_string();
-    let calib = load_or_default_calibration(args, &model)?;
+    let pipe = pipeline_from(args)?;
+    let calibrated = pipe.calibrate()?;
+    stage_line("calibrate", calibrated.cached);
+    let dataset = pipe.dataset(&calibrated)?;
+    stage_line("dataset", dataset.cached);
+    let model = args.get_or("model", "pico-llama");
     let out = PathBuf::from(args.get_or("out", &format!("results/dataset_{model}.csv")));
-    let quick = !args.flag("full");
-    let grid = ml::GridSpec::paper(quick);
-    let base = EngineConfig { model, ..Default::default() };
-    let samples = ml::dataset::generate(
-        &calib,
-        &base,
-        &grid,
-        adapter_serving::util::threadpool::default_workers(),
-    );
-    ml::dataset::save(&samples, &out)?;
-    let starved = samples.iter().filter(|s| s.starved).count();
-    println!("wrote {} samples ({starved} starved) to {}", samples.len(), out.display());
+    ml::dataset::save(&dataset.samples, &out)?;
+    let starved = dataset.samples.iter().filter(|s| s.starved).count();
+    println!("wrote {} samples ({starved} starved) to {}", dataset.samples.len(), out.display());
     Ok(())
 }
 
 fn train_cmd(args: &Args) -> Result<()> {
     let model = args.get_or("model", "pico-llama").to_string();
-    let ds_path = PathBuf::from(args.get_or("dataset", &format!("results/dataset_{model}.csv")));
     let out = PathBuf::from(args.get_or("out", &format!("results/models_{model}.json")));
-    let samples = ml::dataset::load(&ds_path)?;
-    let quick = !args.flag("full");
-    let (thr, s1) =
-        ml::train(&samples, ml::Task::Throughput, ml::ModelType::RandomForest, quick, 7);
-    let (st, s2) = ml::train(&samples, ml::Task::Starvation, ml::ModelType::RandomForest, quick, 7);
-    println!("RF throughput cv-score {s1:.2}; starvation macro-F1 {s2:.3}");
-    ml::save_models(&ml::MlModels { throughput: thr, starvation: st, scaler: None }, &out)?;
+    if let Some(ds) = args.get("dataset") {
+        // Explicit dataset file: train on it directly, bypassing the store.
+        let samples = ml::dataset::load(Path::new(ds))?;
+        let quick = !args.flag("full");
+        let rf = ml::ModelType::RandomForest;
+        let (thr, s1) = ml::train(&samples, ml::Task::Throughput, rf, quick, 7);
+        let (st, s2) = ml::train(&samples, ml::Task::Starvation, rf, quick, 7);
+        println!("RF throughput cv-score {s1:.2}; starvation macro-F1 {s2:.3}");
+        ml::save_models(&ml::MlModels { throughput: thr, starvation: st, scaler: None }, &out)?;
+        println!("wrote {}", out.display());
+        return Ok(());
+    }
+    let pipe = pipeline_from(args)?;
+    let calibrated = pipe.calibrate()?;
+    stage_line("calibrate", calibrated.cached);
+    let dataset = pipe.dataset(&calibrated)?;
+    stage_line("dataset", dataset.cached);
+    let trained = pipe.train(&dataset)?;
+    stage_line("train", trained.cached);
+    ml::save_models(&trained.models, &out)?;
     println!("wrote {}", out.display());
     Ok(())
 }
 
 fn place_cmd(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "pico-llama").to_string();
-    let models_path =
-        PathBuf::from(args.get_or("models", &format!("results/models_{model}.json")));
-    let models = ml::load_models(&models_path)?;
-    let gpus = args.usize_or("gpus", 4)?;
     let spec = workload(args)?;
-    match greedy::place(&spec.adapters, gpus, &models) {
+    let gpus = args.usize_or("gpus", 4)?;
+    let result: Result<Placement> = if let Some(mp) = args.get("models") {
+        // An explicit pre-trained pair (e.g. exported by `adapterd train`);
+        // a missing file is an error, not a silent pipeline run.  This
+        // path is the ML estimator by definition (the file *is* the ML
+        // model pair), so --estimator is rejected rather than ignored.
+        if args.get("estimator").is_some() {
+            return Err(anyhow!("--models and --estimator are mutually exclusive"));
+        }
+        let models = ml::load_models(Path::new(mp))?;
+        let objective = objective_from(args)?;
+        plan(&spec.adapters, gpus, &models, objective.as_ref()).map_err(anyhow::Error::from)
+    } else {
+        // Otherwise drive the pipeline; cached stages are reused, and the
+        // twin estimator skips the ML stages it never consults.
+        let pipe = pipeline_from(args)?;
+        let calibrated = pipe.calibrate()?;
+        if args.get_or("estimator", "ml") == "twin" {
+            pipe.place_on_twin(&calibrated, &spec.adapters).map(|p| p.placement)
+        } else {
+            let dataset = pipe.dataset(&calibrated)?;
+            let trained = pipe.train(&dataset)?;
+            pipe.place(&trained, &spec.adapters).map(|p| p.placement)
+        }
+    };
+    match result {
         Ok(p) => {
             println!("placement uses {} / {gpus} GPUs", p.gpus_used());
             for g in 0..gpus {
@@ -202,14 +338,7 @@ fn place_cmd(args: &Args) -> Result<()> {
 /// `adapterd drift` — the rolling-horizon re-placement loop on a churn
 /// workload (shorthand for `adapterd experiment drift`).
 fn drift_cmd(args: &Args) -> Result<()> {
-    let mut ctx = ExpContext::new(Scale::parse(args.get_or("scale", "quick")));
-    if let Some(out) = args.get("out") {
-        ctx.out_dir = PathBuf::from(out);
-    }
-    if let Some(m) = args.get("model") {
-        ctx.models = vec![m.to_string()];
-    }
-    experiments::run("drift", &ctx)
+    experiments::run("drift", &ExpContext::from_args(args))
 }
 
 fn experiment_cmd(args: &Args) -> Result<()> {
@@ -217,14 +346,7 @@ fn experiment_cmd(args: &Args) -> Result<()> {
         .positional
         .first()
         .ok_or_else(|| anyhow!("experiment id required (or 'all')"))?;
-    let mut ctx = ExpContext::new(Scale::parse(args.get_or("scale", "quick")));
-    if let Some(out) = args.get("out") {
-        ctx.out_dir = PathBuf::from(out);
-    }
-    if let Some(m) = args.get("model") {
-        ctx.models = vec![m.to_string()];
-    }
-    experiments::run(id, &ctx)
+    experiments::run(id, &ExpContext::from_args(args))
 }
 
 fn artifacts_info(args: &Args) -> Result<()> {

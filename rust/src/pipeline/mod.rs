@@ -1,0 +1,693 @@
+//! The end-to-end placement pipeline as a typed, composable API
+//! (DESIGN.md §8).
+//!
+//! The paper's contribution is a *pipeline* — engine profiling → Digital
+//! Twin → distilled ML models → greedy placement → validation — and this
+//! module makes that chain a first-class object instead of disk-stitched
+//! CLI subcommands.  A [`Pipeline`] is configured once through a builder
+//! and then driven stage by stage; every stage consumes the previous
+//! stage's *typed* output, so the compiler enforces the ordering:
+//!
+//! ```text
+//! Pipeline::for_model(..) ─calibrate()→ Calibrated ─dataset()→ Dataset
+//!     ─train()→ Trained ─place()→ Planned ─validate()→ Validated
+//! ```
+//!
+//! The three expensive stages are backed by an on-disk [`ArtifactStore`]
+//! keyed by a content [`fingerprint`] of each stage's inputs (backbone
+//! model + grid + scale + upstream fingerprint), so repeated runs reuse
+//! calibrations, datasets and trained models and any input change misses
+//! the cache.  Placement consumes the pluggable
+//! [`PerfEstimator`](crate::placement::PerfEstimator) /
+//! [`Objective`](crate::placement::Objective) seams, selected with
+//! [`Pipeline::estimator`] and [`Pipeline::objective`].
+//!
+//! `adapterd pipeline` drives [`Pipeline::run`] from the CLI; the
+//! per-stage subcommands (`calibrate`, `dataset`, `train`, `place`) are
+//! thin wrappers over the same stage methods.
+
+pub mod store;
+
+pub use store::{fingerprint, ArtifactStore};
+
+use crate::cluster::{self, ClusterReport};
+use crate::config::EngineConfig;
+use crate::dt::{self, Calibration, LengthVariant};
+use crate::ml::{self, GridSpec, MlModels, Sample};
+use crate::placement::{plan, MinGpus, Objective, Placement, TwinEstimator};
+use crate::runtime::{self, Backend, Manifest};
+use crate::workload::{AdapterSpec, WorkloadSpec};
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Pipeline/experiment scale selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// Minutes-scale runs used by `cargo bench` and CI.
+    Quick,
+    /// The full sweeps (hours on this CPU).
+    Full,
+}
+
+impl Scale {
+    /// Parse a `--scale` CLI value ("full" → Full, everything else Quick).
+    pub fn parse(s: &str) -> Scale {
+        if s.eq_ignore_ascii_case("full") {
+            Scale::Full
+        } else {
+            Scale::Quick
+        }
+    }
+
+    /// Whether this is the quick (CI) scale.
+    pub fn is_quick(&self) -> bool {
+        matches!(self, Scale::Quick)
+    }
+
+    /// Tag used in artifact fingerprints.
+    fn tag(&self) -> &'static str {
+        if self.is_quick() {
+            "quick"
+        } else {
+            "full"
+        }
+    }
+}
+
+/// Which [`PerfEstimator`](crate::placement::PerfEstimator) backs the
+/// placement stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EstimatorChoice {
+    /// The trained ML model pair (the paper's deployed configuration).
+    #[default]
+    Ml,
+    /// The Digital Twin queried directly (slower, learning-error-free).
+    Twin,
+}
+
+/// Output of the calibration stage.
+pub struct Calibrated {
+    /// The calibrated Digital-Twin constants.
+    pub calibration: Calibration,
+    /// Content fingerprint of the calibration (keys downstream stages).
+    pub fingerprint: u64,
+    /// Whether the stage was served from the artifact store (or from an
+    /// injected calibration) instead of being computed.
+    pub cached: bool,
+}
+
+/// Output of the dataset-generation stage.
+pub struct Dataset {
+    /// The calibration the samples were simulated under.
+    pub calibration: Calibration,
+    /// DT-generated training samples.
+    pub samples: Vec<Sample>,
+    /// Input fingerprint of the stage (model + grid + scale + upstream).
+    pub fingerprint: u64,
+    /// Whether the stage was served from the artifact store.
+    pub cached: bool,
+}
+
+/// Output of the training stage.
+pub struct Trained {
+    /// The calibration the training data came from.
+    pub calibration: Calibration,
+    /// The trained throughput/starvation model pair.
+    pub models: MlModels,
+    /// Input fingerprint of the stage.
+    pub fingerprint: u64,
+    /// Whether the stage was served from the artifact store.
+    pub cached: bool,
+}
+
+/// Output of the placement stage.
+pub struct Planned {
+    /// The placement decision.
+    pub placement: Placement,
+    /// Tag of the objective that ranked it.
+    pub objective: &'static str,
+    /// Tag of the estimator that validated it.
+    pub estimator: &'static str,
+    /// GPU budget the planner ran against.
+    pub gpus: usize,
+}
+
+/// Output of the validation stage.
+pub struct Validated {
+    /// Aggregated serving report of the placement under the workload.
+    pub report: ClusterReport,
+    /// Whether validation ran on the real engine (vs the Digital Twin).
+    pub on_engine: bool,
+}
+
+/// All five stage outputs of one [`Pipeline::run`].
+pub struct PipelineRun {
+    /// Calibration stage output.
+    pub calibrated: Calibrated,
+    /// Dataset stage output.
+    pub dataset: Dataset,
+    /// Training stage output.
+    pub trained: Trained,
+    /// Placement stage output.
+    pub planned: Planned,
+    /// Validation stage output.
+    pub validated: Validated,
+}
+
+/// The typed end-to-end pipeline: builder-configured, stage-typed,
+/// artifact-cached (module docs above; DESIGN.md §8).
+///
+/// ```
+/// use adapter_serving::dt::Calibration;
+/// use adapter_serving::ml::GridSpec;
+/// use adapter_serving::pipeline::{Pipeline, Scale};
+/// use adapter_serving::placement::MinLatency;
+/// use adapter_serving::workload::WorkloadSpec;
+/// # fn main() -> anyhow::Result<()> {
+/// let dir = std::env::temp_dir().join(format!("pipe_doc_{}", std::process::id()));
+/// std::fs::remove_dir_all(&dir).ok();
+/// let pipe = Pipeline::for_model("pico-llama")
+///     .scale(Scale::Quick)
+///     .out_dir(&dir)
+///     .calibration(Calibration::default()) // inject → no engine profiling
+///     .grid(GridSpec {
+///         sizes: vec![8],
+///         rates: vec![0.2, 0.05],
+///         adapter_counts: vec![8, 16],
+///         a_max_values: vec![8, 16],
+///         horizon_s: 3.0,
+///         max_scenarios: 24,
+///         seed: 3,
+///     })
+///     .objective(MinLatency)
+///     .gpus(2);
+/// let calibrated = pipe.calibrate()?; // typed stage outputs:
+/// let dataset = pipe.dataset(&calibrated)?; // Calibrated → Dataset
+/// let trained = pipe.train(&dataset)?; // Dataset → Trained
+/// let spec = WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(8, 8, 0.05), 5.0, 7);
+/// match pipe.place(&trained, &spec.adapters) {
+///     // Trained → Planned → Validated.
+///     Ok(planned) => {
+///         let validated = pipe.validate(&trained, &planned, &spec)?;
+///         assert!(validated.report.gpus_used >= 1);
+///     }
+///     // With a 24-sample toy grid the starvation verdict is statistical;
+///     // declining is a legal answer.
+///     Err(e) => println!("toy-grid models declined the workload: {e}"),
+/// }
+/// assert!(pipe.dataset(&pipe.calibrate()?)?.cached, "second run reuses the store");
+/// std::fs::remove_dir_all(&dir).ok();
+/// # Ok(())
+/// # }
+/// ```
+pub struct Pipeline {
+    model: String,
+    scale: Scale,
+    out_dir: PathBuf,
+    store_dir: Option<PathBuf>,
+    artifacts: PathBuf,
+    workers: usize,
+    gpus: usize,
+    grid: Option<GridSpec>,
+    calibration: Option<Calibration>,
+    fast_calibration: bool,
+    estimator: EstimatorChoice,
+    objective: Box<dyn Objective>,
+    validate_on_engine: bool,
+}
+
+impl Pipeline {
+    /// A pipeline for one backbone model with the default configuration:
+    /// quick scale, `results/` output (store under `results/store/`),
+    /// fast calibration, ML estimator, [`MinGpus`] objective, 4 GPUs,
+    /// twin validation.
+    pub fn for_model(model: &str) -> Pipeline {
+        Pipeline {
+            model: model.to_string(),
+            scale: Scale::Quick,
+            out_dir: PathBuf::from("results"),
+            store_dir: None,
+            artifacts: Manifest::default_dir(),
+            workers: crate::util::threadpool::default_workers(),
+            gpus: 4,
+            grid: None,
+            calibration: None,
+            fast_calibration: true,
+            estimator: EstimatorChoice::Ml,
+            objective: Box::new(MinGpus),
+            validate_on_engine: false,
+        }
+    }
+
+    /// Set the pipeline scale (selects the default grid and train budget).
+    pub fn scale(mut self, scale: Scale) -> Pipeline {
+        self.scale = scale;
+        self
+    }
+
+    /// Set the output root; the artifact store lives under `<dir>/store`
+    /// unless [`Pipeline::store_dir`] overrides it.
+    pub fn out_dir(mut self, dir: impl Into<PathBuf>) -> Pipeline {
+        self.out_dir = dir.into();
+        self
+    }
+
+    /// Override the artifact-store directory.
+    pub fn store_dir(mut self, dir: impl Into<PathBuf>) -> Pipeline {
+        self.store_dir = Some(dir.into());
+        self
+    }
+
+    /// Set the AOT artifact directory used to load execution backends.
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Pipeline {
+        self.artifacts = dir.into();
+        self
+    }
+
+    /// Set the worker-thread count for parallel sweeps.
+    pub fn workers(mut self, workers: usize) -> Pipeline {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Set the GPU budget the placement stage plans against.
+    pub fn gpus(mut self, gpus: usize) -> Pipeline {
+        self.gpus = gpus.max(1);
+        self
+    }
+
+    /// Override the dataset sweep grid (default:
+    /// [`GridSpec::paper`] at the pipeline scale).
+    pub fn grid(mut self, grid: GridSpec) -> Pipeline {
+        self.grid = Some(grid);
+        self
+    }
+
+    /// Inject a known calibration: the calibrate stage returns it directly
+    /// (no backend, no profiling) and downstream stages key off its
+    /// content fingerprint.
+    pub fn calibration(mut self, calibration: Calibration) -> Pipeline {
+        self.calibration = Some(calibration);
+        self
+    }
+
+    /// Whether the calibration suite runs its fast subset (default true).
+    pub fn fast_calibration(mut self, fast: bool) -> Pipeline {
+        self.fast_calibration = fast;
+        self
+    }
+
+    /// Select which estimator backs the placement stage.
+    pub fn estimator(mut self, choice: EstimatorChoice) -> Pipeline {
+        self.estimator = choice;
+        self
+    }
+
+    /// Select the placement objective (default [`MinGpus`]).
+    pub fn objective(self, objective: impl Objective + 'static) -> Pipeline {
+        self.boxed_objective(Box::new(objective))
+    }
+
+    /// [`Pipeline::objective`] for an already-boxed objective (e.g. one
+    /// parsed from a CLI flag).
+    pub fn boxed_objective(mut self, objective: Box<dyn Objective>) -> Pipeline {
+        self.objective = objective;
+        self
+    }
+
+    /// Validate on the real engine instead of the Digital Twin.
+    pub fn validate_on_engine(mut self, on_engine: bool) -> Pipeline {
+        self.validate_on_engine = on_engine;
+        self
+    }
+
+    /// The artifact store this pipeline reads and writes.
+    pub fn store(&self) -> ArtifactStore {
+        ArtifactStore::new(
+            self.store_dir.clone().unwrap_or_else(|| self.out_dir.join("store")),
+        )
+    }
+
+    // ------------------------------------------------------------------
+    // Stage internals
+    // ------------------------------------------------------------------
+
+    fn base_config(&self) -> EngineConfig {
+        EngineConfig { model: self.model.clone(), ..Default::default() }
+    }
+
+    fn grid_spec(&self) -> GridSpec {
+        self.grid.clone().unwrap_or_else(|| GridSpec::paper(self.scale.is_quick()))
+    }
+
+    /// Content fingerprint of a calibration (canonical Debug rendering;
+    /// exact because the JSON round-trip preserves every f64 bit).
+    fn calibration_fingerprint(c: &Calibration) -> u64 {
+        let rendered = format!("{c:?}");
+        fingerprint(["calibration-content", rendered.as_str()])
+    }
+
+    fn calibrate_input_fingerprint(&self) -> u64 {
+        // The backend behind the profiling run is an input: a calibration
+        // measured on the reference backend must not be served as a cache
+        // hit for a PJRT run (or for different AOT artifacts).
+        let backend =
+            std::env::var("ADAPTER_SERVING_BACKEND").unwrap_or_else(|_| "auto".to_string());
+        fingerprint([
+            "calibrate".to_string(),
+            self.model.clone(),
+            if self.fast_calibration { "fast" } else { "full" }.to_string(),
+            format!("backend={backend}"),
+            format!("artifacts={}", self.artifacts.display()),
+        ])
+    }
+
+    fn dataset_fingerprint(&self, c: &Calibrated) -> u64 {
+        fingerprint([
+            "dataset".to_string(),
+            self.model.clone(),
+            self.scale.tag().to_string(),
+            format!("{:?}", self.grid_spec()),
+            format!("{:016x}", c.fingerprint),
+        ])
+    }
+
+    fn train_fingerprint(&self, dataset_fp: u64) -> u64 {
+        fingerprint([
+            "train".to_string(),
+            self.model.clone(),
+            self.scale.tag().to_string(),
+            "rf-seed7".to_string(),
+            format!("{dataset_fp:016x}"),
+        ])
+    }
+
+    // ------------------------------------------------------------------
+    // Stages
+    // ------------------------------------------------------------------
+
+    /// Calibration stage: injected calibration, store hit, or a fresh
+    /// profiling run on a backend loaded from the artifact directory.
+    pub fn calibrate(&self) -> Result<Calibrated> {
+        if let Some(hit) = self.calibrate_cached()? {
+            return Ok(hit);
+        }
+        let mut rt = runtime::load_backend(&self.artifacts, &self.model)?;
+        self.calibrate_fresh(rt.as_mut())
+    }
+
+    /// Calibration stage against an already-loaded backend (used by the
+    /// experiment harness, which owns its backends).
+    pub fn calibrate_with(&self, rt: &mut dyn Backend) -> Result<Calibrated> {
+        if let Some(hit) = self.calibrate_cached()? {
+            return Ok(hit);
+        }
+        self.calibrate_fresh(rt)
+    }
+
+    fn calibrate_cached(&self) -> Result<Option<Calibrated>> {
+        if let Some(c) = &self.calibration {
+            return Ok(Some(Calibrated {
+                calibration: c.clone(),
+                fingerprint: Self::calibration_fingerprint(c),
+                cached: true,
+            }));
+        }
+        let fp = self.calibrate_input_fingerprint();
+        let path = self.store().path("calibration", &self.model, fp, "json");
+        if path.exists() {
+            if let Ok(c) = Calibration::load_file(&path, &self.model) {
+                let content_fp = Self::calibration_fingerprint(&c);
+                return Ok(Some(Calibrated {
+                    calibration: c,
+                    fingerprint: content_fp,
+                    cached: true,
+                }));
+            }
+        }
+        Ok(None)
+    }
+
+    fn calibrate_fresh(&self, rt: &mut dyn Backend) -> Result<Calibrated> {
+        eprintln!("[pipeline] calibrating {} ...", self.model);
+        let calib = dt::calibrate(rt, &self.base_config(), self.fast_calibration)?;
+        let fp = self.calibrate_input_fingerprint();
+        let store = self.store();
+        store.ensure_dir()?;
+        calib.to_json().write_file(&store.path("calibration", &self.model, fp, "json"))?;
+        let content_fp = Self::calibration_fingerprint(&calib);
+        Ok(Calibrated { calibration: calib, fingerprint: content_fp, cached: false })
+    }
+
+    /// Dataset stage: sweep the Digital Twin over the grid (or load the
+    /// stored sweep for identical inputs).
+    pub fn dataset(&self, calibrated: &Calibrated) -> Result<Dataset> {
+        let fp = self.dataset_fingerprint(calibrated);
+        let path = self.store().path("dataset", &self.model, fp, "csv");
+        if path.exists() {
+            let samples = ml::dataset::load(&path)?;
+            return Ok(Dataset {
+                calibration: calibrated.calibration.clone(),
+                samples,
+                fingerprint: fp,
+                cached: true,
+            });
+        }
+        eprintln!("[pipeline] generating dataset for {} via the Digital Twin ...", self.model);
+        let grid = self.grid_spec();
+        let base = self.base_config();
+        let samples = ml::dataset::generate(&calibrated.calibration, &base, &grid, self.workers);
+        self.store().ensure_dir()?;
+        ml::dataset::save(&samples, &path)?;
+        Ok(Dataset {
+            calibration: calibrated.calibration.clone(),
+            samples,
+            fingerprint: fp,
+            cached: false,
+        })
+    }
+
+    /// Training stage: fit the RF throughput/starvation pair on the
+    /// dataset (or load the stored pair for identical inputs).
+    pub fn train(&self, dataset: &Dataset) -> Result<Trained> {
+        let fp = self.train_fingerprint(dataset.fingerprint);
+        let path = self.store().path("models", &self.model, fp, "json");
+        if path.exists() {
+            if let Ok(models) = ml::load_models(&path) {
+                return Ok(Trained {
+                    calibration: dataset.calibration.clone(),
+                    models,
+                    fingerprint: fp,
+                    cached: true,
+                });
+            }
+        }
+        eprintln!("[pipeline] training RF models for {} ...", self.model);
+        let quick = self.scale.is_quick();
+        let rf = ml::ModelType::RandomForest;
+        let (thr, s1) = ml::train(&dataset.samples, ml::Task::Throughput, rf, quick, 7);
+        let (st, s2) = ml::train(&dataset.samples, ml::Task::Starvation, rf, quick, 7);
+        eprintln!("[pipeline] RF throughput cv-score {s1:.2}; starvation macro-F1 {s2:.3}");
+        let models = MlModels { throughput: thr, starvation: st, scaler: None };
+        self.store().ensure_dir()?;
+        ml::save_models(&models, &path)?;
+        Ok(Trained {
+            calibration: dataset.calibration.clone(),
+            models,
+            fingerprint: fp,
+            cached: false,
+        })
+    }
+
+    /// Cache-only training lookup: the trained pair for this pipeline's
+    /// inputs if it is already stored, without materializing the dataset.
+    pub fn train_cached(&self, calibrated: &Calibrated) -> Result<Option<Trained>> {
+        let fp = self.train_fingerprint(self.dataset_fingerprint(calibrated));
+        let path = self.store().path("models", &self.model, fp, "json");
+        if !path.exists() {
+            return Ok(None);
+        }
+        match ml::load_models(&path) {
+            Ok(models) => Ok(Some(Trained {
+                calibration: calibrated.calibration.clone(),
+                models,
+                fingerprint: fp,
+                cached: true,
+            })),
+            Err(_) => Ok(None),
+        }
+    }
+
+    fn plan_on_twin(&self, calibration: &Calibration, adapters: &[AdapterSpec]) -> Result<Planned> {
+        let est = TwinEstimator::new(calibration.clone(), self.base_config());
+        let placement = plan(adapters, self.gpus, &est, self.objective.as_ref())?;
+        Ok(Planned {
+            placement,
+            objective: self.objective.name(),
+            estimator: "twin",
+            gpus: self.gpus,
+        })
+    }
+
+    /// Placement stage: plan `adapters` onto the GPU budget under the
+    /// configured estimator and objective.
+    pub fn place(&self, trained: &Trained, adapters: &[AdapterSpec]) -> Result<Planned> {
+        match self.estimator {
+            EstimatorChoice::Ml => {
+                let placement =
+                    plan(adapters, self.gpus, &trained.models, self.objective.as_ref())?;
+                Ok(Planned {
+                    placement,
+                    objective: self.objective.name(),
+                    estimator: "ml",
+                    gpus: self.gpus,
+                })
+            }
+            EstimatorChoice::Twin => self.plan_on_twin(&trained.calibration, adapters),
+        }
+    }
+
+    /// Placement directly from a calibration — the twin estimator never
+    /// consults the ML models, so twin-only callers can skip the dataset
+    /// and training stages entirely (ML pipelines go through
+    /// [`Pipeline::train`] + [`Pipeline::place`]).
+    pub fn place_on_twin(
+        &self,
+        calibrated: &Calibrated,
+        adapters: &[AdapterSpec],
+    ) -> Result<Planned> {
+        self.plan_on_twin(&calibrated.calibration, adapters)
+    }
+
+    /// Validation stage: serve the workload under the placement on the
+    /// Digital Twin (default) or the real engine, one backend per GPU.
+    pub fn validate(
+        &self,
+        trained: &Trained,
+        planned: &Planned,
+        spec: &WorkloadSpec,
+    ) -> Result<Validated> {
+        self.validate_with(&trained.calibration, planned, spec)
+    }
+
+    /// [`Pipeline::validate`] from a bare calibration (the twin-only
+    /// path, which has no [`Trained`] stage).
+    pub fn validate_with(
+        &self,
+        calibration: &Calibration,
+        planned: &Planned,
+        spec: &WorkloadSpec,
+    ) -> Result<Validated> {
+        let base = self.base_config();
+        let report = if self.validate_on_engine {
+            let make = || runtime::load_backend(&self.artifacts, &self.model);
+            cluster::run_on_engine(&make, &base, &planned.placement, spec)?
+        } else {
+            cluster::run_on_twin(
+                calibration,
+                &base,
+                &planned.placement,
+                spec,
+                LengthVariant::Original,
+            )
+        };
+        Ok(Validated { report, on_engine: self.validate_on_engine })
+    }
+
+    /// The whole chain for one workload:
+    /// calibrate → dataset → train → place → validate.
+    ///
+    /// `run` materializes every stage so [`PipelineRun`] is always
+    /// complete; a twin-estimator caller that wants to skip the ML stages
+    /// (they are planned around, not consulted) should drive
+    /// [`Pipeline::calibrate`] → [`Pipeline::place_on_twin`] →
+    /// [`Pipeline::validate_with`] instead, as `adapterd pipeline
+    /// --estimator twin` does.
+    pub fn run(&self, spec: &WorkloadSpec) -> Result<PipelineRun> {
+        let calibrated = self.calibrate()?;
+        let dataset = self.dataset(&calibrated)?;
+        let trained = self.train(&dataset)?;
+        let planned = self.place(&trained, &spec.adapters)?;
+        let validated = self.validate(&trained, &planned, spec)?;
+        Ok(PipelineRun { calibrated, dataset, trained, planned, validated })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_grid() -> GridSpec {
+        GridSpec {
+            sizes: vec![8],
+            rates: vec![0.2, 0.05],
+            adapter_counts: vec![8, 16],
+            a_max_values: vec![8, 16],
+            horizon_s: 3.0,
+            max_scenarios: 24,
+            seed: 3,
+        }
+    }
+
+    fn pipe(dir: &std::path::Path) -> Pipeline {
+        Pipeline::for_model("pico-llama")
+            .out_dir(dir)
+            .calibration(Calibration::default())
+            .grid(tiny_grid())
+            .gpus(2)
+    }
+
+    #[test]
+    fn second_run_hits_the_artifact_cache() {
+        let dir = std::env::temp_dir().join(format!("pipe_cache_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let p = pipe(&dir);
+        let c1 = p.calibrate().unwrap();
+        let d1 = p.dataset(&c1).unwrap();
+        let t1 = p.train(&d1).unwrap();
+        assert!(!d1.cached && !t1.cached, "first run must compute");
+        // A fresh Pipeline value over the same inputs: everything hits.
+        let p2 = pipe(&dir);
+        let c2 = p2.calibrate().unwrap();
+        assert_eq!(c1.fingerprint, c2.fingerprint, "content fingerprint is stable");
+        let d2 = p2.dataset(&c2).unwrap();
+        let t2 = p2.train(&d2).unwrap();
+        assert!(d2.cached && t2.cached, "second run must reuse the store");
+        assert_eq!(d1.fingerprint, d2.fingerprint);
+        assert_eq!(d1.samples, d2.samples, "CSV round-trip must be exact");
+        assert!(p2.train_cached(&c2).unwrap().is_some(), "cache-only lookup hits");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn grid_change_invalidates_the_dataset_cache() {
+        let dir = std::env::temp_dir().join(format!("pipe_inval_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let p = pipe(&dir);
+        let c = p.calibrate().unwrap();
+        let d = p.dataset(&c).unwrap();
+        let mut other_grid = tiny_grid();
+        other_grid.max_scenarios = 12;
+        let p2 = pipe(&dir).grid(other_grid);
+        let d2 = p2.dataset(&p2.calibrate().unwrap()).unwrap();
+        assert_ne!(d.fingerprint, d2.fingerprint, "grid change must re-key the stage");
+        assert!(!d2.cached);
+        assert!(p2.train_cached(&c).unwrap().is_none(), "trained pair re-keys too");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn full_run_with_twin_estimator_places_and_validates() {
+        let dir = std::env::temp_dir().join(format!("pipe_run_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let p = pipe(&dir).estimator(EstimatorChoice::Twin);
+        let spec = WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(8, 8, 0.05), 5.0, 7);
+        let run = p.run(&spec).unwrap();
+        assert_eq!(run.planned.objective, "min-gpus");
+        assert_eq!(run.planned.estimator, "twin");
+        assert_eq!(run.planned.placement.assignment.len(), 8);
+        assert!(run.validated.report.gpus_used >= 1);
+        assert!(!run.validated.on_engine);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,103 @@
+//! Content-addressed on-disk store for pipeline stage artifacts.
+//!
+//! Every expensive pipeline stage (calibration, dataset generation, model
+//! training) is keyed by a [`fingerprint`] of its inputs — backbone model,
+//! grid, scale, and the upstream stage's *content* fingerprint — so
+//! repeated [`crate::pipeline::Pipeline`] runs reuse artifacts instead of
+//! recomputing them, and any input change (a different grid, a new
+//! calibration) automatically misses the cache.
+//!
+//! Artifacts are plain files named `<stage>_<model>_<fingerprint>.<ext>`
+//! under one root directory (default `results/store/`): calibrations as
+//! JSON, datasets as CSV, model pairs as JSON — the same formats the
+//! per-stage CLI commands export, so a store entry is always inspectable
+//! with ordinary tools.
+
+use std::path::{Path, PathBuf};
+
+/// FNV-1a 64-bit hash over an ordered sequence of input strings.
+///
+/// A separator is folded in after every part so `["ab", "c"]` and
+/// `["a", "bc"]` fingerprint differently.
+///
+/// ```
+/// use adapter_serving::pipeline::fingerprint;
+/// let a = fingerprint(["pico-llama", "quick"]);
+/// assert_eq!(a, fingerprint(["pico-llama", "quick"])); // deterministic
+/// assert_ne!(a, fingerprint(["pico-llama", "full"]));
+/// assert_ne!(a, fingerprint(["pico-llamaquick"]));
+/// ```
+pub fn fingerprint<I, S>(parts: I) -> u64
+where
+    I: IntoIterator<Item = S>,
+    S: AsRef<str>,
+{
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    for part in parts {
+        for &b in part.as_ref().as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+        h ^= 0x1f; // unit separator
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// One directory of fingerprint-keyed pipeline artifacts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactStore {
+    root: PathBuf,
+}
+
+impl ArtifactStore {
+    /// A store rooted at `root` (created lazily on first write).
+    pub fn new(root: impl Into<PathBuf>) -> ArtifactStore {
+        ArtifactStore { root: root.into() }
+    }
+
+    /// The store's root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Path of the artifact for `stage` on `model` with input fingerprint
+    /// `fp`: `<root>/<stage>_<model>_<fp>.<ext>`.
+    pub fn path(&self, stage: &str, model: &str, fp: u64, ext: &str) -> PathBuf {
+        self.root.join(format!("{stage}_{model}_{fp:016x}.{ext}"))
+    }
+
+    /// Whether the artifact exists (a cache hit).
+    pub fn contains(&self, stage: &str, model: &str, fp: u64, ext: &str) -> bool {
+        self.path(stage, model, fp, ext).exists()
+    }
+
+    /// Create the root directory (idempotent).
+    pub fn ensure_dir(&self) -> anyhow::Result<()> {
+        std::fs::create_dir_all(&self.root)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_is_order_and_boundary_sensitive() {
+        assert_ne!(fingerprint(["a", "b"]), fingerprint(["b", "a"]));
+        assert_ne!(fingerprint(["ab"]), fingerprint(["a", "b"]));
+        assert_ne!(fingerprint::<_, &str>([]), fingerprint([""]));
+        assert_eq!(fingerprint(["x", "y"]), fingerprint(["x".to_string(), "y".to_string()]));
+    }
+
+    #[test]
+    fn store_paths_embed_stage_model_and_fingerprint() {
+        let store = ArtifactStore::new("/tmp/store");
+        let p = store.path("dataset", "pico-llama", 0xabcd, "csv");
+        assert_eq!(p, PathBuf::from("/tmp/store/dataset_pico-llama_000000000000abcd.csv"));
+        assert!(!store.contains("dataset", "pico-llama", 0xabcd, "csv"));
+    }
+}

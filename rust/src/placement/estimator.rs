@@ -1,0 +1,293 @@
+//! The performance-estimation seam of the placement layer.
+//!
+//! Every placement algorithm in this crate asks one question of a
+//! candidate allocation: *"if this adapter group shares one GPU under this
+//! `A_max`, what throughput does it get, and does it starve or OOM?"*
+//! [`PerfEstimator`] makes that question an explicit trait so the answer
+//! can come from different oracles:
+//!
+//! - [`MlEstimator`] — the paper's deployed path: the distilled ML model
+//!   pair ([`MlModels`]) trained on Digital-Twin data (µs per query);
+//! - [`TwinEstimator`] — the Digital Twin queried directly, skipping the
+//!   ML stage (ms per query; the "DT-in-the-loop" ablation);
+//! - [`OracleEstimator`] — recorded estimates replayed exactly, for
+//!   deterministic tests of the planners themselves.
+//!
+//! [`MlModels`] implements the trait directly, so existing call sites that
+//! pass `&models` keep working unchanged.
+
+use crate::config::EngineConfig;
+use crate::dt::{self, Calibration, LengthVariant};
+use crate::ml::{features, MlModels};
+use crate::workload::{AdapterSpec, WorkloadSpec};
+use std::collections::BTreeMap;
+
+/// A performance estimate for one adapter group under one `A_max`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Estimate {
+    /// Predicted served throughput (tok/s).
+    pub throughput_tok_s: f64,
+    /// Predicted starvation (throughput below incoming demand).
+    pub starved: bool,
+    /// Predicted static-reservation memory error.  Estimators that fold
+    /// memory errors into the starvation verdict (the ML training labels
+    /// do) leave this `false`.
+    pub memory_error: bool,
+}
+
+impl Estimate {
+    /// Neither starved nor out of memory — the paper's feasibility test.
+    pub fn feasible(&self) -> bool {
+        !self.starved && !self.memory_error
+    }
+}
+
+/// Predicts serving performance for an adapter group under a given `A_max`
+/// — the seam between the placement algorithms and whatever model backs
+/// them (learned, simulated, or recorded).
+pub trait PerfEstimator {
+    /// Estimate throughput and feasibility for `adapters` sharing one GPU
+    /// configured with `a_max` slots.
+    fn estimate(&self, adapters: &[AdapterSpec], a_max: usize) -> Estimate;
+
+    /// Short tag for reports and artifacts.
+    fn name(&self) -> &'static str;
+}
+
+impl PerfEstimator for MlModels {
+    fn estimate(&self, adapters: &[AdapterSpec], a_max: usize) -> Estimate {
+        let x = features(adapters, a_max);
+        Estimate {
+            throughput_tok_s: self.predict_throughput(&x),
+            starved: self.predict_starvation(&x),
+            memory_error: false,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "ml"
+    }
+}
+
+/// [`PerfEstimator`] backed by the trained ML model pair — the paper's
+/// deployed pipeline configuration (the owning flavour of the direct
+/// [`MlModels`] impl, for pipeline stages that hand the models over).
+pub struct MlEstimator {
+    /// The trained throughput/starvation model pair.
+    pub models: MlModels,
+}
+
+impl MlEstimator {
+    /// Wrap a trained model pair.
+    pub fn new(models: MlModels) -> MlEstimator {
+        MlEstimator { models }
+    }
+}
+
+impl From<MlModels> for MlEstimator {
+    fn from(models: MlModels) -> MlEstimator {
+        MlEstimator::new(models)
+    }
+}
+
+impl PerfEstimator for MlEstimator {
+    fn estimate(&self, adapters: &[AdapterSpec], a_max: usize) -> Estimate {
+        self.models.estimate(adapters, a_max)
+    }
+
+    fn name(&self) -> &'static str {
+        "ml"
+    }
+}
+
+/// [`PerfEstimator`] that runs the Digital Twin per query — the placement
+/// pipeline with the ML stage skipped.  ~1000x slower per probe than
+/// [`MlEstimator`] but free of learning error; scenarios are constructed
+/// exactly like the training-set generator ([`crate::ml::dataset`]): a
+/// ShareGPT-like workload with mean request lengths over a short horizon.
+pub struct TwinEstimator {
+    /// Calibrated twin constants.
+    pub calibration: Calibration,
+    /// Per-GPU engine configuration template (`a_max`/`s_max_rank` are
+    /// overridden per query).
+    pub base: EngineConfig,
+    /// Simulated horizon per query (seconds).
+    pub horizon_s: f64,
+    /// Workload seed shared by every query.
+    pub seed: u64,
+}
+
+impl TwinEstimator {
+    /// Estimator with the dataset generator's defaults (20 s horizon).
+    pub fn new(calibration: Calibration, base: EngineConfig) -> TwinEstimator {
+        TwinEstimator { calibration, base, horizon_s: 20.0, seed: 0xDA7A }
+    }
+
+    /// Override the simulated horizon (shorter = faster, noisier).
+    pub fn with_horizon(mut self, horizon_s: f64) -> TwinEstimator {
+        self.horizon_s = horizon_s;
+        self
+    }
+
+    /// Override the workload seed.
+    pub fn with_seed(mut self, seed: u64) -> TwinEstimator {
+        self.seed = seed;
+        self
+    }
+}
+
+impl PerfEstimator for TwinEstimator {
+    fn estimate(&self, adapters: &[AdapterSpec], a_max: usize) -> Estimate {
+        let s_max = adapters.iter().map(|a| a.rank).max().unwrap_or(8);
+        let mut cfg = self.base.clone();
+        cfg.a_max = a_max;
+        cfg.s_max_rank = s_max;
+        let spec = WorkloadSpec::sharegpt_like(adapters.to_vec(), self.horizon_s, self.seed);
+        let res = dt::run_twin(&cfg, &self.calibration, &spec, LengthVariant::Mean);
+        match res.report {
+            Some(rep) => Estimate {
+                throughput_tok_s: rep.throughput_tok_s,
+                starved: rep.starved,
+                memory_error: false,
+            },
+            None => Estimate { throughput_tok_s: 0.0, starved: true, memory_error: true },
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "twin"
+    }
+}
+
+/// Test-support [`PerfEstimator`] replaying recorded estimates exactly.
+///
+/// Keys are the bit patterns of the placement feature vector
+/// ([`crate::ml::features`]), so any group with identical features — the
+/// only information the ML path ever sees — replays the same estimate.
+/// A query with no recorded estimate returns the fallback when one is set
+/// and panics otherwise (a miss in a test is a bug in the test).
+#[derive(Debug, Clone, Default)]
+pub struct OracleEstimator {
+    records: BTreeMap<Vec<u64>, Estimate>,
+    fallback: Option<Estimate>,
+}
+
+impl OracleEstimator {
+    /// Empty oracle (every query must be recorded first).
+    pub fn new() -> OracleEstimator {
+        OracleEstimator::default()
+    }
+
+    /// Oracle that answers unrecorded queries with `fallback`.
+    pub fn with_fallback(fallback: Estimate) -> OracleEstimator {
+        OracleEstimator { records: BTreeMap::new(), fallback: Some(fallback) }
+    }
+
+    fn key(adapters: &[AdapterSpec], a_max: usize) -> Vec<u64> {
+        features(adapters, a_max).iter().map(|v| v.to_bits()).collect()
+    }
+
+    /// Record the estimate to replay for this group/`A_max`.
+    pub fn record(&mut self, adapters: &[AdapterSpec], a_max: usize, estimate: Estimate) {
+        self.records.insert(Self::key(adapters, a_max), estimate);
+    }
+
+    /// Record by querying another estimator (returns the recorded value).
+    pub fn record_from(
+        &mut self,
+        src: &dyn PerfEstimator,
+        adapters: &[AdapterSpec],
+        a_max: usize,
+    ) -> Estimate {
+        let est = src.estimate(adapters, a_max);
+        self.record(adapters, a_max, est);
+        est
+    }
+
+    /// Number of recorded estimates.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Whether no estimates are recorded.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+impl PerfEstimator for OracleEstimator {
+    fn estimate(&self, adapters: &[AdapterSpec], a_max: usize) -> Estimate {
+        self.records.get(&Self::key(adapters, a_max)).copied().or(self.fallback).unwrap_or_else(
+            || {
+                panic!(
+                    "OracleEstimator miss: no recorded estimate for {} adapters at A_max {a_max}",
+                    adapters.len()
+                )
+            },
+        )
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adapters(n: usize, rank: usize, rate: f64) -> Vec<AdapterSpec> {
+        (0..n).map(|id| AdapterSpec { id, rank, rate }).collect()
+    }
+
+    #[test]
+    fn ml_models_implement_the_trait() {
+        let models = crate::placement::test_models::analytic_models(3);
+        let ads = adapters(8, 8, 0.05);
+        let e = models.estimate(&ads, 16);
+        let x = features(&ads, 16);
+        assert_eq!(e.throughput_tok_s, models.predict_throughput(&x));
+        assert_eq!(e.starved, models.predict_starvation(&x));
+        assert!(!e.memory_error);
+    }
+
+    #[test]
+    fn twin_estimator_is_deterministic_and_flags_oom() {
+        let twin = TwinEstimator::new(Calibration::default(), EngineConfig::default())
+            .with_horizon(5.0);
+        let ads = adapters(8, 8, 0.1);
+        let a = twin.estimate(&ads, 8);
+        let b = twin.estimate(&ads, 8);
+        assert_eq!(a.throughput_tok_s.to_bits(), b.throughput_tok_s.to_bits());
+        assert!(a.throughput_tok_s > 0.0);
+        assert!(a.feasible());
+        // 384 slots × rank 32 over-reserves the default 8192-token GPU.
+        let oom = twin.estimate(&adapters(8, 32, 0.1), 384);
+        assert!(oom.memory_error);
+        assert!(!oom.feasible());
+        assert_eq!(oom.throughput_tok_s, 0.0);
+    }
+
+    #[test]
+    fn oracle_replays_exactly_and_panics_on_miss() {
+        let twin = TwinEstimator::new(Calibration::default(), EngineConfig::default())
+            .with_horizon(3.0);
+        let ads = adapters(4, 8, 0.2);
+        let mut oracle = OracleEstimator::new();
+        let recorded = oracle.record_from(&twin, &ads, 8);
+        assert_eq!(oracle.len(), 1);
+        let replayed = oracle.estimate(&ads, 8);
+        assert_eq!(replayed.throughput_tok_s.to_bits(), recorded.throughput_tok_s.to_bits());
+        assert_eq!(replayed, twin.estimate(&ads, 8));
+        let res = std::panic::catch_unwind(|| oracle.estimate(&ads, 16));
+        assert!(res.is_err(), "unrecorded query must panic without a fallback");
+    }
+
+    #[test]
+    fn oracle_fallback_answers_misses() {
+        let fb = Estimate { throughput_tok_s: 42.0, starved: false, memory_error: false };
+        let oracle = OracleEstimator::with_fallback(fb);
+        assert_eq!(oracle.estimate(&adapters(2, 8, 0.1), 8), fb);
+        assert!(oracle.is_empty());
+    }
+}

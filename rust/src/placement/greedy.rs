@@ -3,12 +3,14 @@
 //!
 //! First-Fit-Decreasing flavour: adapters are priority-sorted (size
 //! descending, zigzag by arrival rate inside size groups), provisionally
-//! packed onto the current GPU, and validated at the testing points via
-//! the ML models (throughput probe over the current and next `A_max`
-//! candidates, then a starvation veto).
+//! packed onto the current GPU, and validated at the testing points via a
+//! pluggable [`PerfEstimator`] (throughput probe over the current and next
+//! `A_max` candidates, then a feasibility veto).  Packing onto the fewest
+//! GPUs is this algorithm's built-in goal — it *is* the
+//! [`crate::placement::MinGpus`] objective's planner.
 
+use super::estimator::PerfEstimator;
 use super::{Placement, PlacementError, PlacementResult, TESTING_POINTS};
-use crate::ml::{features, MlModels};
 use crate::workload::AdapterSpec;
 use std::collections::VecDeque;
 
@@ -55,17 +57,16 @@ impl GpuState {
 }
 
 /// TestAllocation (Algorithm 2): probe the current and the next `A_max`
-/// candidate with the throughput model, keep the better, veto on predicted
-/// starvation.  Returns `(ok, chosen_a_max)`.
-fn test_allocation(g: &GpuState, models: &MlModels) -> (bool, usize) {
+/// candidate with the estimator's throughput prediction, keep the better,
+/// veto on predicted infeasibility.  Returns `(ok, chosen_a_max)`.
+fn test_allocation(g: &GpuState, est: &dyn PerfEstimator) -> (bool, usize) {
     let all = g.all();
     let p = if g.a_max == 0 { TESTING_POINTS[0] } else { g.a_max };
     let p_next = next_gpu_config(p);
-    let x_p = features(&all, p);
-    let t_p = models.predict_throughput(&x_p);
+    let t_p = est.estimate(&all, p).throughput_tok_s;
     let p_best = match p_next {
         Some(pn) => {
-            let t_next = models.predict_throughput(&features(&all, pn));
+            let t_next = est.estimate(&all, pn).throughput_tok_s;
             if t_p > t_next {
                 p
             } else {
@@ -74,8 +75,7 @@ fn test_allocation(g: &GpuState, models: &MlModels) -> (bool, usize) {
         }
         None => p,
     };
-    let starve = models.predict_starvation(&features(&all, p_best));
-    (!starve, p_best)
+    (est.estimate(&all, p_best).feasible(), p_best)
 }
 
 /// NextGPUConfig: the next candidate in the testing-point array.
@@ -85,7 +85,10 @@ fn next_gpu_config(current: usize) -> Option<usize> {
 
 /// Algorithm 1.  Returns the placement or `Err(Starvation)` when no
 /// starvation-free allocation exists within `gpus`.
-pub fn place(adapters: &[AdapterSpec], gpus: usize, models: &MlModels) -> PlacementResult {
+///
+/// Generic over the [`PerfEstimator`] seam; `&MlModels` coerces, so the
+/// deployed ML path reads `place(&adapters, gpus, &models)` unchanged.
+pub fn place(adapters: &[AdapterSpec], gpus: usize, est: &dyn PerfEstimator) -> PlacementResult {
     let sorted = priority_sorting(adapters);
     let mut a_q: VecDeque<AdapterSpec> = sorted.into();
     let mut g_q: VecDeque<usize> = (0..gpus).collect();
@@ -100,7 +103,7 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, models: &MlModels) -> Placem
         let at_testing_point = testing.contains(&states[g].count())
             || states[g].count() >= *TESTING_POINTS.last().unwrap();
         if at_testing_point {
-            let (ok, p_new) = test_allocation(&states[g], models);
+            let (ok, p_new) = test_allocation(&states[g], est);
             if ok {
                 // CommitAllocation
                 let prov = std::mem::take(&mut states[g].provisional);
@@ -131,7 +134,7 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, models: &MlModels) -> Placem
     // Validate any leftover provisional allocations (Alg. 1 lines 24-28).
     for g in 0..gpus {
         if !states[g].provisional.is_empty() {
-            let (ok, p_new) = test_allocation(&states[g], models);
+            let (ok, p_new) = test_allocation(&states[g], est);
             if !ok {
                 return Err(PlacementError::Starvation);
             }
@@ -139,7 +142,7 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, models: &MlModels) -> Placem
             states[g].committed.extend(prov);
             states[g].a_max = p_new;
         } else if !states[g].committed.is_empty() && states[g].a_max == 0 {
-            let (ok, p_new) = test_allocation(&states[g], models);
+            let (ok, p_new) = test_allocation(&states[g], est);
             if !ok {
                 return Err(PlacementError::Starvation);
             }
@@ -163,6 +166,7 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, models: &MlModels) -> Placem
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ml::MlModels;
 
     /// Shared analytic stand-in models (see `placement::test_models`):
     /// capacity 1000 tok/s minus an A_max tax; starvation when demand

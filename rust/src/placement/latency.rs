@@ -1,15 +1,20 @@
 //! ProposedLat (paper §8.4.4): the latency-oriented proof-of-concept
 //! variant of the pipeline.  Assigns each adapter to the GPU with the
 //! lowest aggregated arrival rate, sets `A_max` to the per-GPU adapter
-//! count, and validates the resulting allocation with the learned ML
-//! models (starvation / memory-error veto).
+//! count, and validates the resulting allocation with a pluggable
+//! [`PerfEstimator`] (starvation / memory-error veto).  Spreading for
+//! latency is this algorithm's built-in goal — it *is* the
+//! [`crate::placement::MinLatency`] objective's planner.
 
+use super::estimator::PerfEstimator;
 use super::{Placement, PlacementError, PlacementResult};
-use crate::ml::{features, MlModels};
 use crate::workload::AdapterSpec;
 
-/// ProposedLat: least-loaded spreading with a post-hoc ML starvation veto.
-pub fn place(adapters: &[AdapterSpec], gpus: usize, models: &MlModels) -> PlacementResult {
+/// ProposedLat: least-loaded spreading with a post-hoc estimator veto.
+///
+/// Generic over the [`PerfEstimator`] seam; `&MlModels` coerces, so the
+/// deployed ML path reads `place(&adapters, gpus, &models)` unchanged.
+pub fn place(adapters: &[AdapterSpec], gpus: usize, est: &dyn PerfEstimator) -> PlacementResult {
     let mut placement = Placement { assignment: Default::default(), a_max: vec![0; gpus] };
     let mut loads = vec![0.0f64; gpus];
     let mut per_gpu: Vec<Vec<AdapterSpec>> = vec![Vec::new(); gpus];
@@ -24,15 +29,14 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, models: &MlModels) -> Placem
     for g in 0..gpus {
         placement.a_max[g] = per_gpu[g].len();
     }
-    // Post-hoc ML validation: any predicted starvation (which the training
-    // data also uses to encode memory errors) makes the whole allocation
-    // infeasible.
+    // Post-hoc validation: any predicted starvation or memory error makes
+    // the whole allocation infeasible (the ML training data folds memory
+    // errors into the starvation label; other estimators flag them apart).
     for g in 0..gpus {
         if per_gpu[g].is_empty() {
             continue;
         }
-        let x = features(&per_gpu[g], placement.a_max[g]);
-        if models.predict_starvation(&x) {
+        if !est.estimate(&per_gpu[g], placement.a_max[g]).feasible() {
             return Err(PlacementError::Starvation);
         }
     }
@@ -44,7 +48,7 @@ mod tests {
     use super::*;
     use crate::ml::refine::FlatTree;
     use crate::ml::tree::{Criterion, Tree, TreeParams};
-    use crate::ml::Predictor;
+    use crate::ml::{MlModels, Predictor};
 
     fn models(starve_above_rate: f64) -> MlModels {
         let mut xs = vec![];

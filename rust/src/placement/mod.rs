@@ -1,19 +1,32 @@
-//! The adapter caching problem (paper §7): place adapters on the minimum
-//! number of GPUs, choosing a per-GPU `A_max`, without starvation or
-//! memory errors.
+//! The adapter caching problem (paper §7): place adapters on GPUs,
+//! choosing a per-GPU `A_max`, without starvation or memory errors.
 //!
+//! Two trait seams make the layer pluggable (DESIGN.md §8):
+//! [`PerfEstimator`] supplies the per-group throughput/feasibility
+//! predictions (learned ML models, the Digital Twin directly, or recorded
+//! test oracles) and [`Objective`] defines what the planner minimizes
+//! ([`MinGpus`] — the paper's Alg. 1 goal — or [`MinLatency`], §8.4.4).
+//! [`plan`] is the objective-generic one-shot entry point.
+//!
+//! - [`estimator`] — the [`PerfEstimator`] seam and its implementations;
+//! - [`objective`] — the [`Objective`] seam ([`MinGpus`]/[`MinLatency`]);
 //! - [`greedy`] — the paper's contribution (Algorithms 1 & 2);
 //! - [`baselines`] — MaxBase, MaxBase*, Random (§8.4);
 //! - [`dlora`] — the dLoRA proactive placement reimplementation (§8.4.3);
 //! - [`latency`] — the ProposedLat latency-oriented variant (§8.4.4);
 //! - [`replan`] — migration-aware incremental re-placement for drifting
-//!   workloads (DESIGN.md §7).
+//!   workloads, generic over both seams (DESIGN.md §7/§8).
 
 pub mod baselines;
 pub mod dlora;
+pub mod estimator;
 pub mod greedy;
 pub mod latency;
+pub mod objective;
 pub mod replan;
+
+pub use estimator::{Estimate, MlEstimator, OracleEstimator, PerfEstimator, TwinEstimator};
+pub use objective::{plan, Candidate, MinGpus, MinLatency, Objective};
 
 use crate::workload::AdapterSpec;
 use std::collections::HashMap;

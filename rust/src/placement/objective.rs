@@ -1,0 +1,232 @@
+//! The optimization-objective seam of the placement layer.
+//!
+//! The paper's pipeline minimizes *GPU count* (Alg. 1); its §8.4.4
+//! ProposedLat variant minimizes *inter-token latency* by spreading load.
+//! [`Objective`] makes that choice a first-class trait so the one-shot
+//! planners and the incremental replanner ([`crate::placement::replan`])
+//! can serve either goal — and the drift control loop can compare them
+//! over time (GPUs-over-time vs ITL-over-time, `experiment drift`).
+//!
+//! An objective answers three questions:
+//!
+//! 1. **ranking** — which feasible GPU candidate is best for the next
+//!    adapter ([`Objective::cost`], lexicographic, smaller is better);
+//! 2. **stickiness** — when should a replanned adapter stay on its
+//!    previous GPU instead of migrating ([`Objective::keeps`]);
+//! 3. **shape** — pack-and-consolidate or spread
+//!    ([`Objective::consolidates`], which also selects the cold-start
+//!    planner in the default [`Objective::plan`]).
+
+use super::estimator::PerfEstimator;
+use super::replan::ReplanParams;
+use super::{greedy, latency, PlacementResult};
+use crate::workload::AdapterSpec;
+
+/// A feasible "place adapter X on GPU g" option scored by an [`Objective`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    /// Target GPU index.
+    pub gpu: usize,
+    /// Whether the GPU already serves adapters (before this candidate).
+    pub used: bool,
+    /// The `A_max` testing point the estimator validated for the group.
+    pub a_max: usize,
+    /// Predicted group throughput with the adapter included (tok/s).
+    pub throughput_tok_s: f64,
+    /// Aggregated arrival rate with the adapter included (req/s) — the
+    /// load-balance signal latency objectives rank by.
+    pub load_req_s: f64,
+}
+
+/// What a placement optimizes.  Implementations must be stateless
+/// policies; planners query them per candidate.
+pub trait Objective {
+    /// Tag used in reports, CSV rows and CLI flags.
+    fn name(&self) -> &'static str;
+
+    /// Lexicographic cost of a feasible candidate; the planner picks the
+    /// smallest (ties resolve to the lowest GPU index).  Feasibility is
+    /// the estimator's verdict — objectives only rank feasible options.
+    fn cost(&self, c: &Candidate) -> (f64, f64);
+
+    /// Replan sticky rule: keep `adapter` on its feasible previous GPU
+    /// (`prev`) instead of migrating to the otherwise-best candidate
+    /// (`best`)?  Objectives weigh their own notion of "close enough"
+    /// against the migration cost model in `params`.
+    fn keeps(
+        &self,
+        prev: &Candidate,
+        best: &Candidate,
+        adapter: &AdapterSpec,
+        params: &ReplanParams,
+    ) -> bool;
+
+    /// Whether the objective packs onto few GPUs (enabling the replanner's
+    /// drain pass) or spreads across all of them.
+    fn consolidates(&self) -> bool;
+
+    /// One-shot planner for a cold start: Alg. 1 packing for
+    /// consolidating objectives, least-loaded spreading otherwise.
+    fn plan(
+        &self,
+        adapters: &[AdapterSpec],
+        gpus: usize,
+        est: &dyn PerfEstimator,
+    ) -> PlacementResult {
+        if self.consolidates() {
+            greedy::place(adapters, gpus, est)
+        } else {
+            latency::place(adapters, gpus, est)
+        }
+    }
+}
+
+/// Strict "better than" under an objective's lexicographic cost.
+pub fn better_than(obj: &dyn Objective, a: &Candidate, b: &Candidate) -> bool {
+    let (a0, a1) = obj.cost(a);
+    let (b0, b1) = obj.cost(b);
+    a0 < b0 || (a0 == b0 && a1 < b1)
+}
+
+/// Plan `adapters` onto at most `gpus` GPUs under `objective` — the
+/// objective-generic entry point of the one-shot placement layer.
+pub fn plan(
+    adapters: &[AdapterSpec],
+    gpus: usize,
+    est: &dyn PerfEstimator,
+    objective: &dyn Objective,
+) -> PlacementResult {
+    objective.plan(adapters, gpus, est)
+}
+
+/// Minimize provisioned GPUs (the paper's Alg. 1 objective): prefer
+/// already-used GPUs, rank by predicted throughput, consolidate.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MinGpus;
+
+impl Objective for MinGpus {
+    fn name(&self) -> &'static str {
+        "min-gpus"
+    }
+
+    fn cost(&self, c: &Candidate) -> (f64, f64) {
+        // Fresh GPUs only when no used GPU is feasible; then best
+        // predicted throughput.
+        (if c.used { 0.0 } else { 1.0 }, -c.throughput_tok_s)
+    }
+
+    fn keeps(
+        &self,
+        prev: &Candidate,
+        best: &Candidate,
+        adapter: &AdapterSpec,
+        params: &ReplanParams,
+    ) -> bool {
+        let (t_prev, t_best) = (prev.throughput_tok_s, best.throughput_tok_s);
+        // Stay within the throughput slack, or when the migration would
+        // not amortize within one epoch under the fig6 load-time model.
+        t_prev >= (1.0 - params.slack) * t_best
+            || (t_best - t_prev) * params.epoch_s
+                <= params.cost.load_s(adapter.rank) * t_best.max(0.0)
+    }
+
+    fn consolidates(&self) -> bool {
+        true
+    }
+}
+
+/// Minimize inter-token latency (the paper's §8.4.4 ProposedLat goal):
+/// spread adapters onto the least-loaded GPU, never consolidate.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MinLatency;
+
+impl Objective for MinLatency {
+    fn name(&self) -> &'static str {
+        "min-latency"
+    }
+
+    fn cost(&self, c: &Candidate) -> (f64, f64) {
+        // Least aggregated load first; break ties by predicted throughput.
+        (c.load_req_s, -c.throughput_tok_s)
+    }
+
+    fn keeps(
+        &self,
+        prev: &Candidate,
+        best: &Candidate,
+        _adapter: &AdapterSpec,
+        params: &ReplanParams,
+    ) -> bool {
+        // Stay while the previous GPU's load is within the slack of the
+        // least-loaded feasible candidate — rebalancing migrations below
+        // that threshold buy latency the ITL model cannot resolve.
+        prev.load_req_s <= best.load_req_s * (1.0 + params.slack) + f64::EPSILON
+    }
+
+    fn consolidates(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(gpu: usize, used: bool, thr: f64, load: f64) -> Candidate {
+        Candidate { gpu, used, a_max: 8, throughput_tok_s: thr, load_req_s: load }
+    }
+
+    #[test]
+    fn min_gpus_prefers_used_gpus_then_throughput() {
+        let obj = MinGpus;
+        let fresh = cand(0, false, 900.0, 0.1);
+        let used_low = cand(1, true, 500.0, 2.0);
+        let used_high = cand(2, true, 700.0, 2.5);
+        assert!(better_than(&obj, &used_low, &fresh));
+        assert!(better_than(&obj, &used_high, &used_low));
+    }
+
+    #[test]
+    fn min_latency_prefers_least_loaded() {
+        let obj = MinLatency;
+        let light = cand(0, true, 400.0, 0.5);
+        let heavy = cand(1, true, 900.0, 2.0);
+        let fresh = cand(2, false, 400.0, 0.1);
+        assert!(better_than(&obj, &light, &heavy));
+        // An empty GPU is the least-loaded candidate of all.
+        assert!(better_than(&obj, &fresh, &light));
+    }
+
+    #[test]
+    fn sticky_rules_differ_by_objective() {
+        let params = ReplanParams::default(); // slack 0.05
+        let a = AdapterSpec { id: 0, rank: 8, rate: 0.1 };
+        let prev = cand(0, true, 960.0, 2.0);
+        let best = cand(1, true, 1000.0, 1.0);
+        // 4% throughput gap: within MinGpus slack.
+        assert!(MinGpus.keeps(&prev, &best, &a, &params));
+        // 2x load gap: far outside MinLatency slack.
+        assert!(!MinLatency.keeps(&prev, &best, &a, &params));
+        // Equal loads: MinLatency stays put.
+        let best_eq = cand(1, true, 1000.0, 2.0);
+        assert!(MinLatency.keeps(&prev, &best_eq, &a, &params));
+    }
+
+    #[test]
+    fn plan_dispatches_by_shape() {
+        use crate::placement::estimator::{Estimate, OracleEstimator};
+        // An always-feasible estimator isolates the packing-vs-spreading
+        // shape from any model behaviour.
+        let est = OracleEstimator::with_fallback(Estimate {
+            throughput_tok_s: 100.0,
+            starved: false,
+            memory_error: false,
+        });
+        let ads: Vec<AdapterSpec> =
+            (0..16).map(|id| AdapterSpec { id, rank: 8, rate: 0.05 }).collect();
+        let packed = plan(&ads, 4, &est, &MinGpus).unwrap();
+        let spread = plan(&ads, 4, &est, &MinLatency).unwrap();
+        assert_eq!(packed.gpus_used(), 1, "MinGpus packs a feasible workload");
+        assert_eq!(spread.gpus_used(), 4, "MinLatency spreads over every GPU");
+    }
+}

@@ -1,33 +1,36 @@
-//! Migration-aware incremental re-placement (DESIGN.md §7).
+//! Migration-aware incremental re-placement (DESIGN.md §7), generic over
+//! both placement seams ([`PerfEstimator`], [`Objective`]).
 //!
-//! [`replan`] re-runs the caching greedy's ML-probe machinery (Alg. 1/2)
+//! [`replan`] re-runs the caching greedy's probe machinery (Alg. 1/2)
 //! for the *next* epoch of a drifting workload, starting from the previous
 //! epoch's [`Placement`] instead of from scratch:
 //!
 //! 1. **sticky grouping** — every adapter that survived the epoch boundary
 //!    stays provisionally on its current GPU;
 //! 2. **per-GPU repair** — each group is probed at the testing points; while
-//!    starvation is predicted, the lowest-priority adapter is evicted back
-//!    into the pending pool;
+//!    every point is predicted infeasible, the lowest-priority adapter is
+//!    evicted back into the pending pool;
 //! 3. **sticky packing** — pending adapters (newcomers + evictions) are
-//!    placed in priority order.  An adapter keeps its previous GPU when
-//!    that GPU is feasible and its predicted throughput is within
-//!    [`ReplanParams::slack`] of the best candidate, or when the migration
-//!    would not amortize within one epoch under the [`MigrationCost`]
-//!    model (the fig6 adapter load-time profile); otherwise it moves to the
-//!    best already-used feasible GPU, opening a fresh GPU only as a last
-//!    resort;
-//! 4. **drain** — the smallest surviving group is migrated onto the other
-//!    used GPUs when every member fits, freeing whole GPUs as demand
-//!    recedes.
+//!    placed in priority order.  Each GPU yields a scored
+//!    [`Candidate`]; the [`Objective`] ranks the feasible ones
+//!    ([`Objective::cost`]) and decides whether the adapter keeps its
+//!    feasible previous GPU ([`Objective::keeps`], weighing
+//!    [`ReplanParams::slack`] and the [`MigrationCost`] amortization —
+//!    the fig6 adapter load-time profile) or migrates to the best
+//!    candidate;
+//! 4. **drain** — for consolidating objectives
+//!    ([`Objective::consolidates`]), the smallest surviving group is
+//!    migrated onto the other used GPUs when every member fits, freeing
+//!    whole GPUs as demand recedes.  Spreading objectives skip this pass.
 //!
 //! Migrations and their modeled cost are reported relative to the previous
 //! placement, so the epoch runner ([`crate::cluster::epochs`]) can account
 //! for them in the horizon aggregate.
 
+use super::estimator::PerfEstimator;
+use super::objective::{better_than, Candidate, Objective};
 use super::{greedy, Placement, PlacementError, TESTING_POINTS};
 use crate::dt::Calibration;
-use crate::ml::{features, MlModels};
 use crate::workload::AdapterSpec;
 use std::collections::HashSet;
 
@@ -125,42 +128,48 @@ pub struct ReplanOutcome {
     pub removed: usize,
 }
 
-/// Best non-starving `A_max` testing point for an adapter group:
+/// Best feasible `A_max` testing point for an adapter group:
 /// `(a_max, predicted_throughput)`, or `None` when every testing point
-/// predicts starvation (the group cannot be served by one GPU).
-fn probe(group: &[AdapterSpec], models: &MlModels) -> Option<(usize, f64)> {
+/// predicts starvation or a memory error (the group cannot be served by
+/// one GPU).
+fn probe(group: &[AdapterSpec], est: &dyn PerfEstimator) -> Option<(usize, f64)> {
     let mut best: Option<(usize, f64)> = None;
     for &p in TESTING_POINTS.iter() {
-        let x = features(group, p);
-        if models.predict_starvation(&x) {
+        let e = est.estimate(group, p);
+        if !e.feasible() {
             continue;
         }
-        let t = models.predict_throughput(&x);
         let better = match best {
             None => true,
-            Some((_, bt)) => t > bt,
+            Some((_, bt)) => e.throughput_tok_s > bt,
         };
         if better {
-            best = Some((p, t));
+            best = Some((p, e.throughput_tok_s));
         }
     }
     best
 }
 
 /// Incrementally re-place `adapters` on `gpus` GPUs starting from `prev`
-/// (pass `None` for a cold start, which reduces to [`greedy::place`]).
+/// (pass `None` for a cold start, which reduces to the objective's
+/// one-shot planner — [`greedy::place`] for
+/// [`crate::placement::MinGpus`]).
 ///
-/// Fails with [`PlacementError::Starvation`] when some pending adapter fits
-/// on no GPU under the starvation model — the same criterion as Alg. 1.
+/// Generic over both seams: `est` answers the feasibility/throughput
+/// probes, `objective` ranks candidates, decides stickiness and gates the
+/// drain pass.  Fails with [`PlacementError::Starvation`] when some
+/// pending adapter fits on no GPU under the estimator — the same
+/// criterion as Alg. 1.
 pub fn replan(
     prev: Option<&Placement>,
     adapters: &[AdapterSpec],
     gpus: usize,
-    models: &MlModels,
+    est: &dyn PerfEstimator,
     params: &ReplanParams,
+    objective: &dyn Objective,
 ) -> Result<ReplanOutcome, PlacementError> {
     let Some(prev) = prev else {
-        let placement = greedy::place(adapters, gpus, models)?;
+        let placement = objective.plan(adapters, gpus, est)?;
         return Ok(ReplanOutcome {
             placement,
             migrations: 0,
@@ -185,7 +194,7 @@ pub fn replan(
     }
 
     // 2. Per-GPU repair: evict lowest-priority adapters while the group
-    //    starves at every testing point.
+    //    is predicted infeasible at every testing point.
     let mut a_max = vec![0usize; gpus];
     for g in 0..gpus {
         if groups[g].is_empty() {
@@ -193,7 +202,7 @@ pub fn replan(
         }
         groups[g] = greedy::priority_sorting(&groups[g]);
         loop {
-            match probe(&groups[g], models) {
+            match probe(&groups[g], est) {
                 Some((p, _)) => {
                     a_max[g] = p;
                     break;
@@ -210,70 +219,57 @@ pub fn replan(
         }
     }
 
-    // 3. Sticky packing of pending adapters in priority order.
+    // 3. Sticky packing of pending adapters in priority order, scored by
+    //    the objective.
     for a in greedy::priority_sorting(&pending) {
         // All empty GPUs are identical candidates: probe one representative.
-        let empty_eval = probe(std::slice::from_ref(&a), models);
-        let mut evals: Vec<Option<(usize, f64)>> = Vec::with_capacity(gpus);
+        let empty_eval = probe(std::slice::from_ref(&a), est);
+        let mut cands: Vec<Option<Candidate>> = Vec::with_capacity(gpus);
         for g in 0..gpus {
-            if groups[g].is_empty() {
-                evals.push(empty_eval);
-                continue;
-            }
-            let mut cand = groups[g].clone();
-            cand.push(a.clone());
-            evals.push(probe(&cand, models));
+            let (eval, load, used) = if groups[g].is_empty() {
+                (empty_eval, a.rate, false)
+            } else {
+                let mut cand = groups[g].clone();
+                cand.push(a.clone());
+                let load = cand.iter().map(|x| x.rate).sum::<f64>();
+                (probe(&cand, est), load, true)
+            };
+            cands.push(eval.map(|(p, t)| Candidate {
+                gpu: g,
+                used,
+                a_max: p,
+                throughput_tok_s: t,
+                load_req_s: load,
+            }));
         }
-        let t_best =
-            evals.iter().flatten().map(|&(_, t)| t).fold(f64::NEG_INFINITY, f64::max);
-        if t_best == f64::NEG_INFINITY {
+        let mut best: Option<Candidate> = None;
+        for c in cands.iter().flatten() {
+            let is_better = match &best {
+                None => true,
+                Some(b) => better_than(objective, c, b),
+            };
+            if is_better {
+                best = Some(*c);
+            }
+        }
+        let Some(best) = best else {
             return Err(PlacementError::Starvation);
-        }
-        let prev_gpu = prev.assignment.get(&a.id).copied().filter(|&g| g < gpus);
-        let sticky = prev_gpu.and_then(|g| evals[g].map(|e| (g, e)));
-        let chosen = match sticky {
-            Some((g, (_, t_prev)))
-                if t_prev >= (1.0 - params.slack) * t_best
-                    || (t_best - t_prev) * params.epoch_s
-                        <= params.cost.load_s(a.rank) * t_best.max(0.0) =>
-            {
-                g
-            }
-            _ => {
-                // Migrate: best already-used feasible GPU, else the first
-                // fresh one (GPU-count minimization).
-                let mut best_used: Option<(usize, f64)> = None;
-                for g in 0..gpus {
-                    if groups[g].is_empty() {
-                        continue;
-                    }
-                    if let Some((_, t)) = evals[g] {
-                        let better = match best_used {
-                            None => true,
-                            Some((_, bt)) => t > bt,
-                        };
-                        if better {
-                            best_used = Some((g, t));
-                        }
-                    }
-                }
-                match best_used {
-                    Some((g, _)) => g,
-                    None => (0..gpus)
-                        .find(|&g| groups[g].is_empty() && evals[g].is_some())
-                        .ok_or(PlacementError::Starvation)?,
-                }
-            }
         };
-        a_max[chosen] = evals[chosen].expect("chosen GPU is feasible").0;
-        groups[chosen].push(a);
+        let prev_cand =
+            prev.assignment.get(&a.id).copied().filter(|&g| g < gpus).and_then(|g| cands[g]);
+        let chosen = match prev_cand {
+            Some(pc) if objective.keeps(&pc, &best, &a, params) => pc,
+            _ => best,
+        };
+        a_max[chosen.gpu] = chosen.a_max;
+        groups[chosen.gpu].push(a);
     }
 
-    // 4. Drain: try to empty the smallest surviving group onto the other
-    //    used GPUs, bounded by one epoch of *cumulative* migration time
-    //    across all drains of this replan step.
+    // 4. Drain (consolidating objectives only): try to empty the smallest
+    //    surviving group onto the other used GPUs, bounded by one epoch of
+    //    *cumulative* migration time across all drains of this replan step.
     let mut total_drain_cost = 0.0f64;
-    loop {
+    while objective.consolidates() {
         let Some(src) = (0..gpus)
             .filter(|&g| !groups[g].is_empty())
             .min_by_key(|&g| groups[g].len())
@@ -296,7 +292,7 @@ pub fn replan(
             for &g in &targets {
                 let mut cand = tentative[g].clone();
                 cand.push(a.clone());
-                if let Some((p, t)) = probe(&cand, models) {
+                if let Some((p, t)) = probe(&cand, est) {
                     let better = match best {
                         None => true,
                         Some((_, _, bt)) => t > bt,
@@ -363,6 +359,8 @@ pub fn replan(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ml::MlModels;
+    use crate::placement::{latency, MinGpus, MinLatency};
 
     /// Shared analytic stand-in models (see `placement::test_models`).
     fn fake_models() -> MlModels {
@@ -377,7 +375,7 @@ mod tests {
     fn cold_start_matches_greedy() {
         let models = fake_models();
         let ads = adapters(16, 0.1);
-        let out = replan(None, &ads, 4, &models, &ReplanParams::default()).unwrap();
+        let out = replan(None, &ads, 4, &models, &ReplanParams::default(), &MinGpus).unwrap();
         let fresh = greedy::place(&ads, 4, &models).unwrap();
         assert_eq!(out.placement, fresh);
         assert_eq!(out.migrations, 0);
@@ -389,7 +387,7 @@ mod tests {
         let models = fake_models();
         let ads = adapters(32, 0.1);
         let p0 = greedy::place(&ads, 4, &models).unwrap();
-        let out = replan(Some(&p0), &ads, 4, &models, &ReplanParams::default()).unwrap();
+        let out = replan(Some(&p0), &ads, 4, &models, &ReplanParams::default(), &MinGpus).unwrap();
         assert_eq!(out.migrations, 0, "stable workload must not migrate");
         assert_eq!(out.stayed, 32);
         assert_eq!(out.migration_cost_s, 0.0);
@@ -404,7 +402,8 @@ mod tests {
         let ads = adapters(32, 0.1);
         let p0 = greedy::place(&ads, 4, &models).unwrap();
         let survivors: Vec<AdapterSpec> = ads.iter().take(16).cloned().collect();
-        let out = replan(Some(&p0), &survivors, 4, &models, &ReplanParams::default()).unwrap();
+        let out =
+            replan(Some(&p0), &survivors, 4, &models, &ReplanParams::default(), &MinGpus).unwrap();
         assert_eq!(out.removed, 16);
         assert_eq!(out.placement.assignment.len(), 16);
         assert!(out.placement.gpus_used() <= p0.gpus_used());
@@ -420,7 +419,7 @@ mod tests {
         // Rates sextuple: demand 48×0.3×96 ≈ 1382 > capacity at every
         // A_max, so the repair phase must evict and spill to a second GPU.
         let high = adapters(48, 0.3);
-        let out = replan(Some(&p0), &high, 4, &models, &ReplanParams::default()).unwrap();
+        let out = replan(Some(&p0), &high, 4, &models, &ReplanParams::default(), &MinGpus).unwrap();
         assert!(out.placement.gpus_used() >= 2, "gpus={}", out.placement.gpus_used());
         assert!(out.migrations > 0, "overload must migrate someone");
         assert!(out.migration_cost_s > 0.0);
@@ -432,7 +431,8 @@ mod tests {
         let models = fake_models();
         let p0 = greedy::place(&adapters(8, 0.1), 4, &models).unwrap();
         let impossible = adapters(384, 1.0);
-        let err = replan(Some(&p0), &impossible, 4, &models, &ReplanParams::default()).unwrap_err();
+        let err = replan(Some(&p0), &impossible, 4, &models, &ReplanParams::default(), &MinGpus)
+            .unwrap_err();
         assert_eq!(err, PlacementError::Starvation);
     }
 
@@ -441,12 +441,61 @@ mod tests {
         let models = fake_models();
         let ads = adapters(64, 0.1);
         let p0 = greedy::place(&adapters(16, 0.1), 4, &models).unwrap();
-        let out = replan(Some(&p0), &ads, 4, &models, &ReplanParams::default()).unwrap();
+        let out = replan(Some(&p0), &ads, 4, &models, &ReplanParams::default(), &MinGpus).unwrap();
         for g in 0..4 {
             if !out.placement.adapters_on(g).is_empty() {
                 assert!(TESTING_POINTS.contains(&out.placement.a_max[g]));
             }
         }
+    }
+
+    #[test]
+    fn min_latency_replan_skips_drain_and_stays_spread() {
+        use crate::placement::estimator::{Estimate, OracleEstimator};
+        // An always-feasible estimator isolates the objective's shape from
+        // any model behaviour.
+        let est = OracleEstimator::with_fallback(Estimate {
+            throughput_tok_s: 500.0,
+            starved: false,
+            memory_error: false,
+        });
+        let ads = adapters(16, 0.1);
+        let p0 = latency::place(&ads, 4, &est).unwrap();
+        assert_eq!(p0.gpus_used(), 4);
+        // Half the adapters retire; the survivors sit on two GPUs.
+        let survivors: Vec<AdapterSpec> = ads.iter().filter(|a| a.id % 2 == 0).cloned().collect();
+        let lat = replan(Some(&p0), &survivors, 4, &est, &ReplanParams::default(), &MinLatency)
+            .unwrap();
+        assert_eq!(lat.migrations, 0, "MinLatency must not consolidate survivors");
+        assert_eq!(lat.stayed, survivors.len());
+        for a in &survivors {
+            assert_eq!(lat.placement.assignment[&a.id], p0.assignment[&a.id]);
+        }
+        // The consolidating objective drains the same survivors together.
+        let packed = replan(Some(&p0), &survivors, 4, &est, &ReplanParams::default(), &MinGpus)
+            .unwrap();
+        assert!(
+            packed.placement.gpus_used() < lat.placement.gpus_used(),
+            "MinGpus drain must shed GPUs: {} !< {}",
+            packed.placement.gpus_used(),
+            lat.placement.gpus_used()
+        );
+        assert!(packed.migrations > 0);
+    }
+
+    #[test]
+    fn min_latency_cold_start_spreads_like_proposed_lat() {
+        use crate::placement::estimator::{Estimate, OracleEstimator};
+        let est = OracleEstimator::with_fallback(Estimate {
+            throughput_tok_s: 500.0,
+            starved: false,
+            memory_error: false,
+        });
+        let ads = adapters(12, 0.2);
+        let out = replan(None, &ads, 4, &est, &ReplanParams::default(), &MinLatency).unwrap();
+        let fresh = latency::place(&ads, 4, &est).unwrap();
+        assert_eq!(out.placement, fresh);
+        assert_eq!(out.placement.gpus_used(), 4);
     }
 
     #[test]

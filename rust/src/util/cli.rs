@@ -1,7 +1,10 @@
 //! Tiny command-line argument parser (clap is unavailable offline).
 //!
-//! Supports `--flag`, `--key value`, positional args and subcommands with
-//! auto-generated usage text.
+//! Supports `--flag` (for names listed in `flag_names`), `--key value`,
+//! `--key=value`, positional args and subcommands.  `--key=value` is the
+//! documented escape for values that themselves start with `--`; a bare
+//! `--name` that is not a registered flag is an error rather than a
+//! silently-ignored option.
 
 use std::collections::BTreeMap;
 
@@ -18,7 +21,16 @@ pub struct Args {
 
 impl Args {
     /// Parse raw args.  `flag_names` lists options that take no value.
-    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Args {
+    ///
+    /// Errors on a bare `--name` that is not in `flag_names` — either the
+    /// option is missing its value (if the next token starts with `--`,
+    /// write `--name=VALUE`) or the flag is unknown.  This turns the
+    /// historical silent misparse of `--key --value-looking-like-flag`
+    /// (two bogus flags) into a diagnostic.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        flag_names: &[&str],
+    ) -> anyhow::Result<Args> {
         let mut out = Args::default();
         let mut it = raw.into_iter().peekable();
         while let Some(a) = it.next() {
@@ -27,20 +39,23 @@ impl Args {
                     out.options.insert(k.to_string(), v.to_string());
                 } else if flag_names.contains(&name) {
                     out.flags.push(name.to_string());
-                } else if let Some(v) = it.peek() {
-                    if v.starts_with("--") {
-                        out.flags.push(name.to_string());
-                    } else {
-                        out.options.insert(name.to_string(), it.next().unwrap());
-                    }
                 } else {
-                    out.flags.push(name.to_string());
+                    match it.peek() {
+                        Some(v) if !v.starts_with("--") => {
+                            out.options.insert(name.to_string(), it.next().unwrap());
+                        }
+                        _ => anyhow::bail!(
+                            "--{name} is not a flag and has no value; pass --{name} VALUE \
+                             (or --{name}=VALUE if the value starts with '--'). Known flags: \
+                             {flag_names:?}"
+                        ),
+                    }
                 }
             } else {
                 out.positional.push(a);
             }
         }
-        out
+        Ok(out)
     }
 
     /// Whether `--name` was passed as a flag.
@@ -89,13 +104,13 @@ impl Args {
 mod tests {
     use super::*;
 
-    fn parse(s: &str, flags: &[&str]) -> Args {
+    fn parse(s: &str, flags: &[&str]) -> anyhow::Result<Args> {
         Args::parse(s.split_whitespace().map(String::from), flags)
     }
 
     #[test]
     fn positional_and_options() {
-        let a = parse("experiment fig11 --scale quick --gpus 4", &[]);
+        let a = parse("experiment fig11 --scale quick --gpus 4", &[]).unwrap();
         assert_eq!(a.positional, vec!["experiment", "fig11"]);
         assert_eq!(a.get("scale"), Some("quick"));
         assert_eq!(a.usize_or("gpus", 1).unwrap(), 4);
@@ -103,28 +118,52 @@ mod tests {
 
     #[test]
     fn flags_and_eq_syntax() {
-        let a = parse("--verbose --out=x.json --n 3", &["verbose"]);
+        let a = parse("--verbose --out=x.json --n 3", &["verbose"]).unwrap();
         assert!(a.flag("verbose"));
         assert_eq!(a.get("out"), Some("x.json"));
         assert_eq!(a.usize_or("n", 0).unwrap(), 3);
     }
 
     #[test]
-    fn trailing_flag_without_value() {
-        let a = parse("--check", &[]);
+    fn registered_trailing_flag_parses() {
+        let a = parse("--check", &["check"]).unwrap();
         assert!(a.flag("check"));
     }
 
     #[test]
-    fn flag_followed_by_option() {
-        let a = parse("--fast --out x", &[]);
+    fn unknown_bare_flag_is_rejected() {
+        // Historically this parsed as a silent flag; now it is an error.
+        let err = parse("--check", &[]).unwrap_err();
+        assert!(err.to_string().contains("--check"), "{err}");
+    }
+
+    #[test]
+    fn option_followed_by_flag_like_value_is_rejected() {
+        // `--out --weird` used to misparse into TWO flags; now it errors
+        // and points at the `--out=VALUE` escape.
+        let err = parse("--out --weird", &[]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--out"), "{msg}");
+        assert!(msg.contains("--out=VALUE"), "{msg}");
+    }
+
+    #[test]
+    fn eq_syntax_escapes_flag_like_values() {
+        let a = parse("--out=--weird --n 3", &[]).unwrap();
+        assert_eq!(a.get("out"), Some("--weird"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn registered_flag_followed_by_option() {
+        let a = parse("--fast --out x", &["fast"]).unwrap();
         assert!(a.flag("fast"));
         assert_eq!(a.get("out"), Some("x"));
     }
 
     #[test]
     fn bad_number_errors() {
-        let a = parse("--n abc", &[]);
+        let a = parse("--n abc", &[]).unwrap();
         assert!(a.usize_or("n", 0).is_err());
     }
 }

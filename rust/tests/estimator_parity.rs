@@ -1,0 +1,105 @@
+//! Estimator parity (the DESIGN.md §8 seam contract): on fixture
+//! workloads with clear-cut verdicts, the ML estimator trained on
+//! twin-generated data must agree with the Digital Twin queried directly
+//! on feasibility (starvation and memory-error verdicts), and the
+//! recorded oracle must replay the twin's throughput bit-for-bit.
+
+use adapter_serving::config::EngineConfig;
+use adapter_serving::dt::Calibration;
+use adapter_serving::ml::{self, dataset::GridSpec};
+use adapter_serving::placement::{
+    plan, MinGpus, MlEstimator, OracleEstimator, PerfEstimator, TwinEstimator,
+};
+use adapter_serving::workload::{AdapterSpec, WorkloadSpec};
+
+fn small_grid() -> GridSpec {
+    GridSpec {
+        sizes: vec![8, 16, 32],
+        rates: vec![0.8, 0.2, 0.05, 0.0125],
+        adapter_counts: vec![8, 16, 32, 64, 96, 128],
+        a_max_values: vec![8, 16, 32, 64, 96, 128],
+        horizon_s: 10.0,
+        max_scenarios: 400,
+        seed: 99,
+    }
+}
+
+fn ml_estimator() -> MlEstimator {
+    let calib = Calibration::default();
+    let samples = ml::dataset::generate(&calib, &EngineConfig::default(), &small_grid(), 4);
+    let rf = ml::ModelType::RandomForest;
+    let (thr, _) = ml::train(&samples, ml::Task::Throughput, rf, true, 3);
+    let (st, _) = ml::train(&samples, ml::Task::Starvation, rf, true, 3);
+    MlEstimator::new(ml::MlModels { throughput: thr, starvation: st, scaler: None })
+}
+
+fn twin_estimator() -> TwinEstimator {
+    TwinEstimator::new(Calibration::default(), EngineConfig::default()).with_horizon(10.0)
+}
+
+/// Fixture groups with clear-cut verdicts: `(group, a_max, feasible)`.
+///
+/// The cases sit far from the feasibility boundary (≈4x under / ≈35x
+/// over the single-GPU ceiling, and a static reservation 2x over the
+/// memory budget) so the learned verdict is not a coin flip.
+fn fixtures() -> Vec<(Vec<AdapterSpec>, usize, bool)> {
+    // Comfortably light: ~300 tok/s incoming vs ~1k tok/s capacity.
+    let light = WorkloadSpec::heterogeneous(16, &[8, 16], &[0.05, 0.025], 7);
+    // Hugely starved: ~77 req/s of demand on one GPU (rank 8 keeps the
+    // static reservation healthy, so this is pure starvation).
+    let heavy = WorkloadSpec::heterogeneous(128, &[8], &[0.8, 0.4], 23);
+    // Memory error: 128 slots x rank 32 x 4 tok = 16384 > the 8192-token
+    // GPU; the twin flags memory_error, the ML labels fold it into the
+    // starvation verdict — both must call it infeasible.
+    let oom: Vec<AdapterSpec> =
+        (0..128).map(|id| AdapterSpec { id, rank: 32, rate: 0.05 }).collect();
+    vec![(light, 16, true), (heavy, 96, false), (oom, 128, false)]
+}
+
+#[test]
+fn ml_and_twin_agree_on_feasibility_verdicts() {
+    let ml_est = ml_estimator();
+    let twin = twin_estimator();
+    for (i, (group, a_max, expect_feasible)) in fixtures().into_iter().enumerate() {
+        let t = twin.estimate(&group, a_max);
+        let m = ml_est.estimate(&group, a_max);
+        assert_eq!(t.feasible(), expect_feasible, "fixture {i}: unexpected twin verdict {t:?}");
+        assert_eq!(
+            m.feasible(),
+            t.feasible(),
+            "fixture {i}: ml and twin disagree on feasibility (ml {m:?} vs twin {t:?})"
+        );
+    }
+}
+
+#[test]
+fn oracle_replays_recorded_twin_estimates_exactly() {
+    let twin = twin_estimator();
+    let mut oracle = OracleEstimator::new();
+    for (group, a_max, _) in fixtures() {
+        oracle.record_from(&twin, &group, a_max);
+    }
+    for (i, (group, a_max, _)) in fixtures().into_iter().enumerate() {
+        let t = twin.estimate(&group, a_max);
+        let o = oracle.estimate(&group, a_max);
+        assert_eq!(
+            o.throughput_tok_s.to_bits(),
+            t.throughput_tok_s.to_bits(),
+            "fixture {i}: oracle must reproduce the twin throughput bit-for-bit"
+        );
+        assert_eq!(o.starved, t.starved, "fixture {i}");
+        assert_eq!(o.memory_error, t.memory_error, "fixture {i}");
+    }
+}
+
+#[test]
+fn greedy_places_through_the_twin_estimator_directly() {
+    // The DT-in-the-loop ablation: skip the ML stage entirely and let
+    // Alg. 1 probe the twin (ms per probe instead of µs, no learning
+    // error).
+    let twin = twin_estimator().with_horizon(5.0);
+    let adapters = WorkloadSpec::heterogeneous(16, &[8], &[0.05, 0.025], 9);
+    let p = plan(&adapters, 4, &twin, &MinGpus).expect("light workload feasible via the DT");
+    assert_eq!(p.assignment.len(), 16);
+    assert!(p.gpus_used() >= 1);
+}
