@@ -86,8 +86,10 @@ fn main() -> anyhow::Result<()> {
 
     println!("[6/6] validating on the real serving engine (per-GPU parallel) ...");
     let base = EngineConfig { model: model.to_string(), ..Default::default() };
-    let make = || ctx.load_runtime(model);
-    let rep = cluster::run_on_engine(&make, &base, &planned.placement, &spec)?;
+    // One pool serves the Proposed run and both baselines: backends are
+    // constructed once per concurrent GPU and reused across validations.
+    let pool = ctx.backend_pool();
+    let rep = cluster::run_on_engine(pool, &base, &planned.placement, &spec)?;
     println!(
         "      Proposed: {} GPUs, {:.0} tok/s, itl {:.2} ms, feasible={}",
         rep.gpus_used,
@@ -99,7 +101,7 @@ fn main() -> anyhow::Result<()> {
     // Baselines for contrast.
     let tpr = 385.0;
     if let Ok(p) = baselines::max_base(&adapters, 4, 1200.0, tpr, false) {
-        let r = cluster::run_on_engine(&make, &base, &p, &spec)?;
+        let r = cluster::run_on_engine(pool, &base, &p, &spec)?;
         println!(
             "      MaxBase : {} GPUs, {:.0} tok/s, feasible={}",
             r.gpus_used,
@@ -108,7 +110,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
     if let Ok(p) = baselines::random(&adapters, 4, 5) {
-        let r = cluster::run_on_engine(&make, &base, &p, &spec)?;
+        let r = cluster::run_on_engine(pool, &base, &p, &spec)?;
         println!(
             "      Random  : {} GPUs, {:.0} tok/s, feasible={}",
             r.gpus_used,

@@ -42,9 +42,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     let base = EngineConfig { model: model.to_string(), ..Default::default() };
-    println!("serving (real engine per GPU, one backend each, in parallel) ...");
-    let make = || ctx.load_runtime(model);
-    let rep = cluster::run_on_engine(&make, &base, &placement, &spec)?;
+    println!("serving (real engine per GPU, backends from the shared pool, in parallel) ...");
+    let rep = cluster::run_on_engine(ctx.backend_pool(), &base, &placement, &spec)?;
     for (g, r) in rep.per_gpu.iter().enumerate() {
         if let Some(r) = r {
             println!("  gpu{g}: {}", r.summary());

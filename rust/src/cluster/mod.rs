@@ -8,6 +8,10 @@
 //! over [`parallel_map`]: each GPU gets its own backend instance (engine
 //! path) or its own twin simulation, with the same deterministic per-GPU
 //! seeds and the same `per_gpu` report ordering as a serial sweep.
+//! Engine-path backends are checked out of a model-keyed
+//! [`BackendPool`], so repeated validations (and the epoch runner's
+//! per-epoch serving) reuse loaded model state instead of constructing
+//! one backend per GPU per call.
 //!
 //! [`epochs`] lifts these one-shot runners into a rolling-horizon control
 //! loop that replans placements as the workload drifts (DESIGN.md §7).
@@ -19,7 +23,7 @@ use crate::dt::{Calibration, LengthVariant};
 use crate::engine::metrics::Report;
 use crate::engine::Engine;
 use crate::placement::Placement;
-use crate::runtime::Backend;
+use crate::runtime::BackendPool;
 use crate::util::threadpool::{default_workers, parallel_map};
 use crate::workload::WorkloadSpec;
 use anyhow::Result;
@@ -49,6 +53,12 @@ impl ClusterReport {
     /// Neither starved nor out of memory — the paper's feasibility test.
     pub fn feasible(&self) -> bool {
         !self.memory_error && !self.starved
+    }
+
+    /// Requests completed across all GPUs — the weight of this run's
+    /// latency means in horizon-level aggregates.
+    pub fn completed_requests(&self) -> usize {
+        self.per_gpu.iter().flatten().map(|r| r.completed).sum()
     }
 
     fn aggregate(per_gpu: Vec<Option<Report>>, wall_s: f64, gpus_used: usize) -> ClusterReport {
@@ -110,14 +120,16 @@ fn gpu_jobs(placement: &Placement) -> Vec<(usize, Vec<usize>)> {
 /// Validate a placement on the real engine (the paper's methodology: "the
 /// pipeline output is validated by executing the real LLM-adapter serving
 /// system").  Per-GPU engines are independent, so the runs execute in
-/// parallel; `make_backend` is called once per GPU *inside* its worker
-/// thread (backends need not be `Send` — PJRT handles are not).
+/// parallel; each worker checks a backend for `base.model` out of `pool`
+/// and returns it when its GPU finishes, so one pool serves any number of
+/// validations (and epoch horizons) with at most
+/// max-concurrent-GPUs constructions.
 ///
 /// ```no_run
 /// use adapter_serving::cluster::run_on_engine;
 /// use adapter_serving::config::EngineConfig;
 /// use adapter_serving::placement::Placement;
-/// use adapter_serving::runtime::{load_backend, Manifest};
+/// use adapter_serving::runtime::{BackendPool, Manifest};
 /// use adapter_serving::workload::WorkloadSpec;
 /// # fn main() -> anyhow::Result<()> {
 /// let spec = WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(4, 8, 0.2), 5.0, 3);
@@ -125,46 +137,40 @@ fn gpu_jobs(placement: &Placement) -> Vec<(usize, Vec<usize>)> {
 /// for a in &spec.adapters {
 ///     p.assignment.insert(a.id, 0);
 /// }
-/// let make = || load_backend(&Manifest::default_dir(), "pico-llama");
-/// let rep = run_on_engine(&make, &EngineConfig::default(), &p, &spec)?;
+/// let pool = BackendPool::new(Manifest::default_dir());
+/// let rep = run_on_engine(&pool, &EngineConfig::default(), &p, &spec)?;
 /// println!("served {:.0} tok/s on {} GPU(s)", rep.total_throughput_tok_s, rep.gpus_used);
 /// # Ok(())
 /// # }
 /// ```
-pub fn run_on_engine<F>(
-    make_backend: &F,
+pub fn run_on_engine(
+    pool: &BackendPool,
     base: &EngineConfig,
     placement: &Placement,
     spec: &WorkloadSpec,
-) -> Result<ClusterReport>
-where
-    F: Fn() -> Result<Box<dyn Backend>> + Sync,
-{
-    run_on_engine_with_workers(make_backend, base, placement, spec, default_workers())
+) -> Result<ClusterReport> {
+    run_on_engine_with_workers(pool, base, placement, spec, default_workers())
 }
 
 /// [`run_on_engine`] with an explicit worker count.  `1` recovers the
 /// serial measurement path: engine latencies are *measured* wall time, so
 /// concurrent runs time-share cores and inflate each other's measurements;
 /// use serial when validation metrics must match a dedicated-GPU run.
-pub fn run_on_engine_with_workers<F>(
-    make_backend: &F,
+pub fn run_on_engine_with_workers(
+    pool: &BackendPool,
     base: &EngineConfig,
     placement: &Placement,
     spec: &WorkloadSpec,
     workers: usize,
-) -> Result<ClusterReport>
-where
-    F: Fn() -> Result<Box<dyn Backend>> + Sync,
-{
+) -> Result<ClusterReport> {
     let t0 = std::time::Instant::now();
     let jobs = gpu_jobs(placement);
     let workers = workers.min(jobs.len().max(1));
     let results: Vec<Result<Option<Report>>> = parallel_map(jobs, workers, |(g, ids)| {
-        let mut rt = make_backend()?;
+        let mut rt = pool.checkout(&base.model)?;
         let sub = spec.subset(&ids, spec.seed ^ (g as u64) << 8);
         let cfg = gpu_config(base, placement, g, spec);
-        let mut engine = Engine::new(cfg, rt.as_mut());
+        let mut engine = Engine::new(cfg, &mut *rt);
         let res = engine.run(&sub)?;
         Ok(res.report)
     });
@@ -312,7 +318,7 @@ mod tests {
     }
 
     #[test]
-    fn engine_cluster_runs_with_reference_backend_factory() {
+    fn engine_cluster_runs_from_the_backend_pool() {
         let adapters = WorkloadSpec::homogeneous(6, 8, 0.5);
         let spec = WorkloadSpec::fixed_len(adapters.clone(), 24, 6, 2.0, 3);
         let mut placement =
@@ -321,12 +327,17 @@ mod tests {
             placement.assignment.insert(a.id, a.id % 2);
         }
         let base = EngineConfig { a_max: 3, s_max_rank: 8, ..Default::default() };
-        let missing = std::path::Path::new("/nonexistent");
-        let make = || crate::runtime::load_backend(missing, "pico-llama");
-        let rep = run_on_engine(&make, &base, &placement, &spec).expect("cluster run");
+        let pool = BackendPool::new(std::path::Path::new("/nonexistent"));
+        let rep = run_on_engine(&pool, &base, &placement, &spec).expect("cluster run");
         assert_eq!(rep.per_gpu.len(), 2);
         assert_eq!(rep.gpus_used, 2);
         assert!(!rep.memory_error);
+        assert_eq!(pool.created(), 2, "one backend per concurrent GPU");
+        // A second validation through the same pool constructs nothing.
+        let rep2 = run_on_engine(&pool, &base, &placement, &spec).expect("cluster rerun");
+        assert_eq!(rep2.gpus_used, 2);
+        assert_eq!(pool.created(), 2, "second validation reuses pooled backends");
+        assert!(pool.reused() >= 2);
     }
 
     #[test]

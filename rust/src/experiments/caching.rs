@@ -62,10 +62,9 @@ fn validate(
         Err(_) => Ok(("-".into(), "-".into(), "-".into(), "infeasible".into())),
         Ok(p) => {
             let rep = if on_engine {
-                // One backend instance per GPU, created in its worker.
-                let model = rt.meta().name.clone();
-                let make = move || ctx.load_runtime(&model);
-                cluster::run_on_engine(&make, base, p, spec)?
+                // Per-GPU backends checked out of the context's shared
+                // pool (reused across every scenario of the experiment).
+                cluster::run_on_engine(ctx.backend_pool(), base, p, spec)?
             } else {
                 let calib = ctx.calibration(&mut *rt)?;
                 cluster::run_on_twin(&calib, base, p, spec, LengthVariant::Original)

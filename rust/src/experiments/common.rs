@@ -8,16 +8,17 @@ use crate::dt::Calibration;
 use crate::engine::Engine;
 use crate::ml::{self, MlModels, Predictor, Sample};
 use crate::pipeline::Pipeline;
-use crate::placement::MlEstimator;
-use crate::runtime::{self, Backend, Manifest};
+use crate::placement::{CachedEstimator, MlEstimator};
+use crate::runtime::{self, Backend, BackendPool, Manifest};
 use crate::util::cli::Args;
 use crate::util::csv::Table;
 use crate::util::json::Json;
 use crate::workload::{AdapterSpec, WorkloadSpec};
 use anyhow::Result;
 use std::path::PathBuf;
+use std::sync::OnceLock;
 
-pub use crate::pipeline::Scale;
+pub use crate::pipeline::{EstimatorChoice, Scale};
 
 /// Shared experiment state: scale, output/artifact dirs, and the cached
 /// pipeline stages (calibration → dataset → trained models).
@@ -32,6 +33,13 @@ pub struct ExpContext {
     pub workers: usize,
     /// Backbone models the experiment iterates over.
     pub models: Vec<String>,
+    /// Which estimator backs placement in estimator-generic experiments
+    /// (`drift`): the trained ML pair (default) or the Digital Twin
+    /// directly (`--estimator twin`, probe-cached).
+    pub estimator: EstimatorChoice,
+    /// Lazily-created engine-backend pool shared by every engine-path
+    /// serving run this context drives.
+    pool: OnceLock<BackendPool>,
 }
 
 impl ExpContext {
@@ -43,7 +51,15 @@ impl ExpContext {
             artifacts: Manifest::default_dir(),
             workers: crate::util::threadpool::default_workers(),
             models: vec!["pico-llama".into(), "pico-qwen".into()],
+            estimator: EstimatorChoice::Ml,
+            pool: OnceLock::new(),
         }
+    }
+
+    /// The model-keyed backend pool the cluster runners check per-GPU
+    /// backends out of (one pool per context, created on first use).
+    pub fn backend_pool(&self) -> &BackendPool {
+        self.pool.get_or_init(|| BackendPool::new(self.artifacts.clone()))
     }
 
     /// `results/<id>/`, created on first use.
@@ -68,9 +84,10 @@ impl ExpContext {
         runtime::load_backend(&self.artifacts, model)
     }
 
-    /// A context from common CLI args: `--scale`, `--out`, `--model`
-    /// (shared by the `drift` and `experiment` subcommands).
-    pub fn from_args(args: &Args) -> ExpContext {
+    /// A context from common CLI args: `--scale`, `--out`, `--model`,
+    /// `--estimator` (shared by the `drift` and `experiment`
+    /// subcommands).
+    pub fn from_args(args: &Args) -> Result<ExpContext> {
         let mut ctx = ExpContext::new(Scale::parse(args.get_or("scale", "quick")));
         if let Some(out) = args.get("out") {
             ctx.out_dir = PathBuf::from(out);
@@ -78,7 +95,8 @@ impl ExpContext {
         if let Some(m) = args.get("model") {
             ctx.models = vec![m.to_string()];
         }
-        ctx
+        ctx.estimator = EstimatorChoice::parse(args.get_or("estimator", "ml"))?;
+        Ok(ctx)
     }
 
     // ------------------------------------------------------------------
@@ -129,6 +147,18 @@ impl ExpContext {
     /// The refined (Small Tree**) pair behind the [`MlEstimator`] seam.
     pub fn refined_estimator(&self, calib: &Calibration) -> Result<MlEstimator> {
         Ok(MlEstimator::new(self.refined_models(calib)?))
+    }
+
+    /// The DT-in-the-loop estimator, probe-cached and warm-started from
+    /// the pipeline artifact store ([`Pipeline::probe_cached_twin`]).
+    /// Returns the estimator and the store path its memos must be
+    /// persisted back to once the caller's planning passes are done
+    /// ([`CachedEstimator::save_memos`]).
+    pub fn twin_probe_estimator(
+        &self,
+        calib: &Calibration,
+    ) -> Result<(CachedEstimator, PathBuf)> {
+        self.pipeline(&calib.model).probe_cached_twin(calib)
     }
 
     /// The refined (Small Tree**) model pair for ProposedFast.

@@ -13,13 +13,14 @@
 //! GPU-epochs.  Regenerates `results/drift/drift.csv` + `summary.json`.
 
 use super::common::{
-    backbone_max_tok_s, print_table, tokens_per_request, write_csv, write_summary, ExpContext,
+    backbone_max_tok_s, print_table, tokens_per_request, write_csv, write_summary,
+    EstimatorChoice, ExpContext,
 };
 use crate::cluster::epochs::{run_epochs_on_engine, run_epochs_on_twin, DriftReport, ReplanPolicy};
 use crate::config::EngineConfig;
 use crate::dt::{Calibration, LengthVariant};
 use crate::placement::replan::ReplanParams;
-use crate::placement::{MinGpus, MinLatency, Objective};
+use crate::placement::{MinGpus, MinLatency, Objective, PerfEstimator};
 use crate::util::json::Json;
 use crate::workload::drift::{AdapterPhase, DriftSpec, RateDrift};
 use crate::workload::{AdapterSpec, WorkloadSpec};
@@ -78,7 +79,11 @@ fn epoch_status(r: &crate::cluster::epochs::EpochRecord) -> &'static str {
 
 /// "Fig. D" (beyond-paper artifact): GPUs and ITL over time, static vs
 /// replan vs oracle-per-epoch on a churn workload, under the
-/// GPU-minimizing and the ITL-minimizing objective.
+/// GPU-minimizing and the ITL-minimizing objective.  `--estimator twin`
+/// runs the whole policy grid DT-in-the-loop: one probe-cached twin
+/// estimator is shared across every planning pass of every
+/// (objective, policy) pair and its memos persist in the pipeline
+/// artifact store, so repeated drift runs warm-start.
 pub fn drift(ctx: &ExpContext) -> Result<()> {
     let dir = ctx.exp_dir("drift");
     // Single-backbone experiment (like figa13): honour `--model`, default
@@ -87,7 +92,22 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
     let gpus = 4;
     let mut rt = ctx.load_runtime(model)?;
     let calib = ctx.calibration(&mut rt)?;
-    let est = ctx.trained_estimator(&calib)?;
+    // The estimator seam: the trained ML pair (deployed path) or the
+    // probe-cached Digital Twin (`--estimator twin`), which skips the
+    // dataset/training stages it never consults.
+    let ml_est = match ctx.estimator {
+        EstimatorChoice::Ml => Some(ctx.trained_estimator(&calib)?),
+        EstimatorChoice::Twin => None,
+    };
+    let twin_est = match ctx.estimator {
+        EstimatorChoice::Ml => None,
+        EstimatorChoice::Twin => Some(ctx.twin_probe_estimator(&calib)?),
+    };
+    let est: &dyn PerfEstimator = match (&ml_est, &twin_est) {
+        (Some(ml), _) => ml as &dyn PerfEstimator,
+        (_, Some((twin, _))) => twin as &dyn PerfEstimator,
+        _ => unreachable!("one estimator is always constructed"),
+    };
     let epochs = if ctx.scale.is_quick() { 6 } else { 8 };
     let epoch_s = ctx.horizon() / 2.0;
     let spec = burst_churn(epochs, epoch_s, &calib);
@@ -109,11 +129,11 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
     for (oname, objective) in &objectives {
         for (pname, policy) in &policies {
             let rep = if on_engine {
-                let make = || ctx.load_runtime(model);
-                run_epochs_on_engine(&make, &base, &spec, gpus, &est, *objective, policy)?
+                let pool = ctx.backend_pool();
+                run_epochs_on_engine(pool, &base, &spec, gpus, est, *objective, policy)?
             } else {
                 let variant = LengthVariant::Original;
-                run_epochs_on_twin(&calib, &base, &spec, gpus, &est, *objective, policy, variant)?
+                run_epochs_on_twin(&calib, &base, &spec, gpus, est, *objective, policy, variant)?
             };
             for r in &rep.per_epoch {
                 rows.push(vec![
@@ -143,6 +163,23 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
             );
             reports.push((format!("{oname}/{pname}"), rep));
         }
+    }
+
+    // Persist the probe memos of the DT-in-the-loop path and report the
+    // hit rate (the CI smoke gates on it: planning the whole grid through
+    // the shared cache must answer most probes without a DT simulation).
+    if let Some((twin, path)) = &twin_est {
+        twin.save_memos(path)?;
+        let s = twin.stats();
+        println!(
+            "  drift: probe cache {} hits / {} misses ({:.1}% hit rate), \
+             {} memos persisted ({} warm-started)",
+            s.hits,
+            s.misses,
+            100.0 * s.hit_rate(),
+            s.entries,
+            s.warm
+        );
     }
 
     print_table(
@@ -190,7 +227,21 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
         ("epoch_s", Json::Num(epoch_s)),
         ("gpus", Json::Num(gpus as f64)),
         ("backend", Json::Str(if on_engine { "engine" } else { "twin" }.into())),
+        ("estimator", Json::Str(est.name().into())),
     ];
+    if let Some((twin, _)) = &twin_est {
+        let s = twin.stats();
+        fields.push((
+            "probe_cache",
+            Json::obj(vec![
+                ("hits", Json::Num(s.hits as f64)),
+                ("misses", Json::Num(s.misses as f64)),
+                ("hit_rate", Json::Num(s.hit_rate())),
+                ("entries", Json::Num(s.entries as f64)),
+                ("warm_started", Json::Num(s.warm as f64)),
+            ]),
+        ));
+    }
     for (oname, _) in &objectives {
         let mut policy_fields: Vec<(&str, Json)> = vec![];
         for (pname, _) in &policies {

@@ -9,7 +9,7 @@ pub mod dt_eval;
 pub mod ml_eval;
 pub mod profiling;
 
-pub use common::{ExpContext, Scale};
+pub use common::{EstimatorChoice, ExpContext, Scale};
 
 use anyhow::Result;
 

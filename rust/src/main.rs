@@ -43,7 +43,9 @@ common options:
   --scale <quick|full>             pipeline/experiment scale (default quick)
   --gpus N                         GPU budget for place/pipeline (default 4)
   --objective <min-gpus|min-latency>   placement objective (default min-gpus)
-  --estimator <ml|twin>            placement estimator (default ml)
+  --estimator <ml|twin>            placement estimator for pipeline/place/
+                                   drift (default ml; twin = DT-in-the-loop
+                                   with a persistent probe cache)
   --out PATH                       output file/directory
 values that start with '--' need the --key=VALUE form
 environment:
@@ -113,11 +115,7 @@ fn pipeline_from(args: &Args) -> Result<Pipeline> {
         .gpus(args.usize_or("gpus", 4)?)
         .fast_calibration(args.flag("fast") || scale.is_quick())
         .boxed_objective(objective_from(args)?);
-    pipe = match args.get_or("estimator", "ml") {
-        "ml" => pipe.estimator(EstimatorChoice::Ml),
-        "twin" => pipe.estimator(EstimatorChoice::Twin),
-        other => return Err(anyhow!("unknown --estimator '{other}' (ml|twin)")),
-    };
+    pipe = pipe.estimator(EstimatorChoice::parse(args.get_or("estimator", "ml"))?);
     // An explicit calibration file (e.g. a previous `calibrate --out`)
     // is injected and keys the downstream stages by content.
     if let Some(path) = args.get("calibration") {
@@ -214,6 +212,18 @@ fn pipeline_cmd(args: &Args) -> Result<()> {
     };
     match placed {
         Ok((planned, calibration)) => {
+            // DT-in-the-loop probe cache status (mirrors the per-stage
+            // lines; the CI smoke requires a second run to warm-start).
+            if let Some(s) = planned.probe_cache {
+                if s.misses == 0 {
+                    println!("probes: cache hit ({} memos warm-started, {} hits)", s.warm, s.hits);
+                } else {
+                    println!(
+                        "probes: computed ({} DT simulations, {} hits, {} warm-started)",
+                        s.misses, s.hits, s.warm
+                    );
+                }
+            }
             println!(
                 "place: {} / {} GPUs (objective {}, estimator {})",
                 planned.placement.gpus_used(),
@@ -336,9 +346,10 @@ fn place_cmd(args: &Args) -> Result<()> {
 }
 
 /// `adapterd drift` — the rolling-horizon re-placement loop on a churn
-/// workload (shorthand for `adapterd experiment drift`).
+/// workload (shorthand for `adapterd experiment drift`); `--estimator
+/// twin` plans DT-in-the-loop through the persistent probe cache.
 fn drift_cmd(args: &Args) -> Result<()> {
-    experiments::run("drift", &ExpContext::from_args(args))
+    experiments::run("drift", &ExpContext::from_args(args)?)
 }
 
 fn experiment_cmd(args: &Args) -> Result<()> {
@@ -346,7 +357,7 @@ fn experiment_cmd(args: &Args) -> Result<()> {
         .positional
         .first()
         .ok_or_else(|| anyhow!("experiment id required (or 'all')"))?;
-    experiments::run(id, &ExpContext::from_args(args))
+    experiments::run(id, &ExpContext::from_args(args)?)
 }
 
 fn artifacts_info(args: &Args) -> Result<()> {

@@ -17,7 +17,12 @@
 //! keyed by a content [`fingerprint`] of each stage's inputs (backbone
 //! model + grid + scale + upstream fingerprint), so repeated runs reuse
 //! calibrations, datasets and trained models and any input change misses
-//! the cache.  Placement consumes the pluggable
+//! the cache.  The DT-in-the-loop placement path persists a fourth
+//! artifact: its twin probe memos
+//! ([`CachedEstimator`](crate::placement::CachedEstimator)), chained on
+//! the calibration's content fingerprint, so repeated
+//! `adapterd pipeline`/`drift` runs warm-start instead of re-simulating
+//! every probe.  Placement consumes the pluggable
 //! [`PerfEstimator`](crate::placement::PerfEstimator) /
 //! [`Objective`](crate::placement::Objective) seams, selected with
 //! [`Pipeline::estimator`] and [`Pipeline::objective`].
@@ -34,11 +39,14 @@ use crate::cluster::{self, ClusterReport};
 use crate::config::EngineConfig;
 use crate::dt::{self, Calibration, LengthVariant};
 use crate::ml::{self, GridSpec, MlModels, Sample};
-use crate::placement::{plan, MinGpus, Objective, Placement, TwinEstimator};
-use crate::runtime::{self, Backend, Manifest};
+use crate::placement::{
+    plan, CacheStats, CachedEstimator, MinGpus, Objective, Placement, TwinEstimator,
+};
+use crate::runtime::{self, Backend, BackendPool, Manifest};
 use crate::workload::{AdapterSpec, WorkloadSpec};
 use anyhow::Result;
 use std::path::PathBuf;
+use std::sync::OnceLock;
 
 /// Pipeline/experiment scale selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -83,6 +91,18 @@ pub enum EstimatorChoice {
     Ml,
     /// The Digital Twin queried directly (slower, learning-error-free).
     Twin,
+}
+
+impl EstimatorChoice {
+    /// Parse a CLI `--estimator` value (shared by `adapterd pipeline`,
+    /// `place` and the experiment harness).
+    pub fn parse(s: &str) -> Result<EstimatorChoice> {
+        match s {
+            "ml" => Ok(EstimatorChoice::Ml),
+            "twin" => Ok(EstimatorChoice::Twin),
+            other => Err(anyhow::anyhow!("unknown --estimator '{other}' (ml|twin)")),
+        }
+    }
 }
 
 /// Output of the calibration stage.
@@ -130,6 +150,10 @@ pub struct Planned {
     pub estimator: &'static str,
     /// GPU budget the planner ran against.
     pub gpus: usize,
+    /// Probe-cache counters of the placement stage (DT-in-the-loop paths
+    /// only: the twin estimator's probes are memoized and persisted in
+    /// the artifact store; `None` for the µs-per-probe ML estimator).
+    pub probe_cache: Option<CacheStats>,
 }
 
 /// Output of the validation stage.
@@ -214,6 +238,7 @@ pub struct Pipeline {
     estimator: EstimatorChoice,
     objective: Box<dyn Objective>,
     validate_on_engine: bool,
+    pool: OnceLock<BackendPool>,
 }
 
 impl Pipeline {
@@ -236,6 +261,7 @@ impl Pipeline {
             estimator: EstimatorChoice::Ml,
             objective: Box::new(MinGpus),
             validate_on_engine: false,
+            pool: OnceLock::new(),
         }
     }
 
@@ -328,6 +354,14 @@ impl Pipeline {
         )
     }
 
+    /// The engine-backend pool behind every validation this pipeline
+    /// runs, created lazily over the configured artifact directory.
+    /// Model-keyed, so repeated [`Pipeline::validate`] calls reuse loaded
+    /// backends instead of constructing one per GPU per call.
+    pub fn backend_pool(&self) -> &BackendPool {
+        self.pool.get_or_init(|| BackendPool::new(self.artifacts.clone()))
+    }
+
     // ------------------------------------------------------------------
     // Stage internals
     // ------------------------------------------------------------------
@@ -380,6 +414,32 @@ impl Pipeline {
             "rf-seed7".to_string(),
             format!("{dataset_fp:016x}"),
         ])
+    }
+
+    fn probe_fingerprint(&self, calibration: &Calibration) -> u64 {
+        // Chained on the calibration *content* fingerprint like every
+        // other stage, plus every remaining twin query parameter — the
+        // probe horizon/seed and the full engine-config template
+        // (canonical Debug rendering, like the calibration): memo keys
+        // carry only the group and `A_max`, so everything else that
+        // changes what a probe would answer must re-key the artifact.
+        fingerprint([
+            "probes".to_string(),
+            self.model.clone(),
+            "twin".to_string(),
+            format!("horizon={}", TwinEstimator::DEFAULT_HORIZON_S),
+            format!("seed={:x}", TwinEstimator::DEFAULT_SEED),
+            format!("{:?}", self.base_config()),
+            format!("{:016x}", Self::calibration_fingerprint(calibration)),
+        ])
+    }
+
+    /// Store path of the persisted twin probe memos keyed to
+    /// `calibration` — the artifact that warm-starts repeated
+    /// DT-in-the-loop runs (`adapterd pipeline`/`drift`
+    /// `--estimator twin`).
+    pub fn probe_memo_path(&self, calibration: &Calibration) -> PathBuf {
+        self.store().path("probes", &self.model, self.probe_fingerprint(calibration), "csv")
     }
 
     // ------------------------------------------------------------------
@@ -518,14 +578,44 @@ impl Pipeline {
         }
     }
 
+    /// The DT-in-the-loop estimator, probe-cached and warm-started from
+    /// this pipeline's store.  Returns the estimator and the store path
+    /// its memos must be persisted back to
+    /// ([`CachedEstimator::save_memos`]) once the caller's planning
+    /// passes are done.  The one constructor for warm-started twin
+    /// probing — [`Pipeline::place_on_twin`] and the drift experiment
+    /// both use it, so the estimator configuration and the artifact
+    /// fingerprint can never drift apart.
+    pub fn probe_cached_twin(
+        &self,
+        calibration: &Calibration,
+    ) -> Result<(CachedEstimator, PathBuf)> {
+        let est =
+            CachedEstimator::wrap(TwinEstimator::new(calibration.clone(), self.base_config()));
+        let path = self.probe_memo_path(calibration);
+        if path.exists() {
+            // A corrupt artifact is a cold start, not a failure.
+            if let Ok(memos) = CachedEstimator::load_memos(&path) {
+                est.preload(memos);
+            }
+        }
+        self.store().ensure_dir()?;
+        Ok((est, path))
+    }
+
     fn plan_on_twin(&self, calibration: &Calibration, adapters: &[AdapterSpec]) -> Result<Planned> {
-        let est = TwinEstimator::new(calibration.clone(), self.base_config());
-        let placement = plan(adapters, self.gpus, &est, self.objective.as_ref())?;
+        let (est, path) = self.probe_cached_twin(calibration)?;
+        let placement = plan(adapters, self.gpus, &est, self.objective.as_ref());
+        // Persist what was probed even when the planner declines the
+        // workload: memos are estimator state, not placement state, and
+        // warm-start the retry just the same.
+        est.save_memos(&path)?;
         Ok(Planned {
-            placement,
+            placement: placement?,
             objective: self.objective.name(),
             estimator: "twin",
             gpus: self.gpus,
+            probe_cache: Some(est.stats()),
         })
     }
 
@@ -541,6 +631,7 @@ impl Pipeline {
                     objective: self.objective.name(),
                     estimator: "ml",
                     gpus: self.gpus,
+                    probe_cache: None,
                 })
             }
             EstimatorChoice::Twin => self.plan_on_twin(&trained.calibration, adapters),
@@ -560,7 +651,8 @@ impl Pipeline {
     }
 
     /// Validation stage: serve the workload under the placement on the
-    /// Digital Twin (default) or the real engine, one backend per GPU.
+    /// Digital Twin (default) or the real engine, one backend per GPU
+    /// checked out of the pipeline's [`Pipeline::backend_pool`].
     pub fn validate(
         &self,
         trained: &Trained,
@@ -580,8 +672,7 @@ impl Pipeline {
     ) -> Result<Validated> {
         let base = self.base_config();
         let report = if self.validate_on_engine {
-            let make = || runtime::load_backend(&self.artifacts, &self.model);
-            cluster::run_on_engine(&make, &base, &planned.placement, spec)?
+            cluster::run_on_engine(self.backend_pool(), &base, &planned.placement, spec)?
         } else {
             cluster::run_on_twin(
                 calibration,
@@ -673,6 +764,36 @@ mod tests {
         assert_ne!(d.fingerprint, d2.fingerprint, "grid change must re-key the stage");
         assert!(!d2.cached);
         assert!(p2.train_cached(&c).unwrap().is_none(), "trained pair re-keys too");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn twin_probe_memos_warm_start_a_second_pipeline_run() {
+        let dir = std::env::temp_dir().join(format!("pipe_probes_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let spec = WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(8, 8, 0.05), 5.0, 7);
+
+        let p1 = pipe(&dir).estimator(EstimatorChoice::Twin);
+        let c1 = p1.calibrate().unwrap();
+        let run1 = p1.place_on_twin(&c1, &spec.adapters).unwrap();
+        let s1 = run1.probe_cache.expect("twin path reports probe stats");
+        assert!(s1.misses > 0, "cold run must simulate probes");
+        assert_eq!(s1.warm, 0);
+        assert!(p1.probe_memo_path(&c1.calibration).exists(), "memos persisted");
+
+        // A fresh Pipeline value over the same store: every probe of the
+        // identical planning pass is answered from the persisted memos.
+        let p2 = pipe(&dir).estimator(EstimatorChoice::Twin);
+        let c2 = p2.calibrate().unwrap();
+        let run2 = p2.place_on_twin(&c2, &spec.adapters).unwrap();
+        let s2 = run2.probe_cache.unwrap();
+        assert_eq!(s2.misses, 0, "warm-started run must not re-simulate: {s2:?}");
+        assert!(s2.warm > 0 && s2.hits == s1.total());
+        assert_eq!(
+            run1.placement,
+            run2.placement,
+            "warm-started placement is bit-identical to the cold one"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

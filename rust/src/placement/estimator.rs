@@ -11,7 +11,15 @@
 //! - [`TwinEstimator`] — the Digital Twin queried directly, skipping the
 //!   ML stage (ms per query; the "DT-in-the-loop" ablation);
 //! - [`OracleEstimator`] — recorded estimates replayed exactly, for
-//!   deterministic tests of the planners themselves.
+//!   deterministic tests of the planners themselves;
+//! - [`CachedEstimator`] — a memoizing wrapper over any of the above,
+//!   keyed at the granularity each estimator declares sound
+//!   ([`PerfEstimator::memo_key`]: feature bits for the ML path, the
+//!   `(rank, rate)` multiset for the canonicalizing twin), shared via
+//!   interior mutability across every probe of a planning pass (Alg. 1's
+//!   adjacent testing points, `replan`'s sticky/repair/drain passes, a
+//!   whole epoch horizon) and persistable into the pipeline artifact
+//!   store.
 //!
 //! [`MlModels`] implements the trait directly, so existing call sites that
 //! pass `&models` keep working unchanged.
@@ -19,8 +27,12 @@
 use crate::config::EngineConfig;
 use crate::dt::{self, Calibration, LengthVariant};
 use crate::ml::{features, MlModels};
+use crate::util::csv::Table;
 use crate::workload::{AdapterSpec, WorkloadSpec};
 use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// A performance estimate for one adapter group under one `A_max`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -52,6 +64,25 @@ pub trait PerfEstimator {
 
     /// Short tag for reports and artifacts.
     fn name(&self) -> &'static str;
+
+    /// The key under which this estimator's answers may be memoized
+    /// ([`CachedEstimator`]): queries with equal keys **must** produce
+    /// bit-identical estimates.  The default is the full group identity —
+    /// sorted `(id, rank, rate)` members plus `a_max` — which is sound
+    /// for any estimator.  Implementations whose answer provably depends
+    /// on less override with a coarser key for more reuse: the ML path
+    /// is a pure function of the feature vector ([`probe_key`]), the
+    /// canonicalizing twin of the `(rank, rate)` multiset.
+    fn memo_key(&self, adapters: &[AdapterSpec], a_max: usize) -> Vec<u64> {
+        let mut members: Vec<[u64; 3]> = adapters
+            .iter()
+            .map(|a| [a.id as u64, a.rank as u64, normalized_bits(a.rate)])
+            .collect();
+        members.sort_unstable();
+        let mut key = vec![a_max as u64];
+        key.extend(members.into_iter().flatten());
+        key
+    }
 }
 
 impl PerfEstimator for MlModels {
@@ -66,6 +97,11 @@ impl PerfEstimator for MlModels {
 
     fn name(&self) -> &'static str {
         "ml"
+    }
+
+    fn memo_key(&self, adapters: &[AdapterSpec], a_max: usize) -> Vec<u64> {
+        // The prediction is a pure function of the feature vector.
+        probe_key(adapters, a_max)
     }
 }
 
@@ -98,13 +134,25 @@ impl PerfEstimator for MlEstimator {
     fn name(&self) -> &'static str {
         "ml"
     }
+
+    fn memo_key(&self, adapters: &[AdapterSpec], a_max: usize) -> Vec<u64> {
+        self.models.memo_key(adapters, a_max)
+    }
 }
 
 /// [`PerfEstimator`] that runs the Digital Twin per query — the placement
 /// pipeline with the ML stage skipped.  ~1000x slower per probe than
-/// [`MlEstimator`] but free of learning error; scenarios are constructed
-/// exactly like the training-set generator ([`crate::ml::dataset`]): a
-/// ShareGPT-like workload with mean request lengths over a short horizon.
+/// [`MlEstimator`] but free of learning error; scenarios are built the
+/// way the training-set generator ([`crate::ml::dataset`]) builds its
+/// samples — ids `0..n-1`, a ShareGPT-like workload with mean request
+/// lengths over a short horizon — but over a *canonical* copy of the
+/// group: members sorted by `(rank, rate)` before the `0..n-1` re-idding
+/// (the generator assigns ranks/rates to ids in RNG order and seeds per
+/// scenario, so the match is the construction shape, not scenario
+/// identity).  The canonicalization makes the estimate a pure function
+/// of the group's `(rank, rate)` multiset and `a_max` — which is what
+/// makes the twin's [`PerfEstimator::memo_key`] (the sorted multiset)
+/// sound.
 pub struct TwinEstimator {
     /// Calibrated twin constants.
     pub calibration: Calibration,
@@ -118,9 +166,19 @@ pub struct TwinEstimator {
 }
 
 impl TwinEstimator {
+    /// Default simulated horizon per probe (the dataset generator's).
+    pub const DEFAULT_HORIZON_S: f64 = 20.0;
+    /// Default workload seed shared by every probe.
+    pub const DEFAULT_SEED: u64 = 0xDA7A;
+
     /// Estimator with the dataset generator's defaults (20 s horizon).
     pub fn new(calibration: Calibration, base: EngineConfig) -> TwinEstimator {
-        TwinEstimator { calibration, base, horizon_s: 20.0, seed: 0xDA7A }
+        TwinEstimator {
+            calibration,
+            base,
+            horizon_s: Self::DEFAULT_HORIZON_S,
+            seed: Self::DEFAULT_SEED,
+        }
     }
 
     /// Override the simulated horizon (shorter = faster, noisier).
@@ -136,13 +194,34 @@ impl TwinEstimator {
     }
 }
 
+/// The group's `(rank, normalized rate bits)` pairs in canonical
+/// (sorted) order — what the twin actually simulates and memoizes on.
+fn canonical_pairs(adapters: &[AdapterSpec]) -> Vec<(usize, u64)> {
+    let mut pairs: Vec<(usize, u64)> =
+        adapters.iter().map(|a| (a.rank, normalized_bits(a.rate))).collect();
+    pairs.sort_unstable();
+    pairs
+}
+
 impl PerfEstimator for TwinEstimator {
     fn estimate(&self, adapters: &[AdapterSpec], a_max: usize) -> Estimate {
         let s_max = adapters.iter().map(|a| a.rank).max().unwrap_or(8);
         let mut cfg = self.base.clone();
         cfg.a_max = a_max;
         cfg.s_max_rank = s_max;
-        let spec = WorkloadSpec::sharegpt_like(adapters.to_vec(), self.horizon_s, self.seed);
+        // Canonical scenario: ids 0..n-1 (the dataset generator's id
+        // scheme) over the sorted (rank, rate) members.  Per-adapter
+        // arrival streams are seeded by id (`WorkloadSpec::trace`), so
+        // without the re-idding two groups with identical compositions
+        // but different member ids would simulate to different bits —
+        // and the memoized twin could then replay one group's estimate
+        // for the other.
+        let canonical: Vec<AdapterSpec> = canonical_pairs(adapters)
+            .into_iter()
+            .enumerate()
+            .map(|(id, (rank, bits))| AdapterSpec { id, rank, rate: f64::from_bits(bits) })
+            .collect();
+        let spec = WorkloadSpec::sharegpt_like(canonical, self.horizon_s, self.seed);
         let res = dt::run_twin(&cfg, &self.calibration, &spec, LengthVariant::Mean);
         match res.report {
             Some(rep) => Estimate {
@@ -157,13 +236,42 @@ impl PerfEstimator for TwinEstimator {
     fn name(&self) -> &'static str {
         "twin"
     }
+
+    fn memo_key(&self, adapters: &[AdapterSpec], a_max: usize) -> Vec<u64> {
+        // The canonical scenario above depends on exactly this multiset
+        // (plus the estimator's own horizon/seed/config, which are fixed
+        // per instance and fingerprinted into persisted artifacts).
+        let mut key = vec![a_max as u64];
+        key.extend(canonical_pairs(adapters).into_iter().flat_map(|(r, b)| [r as u64, b]));
+        key
+    }
+}
+
+/// The feature-level key: the bit patterns of the placement feature
+/// vector ([`crate::ml::features`], which already folds in `a_max` as
+/// its last component).  This is [`OracleEstimator`]'s replay key and
+/// the [`PerfEstimator::memo_key`] of the ML path — sound there because
+/// those answers are pure functions of the features; simulating
+/// estimators key on more (see [`TwinEstimator`]).
+///
+/// Negative zero is normalized to `+0.0` before the bits are taken:
+/// `-0.0` and `0.0` are numerically equal inputs to every estimator, so
+/// letting their bit patterns differ would only manufacture spurious
+/// misses (e.g. a rate std that comes out as `-0.0` on one code path).
+pub fn probe_key(adapters: &[AdapterSpec], a_max: usize) -> Vec<u64> {
+    features(adapters, a_max).iter().map(|&v| normalized_bits(v)).collect()
+}
+
+/// `f64::to_bits` with `-0.0` collapsed onto `+0.0` (see [`probe_key`]).
+fn normalized_bits(v: f64) -> u64 {
+    (if v == 0.0 { 0.0f64 } else { v }).to_bits()
 }
 
 /// Test-support [`PerfEstimator`] replaying recorded estimates exactly.
 ///
-/// Keys are the bit patterns of the placement feature vector
-/// ([`crate::ml::features`]), so any group with identical features — the
-/// only information the ML path ever sees — replays the same estimate.
+/// Keys are the normalized feature-vector bits ([`probe_key`]), so any
+/// group with identical features — the only information the ML path ever
+/// sees — replays the same estimate.
 /// A query with no recorded estimate returns the fallback when one is set
 /// and panics otherwise (a miss in a test is a bug in the test).
 #[derive(Debug, Clone, Default)]
@@ -184,7 +292,7 @@ impl OracleEstimator {
     }
 
     fn key(adapters: &[AdapterSpec], a_max: usize) -> Vec<u64> {
-        features(adapters, a_max).iter().map(|v| v.to_bits()).collect()
+        probe_key(adapters, a_max)
     }
 
     /// Record the estimate to replay for this group/`A_max`.
@@ -229,6 +337,192 @@ impl PerfEstimator for OracleEstimator {
 
     fn name(&self) -> &'static str {
         "oracle"
+    }
+
+    fn memo_key(&self, adapters: &[AdapterSpec], a_max: usize) -> Vec<u64> {
+        // Replay is by feature key by construction, so memoizing at the
+        // same granularity is exact.
+        probe_key(adapters, a_max)
+    }
+}
+
+/// Hit/miss snapshot of a [`CachedEstimator`] (reports and CI gates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    /// Probes answered from the memo.
+    pub hits: u64,
+    /// Probes that fell through to the wrapped estimator.
+    pub misses: u64,
+    /// Memo entries present (warm-started + missed).
+    pub entries: usize,
+    /// Entries preloaded from persisted memos before any probe ran.
+    pub warm: usize,
+}
+
+impl CacheStats {
+    /// Total probes answered.
+    pub fn total(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of probes answered from the memo (0 when nothing ran).
+    pub fn hit_rate(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.total() as f64
+        }
+    }
+}
+
+/// Memoizing [`PerfEstimator`] wrapper: every query is answered by the
+/// wrapped estimator exactly once per [`PerfEstimator::memo_key`] — the
+/// granularity each estimator declares sound for itself — and replayed
+/// bit-identically afterwards.
+///
+/// This is the caching layer that makes the DT-in-the-loop path usable:
+/// Alg. 1 probes the same group at adjacent testing points, `replan`'s
+/// sticky/repair/drain passes re-probe surviving groups every epoch, and
+/// a drift horizon replans near-identical workloads back to back — with
+/// a [`TwinEstimator`] behind it each duplicate probe is a full DT
+/// simulation.  Interior mutability (a [`Mutex`]-guarded memo and atomic
+/// counters) lets one shared `&CachedEstimator` serve a whole planning
+/// pass or epoch horizon through the `&dyn PerfEstimator` seam.
+///
+/// Memos serialize to CSV ([`CachedEstimator::save_memos`] /
+/// [`CachedEstimator::load_memos`]) with throughputs stored as f64 bit
+/// patterns, so a warm-started cache replays *bit-identical* estimates
+/// across processes; the pipeline persists them in its artifact store
+/// keyed by the calibration's content fingerprint (DESIGN.md §8).
+///
+/// ```
+/// use adapter_serving::placement::{CachedEstimator, Estimate, OracleEstimator, PerfEstimator};
+/// use adapter_serving::workload::AdapterSpec;
+/// let inner = OracleEstimator::with_fallback(Estimate {
+///     throughput_tok_s: 100.0,
+///     starved: false,
+///     memory_error: false,
+/// });
+/// let cached = CachedEstimator::wrap(inner);
+/// let ads = vec![AdapterSpec { id: 0, rank: 8, rate: 0.1 }];
+/// let a = cached.estimate(&ads, 8); // miss: consults the oracle
+/// let b = cached.estimate(&ads, 8); // hit: replayed from the memo
+/// assert_eq!(a, b);
+/// assert_eq!(cached.stats().hits, 1);
+/// assert_eq!(cached.stats().misses, 1);
+/// ```
+pub struct CachedEstimator {
+    inner: Box<dyn PerfEstimator>,
+    memo: Mutex<BTreeMap<Vec<u64>, Estimate>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    warm: AtomicUsize,
+}
+
+impl CachedEstimator {
+    /// Wrap an already-boxed estimator (e.g. one picked from a CLI flag).
+    pub fn new(inner: Box<dyn PerfEstimator>) -> CachedEstimator {
+        CachedEstimator {
+            inner,
+            memo: Mutex::new(BTreeMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            warm: AtomicUsize::new(0),
+        }
+    }
+
+    /// Wrap any estimator value.
+    pub fn wrap(inner: impl PerfEstimator + 'static) -> CachedEstimator {
+        CachedEstimator::new(Box::new(inner))
+    }
+
+    /// Hit/miss/size counters since construction.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.memo.lock().unwrap().len(),
+            warm: self.warm.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Preload memos (e.g. loaded from a previous run's artifact); later
+    /// probes with these keys are hits, counted as warm-started entries.
+    pub fn preload(&self, memos: Vec<(Vec<u64>, Estimate)>) {
+        let mut memo = self.memo.lock().unwrap();
+        let before = memo.len();
+        memo.extend(memos);
+        self.warm.fetch_add(memo.len() - before, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the memo, in deterministic key order.
+    pub fn memos(&self) -> Vec<(Vec<u64>, Estimate)> {
+        self.memo.lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Persist the memo as CSV (throughputs as f64 bit patterns, so a
+    /// reload replays bit-identically).
+    pub fn save_memos(&self, path: &Path) -> anyhow::Result<()> {
+        let mut t = Table::new(&["key", "throughput_bits", "starved", "memory_error"]);
+        for (key, e) in self.memos() {
+            let k: Vec<String> = key.iter().map(|b| format!("{b:016x}")).collect();
+            t.push(vec![
+                k.join(" "),
+                format!("{:016x}", e.throughput_tok_s.to_bits()),
+                (e.starved as i32).to_string(),
+                (e.memory_error as i32).to_string(),
+            ]);
+        }
+        t.write_file(path)
+    }
+
+    /// Load memos persisted by [`CachedEstimator::save_memos`].
+    pub fn load_memos(path: &Path) -> anyhow::Result<Vec<(Vec<u64>, Estimate)>> {
+        let t = Table::read_file(path)?;
+        let mut out = Vec::with_capacity(t.rows.len());
+        for row in &t.rows {
+            let key: Vec<u64> = row[0]
+                .split_whitespace()
+                .map(|h| u64::from_str_radix(h, 16))
+                .collect::<Result<_, _>>()?;
+            out.push((
+                key,
+                Estimate {
+                    throughput_tok_s: f64::from_bits(u64::from_str_radix(&row[1], 16)?),
+                    starved: row[2].parse::<i32>()? != 0,
+                    memory_error: row[3].parse::<i32>()? != 0,
+                },
+            ));
+        }
+        Ok(out)
+    }
+}
+
+impl PerfEstimator for CachedEstimator {
+    fn estimate(&self, adapters: &[AdapterSpec], a_max: usize) -> Estimate {
+        let key = self.inner.memo_key(adapters, a_max);
+        if let Some(e) = self.memo.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return *e;
+        }
+        // The lock is not held across the inner call: a twin probe is a
+        // full DT simulation and concurrent probers of *different* keys
+        // must not serialize behind it (duplicate concurrent misses of
+        // the same key are benign — the estimate is deterministic).
+        let e = self.inner.estimate(adapters, a_max);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.memo.lock().unwrap().insert(key, e);
+        e
+    }
+
+    fn name(&self) -> &'static str {
+        // The memo changes cost, never answers: reports should attribute
+        // estimates to the wrapped estimator.
+        self.inner.name()
+    }
+
+    fn memo_key(&self, adapters: &[AdapterSpec], a_max: usize) -> Vec<u64> {
+        self.inner.memo_key(adapters, a_max)
     }
 }
 
@@ -289,5 +583,146 @@ mod tests {
         let oracle = OracleEstimator::with_fallback(fb);
         assert_eq!(oracle.estimate(&adapters(2, 8, 0.1), 8), fb);
         assert!(oracle.is_empty());
+    }
+
+    #[test]
+    fn probe_key_normalizes_negative_zero() {
+        // The raw bit patterns differ — keying on them (as `key` once
+        // did) would treat numerically equal feature vectors as distinct
+        // and manufacture spurious misses.
+        assert_ne!((-0.0f64).to_bits(), (0.0f64).to_bits());
+        assert_eq!(normalized_bits(-0.0), normalized_bits(0.0));
+        assert_eq!(normalized_bits(1.5), (1.5f64).to_bits(), "non-zero bits pass through");
+        // End to end: groups whose features are numerically equal (zero
+        // spelled either way) share one key, so the oracle replays across
+        // the spellings.
+        let neg = vec![AdapterSpec { id: 0, rank: 8, rate: -0.0 }];
+        let pos = vec![AdapterSpec { id: 0, rank: 8, rate: 0.0 }];
+        assert_eq!(probe_key(&neg, 8), probe_key(&pos, 8));
+        let mut oracle = OracleEstimator::new();
+        let e = Estimate { throughput_tok_s: 7.0, starved: false, memory_error: false };
+        oracle.record(&neg, 8, e);
+        assert_eq!(oracle.estimate(&pos, 8), e);
+    }
+
+    /// A counting estimator: how many probes actually reach the backing
+    /// model (misses, for a cached wrapper).
+    struct Counting<E> {
+        inner: E,
+        calls: std::sync::atomic::AtomicU64,
+    }
+
+    impl<E: PerfEstimator> Counting<E> {
+        fn new(inner: E) -> Counting<E> {
+            Counting { inner, calls: std::sync::atomic::AtomicU64::new(0) }
+        }
+    }
+
+    impl<E: PerfEstimator> PerfEstimator for Counting<E> {
+        fn estimate(&self, adapters: &[AdapterSpec], a_max: usize) -> Estimate {
+            self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.inner.estimate(adapters, a_max)
+        }
+
+        fn name(&self) -> &'static str {
+            self.inner.name()
+        }
+
+        fn memo_key(&self, adapters: &[AdapterSpec], a_max: usize) -> Vec<u64> {
+            self.inner.memo_key(adapters, a_max)
+        }
+    }
+
+    /// The twin simulates a canonical re-idded copy of the group, so its
+    /// estimate — and therefore a memo hit — cannot depend on member ids
+    /// or order: the collision that would otherwise replay one group's
+    /// estimate for a different same-composition group cannot happen.
+    #[test]
+    fn twin_is_invariant_to_member_ids_and_order_so_memo_hits_are_exact() {
+        let twin = TwinEstimator::new(Calibration::default(), EngineConfig::default())
+            .with_horizon(3.0);
+        // Same composition, disjoint ids, shuffled order.
+        let a: Vec<AdapterSpec> = (0..4).map(|id| AdapterSpec { id, rank: 8, rate: 0.2 }).collect();
+        let b: Vec<AdapterSpec> =
+            (10..14).rev().map(|id| AdapterSpec { id, rank: 8, rate: 0.2 }).collect();
+        assert_eq!(twin.memo_key(&a, 8), twin.memo_key(&b, 8));
+        assert_eq!(
+            twin.estimate(&a, 8).throughput_tok_s.to_bits(),
+            twin.estimate(&b, 8).throughput_tok_s.to_bits(),
+            "same composition must simulate to the same bits"
+        );
+        // Memoized replay for group b equals the uncached twin on b.
+        let cached = CachedEstimator::wrap(
+            TwinEstimator::new(Calibration::default(), EngineConfig::default()).with_horizon(3.0),
+        );
+        cached.estimate(&a, 8);
+        let replayed = cached.estimate(&b, 8);
+        assert_eq!(cached.stats().hits, 1, "same composition is one memo entry");
+        assert_eq!(
+            replayed.throughput_tok_s.to_bits(),
+            twin.estimate(&b, 8).throughput_tok_s.to_bits()
+        );
+        // Different composition must NOT collide even when the feature
+        // vector coincides: the key carries the full multiset.
+        let c: Vec<AdapterSpec> = (0..4).map(|id| AdapterSpec { id, rank: 8, rate: 0.1 }).collect();
+        assert_ne!(twin.memo_key(&a, 8), twin.memo_key(&c, 8));
+    }
+
+    #[test]
+    fn cached_estimator_memoizes_bit_identically() {
+        let twin = TwinEstimator::new(Calibration::default(), EngineConfig::default())
+            .with_horizon(3.0);
+        let uncached = TwinEstimator::new(Calibration::default(), EngineConfig::default())
+            .with_horizon(3.0);
+        let cached = CachedEstimator::wrap(Counting::new(twin));
+        let ads = adapters(4, 8, 0.2);
+        let miss = cached.estimate(&ads, 8);
+        let hit = cached.estimate(&ads, 8);
+        assert_eq!(miss.throughput_tok_s.to_bits(), hit.throughput_tok_s.to_bits());
+        assert_eq!(
+            miss.throughput_tok_s.to_bits(),
+            uncached.estimate(&ads, 8).throughput_tok_s.to_bits(),
+            "memoized estimate must be bit-identical to the uncached twin"
+        );
+        let stats = cached.stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
+        assert_eq!(cached.name(), "twin", "reports attribute to the wrapped estimator");
+    }
+
+    #[test]
+    fn cached_estimator_memos_round_trip_and_warm_start() {
+        let twin = TwinEstimator::new(Calibration::default(), EngineConfig::default())
+            .with_horizon(3.0);
+        let cached = CachedEstimator::wrap(twin);
+        let groups = [adapters(4, 8, 0.2), adapters(8, 16, 0.1), adapters(2, 32, 0.05)];
+        for g in &groups {
+            cached.estimate(g, 8);
+            cached.estimate(g, 16);
+        }
+        let dir = std::env::temp_dir().join(format!("probe_memos_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("memos.csv");
+        cached.save_memos(&path).unwrap();
+
+        // A fresh cache warm-started from disk answers every probe
+        // without touching the backing estimator, bit-identically.
+        let counting = Counting::new(
+            TwinEstimator::new(Calibration::default(), EngineConfig::default()).with_horizon(3.0),
+        );
+        let warm = CachedEstimator::wrap(counting);
+        warm.preload(CachedEstimator::load_memos(&path).unwrap());
+        assert_eq!(warm.stats().warm, 6);
+        for g in &groups {
+            for a_max in [8usize, 16] {
+                assert_eq!(
+                    warm.estimate(g, a_max).throughput_tok_s.to_bits(),
+                    cached.estimate(g, a_max).throughput_tok_s.to_bits()
+                );
+            }
+        }
+        let stats = warm.stats();
+        assert_eq!(stats.misses, 0, "warm-started probes must not re-simulate");
+        assert_eq!(stats.hits, 6);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -8,6 +8,12 @@
 //! `A_max` candidates, then a feasibility veto).  Packing onto the fewest
 //! GPUs is this algorithm's built-in goal — it *is* the
 //! [`crate::placement::MinGpus`] objective's planner.
+//!
+//! TestAllocation probes the same group at adjacent testing points (and
+//! re-probes the winner), so an expensive estimator behind the seam —
+//! the DT-in-the-loop [`crate::placement::TwinEstimator`] — should be
+//! wrapped in a [`crate::placement::CachedEstimator`]: results are
+//! bit-identical, duplicate probes are memo hits.
 
 use super::estimator::PerfEstimator;
 use super::{Placement, PlacementError, PlacementResult, TESTING_POINTS};

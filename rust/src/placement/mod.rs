@@ -8,7 +8,10 @@
 //! ([`MinGpus`] — the paper's Alg. 1 goal — or [`MinLatency`], §8.4.4).
 //! [`plan`] is the objective-generic one-shot entry point.
 //!
-//! - [`estimator`] — the [`PerfEstimator`] seam and its implementations;
+//! - [`estimator`] — the [`PerfEstimator`] seam and its implementations,
+//!   including the memoizing [`CachedEstimator`] that makes the
+//!   DT-in-the-loop path affordable (probe memos persist via the
+//!   pipeline artifact store);
 //! - [`objective`] — the [`Objective`] seam ([`MinGpus`]/[`MinLatency`]);
 //! - [`greedy`] — the paper's contribution (Algorithms 1 & 2);
 //! - [`baselines`] — MaxBase, MaxBase*, Random (§8.4);
@@ -25,7 +28,10 @@ pub mod latency;
 pub mod objective;
 pub mod replan;
 
-pub use estimator::{Estimate, MlEstimator, OracleEstimator, PerfEstimator, TwinEstimator};
+pub use estimator::{
+    probe_key, CacheStats, CachedEstimator, Estimate, MlEstimator, OracleEstimator,
+    PerfEstimator, TwinEstimator,
+};
 pub use objective::{plan, Candidate, MinGpus, MinLatency, Objective};
 
 use crate::workload::AdapterSpec;

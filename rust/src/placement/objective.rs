@@ -90,6 +90,12 @@ pub fn better_than(obj: &dyn Objective, a: &Candidate, b: &Candidate) -> bool {
 
 /// Plan `adapters` onto at most `gpus` GPUs under `objective` — the
 /// objective-generic entry point of the one-shot placement layer.
+///
+/// `est` is any [`PerfEstimator`]; for the DT-in-the-loop path pass a
+/// [`crate::placement::CachedEstimator`]-wrapped
+/// [`crate::placement::TwinEstimator`] so the planners' duplicate probes
+/// memoize (bit-identical results, ≥5x fewer DT simulations — the
+/// pipeline does this and persists the memos, DESIGN.md §9).
 pub fn plan(
     adapters: &[AdapterSpec],
     gpus: usize,

@@ -26,6 +26,12 @@
 //! Migrations and their modeled cost are reported relative to the previous
 //! placement, so the epoch runner ([`crate::cluster::epochs`]) can account
 //! for them in the horizon aggregate.
+//!
+//! The sticky/repair/drain passes probe heavily overlapping groups — and
+//! consecutive epochs of a drift horizon re-probe near-identical ones —
+//! so DT-in-the-loop replanning should share one
+//! [`crate::placement::CachedEstimator`] across the whole horizon;
+//! results stay bit-identical to the uncached path.
 
 use super::estimator::PerfEstimator;
 use super::objective::{better_than, Candidate, Objective};
@@ -496,6 +502,35 @@ mod tests {
         let fresh = latency::place(&ads, 4, &est).unwrap();
         assert_eq!(out.placement, fresh);
         assert_eq!(out.placement.gpus_used(), 4);
+    }
+
+    #[test]
+    fn cached_twin_replan_is_bit_identical_to_uncached() {
+        use crate::config::EngineConfig;
+        use crate::placement::estimator::{CachedEstimator, TwinEstimator};
+        let calib = Calibration::default();
+        let base = EngineConfig::default();
+        let twin = || TwinEstimator::new(calib.clone(), base.clone()).with_horizon(5.0);
+        let plain = twin();
+        let cached = CachedEstimator::wrap(twin());
+        let ads = adapters(12, 0.05);
+        let p_plain = greedy::place(&ads, 4, &plain).unwrap();
+        let p_cached = greedy::place(&ads, 4, &cached).unwrap();
+        assert_eq!(p_plain, p_cached, "cold start must not change under the memo");
+        // The workload doubles; replanning probes sticky/repair/packing
+        // candidates through both paths.
+        let grown = adapters(24, 0.08);
+        let out_plain =
+            replan(Some(&p_plain), &grown, 4, &plain, &ReplanParams::default(), &MinGpus)
+                .unwrap();
+        let out_cached =
+            replan(Some(&p_cached), &grown, 4, &cached, &ReplanParams::default(), &MinGpus)
+                .unwrap();
+        assert_eq!(out_plain.placement, out_cached.placement);
+        assert_eq!(out_plain.migrations, out_cached.migrations);
+        assert_eq!(out_plain.migration_cost_s.to_bits(), out_cached.migration_cost_s.to_bits());
+        let stats = cached.stats();
+        assert!(stats.hits > 0, "adjacent probes must hit the memo: {stats:?}");
     }
 
     #[test]

@@ -17,14 +17,22 @@
 //! is compiled in and an artifact manifest exists, else the reference
 //! backend (from the manifest's config when present, from the built-in
 //! pico configs otherwise).
+//!
+//! The cluster layer does not construct backends directly: it checks them
+//! out of a model-keyed [`BackendPool`] ([`pool`]), so repeated
+//! validations and epoch horizons reuse loaded model state instead of
+//! rebuilding one backend per GPU per call — free for the reference
+//! backend, the prerequisite for PJRT compiled-executable reuse.
 
 pub mod manifest;
+pub mod pool;
 pub mod reference;
 
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use manifest::{Manifest, ModelMeta};
+pub use pool::{BackendPool, PooledBackend};
 pub use reference::ReferenceBackend;
 
 #[cfg(feature = "pjrt")]
@@ -121,9 +129,8 @@ pub trait Backend {
     }
 }
 
-/// Load the backend for `model`, honoring `ADAPTER_SERVING_BACKEND`.
-/// See the module docs for the selection order.
-pub fn load_backend(artifacts_dir: &Path, model: &str) -> Result<Box<dyn Backend>> {
+/// The validated `ADAPTER_SERVING_BACKEND` request (empty = automatic).
+fn requested_backend() -> Result<String> {
     let requested = std::env::var("ADAPTER_SERVING_BACKEND").unwrap_or_default();
     if !matches!(requested.as_str(), "" | "reference" | "pjrt") {
         return Err(anyhow!(
@@ -131,23 +138,13 @@ pub fn load_backend(artifacts_dir: &Path, model: &str) -> Result<Box<dyn Backend
              (expected 'reference' or 'pjrt')"
         ));
     }
-    let have_manifest = artifacts_dir.join("manifest.json").exists();
+    Ok(requested)
+}
 
-    #[cfg(feature = "pjrt")]
-    {
-        if requested != "reference" && have_manifest {
-            return Ok(Box::new(PjrtBackend::load(artifacts_dir, model)?));
-        }
-    }
-    if requested == "pjrt" {
-        return Err(anyhow!(
-            "ADAPTER_SERVING_BACKEND=pjrt needs a build with `--features pjrt` \
-             and an artifact manifest in {}",
-            artifacts_dir.display()
-        ));
-    }
-
-    let meta = if have_manifest {
+/// The reference backend for `model`, from the manifest's config when one
+/// exists and from the built-in pico configs otherwise.
+fn load_reference(artifacts_dir: &Path, model: &str) -> Result<ReferenceBackend> {
+    let meta = if artifacts_dir.join("manifest.json").exists() {
         let manifest = Manifest::load(artifacts_dir)?;
         manifest
             .models
@@ -163,7 +160,63 @@ pub fn load_backend(artifacts_dir: &Path, model: &str) -> Result<Box<dyn Backend
             )
         })?
     };
-    Ok(Box::new(ReferenceBackend::try_new(meta)?))
+    ReferenceBackend::try_new(meta)
+}
+
+/// Load the backend for `model`, honoring `ADAPTER_SERVING_BACKEND`.
+/// See the module docs for the selection order.
+pub fn load_backend(artifacts_dir: &Path, model: &str) -> Result<Box<dyn Backend>> {
+    let requested = requested_backend()?;
+
+    #[cfg(feature = "pjrt")]
+    {
+        if requested != "reference" && artifacts_dir.join("manifest.json").exists() {
+            return Ok(Box::new(PjrtBackend::load(artifacts_dir, model)?));
+        }
+    }
+    if requested == "pjrt" {
+        return Err(anyhow!(
+            "ADAPTER_SERVING_BACKEND=pjrt needs a build with `--features pjrt` \
+             and an artifact manifest in {}",
+            artifacts_dir.display()
+        ));
+    }
+
+    Ok(Box::new(load_reference(artifacts_dir, model)?))
+}
+
+/// [`load_backend`] for contexts that keep backends alive across worker
+/// threads — the [`BackendPool`]'s factory.  Only `Send` backends
+/// qualify: the reference backend is plain host memory and moves freely,
+/// while PJRT device handles are pinned to the thread that created them.
+/// Any selection that would resolve to PJRT — an explicit
+/// `ADAPTER_SERVING_BACKEND=pjrt`, or automatic selection on a
+/// `pjrt`-feature build with a manifest present — is therefore an error
+/// here rather than a silent fallback to a different backend than
+/// [`load_backend`] would pick; set `ADAPTER_SERVING_BACKEND=reference`
+/// to pool the reference backend explicitly (pooled PJRT needs the
+/// compiled-executable cache — see ROADMAP).
+pub fn load_send_backend(artifacts_dir: &Path, model: &str) -> Result<Box<dyn Backend + Send>> {
+    let requested = requested_backend()?;
+    if requested == "pjrt" {
+        return Err(anyhow!(
+            "ADAPTER_SERVING_BACKEND=pjrt cannot serve a backend pool: PJRT \
+             handles are pinned to their creating thread (unset the override \
+             or use the per-thread factory path)"
+        ));
+    }
+    #[cfg(feature = "pjrt")]
+    {
+        if requested.is_empty() && artifacts_dir.join("manifest.json").exists() {
+            return Err(anyhow!(
+                "automatic backend selection would pick PJRT here (manifest in {}), \
+                 but pooled execution needs Send backends; set \
+                 ADAPTER_SERVING_BACKEND=reference to pool the reference backend",
+                artifacts_dir.display()
+            ));
+        }
+    }
+    Ok(Box::new(load_reference(artifacts_dir, model)?))
 }
 
 /// Shared host-bank slot write (layout `[L, S, d, r]` / `[L, S, r, d]`;

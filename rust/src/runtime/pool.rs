@@ -1,0 +1,223 @@
+//! Model-keyed pool of execution backends.
+//!
+//! Constructing a [`Backend`](super::Backend) means materializing a whole
+//! model — synthesized backbone weights and an adapter bank for the
+//! reference backend, a client + compiled executables on PJRT.  The
+//! cluster runners fan one serving run out per GPU, and the epoch runner
+//! does that once per epoch, so the naive pattern ("build a fresh backend
+//! inside every worker") rebuilds the same model `gpus × epochs` times
+//! per horizon.  [`BackendPool`] replaces it with check-out/check-in:
+//!
+//! - [`BackendPool::checkout`] hands an idle backend for the model out of
+//!   the pool, constructing one only when none is idle (first epoch, or
+//!   more concurrent GPUs than ever before);
+//! - the returned [`PooledBackend`] guard checks the backend back in on
+//!   drop, so a horizon constructs **at most `gpus` backends total**
+//!   instead of `gpus` per epoch;
+//! - [`BackendPool::created`] / [`BackendPool::reused`] expose the
+//!   construction/reuse counters the epoch-runner tests and reports gate
+//!   on.
+//!
+//! Reuse is sound because a backend's mutable state is exactly the host
+//! adapter bank: every serving run begins by writing the bank slots for
+//! its own adapters and uploading them, so stale slots from a previous
+//! checkout are never read.  Pooled backends must be `Send` (they cross
+//! worker threads between checkouts); see
+//! [`load_send_backend`](super::load_send_backend) for why PJRT backends
+//! do not qualify yet.
+
+use super::Backend;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Constructs a backend for a model name (the pool's miss path).
+type Factory = Box<dyn Fn(&str) -> Result<Box<dyn Backend + Send>> + Send + Sync>;
+
+/// A thread-safe pool of idle backends keyed by model identity.
+///
+/// ```
+/// use adapter_serving::runtime::{BackendPool, Manifest};
+/// # fn main() -> anyhow::Result<()> {
+/// let pool = BackendPool::new(Manifest::default_dir());
+/// {
+///     let rt = pool.checkout("pico-llama")?; // constructs
+///     assert!(rt.meta().d_model > 0);
+/// } // drop returns it to the pool
+/// let _rt = pool.checkout("pico-llama")?; // reuses the same backend
+/// assert_eq!((pool.created(), pool.reused()), (1, 1));
+/// # Ok(())
+/// # }
+/// ```
+pub struct BackendPool {
+    factory: Factory,
+    idle: Mutex<HashMap<String, Vec<Box<dyn Backend + Send>>>>,
+    created: AtomicUsize,
+    reused: AtomicUsize,
+}
+
+impl BackendPool {
+    /// A pool whose miss path loads backends from `artifacts_dir` via
+    /// [`super::load_send_backend`] (the standard selection order minus
+    /// the thread-pinned PJRT path).
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> BackendPool {
+        let dir = artifacts_dir.into();
+        BackendPool::with_factory(Box::new(move |model| super::load_send_backend(&dir, model)))
+    }
+
+    /// A pool with an explicit construction function (tests, custom
+    /// backends).
+    pub fn with_factory(factory: Factory) -> BackendPool {
+        BackendPool {
+            factory,
+            idle: Mutex::new(HashMap::new()),
+            created: AtomicUsize::new(0),
+            reused: AtomicUsize::new(0),
+        }
+    }
+
+    /// Check a backend for `model` out of the pool, constructing one only
+    /// when no idle backend for that model exists.
+    pub fn checkout(&self, model: &str) -> Result<PooledBackend<'_>> {
+        let idle = self.idle.lock().unwrap().get_mut(model).and_then(Vec::pop);
+        let backend = match idle {
+            Some(b) => {
+                self.reused.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                let b = (self.factory)(model)?;
+                self.created.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+        };
+        Ok(PooledBackend { pool: self, model: model.to_string(), backend: Some(backend) })
+    }
+
+    /// Backends constructed so far (pool misses).
+    pub fn created(&self) -> usize {
+        self.created.load(Ordering::Relaxed)
+    }
+
+    /// Checkouts served by an already-constructed backend (pool hits).
+    pub fn reused(&self) -> usize {
+        self.reused.load(Ordering::Relaxed)
+    }
+
+    /// Idle backends currently checked in, across all models.
+    pub fn idle_count(&self) -> usize {
+        self.idle.lock().unwrap().values().map(Vec::len).sum()
+    }
+}
+
+impl std::fmt::Debug for BackendPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BackendPool")
+            .field("created", &self.created())
+            .field("reused", &self.reused())
+            .field("idle", &self.idle_count())
+            .finish()
+    }
+}
+
+/// A checked-out backend; returns itself to the pool on drop.
+pub struct PooledBackend<'p> {
+    pool: &'p BackendPool,
+    model: String,
+    backend: Option<Box<dyn Backend + Send>>,
+}
+
+impl Deref for PooledBackend<'_> {
+    type Target = dyn Backend + Send;
+
+    fn deref(&self) -> &Self::Target {
+        self.backend.as_deref().expect("present until drop")
+    }
+}
+
+impl DerefMut for PooledBackend<'_> {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        self.backend.as_deref_mut().expect("present until drop")
+    }
+}
+
+impl Drop for PooledBackend<'_> {
+    fn drop(&mut self) {
+        if let Some(b) = self.backend.take() {
+            self.pool
+                .idle
+                .lock()
+                .unwrap()
+                .entry(std::mem::take(&mut self.model))
+                .or_default()
+                .push(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{load_send_backend, Manifest};
+
+    fn counting_pool() -> BackendPool {
+        BackendPool::with_factory(Box::new(|model| {
+            load_send_backend(&Manifest::default_dir(), model)
+        }))
+    }
+
+    #[test]
+    fn checkout_reuses_checked_in_backends() {
+        let pool = counting_pool();
+        {
+            let a = pool.checkout("pico-llama").unwrap();
+            let b = pool.checkout("pico-llama").unwrap();
+            assert!(a.meta().d_model > 0 && b.meta().d_model > 0);
+            assert_eq!(pool.created(), 2, "two concurrent checkouts need two backends");
+        }
+        assert_eq!(pool.idle_count(), 2);
+        let _c = pool.checkout("pico-llama").unwrap();
+        assert_eq!(pool.created(), 2, "a checked-in backend is reused");
+        assert_eq!(pool.reused(), 1);
+        assert_eq!(pool.idle_count(), 1);
+    }
+
+    #[test]
+    fn models_pool_independently() {
+        let pool = counting_pool();
+        drop(pool.checkout("pico-llama").unwrap());
+        let _q = pool.checkout("pico-qwen").unwrap();
+        assert_eq!(pool.created(), 2, "different model identity misses the pool");
+        assert_eq!(pool.idle_count(), 1, "the llama backend stays idle");
+    }
+
+    #[test]
+    fn checkout_works_across_worker_threads() {
+        let pool = counting_pool();
+        // Same shape as the cluster runners: checkout inside scoped
+        // worker threads, check-in on drop, reuse on the next wave.
+        for _ in 0..3 {
+            std::thread::scope(|scope| {
+                for _ in 0..2 {
+                    scope.spawn(|| {
+                        let mut rt = pool.checkout("pico-llama").unwrap();
+                        assert!(rt.upload_bank().is_ok());
+                    });
+                }
+            });
+        }
+        assert!(pool.created() <= 2, "created {} > 2 workers", pool.created());
+        assert!(pool.reused() >= 4);
+    }
+
+    #[test]
+    fn unknown_model_errors_and_pool_stays_clean() {
+        let pool = counting_pool();
+        assert!(pool.checkout("no-such-model").is_err());
+        assert_eq!(pool.created(), 0);
+        assert_eq!(pool.idle_count(), 0);
+    }
+}

@@ -8,7 +8,7 @@ use adapter_serving::config::EngineConfig;
 use adapter_serving::dt::Calibration;
 use adapter_serving::ml::{self, dataset::GridSpec};
 use adapter_serving::placement::{
-    plan, MinGpus, MlEstimator, OracleEstimator, PerfEstimator, TwinEstimator,
+    plan, CachedEstimator, MinGpus, MlEstimator, OracleEstimator, PerfEstimator, TwinEstimator,
 };
 use adapter_serving::workload::{AdapterSpec, WorkloadSpec};
 
@@ -102,4 +102,27 @@ fn greedy_places_through_the_twin_estimator_directly() {
     let p = plan(&adapters, 4, &twin, &MinGpus).expect("light workload feasible via the DT");
     assert_eq!(p.assignment.len(), 16);
     assert!(p.gpus_used() >= 1);
+}
+
+#[test]
+fn cached_twin_greedy_is_bit_identical_and_memoizes() {
+    // The caching seam contract: memoizing the DT-in-the-loop probes must
+    // not change a single bit of the planning outcome or the estimates.
+    let twin = twin_estimator().with_horizon(5.0);
+    let cached = CachedEstimator::wrap(twin_estimator().with_horizon(5.0));
+    let adapters = WorkloadSpec::heterogeneous(24, &[8, 16], &[0.05, 0.025], 9);
+    let p = plan(&adapters, 4, &twin, &MinGpus).expect("feasible via the DT");
+    let pc = plan(&adapters, 4, &cached, &MinGpus).expect("feasible via the cached DT");
+    assert_eq!(p, pc, "cached and uncached twin planning must agree exactly");
+    // Even after planning warmed the memo, direct estimates replay the
+    // uncached twin bit-for-bit.
+    for a_max in [8usize, 16, 32] {
+        let t = twin.estimate(&adapters, a_max);
+        let c = cached.estimate(&adapters, a_max);
+        assert_eq!(t.throughput_tok_s.to_bits(), c.throughput_tok_s.to_bits());
+        assert_eq!(t.starved, c.starved);
+        assert_eq!(t.memory_error, c.memory_error);
+    }
+    let stats = cached.stats();
+    assert!(stats.hits > 0, "Alg. 1's adjacent probes must hit the memo: {stats:?}");
 }
