@@ -88,8 +88,8 @@ fn main() -> anyhow::Result<()> {
     let base = EngineConfig { model: model.to_string(), ..Default::default() };
     // One pool serves the Proposed run and both baselines: backends are
     // constructed once per concurrent GPU and reused across validations.
-    let pool = ctx.backend_pool();
-    let rep = cluster::run_on_engine(pool, &base, &planned.placement, &spec)?;
+    let opts = cluster::RunOptions::new().pool(ctx.backend_pool());
+    let rep = cluster::serve_on_engine(&base, &planned.placement, &spec, opts)?;
     println!(
         "      Proposed: {} GPUs, {:.0} tok/s, itl {:.2} ms, feasible={}",
         rep.gpus_used,
@@ -101,7 +101,7 @@ fn main() -> anyhow::Result<()> {
     // Baselines for contrast.
     let tpr = 385.0;
     if let Ok(p) = baselines::max_base(&adapters, 4, 1200.0, tpr, false) {
-        let r = cluster::run_on_engine(pool, &base, &p, &spec)?;
+        let r = cluster::serve_on_engine(&base, &p, &spec, opts)?;
         println!(
             "      MaxBase : {} GPUs, {:.0} tok/s, feasible={}",
             r.gpus_used,
@@ -110,7 +110,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
     if let Ok(p) = baselines::random(&adapters, 4, 5) {
-        let r = cluster::run_on_engine(pool, &base, &p, &spec)?;
+        let r = cluster::serve_on_engine(&base, &p, &spec, opts)?;
         println!(
             "      Random  : {} GPUs, {:.0} tok/s, feasible={}",
             r.gpus_used,

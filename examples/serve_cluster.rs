@@ -43,7 +43,8 @@ fn main() -> anyhow::Result<()> {
 
     let base = EngineConfig { model: model.to_string(), ..Default::default() };
     println!("serving (real engine per GPU, backends from the shared pool, in parallel) ...");
-    let rep = cluster::run_on_engine(ctx.backend_pool(), &base, &placement, &spec)?;
+    let opts = cluster::RunOptions::new().pool(ctx.backend_pool());
+    let rep = cluster::serve_on_engine(&base, &placement, &spec, opts)?;
     for (g, r) in rep.per_gpu.iter().enumerate() {
         if let Some(r) = r {
             println!("  gpu{g}: {}", r.summary());

@@ -1,6 +1,7 @@
 //! Hot-path micro-benchmarks (criterion-free harness, see util::bench):
 //! backend decode/prefill per bucket, KV window gather, bank write, twin
-//! iteration, parallel vs serial cluster validation, ML inference.
+//! iteration, parallel vs serial cluster validation and probe fan-out,
+//! ML inference.
 //! `cargo bench` → bench_output.txt.
 
 use adapter_serving::cluster;
@@ -8,7 +9,9 @@ use adapter_serving::config::EngineConfig;
 use adapter_serving::dt::{self, Calibration};
 use adapter_serving::engine::kv::RequestKv;
 use adapter_serving::ml;
-use adapter_serving::placement::Placement;
+use adapter_serving::placement::{
+    CachedEstimator, PerfEstimator, Placement, ProbeQuery, TwinEstimator,
+};
 use adapter_serving::runtime::{load_backend, Backend, Manifest};
 use adapter_serving::util::bench::bench_auto;
 use adapter_serving::util::rng::Rng;
@@ -89,32 +92,44 @@ fn main() -> anyhow::Result<()> {
         placement.assignment.insert(a.id, a.id % 4);
     }
     let base = EngineConfig::default();
+    const VARIANT: dt::LengthVariant = dt::LengthVariant::Original;
     let serial = bench_auto("cluster_twin_4gpu_serial", 2.0, || {
-        let _ = cluster::run_on_twin_with_workers(
-            &calib,
-            &base,
-            &placement,
-            &cl_spec,
-            dt::LengthVariant::Original,
-            1,
-        );
+        let opts = cluster::RunOptions::new().workers(1);
+        let _ = cluster::serve_on_twin(&calib, &base, &placement, &cl_spec, VARIANT, opts);
     });
     let workers = default_workers().min(4);
     let parallel = bench_auto(&format!("cluster_twin_4gpu_parallel_w{workers}"), 2.0, || {
-        let _ = cluster::run_on_twin_with_workers(
-            &calib,
-            &base,
-            &placement,
-            &cl_spec,
-            dt::LengthVariant::Original,
-            workers,
-        );
+        let opts = cluster::RunOptions::new().workers(workers);
+        let _ = cluster::serve_on_twin(&calib, &base, &placement, &cl_spec, VARIANT, opts);
     });
     println!(
         "bench cluster_twin_4gpu speedup: {:.2}x over serial ({} workers, {} cores)",
         serial.mean_s / parallel.mean_s.max(1e-12),
         workers,
         default_workers(),
+    );
+
+    // --- Probe fan-out: serial vs parallel estimate_batch -----------------
+    // A fresh CachedEstimator per iteration keeps every probe a miss, so
+    // this measures the fan-out itself, not memo hits.
+    let groups: Vec<Vec<_>> = (0..8u64)
+        .map(|g| WorkloadSpec::heterogeneous(12, &[8, 16], &[0.2, 0.1], 40 + g))
+        .collect();
+    let queries: Vec<ProbeQuery<'_>> =
+        groups.iter().map(|g| ProbeQuery { adapters: g, a_max: 32 }).collect();
+    let twin = || TwinEstimator::new(calib.clone(), base.clone()).horizon(5.0);
+    let probe_serial = bench_auto("probe_batch_8x12_serial", 2.0, || {
+        let est = CachedEstimator::wrap(twin()).probe_workers(1);
+        std::hint::black_box(est.estimate_batch(&queries));
+    });
+    let pw = default_workers().min(8);
+    let probe_parallel = bench_auto(&format!("probe_batch_8x12_parallel_w{pw}"), 2.0, || {
+        let est = CachedEstimator::wrap(twin()).probe_workers(pw);
+        std::hint::black_box(est.estimate_batch(&queries));
+    });
+    println!(
+        "bench probe_batch speedup: {:.2}x over serial ({pw} workers)",
+        probe_serial.mean_s / probe_parallel.mean_s.max(1e-12),
     );
 
     // --- ML inference -----------------------------------------------------

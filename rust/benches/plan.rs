@@ -1,0 +1,303 @@
+//! Planner scale-out trajectory benchmark → `BENCH_plan.json`.
+//!
+//! Per tier (small 64x8, medium 256x24, full 2048x192) this measures:
+//! plan and replan wall time through the trained RF estimator, simulated
+//! serving throughput of the resulting placement, and the serial vs
+//! parallel DT probe fan-out.  The full tier is ML-plan-only — probing
+//! the twin for 192 GPUs is exactly the cost the data-driven planner
+//! exists to avoid.
+//!
+//! Modes:
+//!
+//! ```sh
+//! cargo bench --bench plan                  # refresh BENCH_plan.json (all tiers)
+//! cargo bench --bench plan -- --tier small --tier medium --check
+//! ```
+//!
+//! The check gate always enforces the live medium-tier probe speedup
+//! (>=2x when >=4 cores are available); the >25% wall-time regression
+//! gate arms only once the checked-in baseline carries measured numbers
+//! (`"measured": true`).  The hand-authored bootstrap baseline
+//! (`"measured": false`) pins the schema without pinning a machine, and
+//! wall-time comparisons are normalized by the ratio of `ref_twin_sim_s`
+//! (one fixed twin simulation timed on both machines).
+
+use std::collections::BTreeMap;
+
+use adapter_serving::cluster::{self, RunOptions};
+use adapter_serving::config::EngineConfig;
+use adapter_serving::dt::{self, Calibration, LengthVariant};
+use adapter_serving::ml::{self, dataset::GridSpec, MlModels};
+use adapter_serving::placement::{
+    plan, replan, replan_with_ledger, CachedEstimator, MinGpus, MlEstimator, PerfEstimator,
+    ProbeQuery, ReplanLedger, TwinEstimator,
+};
+use adapter_serving::util::bench::bench_auto;
+use adapter_serving::util::json::Json;
+use adapter_serving::util::threadpool::default_workers;
+use adapter_serving::workload::{AdapterSpec, WorkloadSpec};
+use anyhow::{anyhow, bail};
+
+/// The checked-in baseline, at the repository root next to README.md.
+const BASELINE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_plan.json");
+
+/// Allowed wall-time growth over the baseline (the >25% regression gate).
+const REGRESSION_SLACK: f64 = 1.25;
+
+struct TierSpec {
+    name: &'static str,
+    adapters: usize,
+    gpus: usize,
+    /// Twin-backed metrics (simulated throughput + probe fan-out) are
+    /// only measured below full scale.
+    probe: bool,
+}
+
+const TIERS: [TierSpec; 3] = [
+    TierSpec { name: "small", adapters: 64, gpus: 8, probe: true },
+    TierSpec { name: "medium", adapters: 256, gpus: 24, probe: true },
+    TierSpec { name: "full", adapters: 2048, gpus: 192, probe: false },
+];
+
+fn main() -> anyhow::Result<()> {
+    let (tier_names, check) = parse_args()?;
+    let mode = if check { "check" } else { "refresh" };
+    println!("# plan-trajectory benchmark ({mode} mode)");
+    let calib = Calibration::default();
+    let base = EngineConfig::default();
+    println!("training the RF planning estimator (shared across tiers) ...");
+    let est = trained_estimator(&calib, &base);
+    let ref_live = ref_twin_sim(&calib);
+    let mut live: Vec<(String, Json)> = Vec::new();
+    for name in &tier_names {
+        let t = TIERS.iter().find(|t| t.name == name.as_str()).unwrap();
+        live.push((t.name.to_string(), run_tier(t, &est, &calib, &base)?));
+    }
+    if check {
+        check_against_baseline(ref_live, &live)
+    } else {
+        write_refresh(ref_live, live)
+    }
+}
+
+fn parse_args() -> anyhow::Result<(Vec<String>, bool)> {
+    let mut tiers = Vec::new();
+    let mut check = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--tier" => {
+                let t = args.next().ok_or_else(|| anyhow!("--tier needs a value"))?;
+                if !TIERS.iter().any(|s| s.name == t) {
+                    bail!("unknown tier '{t}' (expected small, medium or full)");
+                }
+                tiers.push(t);
+            }
+            "--check" => check = true,
+            "--bench" => {} // appended by `cargo bench`
+            other => bail!("unknown argument '{other}'"),
+        }
+    }
+    if tiers.is_empty() {
+        tiers = TIERS.iter().map(|t| t.name.to_string()).collect();
+    }
+    Ok((tiers, check))
+}
+
+/// The same quick training grid the integration tests use: enough signal
+/// for clear-cut feasibility calls at a bench-friendly training cost.
+fn trained_estimator(calib: &Calibration, base: &EngineConfig) -> MlEstimator {
+    let grid = GridSpec {
+        sizes: vec![8, 16, 32],
+        rates: vec![0.8, 0.2, 0.05, 0.0125],
+        adapter_counts: vec![8, 16, 32, 64, 96, 128],
+        a_max_values: vec![8, 16, 32, 64, 96, 128],
+        horizon_s: 10.0,
+        max_scenarios: 400,
+        seed: 99,
+    };
+    let samples = ml::dataset::generate(calib, base, &grid, 4);
+    let rf = ml::ModelType::RandomForest;
+    let (thr, _) = ml::train(&samples, ml::Task::Throughput, rf, true, 3);
+    let (st, _) = ml::train(&samples, ml::Task::Starvation, rf, true, 3);
+    MlEstimator::new(MlModels { throughput: thr, starvation: st, scaler: None })
+}
+
+/// One fixed twin simulation used as the cross-machine speed reference.
+fn ref_twin_sim(calib: &Calibration) -> f64 {
+    let cfg = EngineConfig { a_max: 32, s_max_rank: 16, ..Default::default() };
+    let spec = WorkloadSpec::sharegpt_like(
+        WorkloadSpec::heterogeneous(32, &[8, 16], &[0.1, 0.05], 5),
+        10.0,
+        4,
+    );
+    let r = bench_auto("ref_twin_sim_32x10s", 1.0, || {
+        std::hint::black_box(dt::run_twin(&cfg, calib, &spec, LengthVariant::Mean));
+    });
+    r.p50_s
+}
+
+/// A drifted copy of the workload: every 7th adapter's rate grows 1.5x,
+/// enough churn that the repair pass does real work on every tier.
+fn drifted(adapters: &[AdapterSpec]) -> Vec<AdapterSpec> {
+    let mut out = adapters.to_vec();
+    for a in out.iter_mut().filter(|a| a.id % 7 == 0) {
+        a.rate *= 1.5;
+    }
+    out
+}
+
+fn run_tier(
+    t: &TierSpec,
+    est: &MlEstimator,
+    calib: &Calibration,
+    base: &EngineConfig,
+) -> anyhow::Result<Json> {
+    println!("## tier {} ({} adapters / {} gpus)", t.name, t.adapters, t.gpus);
+    let adapters = WorkloadSpec::heterogeneous(t.adapters, &[8, 16], &[0.05, 0.025], 7);
+    let prev = plan(&adapters, t.gpus, est, &MinGpus)
+        .map_err(|e| anyhow!("tier {}: ML planning failed: {e}", t.name))?;
+    let plan_wall = bench_auto(&format!("plan_ml_{}", t.name), 1.0, || {
+        let _ = std::hint::black_box(plan(&adapters, t.gpus, est, &MinGpus));
+    });
+
+    let moved = drifted(&adapters);
+    let params = replan::ReplanParams::default();
+    let replan_wall = bench_auto(&format!("replan_ml_{}", t.name), 1.0, || {
+        // A fresh ledger per iteration keeps the repair work constant.
+        let mut ledger = ReplanLedger::new();
+        let out = replan_with_ledger(
+            Some(&prev),
+            &moved,
+            t.gpus,
+            est,
+            &params,
+            &MinGpus,
+            Some(&mut ledger),
+        );
+        let _ = std::hint::black_box(out);
+    });
+
+    let mut fields = vec![
+        ("adapters", Json::Num(t.adapters as f64)),
+        ("gpus", Json::Num(t.gpus as f64)),
+        ("plan_ml_wall_s", Json::Num(plan_wall.p50_s)),
+        ("replan_ml_wall_s", Json::Num(replan_wall.p50_s)),
+    ];
+    if t.probe {
+        let spec = WorkloadSpec::sharegpt_like(adapters.clone(), 10.0, 8);
+        let opts = RunOptions::new();
+        let rep =
+            cluster::serve_on_twin(calib, base, &prev, &spec, LengthVariant::Original, opts);
+
+        // Probe the planned groups through the twin, serially and fanned
+        // out; a fresh memo per iteration keeps every probe a miss.
+        let mut per_gpu: Vec<Vec<AdapterSpec>> = vec![Vec::new(); t.gpus];
+        for a in &adapters {
+            per_gpu[prev.assignment[&a.id]].push(a.clone());
+        }
+        let queries: Vec<ProbeQuery<'_>> = (0..t.gpus)
+            .filter(|&g| !per_gpu[g].is_empty())
+            .map(|g| ProbeQuery { adapters: &per_gpu[g], a_max: prev.a_max[g] })
+            .collect();
+        let twin = || TwinEstimator::new(calib.clone(), base.clone()).horizon(5.0);
+        let serial = bench_auto(&format!("probe_{}_serial", t.name), 1.0, || {
+            let cached = CachedEstimator::wrap(twin()).probe_workers(1);
+            std::hint::black_box(cached.estimate_batch(&queries));
+        });
+        let pw = default_workers().min(8);
+        let parallel = bench_auto(&format!("probe_{}_parallel_w{pw}", t.name), 1.0, || {
+            let cached = CachedEstimator::wrap(twin()).probe_workers(pw);
+            std::hint::black_box(cached.estimate_batch(&queries));
+        });
+        let speedup = serial.p50_s / parallel.p50_s.max(1e-12);
+        println!("bench probe_{} speedup: {speedup:.2}x over serial ({pw} workers)", t.name);
+        fields.push(("sim_throughput_tok_s", Json::Num(rep.total_throughput_tok_s)));
+        fields.push(("probe_serial_wall_s", Json::Num(serial.p50_s)));
+        fields.push(("probe_parallel_wall_s", Json::Num(parallel.p50_s)));
+        fields.push(("probe_speedup_x", Json::Num(speedup)));
+    }
+    Ok(Json::obj(fields))
+}
+
+fn check_against_baseline(ref_live: f64, live: &[(String, Json)]) -> anyhow::Result<()> {
+    let baseline = Json::read_file(std::path::Path::new(BASELINE))?;
+    let mut failures: Vec<String> = Vec::new();
+
+    // Live gate, independent of the baseline: the parallel probe fan-out
+    // must win >=2x at medium scale when the machine has >=4 cores.
+    if let Some((_, tier)) = live.iter().find(|(n, _)| n == "medium") {
+        let speedup = tier.get("probe_speedup_x").and_then(Json::as_f64).unwrap_or(0.0);
+        let cores = default_workers();
+        if cores >= 4 && speedup < 2.0 {
+            failures.push(format!("medium probe speedup {speedup:.2}x < 2.0x on {cores} cores"));
+        } else {
+            println!("check: medium probe speedup {speedup:.2}x ({cores} cores)");
+        }
+    }
+
+    let measured = baseline.get("measured").and_then(Json::as_bool).unwrap_or(false);
+    if !measured {
+        println!("check: baseline is the unmeasured bootstrap; wall-time gate skipped");
+    } else {
+        let ref_base = baseline.get("ref_twin_sim_s").and_then(Json::as_f64).unwrap_or(0.0);
+        let machine = if ref_base > 0.0 { ref_live / ref_base } else { 1.0 };
+        println!("check: machine factor {machine:.2}x vs the baseline machine");
+        for (name, tier) in live {
+            let Some(b) = baseline.get("tiers").and_then(|ts| ts.get(name)) else {
+                println!("check: tier {name} absent from the baseline; skipped");
+                continue;
+            };
+            for metric in ["plan_ml_wall_s", "replan_ml_wall_s"] {
+                let lv = tier.get(metric).and_then(Json::as_f64);
+                let bv = b.get(metric).and_then(Json::as_f64);
+                let (Some(lv), Some(bv)) = (lv, bv) else { continue };
+                let allowed = bv * REGRESSION_SLACK * machine;
+                if lv > allowed {
+                    failures.push(format!(
+                        "{name}.{metric}: {lv:.3}s > allowed {allowed:.3}s (baseline {bv:.3}s)"
+                    ));
+                } else {
+                    println!("check: {name}.{metric} {lv:.3}s <= {allowed:.3}s");
+                }
+            }
+        }
+    }
+
+    if failures.is_empty() {
+        println!("check: PASS");
+        Ok(())
+    } else {
+        for f in &failures {
+            eprintln!("check: FAIL {f}");
+        }
+        bail!("plan bench regression gate failed ({} checks)", failures.len())
+    }
+}
+
+fn write_refresh(ref_live: f64, live: Vec<(String, Json)>) -> anyhow::Result<()> {
+    let path = std::path::Path::new(BASELINE);
+    let old = Json::read_file(path).ok();
+    // Partial refreshes keep the other tiers' previous numbers; the file
+    // is only marked measured once every tier ran live (or already was).
+    let mut tiers: BTreeMap<String, Json> = old
+        .as_ref()
+        .and_then(|j| j.get("tiers").and_then(Json::as_obj).cloned())
+        .unwrap_or_default();
+    let prev_measured =
+        old.as_ref().and_then(|j| j.get("measured").and_then(Json::as_bool)).unwrap_or(false);
+    let all_live = TIERS.iter().all(|t| live.iter().any(|(n, _)| n == t.name));
+    for (name, tier) in live {
+        tiers.insert(name, tier);
+    }
+    let measured = prev_measured || all_live;
+    let doc = Json::obj(vec![
+        ("measured", Json::Bool(measured)),
+        ("ref_twin_sim_s", Json::Num(ref_live)),
+        ("schema", Json::Num(1.0)),
+        ("tiers", Json::Obj(tiers)),
+    ]);
+    doc.write_file(path)?;
+    println!("wrote {} (measured: {measured})", path.display());
+    Ok(())
+}

@@ -26,7 +26,69 @@ use crate::placement::Placement;
 use crate::runtime::BackendPool;
 use crate::util::threadpool::{default_workers, parallel_map};
 use crate::workload::WorkloadSpec;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+
+/// Options for the one-shot cluster runners [`serve_on_engine`] and
+/// [`serve_on_twin`]: worker-thread count, engine backend pool, and an
+/// optional workload-seed override.
+///
+/// `Default` reproduces the historical behavior of the
+/// `run_on_engine`/`run_on_twin` pair: [`default_workers`] threads, no
+/// pool (the engine path requires one via [`RunOptions::pool`]), and the
+/// workload's own seed.  Bare builder setters follow the house
+/// convention (see `TwinEstimator::horizon`).
+///
+/// ```
+/// use adapter_serving::cluster::RunOptions;
+/// let opts = RunOptions::new().workers(1).seed(42);
+/// assert_eq!(opts.workers, 1);
+/// assert_eq!(opts.seed, Some(42));
+/// assert!(opts.pool.is_none());
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct RunOptions<'a> {
+    /// Worker threads for the per-GPU fan-out.  `1` recovers the serial
+    /// path; twin results are identical for any count, engine latencies
+    /// are measured wall time and may time-share cores when parallel.
+    pub workers: usize,
+    /// Backend pool for the engine path ([`serve_on_engine`] fails
+    /// without one; the twin path ignores it).
+    pub pool: Option<&'a BackendPool>,
+    /// Override for the workload seed used to derive per-GPU subset
+    /// seeds; `None` uses `spec.seed` (the historical behavior).
+    pub seed: Option<u64>,
+}
+
+impl Default for RunOptions<'_> {
+    fn default() -> Self {
+        RunOptions { workers: default_workers(), pool: None, seed: None }
+    }
+}
+
+impl<'a> RunOptions<'a> {
+    /// Alias for [`RunOptions::default`], reading better in call chains.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the worker-thread count (clamped to at least 1).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Provide the backend pool the engine path checks GPUs out of.
+    pub fn pool(mut self, pool: &'a BackendPool) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Override the workload seed for per-GPU subset derivation.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+}
 
 /// Aggregated result of serving one workload under one placement.
 #[derive(Debug, Clone)]
@@ -120,13 +182,14 @@ fn gpu_jobs(placement: &Placement) -> Vec<(usize, Vec<usize>)> {
 /// Validate a placement on the real engine (the paper's methodology: "the
 /// pipeline output is validated by executing the real LLM-adapter serving
 /// system").  Per-GPU engines are independent, so the runs execute in
-/// parallel; each worker checks a backend for `base.model` out of `pool`
-/// and returns it when its GPU finishes, so one pool serves any number of
-/// validations (and epoch horizons) with at most
-/// max-concurrent-GPUs constructions.
+/// parallel; each worker checks a backend for `base.model` out of the
+/// pool in `opts` and returns it when its GPU finishes, so one pool
+/// serves any number of validations (and epoch horizons) with at most
+/// max-concurrent-GPUs constructions.  Errors when `opts` carries no
+/// pool.
 ///
 /// ```no_run
-/// use adapter_serving::cluster::run_on_engine;
+/// use adapter_serving::cluster::{serve_on_engine, RunOptions};
 /// use adapter_serving::config::EngineConfig;
 /// use adapter_serving::placement::Placement;
 /// use adapter_serving::runtime::{BackendPool, Manifest};
@@ -138,37 +201,26 @@ fn gpu_jobs(placement: &Placement) -> Vec<(usize, Vec<usize>)> {
 ///     p.assignment.insert(a.id, 0);
 /// }
 /// let pool = BackendPool::new(Manifest::default_dir());
-/// let rep = run_on_engine(&pool, &EngineConfig::default(), &p, &spec)?;
+/// let opts = RunOptions::new().pool(&pool);
+/// let rep = serve_on_engine(&EngineConfig::default(), &p, &spec, opts)?;
 /// println!("served {:.0} tok/s on {} GPU(s)", rep.total_throughput_tok_s, rep.gpus_used);
 /// # Ok(())
 /// # }
 /// ```
-pub fn run_on_engine(
-    pool: &BackendPool,
+pub fn serve_on_engine(
     base: &EngineConfig,
     placement: &Placement,
     spec: &WorkloadSpec,
+    opts: RunOptions<'_>,
 ) -> Result<ClusterReport> {
-    run_on_engine_with_workers(pool, base, placement, spec, default_workers())
-}
-
-/// [`run_on_engine`] with an explicit worker count.  `1` recovers the
-/// serial measurement path: engine latencies are *measured* wall time, so
-/// concurrent runs time-share cores and inflate each other's measurements;
-/// use serial when validation metrics must match a dedicated-GPU run.
-pub fn run_on_engine_with_workers(
-    pool: &BackendPool,
-    base: &EngineConfig,
-    placement: &Placement,
-    spec: &WorkloadSpec,
-    workers: usize,
-) -> Result<ClusterReport> {
+    let pool = opts.pool.ok_or_else(|| anyhow!("serve_on_engine needs RunOptions::pool(&pool)"))?;
     let t0 = std::time::Instant::now();
     let jobs = gpu_jobs(placement);
-    let workers = workers.min(jobs.len().max(1));
+    let workers = opts.workers.min(jobs.len().max(1));
+    let seed_base = opts.seed.unwrap_or(spec.seed);
     let results: Vec<Result<Option<Report>>> = parallel_map(jobs, workers, |(g, ids)| {
         let mut rt = pool.checkout(&base.model)?;
-        let sub = spec.subset(&ids, spec.seed ^ (g as u64) << 8);
+        let sub = spec.subset(&ids, seed_base ^ (g as u64) << 8);
         let cfg = gpu_config(base, placement, g, spec);
         let mut engine = Engine::new(cfg, &mut *rt);
         let res = engine.run(&sub)?;
@@ -182,11 +234,13 @@ pub fn run_on_engine_with_workers(
     Ok(ClusterReport::aggregate(per_gpu, t0.elapsed().as_secs_f64(), used))
 }
 
-/// Validate a placement on the Digital Twin (fast path for sweeps),
-/// parallelized across GPUs with the default worker count.
+/// Validate a placement on the Digital Twin (fast path for sweeps).
+/// Results are identical for any [`RunOptions::workers`] count — twin
+/// runs are deterministic and [`parallel_map`] preserves order and
+/// per-GPU seeds.
 ///
 /// ```
-/// use adapter_serving::cluster::run_on_twin;
+/// use adapter_serving::cluster::{serve_on_twin, RunOptions};
 /// use adapter_serving::config::EngineConfig;
 /// use adapter_serving::dt::{Calibration, LengthVariant};
 /// use adapter_serving::placement::Placement;
@@ -196,11 +250,57 @@ pub fn run_on_engine_with_workers(
 /// for a in &spec.adapters {
 ///     p.assignment.insert(a.id, a.id % 2);
 /// }
-/// let rep = run_on_twin(&Calibration::default(), &EngineConfig::default(), &p, &spec,
-///                       LengthVariant::Original);
+/// let rep = serve_on_twin(&Calibration::default(), &EngineConfig::default(), &p, &spec,
+///                         LengthVariant::Original, RunOptions::new());
 /// assert_eq!(rep.gpus_used, 2);
 /// assert!(rep.total_throughput_tok_s > 0.0);
 /// ```
+pub fn serve_on_twin(
+    calib: &Calibration,
+    base: &EngineConfig,
+    placement: &Placement,
+    spec: &WorkloadSpec,
+    variant: LengthVariant,
+    opts: RunOptions<'_>,
+) -> ClusterReport {
+    let t0 = std::time::Instant::now();
+    let jobs = gpu_jobs(placement);
+    let workers = opts.workers.min(jobs.len().max(1));
+    let seed_base = opts.seed.unwrap_or(spec.seed);
+    let per_gpu: Vec<Option<Report>> = parallel_map(jobs, workers, |(g, ids)| {
+        let sub = spec.subset(&ids, seed_base ^ (g as u64) << 8);
+        let cfg = gpu_config(base, placement, g, spec);
+        crate::dt::run_twin(&cfg, calib, &sub, variant).report
+    });
+    let used = placement.gpus_used();
+    ClusterReport::aggregate(per_gpu, t0.elapsed().as_secs_f64(), used)
+}
+
+/// Deprecated spelling of [`serve_on_engine`] (default workers).
+#[deprecated(note = "use `serve_on_engine` with `RunOptions::new().pool(&pool)`")]
+pub fn run_on_engine(
+    pool: &BackendPool,
+    base: &EngineConfig,
+    placement: &Placement,
+    spec: &WorkloadSpec,
+) -> Result<ClusterReport> {
+    serve_on_engine(base, placement, spec, RunOptions::new().pool(pool))
+}
+
+/// Deprecated spelling of [`serve_on_engine`] (explicit workers).
+#[deprecated(note = "use `serve_on_engine` with `RunOptions::new().pool(&pool).workers(n)`")]
+pub fn run_on_engine_with_workers(
+    pool: &BackendPool,
+    base: &EngineConfig,
+    placement: &Placement,
+    spec: &WorkloadSpec,
+    workers: usize,
+) -> Result<ClusterReport> {
+    serve_on_engine(base, placement, spec, RunOptions::new().pool(pool).workers(workers))
+}
+
+/// Deprecated spelling of [`serve_on_twin`] (default workers).
+#[deprecated(note = "use `serve_on_twin` with `RunOptions::new()`")]
 pub fn run_on_twin(
     calib: &Calibration,
     base: &EngineConfig,
@@ -208,12 +308,11 @@ pub fn run_on_twin(
     spec: &WorkloadSpec,
     variant: LengthVariant,
 ) -> ClusterReport {
-    run_on_twin_with_workers(calib, base, placement, spec, variant, default_workers())
+    serve_on_twin(calib, base, placement, spec, variant, RunOptions::new())
 }
 
-/// [`run_on_twin`] with an explicit worker count (`1` = the serial path;
-/// results are identical for any worker count — twin runs are
-/// deterministic and [`parallel_map`] preserves order and per-GPU seeds).
+/// Deprecated spelling of [`serve_on_twin`] (explicit workers).
+#[deprecated(note = "use `serve_on_twin` with `RunOptions::new().workers(n)`")]
 pub fn run_on_twin_with_workers(
     calib: &Calibration,
     base: &EngineConfig,
@@ -222,16 +321,7 @@ pub fn run_on_twin_with_workers(
     variant: LengthVariant,
     workers: usize,
 ) -> ClusterReport {
-    let t0 = std::time::Instant::now();
-    let jobs = gpu_jobs(placement);
-    let workers = workers.min(jobs.len().max(1));
-    let per_gpu: Vec<Option<Report>> = parallel_map(jobs, workers, |(g, ids)| {
-        let sub = spec.subset(&ids, spec.seed ^ (g as u64) << 8);
-        let cfg = gpu_config(base, placement, g, spec);
-        crate::dt::run_twin(&cfg, calib, &sub, variant).report
-    });
-    let used = placement.gpus_used();
-    ClusterReport::aggregate(per_gpu, t0.elapsed().as_secs_f64(), used)
+    serve_on_twin(calib, base, placement, spec, variant, RunOptions::new().workers(workers))
 }
 
 #[cfg(test)]
@@ -246,12 +336,13 @@ mod tests {
         for a in &spec.adapters {
             placement.assignment.insert(a.id, a.id % 2);
         }
-        let rep = run_on_twin(
+        let rep = serve_on_twin(
             &Calibration::default(),
             &EngineConfig::default(),
             &placement,
             &spec,
             LengthVariant::Original,
+            RunOptions::new(),
         );
         assert_eq!(rep.gpus_used, 2);
         assert!(rep.feasible(), "starved={} mem={}", rep.starved, rep.memory_error);
@@ -272,22 +363,11 @@ mod tests {
         }
         let calib = Calibration::default();
         let base = EngineConfig::default();
-        let serial = run_on_twin_with_workers(
-            &calib,
-            &base,
-            &placement,
-            &spec,
-            LengthVariant::Original,
-            1,
-        );
-        let parallel = run_on_twin_with_workers(
-            &calib,
-            &base,
-            &placement,
-            &spec,
-            LengthVariant::Original,
-            4,
-        );
+        let o1 = RunOptions::new().workers(1);
+        let o4 = RunOptions::new().workers(4);
+        let serial = serve_on_twin(&calib, &base, &placement, &spec, LengthVariant::Original, o1);
+        let parallel =
+            serve_on_twin(&calib, &base, &placement, &spec, LengthVariant::Original, o4);
         assert_eq!(serial.gpus_used, parallel.gpus_used);
         assert_eq!(serial.memory_error, parallel.memory_error);
         assert_eq!(serial.starved, parallel.starved);
@@ -328,13 +408,14 @@ mod tests {
         }
         let base = EngineConfig { a_max: 3, s_max_rank: 8, ..Default::default() };
         let pool = BackendPool::new(std::path::Path::new("/nonexistent"));
-        let rep = run_on_engine(&pool, &base, &placement, &spec).expect("cluster run");
+        let opts = RunOptions::new().pool(&pool);
+        let rep = serve_on_engine(&base, &placement, &spec, opts).expect("cluster run");
         assert_eq!(rep.per_gpu.len(), 2);
         assert_eq!(rep.gpus_used, 2);
         assert!(!rep.memory_error);
         assert_eq!(pool.created(), 2, "one backend per concurrent GPU");
         // A second validation through the same pool constructs nothing.
-        let rep2 = run_on_engine(&pool, &base, &placement, &spec).expect("cluster rerun");
+        let rep2 = serve_on_engine(&base, &placement, &spec, opts).expect("cluster rerun");
         assert_eq!(rep2.gpus_used, 2);
         assert_eq!(pool.created(), 2, "second validation reuses pooled backends");
         assert!(pool.reused() >= 2);
@@ -349,14 +430,68 @@ mod tests {
         for a in &spec.adapters {
             placement.assignment.insert(a.id, 0);
         }
-        let rep = run_on_twin(
+        let rep = serve_on_twin(
             &Calibration::default(),
             &EngineConfig::default(),
             &placement,
             &spec,
             LengthVariant::Original,
+            RunOptions::new(),
         );
         assert!(rep.memory_error);
         assert!(!rep.feasible());
+    }
+
+    /// The `RunOptions::seed` override must land exactly where `spec.seed`
+    /// used to: serving `spec` with `.seed(s)` is bit-identical to serving
+    /// a copy of `spec` whose own seed is `s`.
+    #[test]
+    fn seed_override_matches_a_spec_with_that_seed() {
+        let adapters = WorkloadSpec::homogeneous(8, 8, 0.2);
+        let spec = WorkloadSpec::fixed_len(adapters, 64, 32, 10.0, 3);
+        let mut reseeded = spec.clone();
+        reseeded.seed = 99;
+        let mut placement = Placement { assignment: Default::default(), a_max: vec![4, 4] };
+        for a in &spec.adapters {
+            placement.assignment.insert(a.id, a.id % 2);
+        }
+        let calib = Calibration::default();
+        let base = EngineConfig::default();
+        let with_override = RunOptions::new().workers(1).seed(99);
+        let a =
+            serve_on_twin(&calib, &base, &placement, &spec, LengthVariant::Original, with_override);
+        let b = serve_on_twin(
+            &calib,
+            &base,
+            &placement,
+            &reseeded,
+            LengthVariant::Original,
+            RunOptions::new().workers(1),
+        );
+        assert_eq!(a.total_throughput_tok_s.to_bits(), b.total_throughput_tok_s.to_bits());
+        assert_eq!(a.itl_mean_s.to_bits(), b.itl_mean_s.to_bits());
+        assert_eq!(a.completed_requests(), b.completed_requests());
+    }
+
+    /// Satellite gate: the one-release deprecation shims must stay
+    /// behaviorally identical to the `RunOptions` path they wrap.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_run_shims_match_serve_functions() {
+        let adapters = WorkloadSpec::homogeneous(8, 8, 0.2);
+        let spec = WorkloadSpec::fixed_len(adapters, 64, 32, 10.0, 3);
+        let mut placement = Placement { assignment: Default::default(), a_max: vec![4, 4] };
+        for a in &spec.adapters {
+            placement.assignment.insert(a.id, a.id % 2);
+        }
+        let calib = Calibration::default();
+        let base = EngineConfig::default();
+        let old =
+            run_on_twin_with_workers(&calib, &base, &placement, &spec, LengthVariant::Original, 1);
+        let o1 = RunOptions::new().workers(1);
+        let new = serve_on_twin(&calib, &base, &placement, &spec, LengthVariant::Original, o1);
+        assert_eq!(old.total_throughput_tok_s.to_bits(), new.total_throughput_tok_s.to_bits());
+        assert_eq!(old.itl_mean_s.to_bits(), new.itl_mean_s.to_bits());
+        assert_eq!(old.gpus_used, new.gpus_used);
     }
 }

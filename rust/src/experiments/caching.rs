@@ -64,10 +64,12 @@ fn validate(
             let rep = if on_engine {
                 // Per-GPU backends checked out of the context's shared
                 // pool (reused across every scenario of the experiment).
-                cluster::run_on_engine(ctx.backend_pool(), base, p, spec)?
+                let opts = cluster::RunOptions::new().pool(ctx.backend_pool());
+                cluster::serve_on_engine(base, p, spec, opts)?
             } else {
                 let calib = ctx.calibration(&mut *rt)?;
-                cluster::run_on_twin(&calib, base, p, spec, LengthVariant::Original)
+                let opts = cluster::RunOptions::new();
+                cluster::serve_on_twin(&calib, base, p, spec, LengthVariant::Original, opts)
             };
             let status = if rep.memory_error {
                 "oom"

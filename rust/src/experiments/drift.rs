@@ -149,17 +149,21 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
                     format!("{:.1}", r.incoming_tok_s),
                     format!("{:.3}", r.itl_mean_s * 1e3),
                     format!("{:.0}", r.backlog_tokens),
+                    r.groups_reprobed.to_string(),
+                    r.groups_reused.to_string(),
                     epoch_status(r).to_string(),
                 ]);
             }
             println!(
                 "  drift {oname}/{pname}: {} GPU-epochs, mean ITL {:.2} ms, {} migrations \
-                 ({:.1} ms), {} infeasible epochs",
+                 ({:.1} ms), {} infeasible epochs, {} groups re-probed / {} ledger-reused",
                 rep.gpu_epochs,
                 rep.mean_itl_s * 1e3,
                 rep.total_migrations,
                 rep.total_migration_cost_s * 1e3,
-                rep.infeasible_epochs
+                rep.infeasible_epochs,
+                rep.total_groups_reprobed,
+                rep.total_groups_reused
             );
             reports.push((format!("{oname}/{pname}"), rep));
         }
@@ -197,6 +201,8 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
             "incoming",
             "itl_ms",
             "backlog",
+            "reprobed",
+            "reused",
             "status",
         ],
         &rows,
@@ -217,6 +223,8 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
             "incoming_tok_s",
             "itl_ms",
             "backlog_tokens",
+            "groups_reprobed",
+            "groups_reused",
             "status",
         ],
         &rows,
@@ -259,6 +267,8 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
                     ("mean_throughput_tok_s", Json::Num(rep.mean_throughput_tok_s)),
                     ("mean_itl_s", Json::Num(rep.mean_itl_s)),
                     ("final_backlog_tokens", Json::Num(rep.final_backlog_tokens)),
+                    ("groups_reprobed", Json::Num(rep.total_groups_reprobed as f64)),
+                    ("groups_reused", Json::Num(rep.total_groups_reused as f64)),
                 ]),
             ));
         }

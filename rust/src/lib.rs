@@ -25,9 +25,11 @@
 //!
 //! The three-layer public API is *workload* ([`workload::WorkloadSpec`],
 //! [`workload::drift::DriftSpec`]) → *placement* ([`placement::Placement`])
-//! → *cluster* ([`cluster::run_on_engine`] / [`cluster::run_on_twin`] /
+//! → *cluster* ([`cluster::serve_on_engine`] / [`cluster::serve_on_twin`],
+//! both driven by [`cluster::RunOptions`], and the rolling-horizon
 //! [`cluster::epochs::run_epochs_on_twin`]); [`pipeline::Pipeline`] drives
 //! the data-driven chain that produces the placement in the first place.
+//! The [`prelude`] re-exports this surface for one-line imports.
 //!
 //! See DESIGN.md for the system inventory, the backend feature matrix and
 //! the per-experiment index; `#![warn(missing_docs)]` plus the CI docs job
@@ -51,3 +53,24 @@ pub mod placement;
 pub mod runtime;
 pub mod util;
 pub mod workload;
+
+/// One-line import of the pipeline-facing surface: planning seams
+/// ([`placement::PerfEstimator`], [`placement::Objective`] and their
+/// stock implementations), the typed pipeline, and the cluster runners'
+/// options struct.
+///
+/// ```
+/// use adapter_serving::prelude::*;
+/// let opts = RunOptions::new().workers(1);
+/// assert_eq!(MinGpus.name(), "min-gpus");
+/// assert_eq!(opts.workers, 1);
+/// ```
+pub mod prelude {
+    pub use crate::cluster::RunOptions;
+    pub use crate::pipeline::Pipeline;
+    pub use crate::placement::{
+        CachedEstimator, Estimate, MinGpus, MinLatency, Objective, PerfEstimator, Placement,
+        ProbeQuery, TwinEstimator,
+    };
+    pub use crate::workload::WorkloadSpec;
+}

@@ -590,8 +590,12 @@ impl Pipeline {
         &self,
         calibration: &Calibration,
     ) -> Result<(CachedEstimator, PathBuf)> {
-        let est =
-            CachedEstimator::wrap(TwinEstimator::new(calibration.clone(), self.base_config()));
+        // Bounded so a full-scale sweep cannot outgrow memory; ~256k
+        // entries is far beyond any single pipeline's probe footprint,
+        // so the bound never alters small-run behavior or warm starts.
+        const PROBE_MEMO_CAPACITY: usize = 262_144;
+        let twin = TwinEstimator::new(calibration.clone(), self.base_config());
+        let est = CachedEstimator::wrap(twin).capacity(PROBE_MEMO_CAPACITY);
         let path = self.probe_memo_path(calibration);
         if path.exists() {
             // A corrupt artifact is a cold start, not a failure.
@@ -672,14 +676,16 @@ impl Pipeline {
     ) -> Result<Validated> {
         let base = self.base_config();
         let report = if self.validate_on_engine {
-            cluster::run_on_engine(self.backend_pool(), &base, &planned.placement, spec)?
+            let opts = cluster::RunOptions::new().pool(self.backend_pool());
+            cluster::serve_on_engine(&base, &planned.placement, spec, opts)?
         } else {
-            cluster::run_on_twin(
+            cluster::serve_on_twin(
                 calibration,
                 &base,
                 &planned.placement,
                 spec,
                 LengthVariant::Original,
+                cluster::RunOptions::new(),
             )
         };
         Ok(Validated { report, on_engine: self.validate_on_engine })

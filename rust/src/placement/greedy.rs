@@ -15,7 +15,7 @@
 //! wrapped in a [`crate::placement::CachedEstimator`]: results are
 //! bit-identical, duplicate probes are memo hits.
 
-use super::estimator::PerfEstimator;
+use super::estimator::{PerfEstimator, ProbeQuery};
 use super::{Placement, PlacementError, PlacementResult, TESTING_POINTS};
 use crate::workload::AdapterSpec;
 use std::collections::VecDeque;
@@ -69,11 +69,18 @@ fn test_allocation(g: &GpuState, est: &dyn PerfEstimator) -> (bool, usize) {
     let all = g.all();
     let p = if g.a_max == 0 { TESTING_POINTS[0] } else { g.a_max };
     let p_next = next_gpu_config(p);
-    let t_p = est.estimate(&all, p).throughput_tok_s;
+    // Both candidate points go down as one batch — a parallel-capable
+    // estimator (CachedEstimator) probes them concurrently; the reduction
+    // below stays in candidate order, so the choice is bit-identical to
+    // the serial two-call sequence.
+    let mut queries = vec![ProbeQuery { adapters: &all, a_max: p }];
+    if let Some(pn) = p_next {
+        queries.push(ProbeQuery { adapters: &all, a_max: pn });
+    }
+    let probed = est.estimate_batch(&queries);
     let p_best = match p_next {
         Some(pn) => {
-            let t_next = est.estimate(&all, pn).throughput_tok_s;
-            if t_p > t_next {
+            if probed[0].throughput_tok_s > probed[1].throughput_tok_s {
                 p
             } else {
                 pn

@@ -6,7 +6,7 @@
 //! latency is this algorithm's built-in goal — it *is* the
 //! [`crate::placement::MinLatency`] objective's planner.
 
-use super::estimator::PerfEstimator;
+use super::estimator::{PerfEstimator, ProbeQuery};
 use super::{Placement, PlacementError, PlacementResult};
 use crate::workload::AdapterSpec;
 
@@ -32,13 +32,15 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, est: &dyn PerfEstimator) -> 
     // Post-hoc validation: any predicted starvation or memory error makes
     // the whole allocation infeasible (the ML training data folds memory
     // errors into the starvation label; other estimators flag them apart).
-    for g in 0..gpus {
-        if per_gpu[g].is_empty() {
-            continue;
-        }
-        if !est.estimate(&per_gpu[g], placement.a_max[g]).feasible() {
-            return Err(PlacementError::Starvation);
-        }
+    // All per-GPU vetoes go down as one batch — a parallel-capable
+    // estimator probes them concurrently; the feasibility reduction stays
+    // in GPU order, so the verdict is bit-identical to the serial loop.
+    let queries: Vec<ProbeQuery<'_>> = (0..gpus)
+        .filter(|&g| !per_gpu[g].is_empty())
+        .map(|g| ProbeQuery { adapters: &per_gpu[g], a_max: placement.a_max[g] })
+        .collect();
+    if est.estimate_batch(&queries).iter().any(|e| !e.feasible()) {
+        return Err(PlacementError::Starvation);
     }
     Ok(placement)
 }

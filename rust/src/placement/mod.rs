@@ -30,9 +30,10 @@ pub mod replan;
 
 pub use estimator::{
     probe_key, CacheStats, CachedEstimator, Estimate, MlEstimator, OracleEstimator,
-    PerfEstimator, TwinEstimator,
+    PerfEstimator, ProbeQuery, TwinEstimator,
 };
 pub use objective::{plan, Candidate, MinGpus, MinLatency, Objective};
+pub use replan::{replan_with_ledger, ReplanLedger};
 
 use crate::workload::AdapterSpec;
 use std::collections::HashMap;

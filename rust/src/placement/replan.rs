@@ -31,9 +31,15 @@
 //! consecutive epochs of a drift horizon re-probe near-identical ones —
 //! so DT-in-the-loop replanning should share one
 //! [`crate::placement::CachedEstimator`] across the whole horizon;
-//! results stay bit-identical to the uncached path.
+//! results stay bit-identical to the uncached path.  Candidate probes go
+//! down as [`PerfEstimator::estimate_batch`] batches (parallel under a
+//! [`crate::placement::CachedEstimator`], with deterministic reduction),
+//! and a [`ReplanLedger`] carried across epochs makes re-probing
+//! *incremental*: only groups whose `(rank, rate)` composition actually
+//! drifted since the last epoch pay estimator cost
+//! ([`replan_with_ledger`]).
 
-use super::estimator::PerfEstimator;
+use super::estimator::{Estimate, PerfEstimator, ProbeQuery};
 use super::objective::{better_than, Candidate, Objective};
 use super::{greedy, Placement, PlacementError, TESTING_POINTS};
 use crate::dt::Calibration;
@@ -132,16 +138,19 @@ pub struct ReplanOutcome {
     pub added: usize,
     /// Previous-placement adapters absent from the new workload.
     pub removed: usize,
+    /// Non-empty sticky groups that paid estimator probes in the repair
+    /// pass (their composition drifted, or no ledger was supplied).
+    pub groups_reprobed: usize,
+    /// Non-empty sticky groups whose composition matched the
+    /// [`ReplanLedger`]: their `A_max` was reused with zero probes.
+    pub groups_reused: usize,
 }
 
-/// Best feasible `A_max` testing point for an adapter group:
-/// `(a_max, predicted_throughput)`, or `None` when every testing point
-/// predicts starvation or a memory error (the group cannot be served by
-/// one GPU).
-fn probe(group: &[AdapterSpec], est: &dyn PerfEstimator) -> Option<(usize, f64)> {
+/// Serial reduction of one group's estimates at every testing point (in
+/// point order): best feasible `(a_max, predicted_throughput)`.
+fn reduce_points(estimates: &[Estimate]) -> Option<(usize, f64)> {
     let mut best: Option<(usize, f64)> = None;
-    for &p in TESTING_POINTS.iter() {
-        let e = est.estimate(group, p);
+    for (&p, e) in TESTING_POINTS.iter().zip(estimates) {
         if !e.feasible() {
             continue;
         }
@@ -154,6 +163,93 @@ fn probe(group: &[AdapterSpec], est: &dyn PerfEstimator) -> Option<(usize, f64)>
         }
     }
     best
+}
+
+/// Best feasible `A_max` testing point for an adapter group:
+/// `(a_max, predicted_throughput)`, or `None` when every testing point
+/// predicts starvation or a memory error (the group cannot be served by
+/// one GPU).  All testing points go down as one
+/// [`PerfEstimator::estimate_batch`], so a parallel-capable estimator
+/// probes them concurrently; the reduction stays in point order.
+fn probe(group: &[AdapterSpec], est: &dyn PerfEstimator) -> Option<(usize, f64)> {
+    probe_batch(&[group], est).pop().expect("one group in, one result out")
+}
+
+/// [`probe`] over many groups through a single estimator batch (the
+/// repair/packing/drain passes fan whole candidate sets out at once).
+/// Query order is `(group, testing point)` lexicographic, so cache hit
+/// and miss counts match the equivalent serial probe sequence exactly.
+fn probe_batch(groups: &[&[AdapterSpec]], est: &dyn PerfEstimator) -> Vec<Option<(usize, f64)>> {
+    let mut queries = Vec::with_capacity(groups.len() * TESTING_POINTS.len());
+    for group in groups {
+        for &p in TESTING_POINTS.iter() {
+            queries.push(ProbeQuery { adapters: group, a_max: p });
+        }
+    }
+    let estimates = est.estimate_batch(&queries);
+    estimates.chunks(TESTING_POINTS.len()).map(reduce_points).collect()
+}
+
+/// FNV-1a 64-bit hash over a sequence of `u64` words.
+fn fnv_words<I: IntoIterator<Item = u64>>(words: I) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Fingerprint of one adapter group as the repair and drain passes see
+/// it: the estimator's own memo key (pinning every probe answer) plus
+/// the full sorted `(rank, rate)` multiset and member count (pinning
+/// priority order, migration costs and drain budgets).  Equal
+/// fingerprints therefore guarantee both passes behave identically on
+/// the two groups.
+fn group_fp(group: &[AdapterSpec], est: &dyn PerfEstimator) -> u64 {
+    let mut pairs: Vec<(usize, u64)> = group.iter().map(|a| (a.rank, a.rate.to_bits())).collect();
+    pairs.sort_unstable();
+    let mut words = vec![group.len() as u64];
+    words.extend(pairs.into_iter().flat_map(|(r, b)| [r as u64, b]));
+    words.extend(est.memo_key(group, 0));
+    fnv_words(words)
+}
+
+/// Fingerprint of a whole layout: per-GPU group fingerprints in GPU
+/// order (the drain pass's full input).
+fn layout_fp(groups: &[Vec<AdapterSpec>], est: &dyn PerfEstimator) -> u64 {
+    fnv_words(groups.iter().map(|g| group_fp(g, est)))
+}
+
+/// Per-horizon memory of what the last successful [`replan_with_ledger`]
+/// settled on, enabling incremental re-probing: sticky groups whose
+/// composition did not drift since the previous epoch (same
+/// fingerprint) reuse the recorded `A_max` without paying a single
+/// estimator probe, and the drain pass is skipped outright when the
+/// pre-drain layout is one already known to be a drain fixed point.
+///
+/// Entries are self-validating — a fingerprint match *implies* the
+/// recorded answer is the one re-probing would compute — so a ledger
+/// can be carried across any sequence of replans (failed ones leave it
+/// untouched) without going stale, as long as the estimator, params and
+/// objective stay fixed across the horizon.
+#[derive(Debug, Clone, Default)]
+pub struct ReplanLedger {
+    /// `(group fingerprint, settled A_max)` per GPU of the last success.
+    groups: Vec<Option<(u64, usize)>>,
+    /// Layout fingerprint of the last success, when that layout was a
+    /// drain fixed point (`None` after a budget-limited drain: a fresh
+    /// epoch budget could drain further).
+    layout: Option<u64>,
+}
+
+impl ReplanLedger {
+    /// Fresh ledger: the first replan it feeds re-probes everything.
+    pub fn new() -> ReplanLedger {
+        ReplanLedger::default()
+    }
 }
 
 /// Incrementally re-place `adapters` on `gpus` GPUs starting from `prev`
@@ -174,6 +270,25 @@ pub fn replan(
     params: &ReplanParams,
     objective: &dyn Objective,
 ) -> Result<ReplanOutcome, PlacementError> {
+    replan_with_ledger(prev, adapters, gpus, est, params, objective, None)
+}
+
+/// [`replan`] with a cross-epoch [`ReplanLedger`]: sticky groups whose
+/// composition matches the ledger skip the repair probes entirely, and
+/// the drain pass is skipped when the layout is a known drain fixed
+/// point.  The outcome is bit-identical to [`replan`] — the ledger only
+/// removes estimator calls whose answers are already pinned by a
+/// fingerprint match.  On success the ledger is updated to describe the
+/// returned placement; on failure it is left untouched.
+pub fn replan_with_ledger(
+    prev: Option<&Placement>,
+    adapters: &[AdapterSpec],
+    gpus: usize,
+    est: &dyn PerfEstimator,
+    params: &ReplanParams,
+    objective: &dyn Objective,
+    ledger: Option<&mut ReplanLedger>,
+) -> Result<ReplanOutcome, PlacementError> {
     let Some(prev) = prev else {
         let placement = objective.plan(adapters, gpus, est)?;
         return Ok(ReplanOutcome {
@@ -183,6 +298,8 @@ pub fn replan(
             stayed: 0,
             added: adapters.len(),
             removed: 0,
+            groups_reprobed: 0,
+            groups_reused: 0,
         });
     };
 
@@ -199,16 +316,37 @@ pub fn replan(
         }
     }
 
-    // 2. Per-GPU repair: evict lowest-priority adapters while the group
-    //    is predicted infeasible at every testing point.
+    // 2. Per-GPU repair.  Groups whose composition matches the ledger
+    //    reuse their recorded A_max with zero probes (incremental
+    //    re-probing); the rest are bulk-probed as one estimator batch —
+    //    parallel under a batch-capable estimator — then evict
+    //    lowest-priority adapters while predicted infeasible at every
+    //    testing point.
     let mut a_max = vec![0usize; gpus];
+    let mut groups_reused = 0usize;
+    let mut to_probe: Vec<usize> = Vec::new();
     for g in 0..gpus {
         if groups[g].is_empty() {
             continue;
         }
         groups[g] = greedy::priority_sorting(&groups[g]);
+        let known = ledger.as_ref().and_then(|l| l.groups.get(g).copied().flatten());
+        match known {
+            Some((fp, p)) if fp == group_fp(&groups[g], est) => {
+                a_max[g] = p;
+                groups_reused += 1;
+            }
+            _ => to_probe.push(g),
+        }
+    }
+    let groups_reprobed = to_probe.len();
+    let first_pass = {
+        let refs: Vec<&[AdapterSpec]> = to_probe.iter().map(|&g| groups[g].as_slice()).collect();
+        probe_batch(&refs, est)
+    };
+    for (&g, mut probed) in to_probe.iter().zip(first_pass) {
         loop {
-            match probe(&groups[g], est) {
+            match probed {
                 Some((p, _)) => {
                     a_max[g] = p;
                     break;
@@ -220,25 +358,43 @@ pub fn replan(
                         a_max[g] = 0;
                         break;
                     }
+                    probed = probe(&groups[g], est);
                 }
             }
         }
     }
 
     // 3. Sticky packing of pending adapters in priority order, scored by
-    //    the objective.
+    //    the objective.  Per adapter, the representative empty-GPU group
+    //    and every used-GPU candidate go down as one batch (all empty
+    //    GPUs are identical candidates, so one probe covers them).
     for a in greedy::priority_sorting(&pending) {
-        // All empty GPUs are identical candidates: probe one representative.
-        let empty_eval = probe(std::slice::from_ref(&a), est);
+        let single = [a.clone()];
+        let used_cands: Vec<(usize, Vec<AdapterSpec>)> = (0..gpus)
+            .filter(|&g| !groups[g].is_empty())
+            .map(|g| {
+                let mut cand = groups[g].clone();
+                cand.push(a.clone());
+                (g, cand)
+            })
+            .collect();
+        let evals = {
+            let mut refs: Vec<&[AdapterSpec]> = vec![&single];
+            refs.extend(used_cands.iter().map(|(_, c)| c.as_slice()));
+            probe_batch(&refs, est)
+        };
+        let empty_eval = evals[0];
+        let mut used_eval: Vec<Option<(usize, f64)>> = vec![None; gpus];
+        for ((g, _), eval) in used_cands.iter().zip(&evals[1..]) {
+            used_eval[*g] = *eval;
+        }
         let mut cands: Vec<Option<Candidate>> = Vec::with_capacity(gpus);
         for g in 0..gpus {
             let (eval, load, used) = if groups[g].is_empty() {
                 (empty_eval, a.rate, false)
             } else {
-                let mut cand = groups[g].clone();
-                cand.push(a.clone());
-                let load = cand.iter().map(|x| x.rate).sum::<f64>();
-                (probe(&cand, est), load, true)
+                let load = groups[g].iter().map(|x| x.rate).sum::<f64>() + a.rate;
+                (used_eval[g], load, true)
             };
             cands.push(eval.map(|(p, t)| Candidate {
                 gpu: g,
@@ -274,8 +430,17 @@ pub fn replan(
     // 4. Drain (consolidating objectives only): try to empty the smallest
     //    surviving group onto the other used GPUs, bounded by one epoch of
     //    *cumulative* migration time across all drains of this replan step.
+    //    Skipped outright when the ledger recorded this exact layout as a
+    //    drain fixed point — the pass is deterministic in the layout, so
+    //    re-running it could only terminate the same way.
+    let pre_drain_fp = ledger.as_ref().map(|_| layout_fp(&groups, est));
+    let settled = match (&ledger, pre_drain_fp) {
+        (Some(l), Some(fp)) => l.layout == Some(fp),
+        _ => false,
+    };
     let mut total_drain_cost = 0.0f64;
-    while objective.consolidates() {
+    let mut budget_limited = false;
+    while !settled && objective.consolidates() {
         let Some(src) = (0..gpus)
             .filter(|&g| !groups[g].is_empty())
             .min_by_key(|&g| groups[g].len())
@@ -294,17 +459,30 @@ pub fn replan(
         let mut drain_cost = 0.0;
         let mut ok = true;
         for a in movers {
+            // Every target candidate for this mover goes down as one
+            // batch; the reduction stays in target order.
+            let target_cands: Vec<(usize, Vec<AdapterSpec>)> = targets
+                .iter()
+                .map(|&g| {
+                    let mut cand = tentative[g].clone();
+                    cand.push(a.clone());
+                    (g, cand)
+                })
+                .collect();
+            let evals = {
+                let refs: Vec<&[AdapterSpec]> =
+                    target_cands.iter().map(|(_, c)| c.as_slice()).collect();
+                probe_batch(&refs, est)
+            };
             let mut best: Option<(usize, usize, f64)> = None;
-            for &g in &targets {
-                let mut cand = tentative[g].clone();
-                cand.push(a.clone());
-                if let Some((p, t)) = probe(&cand, est) {
+            for ((g, _), eval) in target_cands.iter().zip(&evals) {
+                if let Some((p, t)) = *eval {
                     let better = match best {
                         None => true,
                         Some((_, _, bt)) => t > bt,
                     };
                     if better {
-                        best = Some((g, p, t));
+                        best = Some((*g, p, t));
                     }
                 }
             }
@@ -320,7 +498,14 @@ pub fn replan(
                 }
             }
         }
-        if !ok || total_drain_cost + drain_cost > params.epoch_s {
+        if !ok {
+            break;
+        }
+        if total_drain_cost + drain_cost > params.epoch_s {
+            // Only a *cumulative* budget exhaustion is transient (a fresh
+            // epoch budget could drain further); a first drain that alone
+            // exceeds the budget is as layout-determined as `!ok`.
+            budget_limited = total_drain_cost > 0.0;
             break;
         }
         total_drain_cost += drain_cost;
@@ -342,6 +527,26 @@ pub fn replan(
     if placement.assignment.len() != adapters.len() {
         return Err(PlacementError::Starvation);
     }
+
+    // Commit the ledger (success only): per-GPU fingerprints of the final
+    // groups with their settled A_max — every path above leaves
+    // `a_max[g]` equal to `probe(&groups[g])`'s choice, which is exactly
+    // what a no-drift repair would recompute next epoch — plus the layout
+    // fingerprint when the drain pass settled structurally.
+    if let Some(l) = ledger {
+        l.groups = groups
+            .iter()
+            .enumerate()
+            .map(|(g, grp)| {
+                if grp.is_empty() {
+                    None
+                } else {
+                    Some((group_fp(grp, est), a_max[g]))
+                }
+            })
+            .collect();
+        l.layout = if budget_limited { None } else { Some(layout_fp(&groups, est)) };
+    }
     let mut migrations = 0;
     let mut migration_cost_s = 0.0;
     let mut stayed = 0;
@@ -359,7 +564,16 @@ pub fn replan(
             }
         }
     }
-    Ok(ReplanOutcome { placement, migrations, migration_cost_s, stayed, added, removed })
+    Ok(ReplanOutcome {
+        placement,
+        migrations,
+        migration_cost_s,
+        stayed,
+        added,
+        removed,
+        groups_reprobed,
+        groups_reused,
+    })
 }
 
 #[cfg(test)]
@@ -510,7 +724,7 @@ mod tests {
         use crate::placement::estimator::{CachedEstimator, TwinEstimator};
         let calib = Calibration::default();
         let base = EngineConfig::default();
-        let twin = || TwinEstimator::new(calib.clone(), base.clone()).with_horizon(5.0);
+        let twin = || TwinEstimator::new(calib.clone(), base.clone()).horizon(5.0);
         let plain = twin();
         let cached = CachedEstimator::wrap(twin());
         let ads = adapters(12, 0.05);
@@ -531,6 +745,76 @@ mod tests {
         assert_eq!(out_plain.migration_cost_s.to_bits(), out_cached.migration_cost_s.to_bits());
         let stats = cached.stats();
         assert!(stats.hits > 0, "adjacent probes must hit the memo: {stats:?}");
+    }
+
+    #[test]
+    fn ledger_no_drift_horizon_reuses_every_group_with_zero_probes() {
+        use crate::placement::estimator::CachedEstimator;
+        // Two-GPU workload whose groups cannot be merged: the drain pass
+        // terminates structurally, so its layout is a drain fixed point.
+        let cached = CachedEstimator::wrap(fake_models());
+        let ads = adapters(64, 0.3);
+        let p0 = greedy::place(&ads, 4, &cached).unwrap();
+        assert!(p0.gpus_used() >= 2);
+        let params = ReplanParams::default();
+        let mut ledger = ReplanLedger::new();
+        // First ledger epoch: nothing recorded yet, every group re-probes.
+        let out1 =
+            replan_with_ledger(Some(&p0), &ads, 4, &cached, &params, &MinGpus, Some(&mut ledger))
+                .unwrap();
+        assert_eq!(out1.groups_reused, 0);
+        assert_eq!(out1.groups_reprobed, p0.gpus_used());
+        // Second ledger epoch, no drift: every group and the drain-settled
+        // layout match the ledger — not a single estimator probe is paid.
+        let before = cached.stats().total();
+        let out2 = replan_with_ledger(
+            Some(&out1.placement),
+            &ads,
+            4,
+            &cached,
+            &params,
+            &MinGpus,
+            Some(&mut ledger),
+        )
+        .unwrap();
+        assert_eq!(out2.groups_reprobed, 0, "no drift must re-probe nothing");
+        assert_eq!(out2.groups_reused, out1.placement.gpus_used());
+        assert_eq!(cached.stats().total(), before, "zero estimator probes on a no-drift epoch");
+        assert_eq!(out2.placement, out1.placement);
+        assert_eq!(out2.migrations, 0);
+    }
+
+    #[test]
+    fn ledger_replan_is_bit_identical_to_plain_replan_under_drift() {
+        let models = fake_models();
+        let p0 = greedy::place(&adapters(24, 0.1), 4, &models).unwrap();
+        let params = ReplanParams::default();
+        let mut ledger = ReplanLedger::new();
+        // Epoch 1: workload grows; epoch 2: rates shift and some retire.
+        let w1 = adapters(32, 0.12);
+        let w2: Vec<AdapterSpec> =
+            (0..28).map(|id| AdapterSpec { id, rank: 8, rate: 0.15 }).collect();
+        let mut plain_prev: Option<Placement> = Some(p0.clone());
+        let mut ledger_prev: Option<Placement> = Some(p0);
+        for w in [&w1, &w2] {
+            let plain = replan(plain_prev.as_ref(), w, 4, &models, &params, &MinGpus).unwrap();
+            let with_ledger = replan_with_ledger(
+                ledger_prev.as_ref(),
+                w,
+                4,
+                &models,
+                &params,
+                &MinGpus,
+                Some(&mut ledger),
+            )
+            .unwrap();
+            assert_eq!(plain.placement, with_ledger.placement);
+            assert_eq!(plain.migrations, with_ledger.migrations);
+            assert_eq!(plain.migration_cost_s.to_bits(), with_ledger.migration_cost_s.to_bits());
+            assert_eq!((plain.stayed, plain.added), (with_ledger.stayed, with_ledger.added));
+            plain_prev = Some(plain.placement);
+            ledger_prev = Some(with_ledger.placement);
+        }
     }
 
     #[test]

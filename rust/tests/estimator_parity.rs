@@ -8,7 +8,8 @@ use adapter_serving::config::EngineConfig;
 use adapter_serving::dt::Calibration;
 use adapter_serving::ml::{self, dataset::GridSpec};
 use adapter_serving::placement::{
-    plan, CachedEstimator, MinGpus, MlEstimator, OracleEstimator, PerfEstimator, TwinEstimator,
+    plan, replan, replan_with_ledger, CachedEstimator, MinGpus, MlEstimator, OracleEstimator,
+    PerfEstimator, TwinEstimator,
 };
 use adapter_serving::workload::{AdapterSpec, WorkloadSpec};
 
@@ -34,7 +35,7 @@ fn ml_estimator() -> MlEstimator {
 }
 
 fn twin_estimator() -> TwinEstimator {
-    TwinEstimator::new(Calibration::default(), EngineConfig::default()).with_horizon(10.0)
+    TwinEstimator::new(Calibration::default(), EngineConfig::default()).horizon(10.0)
 }
 
 /// Fixture groups with clear-cut verdicts: `(group, a_max, feasible)`.
@@ -97,7 +98,7 @@ fn greedy_places_through_the_twin_estimator_directly() {
     // The DT-in-the-loop ablation: skip the ML stage entirely and let
     // Alg. 1 probe the twin (ms per probe instead of µs, no learning
     // error).
-    let twin = twin_estimator().with_horizon(5.0);
+    let twin = twin_estimator().horizon(5.0);
     let adapters = WorkloadSpec::heterogeneous(16, &[8], &[0.05, 0.025], 9);
     let p = plan(&adapters, 4, &twin, &MinGpus).expect("light workload feasible via the DT");
     assert_eq!(p.assignment.len(), 16);
@@ -108,8 +109,8 @@ fn greedy_places_through_the_twin_estimator_directly() {
 fn cached_twin_greedy_is_bit_identical_and_memoizes() {
     // The caching seam contract: memoizing the DT-in-the-loop probes must
     // not change a single bit of the planning outcome or the estimates.
-    let twin = twin_estimator().with_horizon(5.0);
-    let cached = CachedEstimator::wrap(twin_estimator().with_horizon(5.0));
+    let twin = twin_estimator().horizon(5.0);
+    let cached = CachedEstimator::wrap(twin_estimator().horizon(5.0));
     let adapters = WorkloadSpec::heterogeneous(24, &[8, 16], &[0.05, 0.025], 9);
     let p = plan(&adapters, 4, &twin, &MinGpus).expect("feasible via the DT");
     let pc = plan(&adapters, 4, &cached, &MinGpus).expect("feasible via the cached DT");
@@ -125,4 +126,34 @@ fn cached_twin_greedy_is_bit_identical_and_memoizes() {
     }
     let stats = cached.stats();
     assert!(stats.hits > 0, "Alg. 1's adjacent probes must hit the memo: {stats:?}");
+}
+
+#[test]
+fn parallel_probing_plans_and_replans_bit_identically_to_serial() {
+    // The probe fan-out contract: fanning candidate probes over worker
+    // threads must not change a single bit of the planning outcome, and
+    // first-occurrence miss accounting keeps even the cache counters
+    // identical to a serial pass.
+    let adapters = WorkloadSpec::heterogeneous(32, &[8, 16], &[0.1, 0.05, 0.025], 13);
+    let serial = CachedEstimator::wrap(twin_estimator().horizon(5.0)).probe_workers(1);
+    let parallel = CachedEstimator::wrap(twin_estimator().horizon(5.0)).probe_workers(4);
+    let ps = plan(&adapters, 4, &serial, &MinGpus).expect("feasible via serial probing");
+    let pp = plan(&adapters, 4, &parallel, &MinGpus).expect("feasible via parallel probing");
+    assert_eq!(ps, pp, "parallel probing changed the greedy plan");
+    assert_eq!(serial.stats(), parallel.stats(), "fan-out must not change probe accounting");
+
+    // Same contract through the incremental replanner: drift some rates
+    // and repair the serial plan with both estimators.
+    let mut moved = adapters.clone();
+    for a in moved.iter_mut().filter(|a| a.id % 5 == 0) {
+        a.rate *= 2.0;
+    }
+    let params = replan::ReplanParams::default();
+    let rs = replan_with_ledger(Some(&ps), &moved, 4, &serial, &params, &MinGpus, None)
+        .expect("serial replan");
+    let rp = replan_with_ledger(Some(&ps), &moved, 4, &parallel, &params, &MinGpus, None)
+        .expect("parallel replan");
+    assert_eq!(rs.placement, rp.placement, "parallel probing changed the repaired placement");
+    assert_eq!(rs.migrations, rp.migrations);
+    assert_eq!(rs.migration_cost_s.to_bits(), rp.migration_cost_s.to_bits());
 }

@@ -44,7 +44,8 @@ fn dt_dataset_train_place_validate() {
     let spec = WorkloadSpec::sharegpt_like(adapters.clone(), 15.0, 8);
     let p = greedy::place(&adapters, 4, &models).expect("feasible placement");
     assert_eq!(p.assignment.len(), 48);
-    let rep = cluster::run_on_twin(&calib, &base, &p, &spec, LengthVariant::Original);
+    let opts = cluster::RunOptions::new();
+    let rep = cluster::serve_on_twin(&calib, &base, &p, &spec, LengthVariant::Original, opts);
     assert!(!rep.memory_error, "greedy placement must never OOM");
     // The greedy target: feasible serving on the used GPUs.
     assert!(
@@ -86,7 +87,9 @@ fn random_baseline_is_less_reliable_than_greedy() {
     // with the quick training grid (see EXPERIMENTS.md Table 3 notes).
     let greedy_safe = match greedy::place(&adapters, 4, &models) {
         Ok(p) => {
-            let rep = cluster::run_on_twin(&calib, &base, &p, &spec, LengthVariant::Original);
+            let opts = cluster::RunOptions::new();
+            let rep =
+                cluster::serve_on_twin(&calib, &base, &p, &spec, LengthVariant::Original, opts);
             !rep.memory_error
         }
         Err(_) => true, // declining is also a safe answer
@@ -98,7 +101,8 @@ fn random_baseline_is_less_reliable_than_greedy() {
     let mut failures = 0;
     for seed in 0..6 {
         let p = baselines::random(&adapters, 4, seed).unwrap();
-        let rep = cluster::run_on_twin(&calib, &base, &p, &spec, LengthVariant::Original);
+        let opts = cluster::RunOptions::new();
+        let rep = cluster::serve_on_twin(&calib, &base, &p, &spec, LengthVariant::Original, opts);
         if !rep.feasible() {
             failures += 1;
         }
