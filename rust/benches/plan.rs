@@ -3,9 +3,10 @@
 //! Per tier (small 64x8, medium 256x24, full 2048x192) this measures:
 //! plan and replan wall time through the trained RF estimator, simulated
 //! serving throughput of the resulting placement, and the serial vs
-//! parallel DT probe fan-out.  The full tier is ML-plan-only — probing
-//! the twin for 192 GPUs is exactly the cost the data-driven planner
-//! exists to avoid.
+//! parallel DT probe fan-out.  The small tier also times MinCost
+//! planning over a two-class fleet (`plan_fleet_min_cost_wall_s`).  The
+//! full tier is ML-plan-only — probing the twin for 192 GPUs is exactly
+//! the cost the data-driven planner exists to avoid.
 //!
 //! Modes:
 //!
@@ -25,12 +26,12 @@
 use std::collections::BTreeMap;
 
 use adapter_serving::cluster::{self, RunOptions};
-use adapter_serving::config::EngineConfig;
+use adapter_serving::config::{EngineConfig, FleetSpec, GpuTypeSpec};
 use adapter_serving::dt::{self, Calibration, LengthVariant};
 use adapter_serving::ml::{self, dataset::GridSpec, MlModels};
 use adapter_serving::placement::{
-    plan, replan, replan_with_ledger, CachedEstimator, MinGpus, MlEstimator, PerfEstimator,
-    ProbeQuery, ReplanLedger, TwinEstimator,
+    fleet, plan, replan, replan_with_ledger, CachedEstimator, MinCost, MinGpus, MlEstimator,
+    PerfEstimator, ProbeQuery, ReplanLedger, TwinEstimator,
 };
 use adapter_serving::util::bench::bench_auto;
 use adapter_serving::util::json::Json;
@@ -184,6 +185,19 @@ fn run_tier(
         ("plan_ml_wall_s", Json::Num(plan_wall.p50_s)),
         ("replan_ml_wall_s", Json::Num(replan_wall.p50_s)),
     ];
+    if t.name == "small" {
+        // Heterogeneous-fleet cost planning at small scale: a catalog
+        // a10g pool plus a half-size a100 pool, with MinCost probing
+        // the open candidates per fresh GPU.
+        let a10g = GpuTypeSpec::catalog("a10g").expect("a10g in catalog");
+        let a100 = GpuTypeSpec::catalog("a100").expect("a100 in catalog");
+        let fleet_spec = FleetSpec::new(vec![(a10g, t.gpus), (a100, t.gpus / 2)]);
+        let ests: [&dyn PerfEstimator; 2] = [est, est];
+        let fleet_wall = bench_auto(&format!("plan_fleet_min_cost_{}", t.name), 1.0, || {
+            let _ = std::hint::black_box(fleet::place(&adapters, &fleet_spec, &ests, &MinCost));
+        });
+        fields.push(("plan_fleet_min_cost_wall_s", Json::Num(fleet_wall.p50_s)));
+    }
     if t.probe {
         let spec = WorkloadSpec::sharegpt_like(adapters.clone(), 10.0, 8);
         let opts = RunOptions::new();
@@ -248,7 +262,7 @@ fn check_against_baseline(ref_live: f64, live: &[(String, Json)]) -> anyhow::Res
                 println!("check: tier {name} absent from the baseline; skipped");
                 continue;
             };
-            for metric in ["plan_ml_wall_s", "replan_ml_wall_s"] {
+            for metric in ["plan_ml_wall_s", "replan_ml_wall_s", "plan_fleet_min_cost_wall_s"] {
                 let lv = tier.get(metric).and_then(Json::as_f64);
                 let bv = b.get(metric).and_then(Json::as_f64);
                 let (Some(lv), Some(bv)) = (lv, bv) else { continue };

@@ -32,11 +32,10 @@ use anyhow::{anyhow, Result};
 /// [`serve_on_twin`]: worker-thread count, engine backend pool, and an
 /// optional workload-seed override.
 ///
-/// `Default` reproduces the historical behavior of the
-/// `run_on_engine`/`run_on_twin` pair: [`default_workers`] threads, no
-/// pool (the engine path requires one via [`RunOptions::pool`]), and the
-/// workload's own seed.  Bare builder setters follow the house
-/// convention (see `TwinEstimator::horizon`).
+/// `Default` is [`default_workers`] threads, no pool (the engine path
+/// requires one via [`RunOptions::pool`]), and the workload's own seed.
+/// Bare builder setters follow the house convention (see
+/// `TwinEstimator::horizon`).
 ///
 /// ```
 /// use adapter_serving::cluster::RunOptions;
@@ -276,52 +275,32 @@ pub fn serve_on_twin(
     ClusterReport::aggregate(per_gpu, t0.elapsed().as_secs_f64(), used)
 }
 
-/// Deprecated spelling of [`serve_on_engine`] (default workers).
-#[deprecated(note = "use `serve_on_engine` with `RunOptions::new().pool(&pool)`")]
-pub fn run_on_engine(
-    pool: &BackendPool,
-    base: &EngineConfig,
-    placement: &Placement,
-    spec: &WorkloadSpec,
-) -> Result<ClusterReport> {
-    serve_on_engine(base, placement, spec, RunOptions::new().pool(pool))
-}
-
-/// Deprecated spelling of [`serve_on_engine`] (explicit workers).
-#[deprecated(note = "use `serve_on_engine` with `RunOptions::new().pool(&pool).workers(n)`")]
-pub fn run_on_engine_with_workers(
-    pool: &BackendPool,
-    base: &EngineConfig,
-    placement: &Placement,
-    spec: &WorkloadSpec,
-    workers: usize,
-) -> Result<ClusterReport> {
-    serve_on_engine(base, placement, spec, RunOptions::new().pool(pool).workers(workers))
-}
-
-/// Deprecated spelling of [`serve_on_twin`] (default workers).
-#[deprecated(note = "use `serve_on_twin` with `RunOptions::new()`")]
-pub fn run_on_twin(
-    calib: &Calibration,
-    base: &EngineConfig,
+/// [`serve_on_twin`] over a typed fleet: each GPU is simulated under its
+/// *own* calibration and engine config (`calibs[g]`/`configs[g]`, both
+/// `placement.a_max.len()` entries — DESIGN.md §11).  With every slot
+/// sharing one calibration and config this is exactly [`serve_on_twin`];
+/// per-GPU seeds, subset derivation and report order are identical.
+pub fn serve_on_twin_fleet(
+    calibs: &[Calibration],
+    configs: &[EngineConfig],
     placement: &Placement,
     spec: &WorkloadSpec,
     variant: LengthVariant,
+    opts: RunOptions<'_>,
 ) -> ClusterReport {
-    serve_on_twin(calib, base, placement, spec, variant, RunOptions::new())
-}
-
-/// Deprecated spelling of [`serve_on_twin`] (explicit workers).
-#[deprecated(note = "use `serve_on_twin` with `RunOptions::new().workers(n)`")]
-pub fn run_on_twin_with_workers(
-    calib: &Calibration,
-    base: &EngineConfig,
-    placement: &Placement,
-    spec: &WorkloadSpec,
-    variant: LengthVariant,
-    workers: usize,
-) -> ClusterReport {
-    serve_on_twin(calib, base, placement, spec, variant, RunOptions::new().workers(workers))
+    assert_eq!(calibs.len(), placement.a_max.len(), "one calibration per GPU slot");
+    assert_eq!(configs.len(), placement.a_max.len(), "one engine config per GPU slot");
+    let t0 = std::time::Instant::now();
+    let jobs = gpu_jobs(placement);
+    let workers = opts.workers.min(jobs.len().max(1));
+    let seed_base = opts.seed.unwrap_or(spec.seed);
+    let per_gpu: Vec<Option<Report>> = parallel_map(jobs, workers, |(g, ids)| {
+        let sub = spec.subset(&ids, seed_base ^ (g as u64) << 8);
+        let cfg = gpu_config(&configs[g], placement, g, spec);
+        crate::dt::run_twin(&cfg, &calibs[g], &sub, variant).report
+    });
+    let used = placement.gpus_used();
+    ClusterReport::aggregate(per_gpu, t0.elapsed().as_secs_f64(), used)
 }
 
 #[cfg(test)]
@@ -473,11 +452,11 @@ mod tests {
         assert_eq!(a.completed_requests(), b.completed_requests());
     }
 
-    /// Satellite gate: the one-release deprecation shims must stay
-    /// behaviorally identical to the `RunOptions` path they wrap.
+    /// A uniform fleet (every slot the same calibration and config) must
+    /// reproduce [`serve_on_twin`] bit-for-bit, and a faster class's
+    /// calibration must actually change what its GPU reports.
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_run_shims_match_serve_functions() {
+    fn twin_fleet_degenerates_to_serve_on_twin_and_scales_per_slot() {
         let adapters = WorkloadSpec::homogeneous(8, 8, 0.2);
         let spec = WorkloadSpec::fixed_len(adapters, 64, 32, 10.0, 3);
         let mut placement = Placement { assignment: Default::default(), a_max: vec![4, 4] };
@@ -486,12 +465,36 @@ mod tests {
         }
         let calib = Calibration::default();
         let base = EngineConfig::default();
-        let old =
-            run_on_twin_with_workers(&calib, &base, &placement, &spec, LengthVariant::Original, 1);
         let o1 = RunOptions::new().workers(1);
-        let new = serve_on_twin(&calib, &base, &placement, &spec, LengthVariant::Original, o1);
-        assert_eq!(old.total_throughput_tok_s.to_bits(), new.total_throughput_tok_s.to_bits());
-        assert_eq!(old.itl_mean_s.to_bits(), new.itl_mean_s.to_bits());
-        assert_eq!(old.gpus_used, new.gpus_used);
+        let uniform = serve_on_twin_fleet(
+            &[calib.clone(), calib.clone()],
+            &[base.clone(), base.clone()],
+            &placement,
+            &spec,
+            LengthVariant::Original,
+            o1,
+        );
+        let plain = serve_on_twin(&calib, &base, &placement, &spec, LengthVariant::Original, o1);
+        assert_eq!(
+            uniform.total_throughput_tok_s.to_bits(),
+            plain.total_throughput_tok_s.to_bits()
+        );
+        assert_eq!(uniform.itl_mean_s.to_bits(), plain.itl_mean_s.to_bits());
+        assert_eq!(uniform.gpus_used, plain.gpus_used);
+
+        // GPU 1 twice as fast: its ITL drops, GPU 0's report is untouched.
+        let fast = calib.scaled(2.0);
+        let mixed = serve_on_twin_fleet(
+            &[calib.clone(), fast],
+            &[base.clone(), base.clone()],
+            &placement,
+            &spec,
+            LengthVariant::Original,
+            o1,
+        );
+        let (u0, m0) = (uniform.per_gpu[0].as_ref().unwrap(), mixed.per_gpu[0].as_ref().unwrap());
+        assert_eq!(u0.itl_mean_s.to_bits(), m0.itl_mean_s.to_bits());
+        let (u1, m1) = (uniform.per_gpu[1].as_ref().unwrap(), mixed.per_gpu[1].as_ref().unwrap());
+        assert!(m1.itl_mean_s < u1.itl_mean_s, "faster calibration must lower ITL");
     }
 }

@@ -181,6 +181,176 @@ impl EngineConfig {
     }
 }
 
+/// One GPU class in a heterogeneous fleet: its memory ledger, rental
+/// price, and performance scale relative to the base calibration
+/// (DESIGN.md §11).  `perf_scale` is the factor by which this class
+/// executes faster than the hardware the base [`crate::dt`] calibration
+/// was profiled on (1.0 = identical); the pipeline derives the class's
+/// calibration by scaling the base constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuTypeSpec {
+    /// Catalog name of the class (tags artifacts, reports and CSVs).
+    pub name: String,
+    /// The class's simulated-GPU memory ledger (capacity differs by class).
+    pub mem: MemoryConfig,
+    /// Rental price in $/hr — what the `MinCost` objective minimizes.
+    pub cost_per_hour: f64,
+    /// Compute speed relative to the base-calibration hardware (>0).
+    pub perf_scale: f64,
+}
+
+impl GpuTypeSpec {
+    /// Built-in class profiles (stand-ins for common inference GPUs; the
+    /// memory budgets are in the same KV-token units as [`MemoryConfig`]).
+    /// `a10g` is deliberately identical to the homogeneous default — a
+    /// single-`a10g` fleet must reproduce today's plans bit-identically.
+    pub fn catalog(name: &str) -> Option<GpuTypeSpec> {
+        let (mem_tokens, cost, perf) = match name {
+            "a10g" => (8192, 1.21, 1.0),
+            "a100" => (16384, 4.10, 2.4),
+            "h100" => (24576, 6.98, 4.2),
+            _ => return None,
+        };
+        Some(GpuTypeSpec {
+            name: name.to_string(),
+            mem: MemoryConfig { total_tokens: mem_tokens, ..Default::default() },
+            cost_per_hour: cost,
+            perf_scale: perf,
+        })
+    }
+
+    /// The per-GPU engine configuration of this class: `base` with the
+    /// class's memory ledger swapped in.
+    pub fn engine_config(&self, base: &EngineConfig) -> EngineConfig {
+        EngineConfig { mem: self.mem.clone(), ..base.clone() }
+    }
+
+    /// Serialize to the JSON config format.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mem", self.mem.to_json()),
+            ("cost_per_hour", Json::Num(self.cost_per_hour)),
+            ("perf_scale", Json::Num(self.perf_scale)),
+        ])
+    }
+
+    /// Parse from JSON (absent memory keys fall back to the defaults).
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(GpuTypeSpec {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("GpuTypeSpec needs a name"))?
+                .to_string(),
+            mem: j.get("mem").map(MemoryConfig::from_json).transpose()?.unwrap_or_default(),
+            cost_per_hour: j.get("cost_per_hour").and_then(Json::as_f64).unwrap_or(1.0),
+            perf_scale: j.get("perf_scale").and_then(Json::as_f64).unwrap_or(1.0),
+        })
+    }
+}
+
+/// A typed fleet: which GPU classes are available and how many of each,
+/// in declaration order (type indices are stable and deterministic).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    /// The GPU classes, in declaration order (index = type index).
+    pub types: Vec<GpuTypeSpec>,
+    /// Available GPU count per class (same order as `types`).
+    pub counts: Vec<usize>,
+}
+
+impl FleetSpec {
+    /// A fleet from `(class, count)` entries.
+    pub fn new(entries: Vec<(GpuTypeSpec, usize)>) -> FleetSpec {
+        let (types, counts) = entries.into_iter().unzip();
+        FleetSpec { types, counts }
+    }
+
+    /// A single-class fleet — the homogeneous special case every typed
+    /// code path must reproduce bit-identically.
+    pub fn single(ty: GpuTypeSpec, count: usize) -> FleetSpec {
+        FleetSpec { types: vec![ty], counts: vec![count] }
+    }
+
+    /// Total GPUs across every class.
+    pub fn total_gpus(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// Per-class $/hr prices, in type-index order.
+    pub fn prices(&self) -> Vec<f64> {
+        self.types.iter().map(|t| t.cost_per_hour).collect()
+    }
+
+    /// Parse a CLI fleet spec: comma-separated `name:count` entries with
+    /// an optional `@price` override, e.g. `a10g:4,a100:2` or
+    /// `a10g:4@0.9,h100:1`.  Names resolve via [`GpuTypeSpec::catalog`].
+    pub fn parse(spec: &str) -> anyhow::Result<FleetSpec> {
+        let mut entries = vec![];
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (head, price) = match part.split_once('@') {
+                Some((h, p)) => (h, Some(p.parse::<f64>()?)),
+                None => (part, None),
+            };
+            let (name, count) = head
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("fleet entry '{part}' is not name:count"))?;
+            let mut ty = GpuTypeSpec::catalog(name.trim())
+                .ok_or_else(|| anyhow::anyhow!("unknown GPU type '{name}' (a10g|a100|h100)"))?;
+            if let Some(p) = price {
+                ty.cost_per_hour = p;
+            }
+            let count: usize = count.trim().parse()?;
+            if count == 0 {
+                anyhow::bail!("fleet entry '{part}' has zero GPUs");
+            }
+            entries.push((ty, count));
+        }
+        if entries.is_empty() {
+            anyhow::bail!("empty fleet spec (expected e.g. a10g:4,a100:2)");
+        }
+        Ok(FleetSpec::new(entries))
+    }
+
+    /// Serialize to the JSON config format.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "fleet",
+            Json::Arr(
+                self.types
+                    .iter()
+                    .zip(&self.counts)
+                    .map(|(t, &c)| {
+                        Json::obj(vec![
+                            ("name", Json::Str(t.name.clone())),
+                            ("mem", t.mem.to_json()),
+                            ("cost_per_hour", Json::Num(t.cost_per_hour)),
+                            ("perf_scale", Json::Num(t.perf_scale)),
+                            ("count", Json::Num(c as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    /// Parse from JSON written by [`FleetSpec::to_json`].
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let arr = j
+            .get("fleet")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("FleetSpec needs a fleet array"))?;
+        let mut entries = vec![];
+        for e in arr {
+            let ty = GpuTypeSpec::from_json(e)?;
+            let count = e.get("count").and_then(Json::as_usize).unwrap_or(1);
+            entries.push((ty, count));
+        }
+        Ok(FleetSpec::new(entries))
+    }
+}
+
 /// A multi-GPU deployment: `gpus` engines sharing one compiled model.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -234,5 +404,36 @@ mod tests {
         let j = e.to_json();
         let e2 = EngineConfig::from_json(&j).unwrap();
         assert_eq!(e, e2);
+    }
+
+    #[test]
+    fn fleet_parse_catalog_and_price_override() {
+        let f = FleetSpec::parse("a10g:4,a100:2@3.5").unwrap();
+        assert_eq!(f.types.len(), 2);
+        assert_eq!(f.counts, vec![4, 2]);
+        assert_eq!(f.total_gpus(), 6);
+        assert_eq!(f.types[0].name, "a10g");
+        assert_eq!(f.types[1].cost_per_hour, 3.5);
+        assert!(f.types[1].mem.total_tokens > f.types[0].mem.total_tokens);
+        assert!(FleetSpec::parse("v100:2").is_err());
+        assert!(FleetSpec::parse("a10g:0").is_err());
+        assert!(FleetSpec::parse("").is_err());
+    }
+
+    #[test]
+    fn fleet_json_roundtrip() {
+        let f = FleetSpec::parse("h100:1@5.0,a10g:3").unwrap();
+        let f2 = FleetSpec::from_json(&f.to_json()).unwrap();
+        assert_eq!(f, f2);
+    }
+
+    #[test]
+    fn a10g_matches_homogeneous_default() {
+        // The a10g class must be indistinguishable from the homogeneous
+        // default so single-type fleets reproduce pre-fleet plans.
+        let ty = GpuTypeSpec::catalog("a10g").unwrap();
+        assert_eq!(ty.mem, MemoryConfig::default());
+        assert_eq!(ty.perf_scale, 1.0);
+        assert_eq!(ty.engine_config(&EngineConfig::default()), EngineConfig::default());
     }
 }

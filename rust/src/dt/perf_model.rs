@@ -123,6 +123,34 @@ impl Calibration {
     pub fn max_prefill_bucket(&self) -> usize {
         self.prefill_buckets.last().copied().unwrap_or(256)
     }
+
+    /// Derive the calibration for a GPU class that runs `perf_scale`×
+    /// faster than the hardware this calibration was profiled on: every
+    /// latency constant and profiled latency point is divided by the
+    /// scale, while dimensionless terms (the adapter-overhead multiplier)
+    /// and the engine's compiled bucket grid are unchanged.  This is the
+    /// standard single-factor hardware model — good enough for a fleet
+    /// whose classes differ mainly in raw step speed, and exactly what a
+    /// per-class profiling run would replace (DESIGN.md §11).  A scale of
+    /// 1.0 returns a bit-identical calibration (x/1.0 == x in IEEE-754),
+    /// which the single-type fleet parity tests rely on.
+    pub fn scaled(&self, perf_scale: f64) -> Calibration {
+        assert!(perf_scale > 0.0, "perf_scale must be positive");
+        let s = |x: f64| x / perf_scale;
+        Calibration {
+            model: self.model.clone(),
+            k_sched: self.k_sched.map(s),
+            k_backbone: self.k_backbone.map(s),
+            k_overhead: self.k_overhead, // dimensionless multiplier
+            load_s_by_rank: self.load_s_by_rank.iter().map(|(&r, &v)| (r, s(v))).collect(),
+            k_prefill: self.k_prefill.map(s),
+            iter_overhead_s: s(self.iter_overhead_s),
+            decode_buckets: self.decode_buckets.clone(),
+            prefill_buckets: self.prefill_buckets.clone(),
+            decode_pts: self.decode_pts.iter().map(|&(x, y)| (x, s(y))).collect(),
+            prefill_pts: self.prefill_pts.iter().map(|&(x, y)| (x, s(y))).collect(),
+        }
+    }
 }
 
 impl Calibration {
@@ -330,5 +358,22 @@ mod tests {
         let c = Calibration::default();
         let c2 = Calibration::from_json(&c.to_json()).unwrap();
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn scaled_divides_latencies_and_keeps_structure() {
+        let c = Calibration::default();
+        let fast = c.scaled(2.0);
+        assert_eq!(fast.lat_model(8, 8, 0), c.lat_model(8, 8, 0) / 2.0);
+        assert_eq!(fast.lat_load(16), c.lat_load(16) / 2.0);
+        assert_eq!(fast.lat_prefill(64), c.lat_prefill(64) / 2.0);
+        // The adapter-overhead multiplier is dimensionless: unchanged.
+        assert_eq!(fast.k_overhead, c.k_overhead);
+        // Bucket grids are compile-time properties of the engine, not
+        // hardware speed: unchanged.
+        assert_eq!(fast.decode_buckets, c.decode_buckets);
+        assert_eq!(fast.prefill_buckets, c.prefill_buckets);
+        // Unit scale is bit-identical (single-type fleet parity).
+        assert_eq!(c.scaled(1.0), c);
     }
 }

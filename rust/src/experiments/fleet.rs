@@ -1,0 +1,162 @@
+//! The fleet experiment (DESIGN.md §5/§11): $/hr, GPUs and ITL over
+//! time on a heterogeneous two-type fleet, under the GPU-minimizing and
+//! the cost-minimizing objective.
+//!
+//! Scenario: the same burst-churn workload as the drift experiment
+//! ([`super::drift::burst_churn`]), re-planned from scratch every epoch
+//! on a fleet of catalog a10g and a100 GPUs (the a100 is faster but,
+//! per probed throughput per dollar, usually the worse buy — the
+//! Mélange-style heterogeneity tradeoff).  Every epoch is planned
+//! DT-in-the-loop through the per-type probe caches and validated on the
+//! fleet twin ([`crate::cluster::serve_on_twin_fleet`]), so the table
+//! shows rental cost next to the GPUs and ITL it buys.  Regenerates
+//! `results/fleet/fleet.csv` + `summary.json`.
+
+use super::common::{print_table, write_csv, write_summary, ExpContext};
+use super::drift::burst_churn;
+use crate::config::{FleetSpec, GpuTypeSpec};
+use crate::placement::{MinCost, MinGpus, Objective};
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// The experiment's two-class fleet: enough a10g stock to serve the
+/// burst alone, plus a pool of faster a100s the cost objective must
+/// weigh by throughput per dollar.
+fn two_type_fleet() -> FleetSpec {
+    let a10g = GpuTypeSpec::catalog("a10g").expect("a10g in catalog");
+    let a100 = GpuTypeSpec::catalog("a100").expect("a100 in catalog");
+    FleetSpec::new(vec![(a10g, 4), (a100, 2)])
+}
+
+/// "$/hr over time" on a typed fleet: per-epoch cost, GPU mix and ITL
+/// for `min_gpus` vs `min_cost`, DT-in-the-loop with per-type probe
+/// caches persisted in the pipeline artifact store.
+pub fn fleet(ctx: &ExpContext) -> Result<()> {
+    let dir = ctx.exp_dir("fleet");
+    let model = ctx.models.first().map(String::as_str).unwrap_or("pico-llama");
+    let mut rt = ctx.load_runtime(model)?;
+    let calib = ctx.calibration(&mut rt)?;
+    let fleet_spec = two_type_fleet();
+    let epochs = if ctx.scale.is_quick() { 6 } else { 8 };
+    let epoch_s = ctx.horizon() / 2.0;
+    let scenario = burst_churn(epochs, epoch_s, &calib);
+
+    let arms: Vec<(&str, Box<dyn Objective>)> =
+        vec![("min_gpus", Box::new(MinGpus)), ("min_cost", Box::new(MinCost))];
+    let mut rows = vec![];
+    let mut summaries: Vec<(&str, Json)> = vec![];
+    let mut mean_costs: Vec<(&str, f64)> = vec![];
+    let (mut probe_hits, mut probe_misses) = (0u64, 0u64);
+    for (oname, objective) in arms {
+        let pipe = ctx
+            .pipeline(model)
+            .calibration(calib.clone())
+            .fleet(fleet_spec.clone())
+            .boxed_objective(objective);
+        let calibrated = pipe.calibrate()?;
+        let (mut cost_sum, mut gpu_epochs, mut itl_sum, mut served) = (0.0, 0usize, 0.0, 0usize);
+        for epoch in 0..epochs {
+            let spec = scenario.epoch_spec(epoch);
+            let planned = match pipe.place_on_twin(&calibrated, &spec.adapters) {
+                Ok(p) => p,
+                Err(e) => {
+                    rows.push(vec![
+                        oname.to_string(),
+                        epoch.to_string(),
+                        spec.adapters.len().to_string(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        format!("infeasible: {e}"),
+                    ]);
+                    continue;
+                }
+            };
+            if let Some(s) = planned.probe_cache {
+                probe_hits += s.hits;
+                probe_misses += s.misses;
+            }
+            let f = planned.fleet.as_ref().expect("fleet pipelines report fleet facets");
+            let mix: Vec<String> = fleet_spec
+                .types
+                .iter()
+                .zip(&f.used_by_type)
+                .filter(|&(_, &n)| n > 0)
+                .map(|(ty, &n)| format!("{}x{n}", ty.name))
+                .collect();
+            let validated = pipe.validate_with(&calib, &planned, &spec)?;
+            let rep = &validated.report;
+            cost_sum += f.cost_per_hour;
+            gpu_epochs += rep.gpus_used;
+            itl_sum += rep.itl_mean_s;
+            served += 1;
+            rows.push(vec![
+                oname.to_string(),
+                epoch.to_string(),
+                spec.adapters.len().to_string(),
+                rep.gpus_used.to_string(),
+                mix.join("+"),
+                format!("{:.2}", f.cost_per_hour),
+                format!("{:.1}", rep.total_throughput_tok_s),
+                format!("{:.3}", rep.itl_mean_s * 1e3),
+                if rep.feasible() { "ok" } else { "degraded" }.to_string(),
+            ]);
+        }
+        let mean_cost = cost_sum / served.max(1) as f64;
+        let mean_itl = itl_sum / served.max(1) as f64;
+        println!(
+            "  fleet {oname}: {gpu_epochs} GPU-epochs at ${mean_cost:.2}/hr mean rental, \
+             mean ITL {:.2} ms ({served}/{epochs} epochs feasible)",
+            mean_itl * 1e3
+        );
+        mean_costs.push((oname, mean_cost));
+        summaries.push((
+            oname,
+            Json::obj(vec![
+                ("gpu_epochs", Json::Num(gpu_epochs as f64)),
+                ("mean_cost_per_hour", Json::Num(mean_cost)),
+                ("mean_itl_s", Json::Num(mean_itl)),
+                ("feasible_epochs", Json::Num(served as f64)),
+            ]),
+        ));
+    }
+
+    println!(
+        "  fleet: probe cache {probe_hits} hits / {probe_misses} misses across both objectives"
+    );
+    let header =
+        ["objective", "epoch", "adapters", "gpus", "mix", "cost_hr", "throughput", "itl_ms",
+         "status"];
+    print_table("fleet — $/hr, GPUs and ITL over time: min_gpus vs min_cost", &header, &rows);
+    write_csv(&dir, "fleet.csv", &header, &rows)?;
+
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("epochs", Json::Num(epochs as f64)),
+        ("epoch_s", Json::Num(epoch_s)),
+        ("fleet", fleet_spec.to_json()),
+        (
+            "probe_cache",
+            Json::obj(vec![
+                ("hits", Json::Num(probe_hits as f64)),
+                ("misses", Json::Num(probe_misses as f64)),
+            ]),
+        ),
+    ];
+    fields.extend(summaries);
+    if let (Some(&(_, mg)), Some(&(_, mc))) = (
+        mean_costs.iter().find(|(n, _)| *n == "min_gpus"),
+        mean_costs.iter().find(|(n, _)| *n == "min_cost"),
+    ) {
+        println!(
+            "  fleet: min_cost rents ${mc:.2}/hr vs min_gpus ${mg:.2}/hr \
+             ({:+.1}% cost)",
+            100.0 * (mc - mg) / mg.max(1e-9)
+        );
+        fields.push(("min_cost_saves_per_hour", Json::Num(mg - mc)));
+    }
+    write_summary(&dir, fields)?;
+    println!("fleet: wrote {}", dir.display());
+    Ok(())
+}

@@ -6,6 +6,7 @@ pub mod caching;
 pub mod common;
 pub mod drift;
 pub mod dt_eval;
+pub mod fleet;
 pub mod ml_eval;
 pub mod profiling;
 
@@ -42,6 +43,11 @@ pub const REGISTRY: &[(&str, &str, ExpFn)] = &[
         "drift",
         "GPUs & ITL over time under churn: {static,replan,oracle} x {min-gpus,min-latency}",
         drift::drift,
+    ),
+    (
+        "fleet",
+        "$/hr, GPUs & ITL over time on a heterogeneous fleet: min-gpus vs min-cost",
+        fleet::fleet,
     ),
 ];
 

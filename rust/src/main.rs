@@ -20,13 +20,13 @@
 //! its content-hashed artifact store (`results/store/`), so any order of
 //! invocation reuses whatever stages are already cached.
 
-use adapter_serving::config::EngineConfig;
+use adapter_serving::config::{EngineConfig, FleetSpec};
 use adapter_serving::dt::{self, Calibration};
 use adapter_serving::engine::Engine;
 use adapter_serving::experiments::{self, ExpContext};
 use adapter_serving::ml;
 use adapter_serving::pipeline::{EstimatorChoice, Pipeline, Scale};
-use adapter_serving::placement::{plan, MinGpus, MinLatency, Objective, Placement};
+use adapter_serving::placement::{plan, MinCost, MinGpus, MinLatency, Objective, Placement};
 use adapter_serving::runtime::{self, Manifest};
 use adapter_serving::util::cli::Args;
 use adapter_serving::workload::WorkloadSpec;
@@ -42,7 +42,12 @@ common options:
   --horizon S                      simulated seconds (default 15)
   --scale <quick|full>             pipeline/experiment scale (default quick)
   --gpus N                         GPU budget for place/pipeline (default 4)
-  --objective <min-gpus|min-latency>   placement objective (default min-gpus)
+  --fleet T:N[@$/hr],...           typed GPU fleet for pipeline (catalog types
+                                   a10g|a100|h100, e.g. a10g:4,a100:2@3.50;
+                                   implies DT-in-the-loop placement)
+  --objective <min-gpus|min-latency|min-cost>  placement objective
+                                   (default min-gpus; min-cost picks which
+                                   fleet type to open by throughput per $)
   --estimator <ml|twin>            placement estimator for pipeline/place/
                                    drift (default ml; twin = DT-in-the-loop
                                    with a persistent probe cache)
@@ -116,6 +121,9 @@ fn pipeline_from(args: &Args) -> Result<Pipeline> {
         .fast_calibration(args.flag("fast") || scale.is_quick())
         .boxed_objective(objective_from(args)?);
     pipe = pipe.estimator(EstimatorChoice::parse(args.get_or("estimator", "ml"))?);
+    if let Some(spec) = args.get("fleet") {
+        pipe = pipe.fleet(FleetSpec::parse(spec)?);
+    }
     // An explicit calibration file (e.g. a previous `calibrate --out`)
     // is injected and keys the downstream stages by content.
     if let Some(path) = args.get("calibration") {
@@ -127,9 +135,10 @@ fn pipeline_from(args: &Args) -> Result<Pipeline> {
 
 fn objective_from(args: &Args) -> Result<Box<dyn Objective>> {
     match args.get_or("objective", "min-gpus") {
-        "min-gpus" => Ok(Box::new(MinGpus)),
-        "min-latency" => Ok(Box::new(MinLatency)),
-        other => Err(anyhow!("unknown --objective '{other}' (min-gpus|min-latency)")),
+        "min-gpus" | "min_gpus" => Ok(Box::new(MinGpus)),
+        "min-latency" | "min_latency" => Ok(Box::new(MinLatency)),
+        "min-cost" | "min_cost" => Ok(Box::new(MinCost)),
+        other => Err(anyhow!("unknown --objective '{other}' (min-gpus|min-latency|min-cost)")),
     }
 }
 
@@ -188,17 +197,21 @@ fn pipeline_cmd(args: &Args) -> Result<()> {
     let t0 = Instant::now();
     let pipe = pipeline_from(args)?;
     let spec = workload(args)?;
+    let fleet_mode = args.get("fleet").is_some();
     println!(
-        "pipeline: {} adapters, {:.2} req/s total, {} GPUs, objective {}, estimator {}",
+        "pipeline: {} adapters, {:.2} req/s total, {}, objective {}, estimator {}",
         spec.adapters.len(),
         spec.total_rate(),
-        args.usize_or("gpus", 4)?,
+        match args.get("fleet") {
+            Some(f) => format!("fleet {f}"),
+            None => format!("{} GPUs", args.usize_or("gpus", 4)?),
+        },
         args.get_or("objective", "min-gpus"),
-        args.get_or("estimator", "ml"),
+        if fleet_mode { "twin (fleet)" } else { args.get_or("estimator", "ml") },
     );
     let calibrated = pipe.calibrate()?;
     stage_line("calibrate", calibrated.cached);
-    let placed = if args.get_or("estimator", "ml") == "twin" {
+    let placed = if fleet_mode || args.get_or("estimator", "ml") == "twin" {
         // The twin estimator consults the DT directly: the dataset and
         // training stages would be computed but never read, so skip them.
         let calibration = calibrated.calibration.clone();
@@ -212,6 +225,13 @@ fn pipeline_cmd(args: &Args) -> Result<()> {
     };
     match placed {
         Ok((planned, calibration)) => {
+            // Per-type calibration status (the fleet CI smoke requires a
+            // second run to hit every class's artifact).
+            if let Some(f) = &planned.fleet {
+                for tc in &f.calibrations {
+                    stage_line(&format!("calibrate[{}]", tc.name), tc.cached);
+                }
+            }
             // DT-in-the-loop probe cache status (mirrors the per-stage
             // lines; the CI smoke requires a second run to warm-start).
             if let Some(s) = planned.probe_cache {
@@ -231,6 +251,17 @@ fn pipeline_cmd(args: &Args) -> Result<()> {
                 planned.objective,
                 planned.estimator
             );
+            if let Some(f) = &planned.fleet {
+                let mix: Vec<String> = f
+                    .spec
+                    .types
+                    .iter()
+                    .zip(&f.used_by_type)
+                    .filter(|&(_, &n)| n > 0)
+                    .map(|(ty, &n)| format!("{}x{n}", ty.name))
+                    .collect();
+                println!("fleet: {} at ${:.2}/hr", mix.join(" + "), f.cost_per_hour);
+            }
             let validated = pipe.validate_with(&calibration, &planned, &spec)?;
             let backend = if validated.on_engine { "engine" } else { "twin" };
             println!(

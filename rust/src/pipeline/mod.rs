@@ -36,17 +36,25 @@ pub mod store;
 pub use store::{fingerprint, ArtifactStore};
 
 use crate::cluster::{self, ClusterReport};
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, FleetSpec, GpuTypeSpec};
 use crate::dt::{self, Calibration, LengthVariant};
 use crate::ml::{self, GridSpec, MlModels, Sample};
 use crate::placement::{
-    plan, CacheStats, CachedEstimator, MinGpus, Objective, Placement, TwinEstimator,
+    fleet as fleet_placement, plan, CacheStats, CachedEstimator, MinGpus, Objective,
+    PerfEstimator, Placement, TwinEstimator, TypedEstimator, UNTYPED_GPU,
 };
 use crate::runtime::{self, Backend, BackendPool, Manifest};
 use crate::workload::{AdapterSpec, WorkloadSpec};
 use anyhow::Result;
 use std::path::PathBuf;
 use std::sync::OnceLock;
+
+/// Probe-memo LRU bound shared by every DT-in-the-loop estimator the
+/// pipeline constructs.  Bounded so a full-scale sweep cannot outgrow
+/// memory; ~256k entries is far beyond any single pipeline's probe
+/// footprint, so the bound never alters small-run behavior or warm
+/// starts.
+const PROBE_MEMO_CAPACITY: usize = 262_144;
 
 /// Pipeline/experiment scale selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -140,6 +148,32 @@ pub struct Trained {
     pub cached: bool,
 }
 
+/// One GPU class's calibration artifact of a fleet pipeline: the base
+/// calibration rescaled by the class's relative performance
+/// ([`Calibration::scaled`]) and cached in the artifact store per type.
+pub struct TypeCalibrated {
+    /// The GPU class name ([`GpuTypeSpec::name`]).
+    pub name: String,
+    /// The class's Digital-Twin calibration.
+    pub calibration: Calibration,
+    /// Whether this class's artifact was served from the store.
+    pub cached: bool,
+}
+
+/// Fleet facets of a [`Planned`] stage (fleet pipelines only).
+pub struct FleetPlan {
+    /// The fleet the planner ran against.
+    pub spec: FleetSpec,
+    /// Type index (into [`FleetSpec::types`]) of every GPU slot.
+    pub gpu_type: Vec<usize>,
+    /// Hourly rental cost of the used GPUs under the fleet's prices.
+    pub cost_per_hour: f64,
+    /// Used-GPU count per type, in type-index order.
+    pub used_by_type: Vec<usize>,
+    /// Per-type calibration stage outputs, in type-index order.
+    pub calibrations: Vec<TypeCalibrated>,
+}
+
 /// Output of the placement stage.
 pub struct Planned {
     /// The placement decision.
@@ -153,7 +187,11 @@ pub struct Planned {
     /// Probe-cache counters of the placement stage (DT-in-the-loop paths
     /// only: the twin estimator's probes are memoized and persisted in
     /// the artifact store; `None` for the µs-per-probe ML estimator).
+    /// Fleet pipelines report the sum over the per-type caches.
     pub probe_cache: Option<CacheStats>,
+    /// Fleet facets when the pipeline planned over a typed fleet
+    /// ([`Pipeline::fleet`]); `None` for homogeneous runs.
+    pub fleet: Option<FleetPlan>,
 }
 
 /// Output of the validation stage.
@@ -232,6 +270,7 @@ pub struct Pipeline {
     artifacts: PathBuf,
     workers: usize,
     gpus: usize,
+    fleet: Option<FleetSpec>,
     grid: Option<GridSpec>,
     calibration: Option<Calibration>,
     fast_calibration: bool,
@@ -255,6 +294,7 @@ impl Pipeline {
             artifacts: Manifest::default_dir(),
             workers: crate::util::threadpool::default_workers(),
             gpus: 4,
+            fleet: None,
             grid: None,
             calibration: None,
             fast_calibration: true,
@@ -299,6 +339,18 @@ impl Pipeline {
     /// Set the GPU budget the placement stage plans against.
     pub fn gpus(mut self, gpus: usize) -> Pipeline {
         self.gpus = gpus.max(1);
+        self
+    }
+
+    /// Plan over a typed heterogeneous fleet instead of `gpus` identical
+    /// GPUs (DESIGN.md §11).  Fleet placement is DT-in-the-loop: each
+    /// class gets a probe-cached twin estimator under its own calibration
+    /// and memory config, regardless of [`Pipeline::estimator`] (per-type
+    /// ML model pairs are future work).  Validation runs on the Digital
+    /// Twin with each GPU simulated under its class's calibration.
+    pub fn fleet(mut self, fleet: FleetSpec) -> Pipeline {
+        self.gpus = fleet.total_gpus().max(1);
+        self.fleet = Some(fleet);
         self
     }
 
@@ -440,6 +492,85 @@ impl Pipeline {
     /// `--estimator twin`).
     pub fn probe_memo_path(&self, calibration: &Calibration) -> PathBuf {
         self.store().path("probes", &self.model, self.probe_fingerprint(calibration), "csv")
+    }
+
+    /// [`Pipeline::probe_fingerprint`] with a gpu-type dimension: the
+    /// class name, ordinal and its (memory-specific) engine config are
+    /// inputs, so two classes sharing one scaled calibration still key
+    /// separate artifacts.
+    fn probe_fingerprint_typed(
+        &self,
+        calibration: &Calibration,
+        ty: &GpuTypeSpec,
+        type_index: usize,
+    ) -> u64 {
+        fingerprint([
+            "probes".to_string(),
+            self.model.clone(),
+            format!("gpu_type={}#{type_index}", ty.name),
+            "twin".to_string(),
+            format!("horizon={}", TwinEstimator::DEFAULT_HORIZON_S),
+            format!("seed={:x}", TwinEstimator::DEFAULT_SEED),
+            format!("{:?}", ty.engine_config(&self.base_config())),
+            format!("{:016x}", Self::calibration_fingerprint(calibration)),
+        ])
+    }
+
+    /// Store path of one fleet class's twin probe memos (`calibration`
+    /// is the class's *scaled* calibration).
+    pub fn probe_memo_path_typed(
+        &self,
+        calibration: &Calibration,
+        ty: &GpuTypeSpec,
+        type_index: usize,
+    ) -> PathBuf {
+        let fp = self.probe_fingerprint_typed(calibration, ty, type_index);
+        self.store().path("probes", &format!("{}-{}", self.model, ty.name), fp, "csv")
+    }
+
+    fn type_calibration_fingerprint(&self, base_content_fp: u64, ty: &GpuTypeSpec) -> u64 {
+        fingerprint([
+            "calibrate-type".to_string(),
+            self.model.clone(),
+            ty.name.clone(),
+            format!("perf_scale={:016x}", ty.perf_scale.to_bits()),
+            format!("{base_content_fp:016x}"),
+        ])
+    }
+
+    /// Fleet calibration stage: one artifact per GPU class, keyed on the
+    /// base calibration's content fingerprint plus the class's name and
+    /// exact `perf_scale` bits.  A class whose artifact is stored loads
+    /// it (`cached: true`); otherwise the class's calibration is derived
+    /// via [`Calibration::scaled`] and persisted.
+    pub fn calibrate_fleet(
+        &self,
+        calibration: &Calibration,
+        fleet: &FleetSpec,
+    ) -> Result<Vec<TypeCalibrated>> {
+        let base_fp = Self::calibration_fingerprint(calibration);
+        let store = self.store();
+        store.ensure_dir()?;
+        let mut out = Vec::with_capacity(fleet.types.len());
+        for ty in &fleet.types {
+            let fp = self.type_calibration_fingerprint(base_fp, ty);
+            let model_tag = format!("{}-{}", self.model, ty.name);
+            let path = store.path("calibration", &model_tag, fp, "json");
+            if path.exists() {
+                if let Ok(c) = Calibration::load_file(&path, &self.model) {
+                    out.push(TypeCalibrated {
+                        name: ty.name.clone(),
+                        calibration: c,
+                        cached: true,
+                    });
+                    continue;
+                }
+            }
+            let c = calibration.scaled(ty.perf_scale);
+            c.to_json().write_file(&path)?;
+            out.push(TypeCalibrated { name: ty.name.clone(), calibration: c, cached: false });
+        }
+        Ok(out)
     }
 
     // ------------------------------------------------------------------
@@ -590,21 +721,92 @@ impl Pipeline {
         &self,
         calibration: &Calibration,
     ) -> Result<(CachedEstimator, PathBuf)> {
-        // Bounded so a full-scale sweep cannot outgrow memory; ~256k
-        // entries is far beyond any single pipeline's probe footprint,
-        // so the bound never alters small-run behavior or warm starts.
-        const PROBE_MEMO_CAPACITY: usize = 262_144;
         let twin = TwinEstimator::new(calibration.clone(), self.base_config());
         let est = CachedEstimator::wrap(twin).capacity(PROBE_MEMO_CAPACITY);
         let path = self.probe_memo_path(calibration);
         if path.exists() {
-            // A corrupt artifact is a cold start, not a failure.
-            if let Ok(memos) = CachedEstimator::load_memos(&path) {
+            // A corrupt (or pre-fleet, gpu_type-less) artifact is a cold
+            // start, not a failure.
+            if let Ok(memos) = CachedEstimator::load_memos(&path, UNTYPED_GPU) {
                 est.preload(memos);
             }
         }
         self.store().ensure_dir()?;
         Ok((est, path))
+    }
+
+    /// One fleet class's probe-cached twin estimator: the class's scaled
+    /// calibration and memory config behind a [`TypedEstimator`] (memo
+    /// keys gain the type ordinal) inside a [`CachedEstimator`] tagged
+    /// with the class name, warm-started from the class's own store
+    /// artifact.
+    fn probe_cached_twin_typed(
+        &self,
+        tc: &TypeCalibrated,
+        ty: &GpuTypeSpec,
+        type_index: usize,
+    ) -> Result<(CachedEstimator, PathBuf)> {
+        let twin =
+            TwinEstimator::new(tc.calibration.clone(), ty.engine_config(&self.base_config()));
+        let est = CachedEstimator::wrap(TypedEstimator::new(twin, type_index))
+            .capacity(PROBE_MEMO_CAPACITY)
+            .memo_tag(ty.name.clone());
+        let path = self.probe_memo_path_typed(&tc.calibration, ty, type_index);
+        if path.exists() {
+            // A corrupt, pre-fleet or foreign-type artifact is a cold
+            // start, not a failure.
+            if let Ok(memos) = CachedEstimator::load_memos(&path, &ty.name) {
+                est.preload(memos);
+            }
+        }
+        Ok((est, path))
+    }
+
+    fn plan_on_twin_fleet(
+        &self,
+        calibration: &Calibration,
+        fleet: &FleetSpec,
+        adapters: &[AdapterSpec],
+    ) -> Result<Planned> {
+        let calibrations = self.calibrate_fleet(calibration, fleet)?;
+        let mut ests = Vec::with_capacity(fleet.types.len());
+        let mut paths = Vec::with_capacity(fleet.types.len());
+        for (t, (ty, tc)) in fleet.types.iter().zip(&calibrations).enumerate() {
+            let (est, path) = self.probe_cached_twin_typed(tc, ty, t)?;
+            ests.push(est);
+            paths.push(path);
+        }
+        let est_refs: Vec<&dyn PerfEstimator> =
+            ests.iter().map(|e| e as &dyn PerfEstimator).collect();
+        let result = fleet_placement::place(adapters, fleet, &est_refs, self.objective.as_ref());
+        // Persist every class's memos even when the planner declines the
+        // workload (estimator state, not placement state), and report the
+        // summed cache counters.
+        let mut stats = CacheStats::default();
+        for (est, path) in ests.iter().zip(&paths) {
+            est.save_memos(path)?;
+            let s = est.stats();
+            stats.hits += s.hits;
+            stats.misses += s.misses;
+            stats.entries += s.entries;
+            stats.warm += s.warm;
+            stats.evictions += s.evictions;
+        }
+        let placed = result?;
+        Ok(Planned {
+            placement: placed.placement.clone(),
+            objective: self.objective.name(),
+            estimator: "twin",
+            gpus: fleet.total_gpus(),
+            probe_cache: Some(stats),
+            fleet: Some(FleetPlan {
+                spec: fleet.clone(),
+                cost_per_hour: placed.cost_per_hour(fleet),
+                used_by_type: placed.used_by_type(fleet),
+                gpu_type: placed.gpu_type,
+                calibrations,
+            }),
+        })
     }
 
     fn plan_on_twin(&self, calibration: &Calibration, adapters: &[AdapterSpec]) -> Result<Planned> {
@@ -620,12 +822,19 @@ impl Pipeline {
             estimator: "twin",
             gpus: self.gpus,
             probe_cache: Some(est.stats()),
+            fleet: None,
         })
     }
 
     /// Placement stage: plan `adapters` onto the GPU budget under the
-    /// configured estimator and objective.
+    /// configured estimator and objective.  With a [`Pipeline::fleet`]
+    /// configured the stage plans over the typed fleet instead
+    /// (DT-in-the-loop under the per-type calibrations, whatever the
+    /// estimator choice).
     pub fn place(&self, trained: &Trained, adapters: &[AdapterSpec]) -> Result<Planned> {
+        if let Some(fleet) = &self.fleet {
+            return self.plan_on_twin_fleet(&trained.calibration, fleet, adapters);
+        }
         match self.estimator {
             EstimatorChoice::Ml => {
                 let placement =
@@ -636,6 +845,7 @@ impl Pipeline {
                     estimator: "ml",
                     gpus: self.gpus,
                     probe_cache: None,
+                    fleet: None,
                 })
             }
             EstimatorChoice::Twin => self.plan_on_twin(&trained.calibration, adapters),
@@ -651,6 +861,9 @@ impl Pipeline {
         calibrated: &Calibrated,
         adapters: &[AdapterSpec],
     ) -> Result<Planned> {
+        if let Some(fleet) = &self.fleet {
+            return self.plan_on_twin_fleet(&calibrated.calibration, fleet, adapters);
+        }
         self.plan_on_twin(&calibrated.calibration, adapters)
     }
 
@@ -675,6 +888,30 @@ impl Pipeline {
         spec: &WorkloadSpec,
     ) -> Result<Validated> {
         let base = self.base_config();
+        if let Some(fp) = &planned.fleet {
+            // Fleet validation is twin-only: each GPU is simulated under
+            // its class's scaled calibration and memory config.
+            anyhow::ensure!(
+                !self.validate_on_engine,
+                "fleet validation runs on the Digital Twin (per-type engines unavailable)"
+            );
+            let calibs: Vec<Calibration> = fp
+                .gpu_type
+                .iter()
+                .map(|&t| fp.calibrations[t].calibration.clone())
+                .collect();
+            let configs: Vec<EngineConfig> =
+                fp.gpu_type.iter().map(|&t| fp.spec.types[t].engine_config(&base)).collect();
+            let report = cluster::serve_on_twin_fleet(
+                &calibs,
+                &configs,
+                &planned.placement,
+                spec,
+                LengthVariant::Original,
+                cluster::RunOptions::new(),
+            );
+            return Ok(Validated { report, on_engine: false });
+        }
         let report = if self.validate_on_engine {
             let opts = cluster::RunOptions::new().pool(self.backend_pool());
             cluster::serve_on_engine(&base, &planned.placement, spec, opts)?
@@ -800,6 +1037,45 @@ mod tests {
             run2.placement,
             "warm-started placement is bit-identical to the cold one"
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fleet_pipeline_per_type_artifacts_warm_start() {
+        let dir = std::env::temp_dir().join(format!("pipe_fleet_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let fleet = FleetSpec::parse("a10g:2,a100:1").unwrap();
+        let spec = WorkloadSpec::sharegpt_like(WorkloadSpec::homogeneous(8, 8, 0.05), 5.0, 7);
+
+        let p1 = pipe(&dir).fleet(fleet.clone());
+        let c1 = p1.calibrate().unwrap();
+        let run1 = p1.place_on_twin(&c1, &spec.adapters).unwrap();
+        let f1 = run1.fleet.as_ref().expect("fleet pipelines report fleet facets");
+        assert!(
+            f1.calibrations.iter().all(|tc| !tc.cached),
+            "first run derives every per-type calibration"
+        );
+        let s1 = run1.probe_cache.unwrap();
+        assert!(s1.misses > 0, "cold fleet run must simulate probes");
+
+        // A fresh Pipeline over the same store: per-type calibrations and
+        // probe memos are all served from their artifacts.
+        let p2 = pipe(&dir).fleet(fleet);
+        let c2 = p2.calibrate().unwrap();
+        let run2 = p2.place_on_twin(&c2, &spec.adapters).unwrap();
+        let f2 = run2.fleet.as_ref().unwrap();
+        assert!(
+            f2.calibrations.iter().all(|tc| tc.cached),
+            "second run loads every per-type calibration"
+        );
+        let s2 = run2.probe_cache.unwrap();
+        assert_eq!(s2.misses, 0, "warm-started fleet run must not re-simulate: {s2:?}");
+        assert_eq!(run1.placement, run2.placement, "fleet plan is reproducible");
+        assert_eq!(f1.cost_per_hour, f2.cost_per_hour);
+
+        let v = p2.validate_with(&c2.calibration, &run2, &spec).unwrap();
+        assert!(v.report.gpus_used >= 1);
+        assert!(!v.on_engine);
         std::fs::remove_dir_all(&dir).ok();
     }
 

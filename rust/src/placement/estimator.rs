@@ -221,18 +221,6 @@ impl TwinEstimator {
         self.seed = seed;
         self
     }
-
-    /// Override the simulated horizon (shorter = faster, noisier).
-    #[deprecated(note = "renamed to `horizon` (bare-setter builder convention)")]
-    pub fn with_horizon(self, horizon_s: f64) -> TwinEstimator {
-        self.horizon(horizon_s)
-    }
-
-    /// Override the workload seed.
-    #[deprecated(note = "renamed to `seed` (bare-setter builder convention)")]
-    pub fn with_seed(self, seed: u64) -> TwinEstimator {
-        self.seed(seed)
-    }
 }
 
 /// The group's `(rank, normalized rate bits)` pairs in canonical
@@ -419,6 +407,10 @@ impl CacheStats {
     }
 }
 
+/// The GPU-type tag of probe caches that are not bound to a fleet type
+/// (the homogeneous pipeline and ad-hoc callers).
+pub const UNTYPED_GPU: &str = "-";
+
 /// Memoizing [`PerfEstimator`] wrapper: every query is answered by the
 /// wrapped estimator exactly once per [`PerfEstimator::memo_key`] — the
 /// granularity each estimator declares sound for itself — and replayed
@@ -459,6 +451,7 @@ pub struct CachedEstimator {
     inner: Box<dyn PerfEstimator>,
     memo: Mutex<LruMemo>,
     probe_workers: usize,
+    memo_tag: String,
     hits: AtomicU64,
     misses: AtomicU64,
     warm: AtomicUsize,
@@ -535,6 +528,7 @@ impl CachedEstimator {
             inner,
             memo: Mutex::new(LruMemo::default()),
             probe_workers: default_workers(),
+            memo_tag: UNTYPED_GPU.to_string(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             warm: AtomicUsize::new(0),
@@ -561,6 +555,16 @@ impl CachedEstimator {
     /// measuring parallel speedup.
     pub fn probe_workers(mut self, workers: usize) -> CachedEstimator {
         self.probe_workers = workers.max(1);
+        self
+    }
+
+    /// Tag the cache with the GPU type its probes answer for (bare-setter
+    /// builder; defaults to [`UNTYPED_GPU`]).  Persisted memo CSVs carry
+    /// the tag in every row and [`CachedEstimator::load_memos`] refuses
+    /// rows from a different type — a fleet's per-type probe caches can
+    /// never silently replay each other's estimates.
+    pub fn memo_tag(mut self, tag: impl Into<String>) -> CachedEstimator {
+        self.memo_tag = tag.into();
         self
     }
 
@@ -602,12 +606,14 @@ impl CachedEstimator {
     }
 
     /// Persist the memo as CSV (throughputs as f64 bit patterns, so a
-    /// reload replays bit-identically).
+    /// reload replays bit-identically).  Every row carries the cache's
+    /// GPU-type tag ([`CachedEstimator::memo_tag`]).
     pub fn save_memos(&self, path: &Path) -> anyhow::Result<()> {
-        let mut t = Table::new(&["key", "throughput_bits", "starved", "memory_error"]);
+        let mut t = Table::new(&["gpu_type", "key", "throughput_bits", "starved", "memory_error"]);
         for (key, e) in self.memos() {
             let k: Vec<String> = key.iter().map(|b| format!("{b:016x}")).collect();
             t.push(vec![
+                self.memo_tag.clone(),
                 k.join(" "),
                 format!("{:016x}", e.throughput_tok_s.to_bits()),
                 (e.starved as i32).to_string(),
@@ -617,21 +623,41 @@ impl CachedEstimator {
         t.write_file(path)
     }
 
-    /// Load memos persisted by [`CachedEstimator::save_memos`].
-    pub fn load_memos(path: &Path) -> anyhow::Result<Vec<(Vec<u64>, Estimate)>> {
+    /// Load memos persisted by [`CachedEstimator::save_memos`] for a
+    /// cache tagged `gpu_type`.  Errs on the pre-fleet schema (no
+    /// `gpu_type` column) and on rows tagged for a different GPU type —
+    /// stale or foreign memo artifacts are invalidated loudly, never
+    /// silently replayed (callers treat the error as a cold start).
+    pub fn load_memos(path: &Path, gpu_type: &str) -> anyhow::Result<Vec<(Vec<u64>, Estimate)>> {
         let t = Table::read_file(path)?;
+        let expect = ["gpu_type", "key", "throughput_bits", "starved", "memory_error"];
+        anyhow::ensure!(
+            t.columns == expect,
+            "probe memo schema mismatch in {} (expected columns {:?}, found {:?}); \
+             pre-fleet memos lack the gpu_type column and must be re-probed",
+            path.display(),
+            expect,
+            t.columns
+        );
         let mut out = Vec::with_capacity(t.rows.len());
         for row in &t.rows {
-            let key: Vec<u64> = row[0]
+            anyhow::ensure!(
+                row[0] == gpu_type,
+                "probe memo {} is tagged for GPU type '{}', not '{}'",
+                path.display(),
+                row[0],
+                gpu_type
+            );
+            let key: Vec<u64> = row[1]
                 .split_whitespace()
                 .map(|h| u64::from_str_radix(h, 16))
                 .collect::<Result<_, _>>()?;
             out.push((
                 key,
                 Estimate {
-                    throughput_tok_s: f64::from_bits(u64::from_str_radix(&row[1], 16)?),
-                    starved: row[2].parse::<i32>()? != 0,
-                    memory_error: row[3].parse::<i32>()? != 0,
+                    throughput_tok_s: f64::from_bits(u64::from_str_radix(&row[2], 16)?),
+                    starved: row[3].parse::<i32>()? != 0,
+                    memory_error: row[4].parse::<i32>()? != 0,
                 },
             ));
         }
@@ -912,8 +938,11 @@ mod tests {
             TwinEstimator::new(Calibration::default(), EngineConfig::default()).horizon(3.0),
         );
         let warm = CachedEstimator::wrap(counting);
-        warm.preload(CachedEstimator::load_memos(&path).unwrap());
+        warm.preload(CachedEstimator::load_memos(&path, UNTYPED_GPU).unwrap());
         assert_eq!(warm.stats().warm, 6);
+        // A cache tagged for a different GPU type refuses these memos
+        // (invalidated loudly, not silently replayed).
+        assert!(CachedEstimator::load_memos(&path, "a100").is_err());
         for g in &groups {
             for a_max in [8usize, 16] {
                 assert_eq!(
@@ -948,13 +977,20 @@ mod tests {
     }
 
     #[test]
-    fn deprecated_with_builders_still_work() {
-        #![allow(deprecated)]
-        let twin = TwinEstimator::new(Calibration::default(), EngineConfig::default())
-            .with_horizon(3.0)
-            .with_seed(7);
-        assert_eq!(twin.horizon_s, 3.0);
-        assert_eq!(twin.seed, 7);
+    fn old_schema_memo_csv_is_rejected_not_misread() {
+        // Pre-fleet memo CSVs (no gpu_type column) must fail the load —
+        // the pipeline treats the error as a cold start and re-probes.
+        let dir = std::env::temp_dir().join(format!("probe_memos_old_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old.csv");
+        std::fs::write(
+            &path,
+            "key,throughput_bits,starved,memory_error\n0000000000000008,4059000000000000,0,0\n",
+        )
+        .unwrap();
+        let err = CachedEstimator::load_memos(&path, UNTYPED_GPU).unwrap_err();
+        assert!(err.to_string().contains("gpu_type"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -1047,7 +1083,7 @@ mod tests {
 
         let counting = Counting::new(twin());
         let warm = CachedEstimator::wrap(counting);
-        warm.preload(CachedEstimator::load_memos(&path).unwrap());
+        warm.preload(CachedEstimator::load_memos(&path, UNTYPED_GPU).unwrap());
         assert_eq!(warm.stats().warm, 2, "only the surviving entries persist");
         // Survivors replay without re-simulating; the evicted group (the
         // oldest, groups[0]) recomputes to the same bits as a fresh twin.

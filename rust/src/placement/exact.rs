@@ -1,0 +1,269 @@
+//! Exact branch-and-bound placement over a typed fleet — the
+//! differential-testing oracle for the greedy planners (DESIGN.md §11).
+//!
+//! [`solve`] enumerates assignments of the priority-sorted adapters to
+//! GPUs depth-first, using exactly the probe data the greedy sees (the
+//! per-type [`PerfEstimator`]s and the [`TESTING_POINTS`] grid), and
+//! returns a plan that **provably minimizes** `Σ unit_costs[type]` over
+//! the opened GPUs:
+//!
+//! * all-ones `unit_costs` → minimum GPU count (the [`MinGpus`] goal);
+//! * per-type $/hr prices → minimum fleet cost (the [`MinCost`] goal).
+//!
+//! Pruning rules (each documented in DESIGN.md §11):
+//! * **feasibility** — a group no testing point can serve (starved or
+//!   over the class's memory) prunes the branch immediately;
+//! * **cost lower bound** — a branch is cut when its accumulated cost
+//!   (plus the cheapest in-stock class, when a fresh GPU must be
+//!   opened) cannot *strictly* beat the incumbent;
+//! * **symmetry** — fresh GPUs are opened at most once per class per
+//!   node, and only in class order.
+//!
+//! Tie-breaking is deterministic: the DFS explores open GPUs in open
+//! order then classes in declaration order, and only strictly cheaper
+//! completions replace the incumbent — the first optimum found in that
+//! fixed order wins.
+//!
+//! Intended for small instances (≤ ~10 adapters, ≤ 3 classes); larger
+//! searches abort with [`PlacementError::TimeLimit`] after `max_nodes`
+//! nodes.
+//!
+//! [`MinGpus`]: crate::placement::MinGpus
+//! [`MinCost`]: crate::placement::MinCost
+
+use super::estimator::PerfEstimator;
+use super::fleet::FleetPlacement;
+use super::greedy::priority_sorting;
+use super::{Placement, PlacementError, TESTING_POINTS};
+use crate::config::FleetSpec;
+use crate::workload::AdapterSpec;
+
+/// Search limits for [`solve`].
+#[derive(Debug, Clone, Copy)]
+pub struct ExactLimits {
+    /// DFS node budget before the search gives up with
+    /// [`PlacementError::TimeLimit`].
+    pub max_nodes: usize,
+}
+
+impl Default for ExactLimits {
+    fn default() -> Self {
+        ExactLimits { max_nodes: 2_000_000 }
+    }
+}
+
+/// Best feasible `A_max` for a group on one class: the testing point
+/// with the highest predicted throughput among the feasible ones
+/// (ties → the smallest point).  `None` when no point serves the group.
+fn best_feasible_a_max(
+    group: &[AdapterSpec],
+    est: &dyn PerfEstimator,
+) -> Option<(usize, f64)> {
+    let mut best: Option<(usize, f64)> = None;
+    for &p in TESTING_POINTS.iter() {
+        let e = est.estimate(group, p);
+        if e.feasible() && best.is_none_or(|(_, t)| e.throughput_tok_s > t) {
+            best = Some((p, e.throughput_tok_s));
+        }
+    }
+    best
+}
+
+struct Search<'a> {
+    order: Vec<AdapterSpec>,
+    fleet: &'a FleetSpec,
+    ests: &'a [&'a dyn PerfEstimator],
+    unit_costs: &'a [f64],
+    limits: ExactLimits,
+    nodes: usize,
+    best_cost: f64,
+    best: Option<Vec<(usize, Vec<AdapterSpec>)>>, // (type, group) per open GPU
+}
+
+impl Search<'_> {
+    /// DFS over assignments of `order[i..]`.  `open` holds the opened
+    /// GPUs as (type, group); `remaining` the unopened stock per type.
+    fn dfs(
+        &mut self,
+        i: usize,
+        open: &mut Vec<(usize, Vec<AdapterSpec>)>,
+        remaining: &mut [usize],
+        cost: f64,
+    ) -> Result<(), PlacementError> {
+        self.nodes += 1;
+        if self.nodes > self.limits.max_nodes {
+            return Err(PlacementError::TimeLimit);
+        }
+        if i == self.order.len() {
+            // Strict improvement only → first optimum in DFS order wins.
+            if cost < self.best_cost {
+                self.best_cost = cost;
+                self.best = Some(open.clone());
+            }
+            return Ok(());
+        }
+        // Cost lower bound: completions only add GPUs, never remove them.
+        if cost >= self.best_cost {
+            return Ok(());
+        }
+        let a = self.order[i].clone();
+        // Branch 1: join an already-open GPU, in open order.
+        for g in 0..open.len() {
+            open[g].1.push(a.clone());
+            let t = open[g].0;
+            if best_feasible_a_max(&open[g].1, self.ests[t]).is_some() {
+                self.dfs(i + 1, open, remaining, cost)?;
+            }
+            open[g].1.pop();
+        }
+        // Branch 2: open a fresh GPU — once per in-stock class, in class
+        // order (symmetry breaking: fresh GPUs of one class are
+        // interchangeable).  The cost bound prunes classes that cannot
+        // strictly beat the incumbent.
+        for t in 0..self.fleet.types.len() {
+            if remaining[t] == 0 || cost + self.unit_costs[t] >= self.best_cost {
+                continue;
+            }
+            let group = vec![a.clone()];
+            if best_feasible_a_max(&group, self.ests[t]).is_none() {
+                continue; // memory/starvation pruning
+            }
+            remaining[t] -= 1;
+            open.push((t, group));
+            self.dfs(i + 1, open, remaining, cost + self.unit_costs[t])?;
+            open.pop();
+            remaining[t] += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Exactly minimize `Σ unit_costs[type]` over opened GPUs (see the
+/// module docs).  `ests` holds one estimator per fleet type; pass the
+/// same (cached) estimators the greedy used and the oracle consumes the
+/// identical probe data.  Returns [`PlacementError::Starvation`] when no
+/// feasible assignment exists within the fleet's stock and
+/// [`PlacementError::TimeLimit`] when the node budget runs out.
+pub fn solve(
+    adapters: &[AdapterSpec],
+    fleet: &FleetSpec,
+    ests: &[&dyn PerfEstimator],
+    unit_costs: &[f64],
+    limits: ExactLimits,
+) -> Result<FleetPlacement, PlacementError> {
+    assert_eq!(ests.len(), fleet.types.len(), "one estimator per fleet type");
+    assert_eq!(unit_costs.len(), fleet.types.len(), "one unit cost per fleet type");
+    let mut search = Search {
+        order: priority_sorting(adapters),
+        fleet,
+        ests,
+        unit_costs,
+        limits,
+        nodes: 0,
+        best_cost: f64::INFINITY,
+        best: None,
+    };
+    let mut remaining = fleet.counts.clone();
+    search.dfs(0, &mut Vec::new(), &mut remaining, 0.0)?;
+    let Some(groups) = search.best else {
+        return Err(PlacementError::Starvation);
+    };
+
+    // Materialize: opened GPUs in DFS open order, padded with the
+    // unopened stock (a_max 0) in class order — same layout as
+    // `fleet::place`.
+    let total = fleet.total_gpus();
+    let mut placement = Placement { assignment: Default::default(), a_max: vec![0; total] };
+    let mut gpu_type = Vec::with_capacity(total);
+    let mut used = vec![0usize; fleet.types.len()];
+    for (g, (t, group)) in groups.iter().enumerate() {
+        let (a_max, _) = best_feasible_a_max(group, ests[*t])
+            .expect("accepted solutions contain only feasible groups");
+        placement.a_max[g] = a_max;
+        for a in group {
+            placement.assignment.insert(a.id, g);
+        }
+        gpu_type.push(*t);
+        used[*t] += 1;
+    }
+    for (t, &count) in fleet.counts.iter().enumerate() {
+        gpu_type.extend(std::iter::repeat_n(t, count - used[t]));
+    }
+    Ok(FleetPlacement { placement, gpu_type })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuTypeSpec;
+    use crate::placement::MinGpus;
+
+    fn models() -> crate::ml::MlModels {
+        crate::placement::test_models::analytic_models(1)
+    }
+
+    fn adapters(n: usize, rate: f64) -> Vec<AdapterSpec> {
+        (0..n).map(|id| AdapterSpec { id, rank: 8, rate }).collect()
+    }
+
+    #[test]
+    fn exact_packs_feasible_workload_onto_one_gpu() {
+        let est = models();
+        let fleet = FleetSpec::single(GpuTypeSpec::catalog("a10g").unwrap(), 3);
+        let fp = solve(&adapters(6, 0.1), &fleet, &[&est], &[1.0], ExactLimits::default())
+            .unwrap();
+        assert_eq!(fp.gpus_used(), 1);
+        assert_eq!(fp.placement.assignment.len(), 6);
+    }
+
+    #[test]
+    fn exact_matches_or_beats_greedy_gpu_count() {
+        let est = models();
+        let fleet = FleetSpec::single(GpuTypeSpec::catalog("a10g").unwrap(), 4);
+        // 8 × 1.4 req/s × 96 tok ≈ 1075 tok/s demand > one analytic
+        // GPU's capacity — the optimum needs at least two GPUs.
+        let ads = adapters(8, 1.4);
+        let exact =
+            solve(&ads, &fleet, &[&est], &[1.0], ExactLimits::default()).unwrap();
+        let greedy = crate::placement::fleet::place(&ads, &fleet, &[&est], &MinGpus).unwrap();
+        assert!(exact.gpus_used() <= greedy.gpus_used());
+        assert!(exact.gpus_used() >= 2, "demand exceeds one GPU");
+    }
+
+    #[test]
+    fn exact_prefers_cheap_capacity_when_prices_differ() {
+        // Two classes, identical performance, different prices: the
+        // optimum must use only the cheap class when stock allows.
+        let est0 = models();
+        let est1 = models();
+        let mut cheap = GpuTypeSpec::catalog("a10g").unwrap();
+        cheap.cost_per_hour = 1.0;
+        let mut exp = GpuTypeSpec::catalog("a10g").unwrap();
+        exp.name = "a10g-spot".into();
+        exp.cost_per_hour = 9.0;
+        let fleet = FleetSpec::new(vec![(exp, 4), (cheap, 4)]);
+        let ads = adapters(8, 0.9);
+        let prices = fleet.prices();
+        let fp = solve(&ads, &fleet, &[&est0, &est1], &prices, ExactLimits::default())
+            .unwrap();
+        let by_type = fp.used_by_type(&fleet);
+        assert_eq!(by_type[0], 0, "expensive class must stay unused, got {by_type:?}");
+        assert!(by_type[1] >= 1);
+    }
+
+    #[test]
+    fn infeasible_instance_reports_starvation_and_node_cap_reports_time_limit() {
+        let est = models();
+        let fleet = FleetSpec::single(GpuTypeSpec::catalog("a10g").unwrap(), 1);
+        let ads = adapters(8, 2.0); // 8 × 2.0 × 96 ≫ capacity
+        assert_eq!(
+            solve(&ads, &fleet, &[&est], &[1.0], ExactLimits::default()).unwrap_err(),
+            PlacementError::Starvation
+        );
+        let easy = adapters(6, 0.1);
+        assert_eq!(
+            solve(&easy, &fleet, &[&est], &[1.0], ExactLimits { max_nodes: 2 }).unwrap_err(),
+            PlacementError::TimeLimit
+        );
+    }
+}

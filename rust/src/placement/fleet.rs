@@ -1,0 +1,339 @@
+//! Alg. 1 over a **typed fleet** — heterogeneous GPU classes with
+//! per-class memory, price and calibrated performance (DESIGN.md §11).
+//!
+//! [`place`] generalizes [`super::greedy::place`] from "N identical
+//! GPUs" to a [`FleetSpec`]: GPUs are *opened* lazily from the per-type
+//! stock instead of pre-existing, and when a fresh GPU is needed the
+//! [`Objective`] picks which class to open — [`crate::placement::MinCost`]
+//! probes each in-stock class with the head adapter and opens the best
+//! cost-normalized feasible throughput (the Mélange-style heterogeneity
+//! lever), while [`crate::placement::MinGpus`] keeps fleet-declaration
+//! order.  Everything else (provisional packing, the TestAllocation
+//! commit/rollback at the testing points, leftover validation) is the
+//! shared Alg. 1/Alg. 2 machinery from [`super::greedy`], so a
+//! single-type fleet issues a **bit-identical probe sequence** and
+//! reproduces the homogeneous plan exactly — cache stats included.
+//!
+//! [`TypedEstimator`] gives each class's estimator a gpu-type dimension
+//! in its [`PerfEstimator::memo_key`], so one shared memo store can hold
+//! several classes' probes without collisions.
+
+use super::estimator::{Estimate, PerfEstimator, ProbeQuery};
+use super::greedy::{self, GpuState};
+use super::objective::{Objective, OpenCandidate};
+use super::{Placement, PlacementError, TESTING_POINTS};
+use crate::config::FleetSpec;
+use crate::workload::AdapterSpec;
+use std::collections::VecDeque;
+
+/// A placement onto a typed fleet: the assignment plus each GPU slot's
+/// type index.  `placement.a_max` and `gpu_type` both have
+/// `fleet.total_gpus()` entries — opened GPUs first (in open order),
+/// then the unopened stock (a_max 0) in type order, so a single-type
+/// fleet's `placement` is structurally identical to the homogeneous
+/// planner's output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetPlacement {
+    /// The adapter→GPU assignment and per-GPU `A_max` configuration.
+    pub placement: Placement,
+    /// Type index (into [`FleetSpec::types`]) of every GPU slot.
+    pub gpu_type: Vec<usize>,
+}
+
+impl FleetPlacement {
+    /// GPUs actually serving adapters.
+    pub fn gpus_used(&self) -> usize {
+        self.placement.gpus_used()
+    }
+
+    /// Hourly rental cost of the used GPUs under the fleet's prices.
+    pub fn cost_per_hour(&self, fleet: &FleetSpec) -> f64 {
+        self.placement
+            .a_max
+            .iter()
+            .zip(&self.gpu_type)
+            .filter(|&(&a_max, _)| a_max > 0)
+            .map(|(_, &t)| fleet.types[t].cost_per_hour)
+            .sum()
+    }
+
+    /// Used-GPU count per type, in type-index order.
+    pub fn used_by_type(&self, fleet: &FleetSpec) -> Vec<usize> {
+        let mut counts = vec![0usize; fleet.types.len()];
+        for (&a_max, &t) in self.placement.a_max.iter().zip(&self.gpu_type) {
+            if a_max > 0 {
+                counts[t] += 1;
+            }
+        }
+        counts
+    }
+}
+
+/// A [`PerfEstimator`] wrapper that prefixes every
+/// [`PerfEstimator::memo_key`] with a GPU-type ordinal, so per-class
+/// probes of otherwise identical groups can never collide in a shared
+/// memo ([`crate::placement::CachedEstimator`]).
+pub struct TypedEstimator<E> {
+    inner: E,
+    type_index: u64,
+}
+
+impl<E: PerfEstimator> TypedEstimator<E> {
+    /// Tag `inner`'s memo keys with the fleet `type_index`.
+    pub fn new(inner: E, type_index: usize) -> TypedEstimator<E> {
+        TypedEstimator { inner, type_index: type_index as u64 }
+    }
+}
+
+impl<E: PerfEstimator> PerfEstimator for TypedEstimator<E> {
+    fn estimate(&self, adapters: &[AdapterSpec], a_max: usize) -> Estimate {
+        self.inner.estimate(adapters, a_max)
+    }
+
+    fn estimate_batch(&self, queries: &[ProbeQuery<'_>]) -> Vec<Estimate> {
+        self.inner.estimate_batch(queries)
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn memo_key(&self, adapters: &[AdapterSpec], a_max: usize) -> Vec<u64> {
+        let mut key = vec![self.type_index];
+        key.extend(self.inner.memo_key(adapters, a_max));
+        key
+    }
+}
+
+/// Pick which GPU class to open for `head` (the adapter that needs a
+/// fresh GPU).  With one in-stock class — or an objective that declines
+/// probing — no probes are issued, which keeps single-type fleets
+/// bit-identical to the homogeneous planner.
+fn choose_open_type(
+    head: &AdapterSpec,
+    remaining: &[usize],
+    fleet: &FleetSpec,
+    ests: &[&dyn PerfEstimator],
+    objective: &dyn Objective,
+) -> Result<usize, PlacementError> {
+    let avail: Vec<usize> = (0..remaining.len()).filter(|&t| remaining[t] > 0).collect();
+    let Some(&first) = avail.first() else {
+        return Err(PlacementError::Starvation);
+    };
+    if avail.len() == 1 {
+        return Ok(first);
+    }
+    let candidates: Vec<OpenCandidate> = if objective.probes_open_candidates() {
+        let group = [head.clone()];
+        avail
+            .iter()
+            .map(|&t| {
+                let e = ests[t].estimate(&group, TESTING_POINTS[0]);
+                OpenCandidate {
+                    type_index: t,
+                    cost_per_hour: fleet.types[t].cost_per_hour,
+                    throughput_tok_s: e.throughput_tok_s,
+                    feasible: e.feasible(),
+                }
+            })
+            .collect()
+    } else {
+        avail
+            .iter()
+            .map(|&t| OpenCandidate {
+                type_index: t,
+                cost_per_hour: fleet.types[t].cost_per_hour,
+                throughput_tok_s: 0.0,
+                feasible: true,
+            })
+            .collect()
+    };
+    let chosen = objective.open_type(&candidates);
+    debug_assert!(avail.contains(&chosen), "objective chose an out-of-stock type");
+    Ok(chosen)
+}
+
+/// Alg. 1 over a typed fleet.  `ests` holds one estimator per fleet
+/// type, in [`FleetSpec::types`] order — each answering probes under
+/// that class's calibration and memory config.  Returns
+/// `Err(Starvation)` when no starvation-free allocation exists within
+/// the fleet's stock.
+pub fn place(
+    adapters: &[AdapterSpec],
+    fleet: &FleetSpec,
+    ests: &[&dyn PerfEstimator],
+    objective: &dyn Objective,
+) -> Result<FleetPlacement, PlacementError> {
+    assert_eq!(ests.len(), fleet.types.len(), "one estimator per fleet type");
+    let sorted = greedy::priority_sorting(adapters);
+    let mut a_q: VecDeque<AdapterSpec> = sorted.into();
+    let mut remaining: Vec<usize> = fleet.counts.clone();
+    // Opened GPUs, indexed in open order (these become GPU indices
+    // 0..states.len() of the final placement — exactly the index order
+    // the homogeneous planner assigns).
+    let mut states: Vec<GpuState> = vec![];
+    let mut gpu_type: Vec<usize> = vec![];
+    let mut g_q: VecDeque<usize> = VecDeque::new();
+    let testing: std::collections::HashSet<usize> = TESTING_POINTS.iter().copied().collect();
+
+    while let Some(a) = a_q.pop_front() {
+        let g = match g_q.pop_front() {
+            Some(g) => g,
+            None => {
+                // Open a fresh GPU from the stock; the objective picks
+                // the class.  A rolled-back (retired) GPU stays consumed,
+                // mirroring the homogeneous planner's burned GPU index.
+                let t = choose_open_type(&a, &remaining, fleet, ests, objective)?;
+                remaining[t] -= 1;
+                states.push(GpuState::default());
+                gpu_type.push(t);
+                states.len() - 1
+            }
+        };
+        states[g].provisional.push(a); // ProvisionalInclude
+        let at_testing_point = testing.contains(&states[g].count())
+            || states[g].count() >= *TESTING_POINTS.last().unwrap();
+        if at_testing_point {
+            let (ok, p_new) = greedy::test_allocation(&states[g], ests[gpu_type[g]]);
+            if ok {
+                // CommitAllocation
+                let prov = std::mem::take(&mut states[g].provisional);
+                states[g].committed.extend(prov);
+                states[g].a_max = p_new;
+                g_q.push_front(g);
+            } else {
+                // RollbackAllocation + Merge: provisional adapters return
+                // to the head of the queue and the GPU is retired with
+                // what it already committed.
+                let un_alloc = std::mem::take(&mut states[g].provisional);
+                for a in un_alloc.into_iter().rev() {
+                    a_q.push_front(a);
+                }
+            }
+        } else {
+            g_q.push_front(g);
+        }
+    }
+
+    // Validate any leftover provisional allocations (Alg. 1 lines 24-28).
+    for (st, &t) in states.iter_mut().zip(&gpu_type) {
+        if !st.provisional.is_empty() {
+            let (ok, p_new) = greedy::test_allocation(st, ests[t]);
+            if !ok {
+                return Err(PlacementError::Starvation);
+            }
+            let prov = std::mem::take(&mut st.provisional);
+            st.committed.extend(prov);
+            st.a_max = p_new;
+        } else if !st.committed.is_empty() && st.a_max == 0 {
+            let (ok, p_new) = greedy::test_allocation(st, ests[t]);
+            if !ok {
+                return Err(PlacementError::Starvation);
+            }
+            st.a_max = p_new;
+        }
+    }
+
+    // Pad to the full fleet size: unopened stock follows the opened GPUs,
+    // in type order, with a_max 0 — structurally identical to the
+    // homogeneous planner's `vec![0; gpus]` shape.
+    let total = fleet.total_gpus();
+    let mut placement = Placement { assignment: Default::default(), a_max: vec![0; total] };
+    for (g, st) in states.iter().enumerate() {
+        for a in &st.committed {
+            placement.assignment.insert(a.id, g);
+        }
+        placement.a_max[g] = st.a_max;
+    }
+    for (t, &left) in remaining.iter().enumerate() {
+        gpu_type.extend(std::iter::repeat_n(t, left));
+    }
+    debug_assert_eq!(gpu_type.len(), total);
+    if placement.assignment.len() != adapters.len() {
+        return Err(PlacementError::Starvation);
+    }
+    Ok(FleetPlacement { placement, gpu_type })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FleetSpec, GpuTypeSpec};
+    use crate::placement::{greedy, CachedEstimator, MinCost, MinGpus};
+
+    /// The shared analytic stand-in models (capacity 1000 − 2·a_max,
+    /// starved when demand exceeds it) — same family as the homogeneous
+    /// planner tests, so parity is comparable probe-for-probe.
+    fn models() -> crate::ml::MlModels {
+        crate::placement::test_models::analytic_models(1)
+    }
+
+    fn adapters(n: usize, rate: f64) -> Vec<AdapterSpec> {
+        (0..n).map(|id| AdapterSpec { id, rank: 8, rate }).collect()
+    }
+
+    fn single_fleet(count: usize) -> FleetSpec {
+        FleetSpec::single(GpuTypeSpec::catalog("a10g").unwrap(), count)
+    }
+
+    #[test]
+    fn single_type_fleet_is_bit_identical_to_homogeneous_including_cache_stats() {
+        for (n, rate, gpus) in [(16, 0.1, 4), (64, 0.3, 4), (32, 0.1, 2)] {
+            let ads = adapters(n, rate);
+            let homog = CachedEstimator::wrap(models());
+            let expected = greedy::place(&ads, gpus, &homog).unwrap();
+
+            let typed = CachedEstimator::wrap(TypedEstimator::new(models(), 0));
+            let fleet = single_fleet(gpus);
+            let got = place(&ads, &fleet, &[&typed], &MinGpus).unwrap();
+            assert_eq!(got.placement, expected, "plan diverged for n={n}");
+            assert_eq!(got.gpu_type, vec![0; gpus]);
+            // Identical probe sequence → identical hit/miss/entry counts.
+            assert_eq!(typed.stats(), homog.stats(), "cache stats diverged for n={n}");
+
+            // MinCost on a single-type fleet degenerates to MinGpus.
+            let typed2 = CachedEstimator::wrap(TypedEstimator::new(models(), 0));
+            let got2 = place(&ads, &fleet, &[&typed2], &MinCost).unwrap();
+            assert_eq!(got2.placement, expected);
+            assert_eq!(typed2.stats(), homog.stats());
+        }
+    }
+
+    #[test]
+    fn starvation_when_stock_runs_out() {
+        let ads = adapters(384, 1.0);
+        let est = models();
+        let fleet = single_fleet(4);
+        let err = place(&ads, &fleet, &[&est], &MinGpus).unwrap_err();
+        assert_eq!(err, PlacementError::Starvation);
+    }
+
+    #[test]
+    fn cost_accounting_uses_per_type_prices() {
+        let ads = adapters(16, 0.1);
+        let est0 = models();
+        let est1 = models();
+        let mut cheap = GpuTypeSpec::catalog("a10g").unwrap();
+        cheap.cost_per_hour = 2.0;
+        let mut exp = GpuTypeSpec::catalog("a100").unwrap();
+        exp.cost_per_hour = 5.0;
+        let fleet = FleetSpec::new(vec![(cheap, 2), (exp, 2)]);
+        let fp = place(&ads, &fleet, &[&est0, &est1], &MinGpus).unwrap();
+        assert_eq!(fp.placement.assignment.len(), 16);
+        let by_type = fp.used_by_type(&fleet);
+        assert_eq!(
+            fp.cost_per_hour(&fleet),
+            by_type[0] as f64 * 2.0 + by_type[1] as f64 * 5.0
+        );
+        assert_eq!(fp.gpu_type.len(), fleet.total_gpus());
+    }
+
+    #[test]
+    fn typed_memo_keys_do_not_collide_across_types() {
+        let a = TypedEstimator::new(models(), 0);
+        let b = TypedEstimator::new(models(), 1);
+        let ads = adapters(4, 0.1);
+        assert_ne!(a.memo_key(&ads, 8), b.memo_key(&ads, 8));
+        assert_eq!(a.memo_key(&ads, 8)[1..], b.memo_key(&ads, 8)[1..]);
+    }
+}

@@ -42,20 +42,22 @@ pub fn priority_sorting(adapters: &[AdapterSpec]) -> Vec<AdapterSpec> {
     out
 }
 
-/// Per-GPU packing state.
+/// Per-GPU packing state.  `pub(super)` so the typed-fleet planner
+/// ([`super::fleet`]) shares the exact same commit/rollback bookkeeping —
+/// single-type fleet parity depends on it.
 #[derive(Debug, Clone, Default)]
-struct GpuState {
-    committed: Vec<AdapterSpec>,
-    provisional: Vec<AdapterSpec>,
-    a_max: usize,
+pub(super) struct GpuState {
+    pub(super) committed: Vec<AdapterSpec>,
+    pub(super) provisional: Vec<AdapterSpec>,
+    pub(super) a_max: usize,
 }
 
 impl GpuState {
-    fn count(&self) -> usize {
+    pub(super) fn count(&self) -> usize {
         self.committed.len() + self.provisional.len()
     }
 
-    fn all(&self) -> Vec<AdapterSpec> {
+    pub(super) fn all(&self) -> Vec<AdapterSpec> {
         let mut v = self.committed.clone();
         v.extend(self.provisional.iter().cloned());
         v
@@ -65,7 +67,9 @@ impl GpuState {
 /// TestAllocation (Algorithm 2): probe the current and the next `A_max`
 /// candidate with the estimator's throughput prediction, keep the better,
 /// veto on predicted infeasibility.  Returns `(ok, chosen_a_max)`.
-fn test_allocation(g: &GpuState, est: &dyn PerfEstimator) -> (bool, usize) {
+/// Shared with [`super::fleet`] so both planners issue bit-identical
+/// probe sequences.
+pub(super) fn test_allocation(g: &GpuState, est: &dyn PerfEstimator) -> (bool, usize) {
     let all = g.all();
     let p = if g.a_max == 0 { TESTING_POINTS[0] } else { g.a_max };
     let p_next = next_gpu_config(p);

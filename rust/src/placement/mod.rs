@@ -12,8 +12,13 @@
 //!   including the memoizing [`CachedEstimator`] that makes the
 //!   DT-in-the-loop path affordable (probe memos persist via the
 //!   pipeline artifact store);
-//! - [`objective`] — the [`Objective`] seam ([`MinGpus`]/[`MinLatency`]);
+//! - [`objective`] — the [`Objective`] seam
+//!   ([`MinGpus`]/[`MinLatency`]/[`MinCost`]);
 //! - [`greedy`] — the paper's contribution (Algorithms 1 & 2);
+//! - [`fleet`] — Alg. 1 over a typed heterogeneous fleet
+//!   ([`crate::config::FleetSpec`], DESIGN.md §11);
+//! - [`exact`] — branch-and-bound oracle that provably minimizes GPU
+//!   count / fleet cost on small instances (differential testing);
 //! - [`baselines`] — MaxBase, MaxBase*, Random (§8.4);
 //! - [`dlora`] — the dLoRA proactive placement reimplementation (§8.4.3);
 //! - [`latency`] — the ProposedLat latency-oriented variant (§8.4.4);
@@ -23,6 +28,8 @@
 pub mod baselines;
 pub mod dlora;
 pub mod estimator;
+pub mod exact;
+pub mod fleet;
 pub mod greedy;
 pub mod latency;
 pub mod objective;
@@ -30,9 +37,11 @@ pub mod replan;
 
 pub use estimator::{
     probe_key, CacheStats, CachedEstimator, Estimate, MlEstimator, OracleEstimator,
-    PerfEstimator, ProbeQuery, TwinEstimator,
+    PerfEstimator, ProbeQuery, TwinEstimator, UNTYPED_GPU,
 };
-pub use objective::{plan, Candidate, MinGpus, MinLatency, Objective};
+pub use exact::ExactLimits;
+pub use fleet::{FleetPlacement, TypedEstimator};
+pub use objective::{plan, Candidate, MinCost, MinGpus, MinLatency, Objective, OpenCandidate};
 pub use replan::{replan_with_ledger, ReplanLedger};
 
 use crate::workload::AdapterSpec;

@@ -38,6 +38,24 @@ pub struct Candidate {
     pub load_req_s: f64,
 }
 
+/// A "open a fresh GPU of type T" option scored by an [`Objective`] when
+/// the fleet planner ([`crate::placement::fleet`]) must pick which GPU
+/// class to provision next.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpenCandidate {
+    /// Index into the fleet's type table ([`crate::config::FleetSpec`]).
+    pub type_index: usize,
+    /// The class's rental price ($/hr).
+    pub cost_per_hour: f64,
+    /// Probed throughput of the head adapter alone on this class (tok/s).
+    /// Zero when the objective declined probing
+    /// ([`Objective::probes_open_candidates`] is `false`).
+    pub throughput_tok_s: f64,
+    /// Whether the probe found the head adapter feasible on this class.
+    /// `true` when probing was declined.
+    pub feasible: bool,
+}
+
 /// What a placement optimizes.  Implementations must be stateless
 /// policies; planners query them per candidate.
 pub trait Objective {
@@ -64,6 +82,23 @@ pub trait Objective {
     /// Whether the objective packs onto few GPUs (enabling the replanner's
     /// drain pass) or spreads across all of them.
     fn consolidates(&self) -> bool;
+
+    /// Whether the fleet planner should probe each candidate GPU class
+    /// with the head adapter before asking [`Objective::open_type`] which
+    /// one to open.  Defaults to `false` (open in fleet-declaration
+    /// order), which also guarantees single-type fleets issue *exactly*
+    /// the probe sequence of the homogeneous planner.
+    fn probes_open_candidates(&self) -> bool {
+        false
+    }
+
+    /// Pick which GPU class to open next from the non-empty candidate
+    /// list (one entry per type with remaining stock, in type-index
+    /// order).  Returns the chosen `type_index`.  The default takes the
+    /// first candidate — fleet-declaration order.
+    fn open_type(&self, candidates: &[OpenCandidate]) -> usize {
+        candidates[0].type_index
+    }
 
     /// One-shot planner for a cold start: Alg. 1 packing for
     /// consolidating objectives, least-loaded spreading otherwise.
@@ -174,6 +209,70 @@ impl Objective for MinLatency {
     }
 }
 
+/// Minimize fleet rental cost ($/hr) on a heterogeneous fleet: pack like
+/// [`MinGpus`], but when a fresh GPU must be opened, probe every GPU class
+/// in stock and open the one with the best cost-normalized feasible
+/// throughput (tok/s per $/hr) — the Mélange-style heterogeneity lever
+/// (DESIGN.md §11).  On a single-type fleet this degenerates to `MinGpus`
+/// bit-identically (one candidate → no choice probes).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MinCost;
+
+impl Objective for MinCost {
+    fn name(&self) -> &'static str {
+        "min-cost"
+    }
+
+    fn cost(&self, c: &Candidate) -> (f64, f64) {
+        // Within a fixed set of open GPUs the packing rule is MinGpus:
+        // never open capacity an already-open GPU can absorb.  Which
+        // capacity gets opened is decided in `open_type`.
+        (if c.used { 0.0 } else { 1.0 }, -c.throughput_tok_s)
+    }
+
+    fn keeps(
+        &self,
+        prev: &Candidate,
+        best: &Candidate,
+        adapter: &AdapterSpec,
+        params: &ReplanParams,
+    ) -> bool {
+        MinGpus.keeps(prev, best, adapter, params)
+    }
+
+    fn consolidates(&self) -> bool {
+        true
+    }
+
+    fn probes_open_candidates(&self) -> bool {
+        true
+    }
+
+    fn open_type(&self, candidates: &[OpenCandidate]) -> usize {
+        // Best feasible throughput per dollar; ties (and the no-feasible
+        // fallback, which opens the cheapest class and lets Alg. 1's veto
+        // retire it if the probe was right) break to the lowest type
+        // index — deterministic for the differential tests.
+        let mut best: Option<(f64, usize)> = None;
+        for c in candidates.iter().filter(|c| c.feasible) {
+            let value = c.throughput_tok_s / c.cost_per_hour.max(f64::MIN_POSITIVE);
+            if best.is_none_or(|(v, _)| value > v) {
+                best = Some((value, c.type_index));
+            }
+        }
+        if let Some((_, t)) = best {
+            return t;
+        }
+        let mut cheapest = &candidates[0];
+        for c in &candidates[1..] {
+            if c.cost_per_hour < cheapest.cost_per_hour {
+                cheapest = c;
+            }
+        }
+        cheapest.type_index
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,6 +315,28 @@ mod tests {
         // Equal loads: MinLatency stays put.
         let best_eq = cand(1, true, 1000.0, 2.0);
         assert!(MinLatency.keeps(&prev, &best_eq, &a, &params));
+    }
+
+    #[test]
+    fn min_cost_opens_best_throughput_per_dollar() {
+        fn open(type_index: usize, cost: f64, thr: f64, feasible: bool) -> OpenCandidate {
+            OpenCandidate { type_index, cost_per_hour: cost, throughput_tok_s: thr, feasible }
+        }
+        let obj = MinCost;
+        let cands =
+            vec![open(0, 1.0, 100.0, true), open(1, 2.0, 300.0, true), open(2, 0.5, 400.0, false)];
+        // 150 tok/s/$ (type 1) beats 100 (type 0); infeasible type 2 ignored.
+        assert_eq!(obj.open_type(&cands), 1);
+        // No feasible candidate: fall back to the cheapest class.
+        let none = vec![open(0, 1.0, 0.0, false), open(1, 0.4, 0.0, false)];
+        assert_eq!(obj.open_type(&none), 1);
+        // Equal value ties break to the lowest type index.
+        let tie = vec![open(0, 1.0, 100.0, true), open(1, 2.0, 200.0, true)];
+        assert_eq!(obj.open_type(&tie), 0);
+        // MinGpus-style defaults elsewhere.
+        assert!(obj.consolidates() && obj.probes_open_candidates());
+        assert!(!MinGpus.probes_open_candidates());
+        assert_eq!(MinGpus.open_type(&tie), 0);
     }
 
     #[test]

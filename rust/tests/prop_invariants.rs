@@ -3,13 +3,20 @@
 //! placement completeness, serialization round-trips, twin determinism,
 //! and drift-workload epoch semantics (DESIGN.md §7).
 
-use adapter_serving::config::{EngineConfig, MemoryConfig};
+#[path = "support/analytic.rs"]
+mod analytic;
+
+use adapter_serving::config::{EngineConfig, FleetSpec, GpuTypeSpec, MemoryConfig};
 use adapter_serving::dt::{self, Calibration, LengthVariant};
 use adapter_serving::engine::adapter_cache::SimAdapterCache;
 use adapter_serving::engine::kv::KvLedger;
 use adapter_serving::engine::request::Request;
 use adapter_serving::engine::scheduler::{scan_admissions, AdmissionLimits};
-use adapter_serving::placement::{greedy, TESTING_POINTS};
+use adapter_serving::placement::{
+    exact, fleet, greedy, ExactLimits, MinCost, MinGpus, Objective, PerfEstimator,
+    TESTING_POINTS,
+};
+use analytic::AnalyticGpu;
 use adapter_serving::prop_assert;
 use adapter_serving::util::json::Json;
 use adapter_serving::util::prop::Prop;
@@ -301,5 +308,154 @@ fn greedy_placement_assigns_each_adapter_once_with_valid_a_max() {
                 Ok(())
             }
         }
+    });
+}
+
+/// Random adapters with small per-adapter rates (mostly feasible).
+fn random_adapters(rng: &mut Rng, n: usize, max_rate: f64) -> Vec<AdapterSpec> {
+    (0..n)
+        .map(|id| AdapterSpec {
+            id,
+            rank: *rng.choose(&[8, 16, 32]),
+            rate: rng.range_f64(0.001, max_rate),
+        })
+        .collect()
+}
+
+/// A random heterogeneous fleet plus its per-class analytic estimators.
+fn random_fleet(rng: &mut Rng, n_types: usize, stock: usize) -> (FleetSpec, Vec<AnalyticGpu>) {
+    let mut entries = Vec::new();
+    let mut ests = Vec::new();
+    for t in 0..n_types {
+        let perf_scale = *rng.choose(&[0.6, 1.0, 1.6, 2.4]);
+        let mem = MemoryConfig {
+            total_tokens: *rng.choose(&[4096, 8192, 16384]),
+            ..Default::default()
+        };
+        ests.push(AnalyticGpu { mem: mem.clone(), perf_scale });
+        let spec = GpuTypeSpec {
+            name: format!("t{t}"),
+            mem,
+            cost_per_hour: rng.range_f64(1.0, 5.0),
+            perf_scale,
+        };
+        entries.push((spec, stock));
+    }
+    (FleetSpec::new(entries), ests)
+}
+
+#[test]
+fn fleet_placement_places_once_within_type_memory_and_stock() {
+    Prop::new("fleet placement invariants").cases(24).check(|rng, size| {
+        let n = 2 + size * 2;
+        let adapters = random_adapters(rng, n, 0.08);
+        let (fleet_spec, ests) = random_fleet(rng, 1 + rng.below(3), 8);
+        let est_refs: Vec<&dyn PerfEstimator> =
+            ests.iter().map(|e| e as &dyn PerfEstimator).collect();
+        for objective in [&MinGpus as &dyn Objective, &MinCost] {
+            let fp = match fleet::place(&adapters, &fleet_spec, &est_refs, objective) {
+                Err(_) => continue, // starvation is a legal outcome
+                Ok(fp) => fp,
+            };
+            // Every adapter placed exactly once (map keys are unique).
+            prop_assert!(fp.placement.assignment.len() == n, "missing assignments");
+            for a in &adapters {
+                prop_assert!(fp.placement.assignment.contains_key(&a.id), "adapter lost");
+            }
+            prop_assert!(
+                fp.gpu_type.len() == fleet_spec.total_gpus(),
+                "gpu_type covers the whole fleet"
+            );
+            let mut used = vec![0usize; fleet_spec.types.len()];
+            for (g, (&a_max, &t)) in
+                fp.placement.a_max.iter().zip(&fp.gpu_type).enumerate()
+            {
+                let on = fp.placement.adapters_on(g);
+                if on.is_empty() {
+                    continue;
+                }
+                used[t] += 1;
+                prop_assert!(
+                    TESTING_POINTS.contains(&a_max),
+                    "a_max {a_max} not a testing point"
+                );
+                let s_max = on
+                    .iter()
+                    .filter_map(|id| adapters.iter().find(|a| a.id == *id))
+                    .map(|a| a.rank)
+                    .max()
+                    .unwrap_or(0);
+                // No GPU over its own class's memory.
+                prop_assert!(
+                    fleet_spec.types[t].mem.kv_pool_tokens(a_max, s_max).is_some(),
+                    "gpu {g} (class {t}) over memory at a_max={a_max}"
+                );
+            }
+            for (t, (&u, &stock)) in used.iter().zip(&fleet_spec.counts).enumerate() {
+                prop_assert!(u <= stock, "class {t}: used {u} over stock {stock}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn exact_fleet_cost_is_monotone_when_a_price_drops() {
+    Prop::new("exact cost monotone in prices").cases(16).check(|rng, size| {
+        let n = 1 + size % 6;
+        let adapters = random_adapters(rng, n, 0.8);
+        let (fleet_spec, ests) = random_fleet(rng, 2, n);
+        let est_refs: Vec<&dyn PerfEstimator> =
+            ests.iter().map(|e| e as &dyn PerfEstimator).collect();
+        let cost_of = |fp: &fleet::FleetPlacement, prices: &[f64]| -> f64 {
+            fp.used_by_type(&fleet_spec)
+                .iter()
+                .zip(prices)
+                .map(|(&u, &p)| u as f64 * p)
+                .sum()
+        };
+        let prices = fleet_spec.prices();
+        let limits = ExactLimits::default();
+        let before = match exact::solve(&adapters, &fleet_spec, &est_refs, &prices, limits) {
+            Err(_) => return Ok(()), // infeasible either way
+            Ok(fp) => cost_of(&fp, &prices),
+        };
+        // Drop one class's price; the optimum must not get dearer.
+        let mut dropped = prices.clone();
+        let t = rng.below(dropped.len());
+        dropped[t] *= rng.range_f64(0.2, 0.9);
+        let after = exact::solve(&adapters, &fleet_spec, &est_refs, &dropped, limits)
+            .map(|fp| cost_of(&fp, &dropped))
+            .map_err(|e| format!("feasible instance became infeasible: {e:?}"))?;
+        prop_assert!(
+            after <= before + 1e-9,
+            "price drop raised the optimum: {before} -> {after}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn single_type_fleet_matches_homogeneous_greedy_bit_exact() {
+    Prop::new("single-type fleet ≡ homogeneous greedy").cases(24).check(|rng, size| {
+        let n = 2 + size * 2;
+        let adapters = random_adapters(rng, n, 0.08);
+        let est = AnalyticGpu { mem: MemoryConfig::default(), perf_scale: 1.0 };
+        let gpus = 4;
+        let homog = greedy::place(&adapters, gpus, &est);
+        let fleet_spec = FleetSpec::single(GpuTypeSpec::catalog("a10g").unwrap(), gpus);
+        let typed = fleet::place(&adapters, &fleet_spec, &[&est], &MinGpus);
+        match (homog, typed) {
+            (Ok(expected), Ok(fp)) => {
+                prop_assert!(
+                    fp.placement == expected,
+                    "single-type fleet plan diverged from the homogeneous plan"
+                );
+                prop_assert!(fp.gpu_type == vec![0; gpus], "non-zero type on a single class");
+            }
+            (Err(a), Err(b)) => prop_assert!(a == b, "errors diverged: {a:?} vs {b:?}"),
+            (a, b) => return Err(format!("feasibility diverged: {a:?} vs {b:?}")),
+        }
+        Ok(())
     });
 }

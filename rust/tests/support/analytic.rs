@@ -1,0 +1,51 @@
+//! Shared analytic per-GPU-class estimator for the fleet differential
+//! and property suites (not a test crate itself — included via
+//! `#[path]` from `fleet_exact_diff.rs` and `prop_invariants.rs`).
+//!
+//! Closed-form throughput/feasibility so the greedy planner and the
+//! branch-and-bound oracle consume identical, instantly-computable probe
+//! data: a class of relative performance `perf_scale` serves
+//! `perf_scale × (1000 − 2·A_max)` tok/s; a group starves when its
+//! demand (Σrate × 96 tok/req) exceeds that or when `A_max` is below
+//! the group size; memory feasibility is the real static-reservation
+//! rule ([`MemoryConfig::kv_pool_tokens`]) under the class's memory.
+//! Demand and size shrink when an adapter is removed, so every prefix
+//! of a feasible group is feasible — which makes "the oracle's optimum
+//! never costs more than the greedy plan" a theorem the differential
+//! suite can assert outright.
+
+#![allow(dead_code)]
+
+use adapter_serving::config::MemoryConfig;
+use adapter_serving::placement::{Estimate, PerfEstimator};
+use adapter_serving::workload::AdapterSpec;
+
+/// One GPU class's analytic performance/memory model.
+pub struct AnalyticGpu {
+    /// The class's memory configuration (drives the feasibility rule).
+    pub mem: MemoryConfig,
+    /// Relative performance multiplier (a10g-alike = 1.0).
+    pub perf_scale: f64,
+}
+
+impl AnalyticGpu {
+    /// Decode capacity (tok/s) at a given `A_max`.
+    pub fn capacity(&self, a_max: usize) -> f64 {
+        (self.perf_scale * (1000.0 - 2.0 * a_max as f64)).max(0.0)
+    }
+}
+
+impl PerfEstimator for AnalyticGpu {
+    fn estimate(&self, adapters: &[AdapterSpec], a_max: usize) -> Estimate {
+        let s_max = adapters.iter().map(|a| a.rank).max().unwrap_or(8);
+        let memory_error = self.mem.kv_pool_tokens(a_max, s_max).is_none();
+        let demand: f64 = adapters.iter().map(|a| a.rate).sum::<f64>() * 96.0;
+        let capacity = self.capacity(a_max);
+        let starved = demand > capacity || a_max < adapters.len();
+        Estimate { throughput_tok_s: demand.min(capacity), starved, memory_error }
+    }
+
+    fn name(&self) -> &'static str {
+        "analytic-gpu"
+    }
+}
