@@ -11,13 +11,17 @@
 //!      GPU-epochs, migrations and feasibility;
 //!   4. re-run the replanning loop under the latency objective
 //!      (`MinLatency`) and show the GPU-epochs vs mean-ITL tradeoff the
-//!      `drift` experiment quantifies epoch by epoch.
+//!      `drift` experiment quantifies epoch by epoch;
+//!   5. swap the lockstep serving core for the event-driven
+//!      continuous-batching core (DESIGN.md §12) on the same horizon and
+//!      compare realized backlog, SLO goodput and KV-handoff bytes.
 //!
 //! ```sh
 //! cargo run --release --example drift_replan
 //! ```
 
-use adapter_serving::cluster::epochs::{run_epochs_on_twin, ReplanPolicy};
+use adapter_serving::cluster::epochs::{serve_horizon, HorizonBackend, ReplanPolicy};
+use adapter_serving::cluster::{Core, RunOptions};
 use adapter_serving::config::EngineConfig;
 use adapter_serving::dt::LengthVariant;
 use adapter_serving::experiments::drift::burst_churn;
@@ -30,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     let model = "pico-llama";
     let (epochs, epoch_s, gpus) = (6usize, 5.0, 4usize);
 
-    println!("[1/4] calibrating the twin + training the RF models (cached) ...");
+    println!("[1/5] calibrating the twin + training the RF models (cached) ...");
     let mut rt = ctx.load_runtime(model)?;
     let calib = ctx.calibration(rt.as_mut())?;
     let est = ctx.trained_estimator(&calib)?;
@@ -42,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         params.cost.load_s(32) * 1e3
     );
 
-    println!("[2/4] building the burst-churn drift scenario (scaled to this backbone) ...");
+    println!("[2/5] building the burst-churn drift scenario (scaled to this backbone) ...");
     let drift = burst_churn(epochs, epoch_s, &calib);
     for e in 0..epochs {
         let s = drift.epoch_spec(e);
@@ -53,7 +57,11 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    println!("[3/4] serving the horizon under each policy (twin, per-GPU parallel) ...");
+    // The unified horizon entry point: backend (twin/engine) x serving
+    // core (lockstep/event) behind one signature.
+    let twin = HorizonBackend::Twin { calib: &calib, variant: LengthVariant::Original };
+
+    println!("[3/5] serving the horizon under each policy (twin, per-GPU parallel) ...");
     let cost = params.cost;
     let mut replan_min_gpus = None;
     for (name, policy) in [
@@ -61,15 +69,16 @@ fn main() -> anyhow::Result<()> {
         ("replan", ReplanPolicy::Replan(params.clone())),
         ("oracle", ReplanPolicy::Oracle(cost)),
     ] {
-        let rep = run_epochs_on_twin(
-            &calib,
+        let rep = serve_horizon(
+            twin,
             &base,
             &drift,
             gpus,
             &est,
             &MinGpus,
             &policy,
-            LengthVariant::Original,
+            Core::Lockstep,
+            RunOptions::new(),
         )?;
         let gpus_per_epoch: Vec<usize> = rep.per_epoch.iter().map(|r| r.gpus_used).collect();
         println!(
@@ -86,16 +95,17 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    println!("[4/4] the same replanning loop under each objective (GPUs vs ITL) ...");
-    let replan_min_latency = run_epochs_on_twin(
-        &calib,
+    println!("[4/5] the same replanning loop under each objective (GPUs vs ITL) ...");
+    let replan_min_latency = serve_horizon(
+        twin,
         &base,
         &drift,
         gpus,
         &est,
         &MinLatency,
         &ReplanPolicy::Replan(params.clone()),
-        LengthVariant::Original,
+        Core::Lockstep,
+        RunOptions::new(),
     )?;
     let pairs = [
         ("min-gpus", replan_min_gpus.expect("replan ran in step 3")),
@@ -109,6 +119,33 @@ fn main() -> anyhow::Result<()> {
             rep.total_migrations
         );
     }
+
+    println!("[5/5] the same horizon on the event-driven core (`--core event`) ...");
+    let event = serve_horizon(
+        twin,
+        &base,
+        &drift,
+        gpus,
+        &est,
+        &MinGpus,
+        &ReplanPolicy::Replan(params.clone()),
+        Core::EventDriven,
+        RunOptions::new(),
+    )?;
+    let lockstep = &pairs[0].1;
+    println!(
+        "      lockstep: {} GPU-epochs, modeled backlog {:.0} tok at horizon end",
+        lockstep.gpu_epochs, lockstep.final_backlog_tokens
+    );
+    println!(
+        "      event:    {} GPU-epochs, realized backlog {:.0} tok, goodput {:.2} req/s \
+         ({:.0}% SLO), {} KV bytes shipped across replans",
+        event.gpu_epochs,
+        event.final_backlog_tokens,
+        event.mean_goodput_req_s,
+        100.0 * event.slo_attainment,
+        event.total_kv_handoff_bytes
+    );
     println!("done — `adapterd experiment drift` writes this comparison to results/drift/");
     Ok(())
 }

@@ -2,8 +2,9 @@
 //!
 //! Per tier (small 64x8, medium 256x24, full 2048x192) this measures:
 //! plan and replan wall time through the trained RF estimator, simulated
-//! serving throughput of the resulting placement, and the serial vs
-//! parallel DT probe fan-out.  The small tier also times MinCost
+//! serving throughput of the resulting placement — on the lockstep twin
+//! and through the event-driven serving core (DESIGN.md §12) — and the
+//! serial vs parallel DT probe fan-out.  The small tier also times MinCost
 //! planning over a two-class fleet (`plan_fleet_min_cost_wall_s`).  The
 //! full tier is ML-plan-only — probing the twin for 192 GPUs is exactly
 //! the cost the data-driven planner exists to avoid.
@@ -25,7 +26,8 @@
 
 use std::collections::BTreeMap;
 
-use adapter_serving::cluster::{self, RunOptions};
+use adapter_serving::cluster::epochs::{serve_horizon, HorizonBackend, ReplanPolicy};
+use adapter_serving::cluster::{self, Core, RunOptions};
 use adapter_serving::config::{EngineConfig, FleetSpec, GpuTypeSpec};
 use adapter_serving::dt::{self, Calibration, LengthVariant};
 use adapter_serving::ml::{self, dataset::GridSpec, MlModels};
@@ -36,6 +38,7 @@ use adapter_serving::placement::{
 use adapter_serving::util::bench::bench_auto;
 use adapter_serving::util::json::Json;
 use adapter_serving::util::threadpool::default_workers;
+use adapter_serving::workload::drift::DriftSpec;
 use adapter_serving::workload::{AdapterSpec, WorkloadSpec};
 use anyhow::{anyhow, bail};
 
@@ -226,7 +229,39 @@ fn run_tier(
         });
         let speedup = serial.p50_s / parallel.p50_s.max(1e-12);
         println!("bench probe_{} speedup: {speedup:.2}x over serial ({pw} workers)", t.name);
+        // The same placement problem served through the event-driven core
+        // (DESIGN.md §12): one steady epoch under the static policy, so
+        // the row isolates the calendar-queue loop from replanning cost.
+        let drift = DriftSpec::steady(adapters.clone(), 1, 10.0, 8);
+        let backend = HorizonBackend::Twin { calib, variant: LengthVariant::Original };
+        let event = serve_horizon(
+            backend,
+            base,
+            &drift,
+            t.gpus,
+            est,
+            &MinGpus,
+            &ReplanPolicy::Static,
+            Core::EventDriven,
+            RunOptions::new(),
+        )?;
+        let event_wall = bench_auto(&format!("serve_event_{}", t.name), 1.0, || {
+            let r = serve_horizon(
+                backend,
+                base,
+                &drift,
+                t.gpus,
+                est,
+                &MinGpus,
+                &ReplanPolicy::Static,
+                Core::EventDriven,
+                RunOptions::new(),
+            );
+            let _ = std::hint::black_box(r);
+        });
         fields.push(("sim_throughput_tok_s", Json::Num(rep.total_throughput_tok_s)));
+        fields.push(("sim_event_throughput_tok_s", Json::Num(event.mean_throughput_tok_s)));
+        fields.push(("serve_event_wall_s", Json::Num(event_wall.p50_s)));
         fields.push(("probe_serial_wall_s", Json::Num(serial.p50_s)));
         fields.push(("probe_parallel_wall_s", Json::Num(parallel.p50_s)));
         fields.push(("probe_speedup_x", Json::Num(speedup)));

@@ -14,9 +14,15 @@
 //! one backend per GPU per call.
 //!
 //! [`epochs`] lifts these one-shot runners into a rolling-horizon control
-//! loop that replans placements as the workload drifts (DESIGN.md §7).
+//! loop that replans placements as the workload drifts (DESIGN.md §7);
+//! [`events`] replaces that loop's lockstep serving with an event-driven
+//! continuous-batching core in which epoch boundaries are replan events
+//! and in-flight requests persist across them (DESIGN.md §12).
 
 pub mod epochs;
+pub mod events;
+
+pub use events::Core;
 
 use crate::config::EngineConfig;
 use crate::dt::{Calibration, LengthVariant};
@@ -104,6 +110,15 @@ pub struct ClusterReport {
     pub itl_mean_s: f64,
     /// Request-weighted mean TTFT across GPUs (s).
     pub ttft_mean_s: f64,
+    /// Sum of per-GPU goodputs: completed requests that met both
+    /// [`crate::engine::metrics::SloSpec`] deadlines, per second.
+    pub goodput_req_s: f64,
+    /// Request-weighted SLO attainment across GPUs (fraction of
+    /// completed requests that met the deadlines).
+    pub slo_attainment: f64,
+    /// KV-cache bytes shipped between GPUs by migrations (event-driven
+    /// core only; lockstep serving re-prefills instead, reporting 0).
+    pub kv_handoff_bytes: u64,
     /// GPUs the placement actually provisioned.
     pub gpus_used: usize,
     /// Total wall-clock of the validation runs.
@@ -141,6 +156,14 @@ impl ClusterReport {
             .map(|(r, w)| r.ttft_mean_s * w)
             .sum::<f64>()
             / wsum.max(1.0);
+        let goodput = reports.iter().map(|r| r.goodput_req_s).sum();
+        let attainment = reports
+            .iter()
+            .zip(&weights)
+            .map(|(r, w)| r.slo_attainment * w)
+            .sum::<f64>()
+            / wsum.max(1.0);
+        let handoff = reports.iter().map(|r| r.kv_handoff_bytes).sum();
         ClusterReport {
             per_gpu,
             memory_error,
@@ -148,6 +171,9 @@ impl ClusterReport {
             total_throughput_tok_s: total,
             itl_mean_s: itl,
             ttft_mean_s: ttft,
+            goodput_req_s: goodput,
+            slo_attainment: attainment,
+            kv_handoff_bytes: handoff,
             gpus_used,
             wall_s,
         }

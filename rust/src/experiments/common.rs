@@ -3,6 +3,7 @@
 //! artifact store) and the validation-scenario suite reused by Tables
 //! 1-4.
 
+use crate::cluster::Core;
 use crate::config::EngineConfig;
 use crate::dt::Calibration;
 use crate::engine::Engine;
@@ -37,6 +38,10 @@ pub struct ExpContext {
     /// (`drift`): the trained ML pair (default) or the Digital Twin
     /// directly (`--estimator twin`, probe-cached).
     pub estimator: EstimatorChoice,
+    /// Which serving core drives epoch horizons (`--core event` switches
+    /// the drift experiment to the event-driven continuous-batching
+    /// simulation; DESIGN.md §12).
+    pub core: Core,
     /// Lazily-created engine-backend pool shared by every engine-path
     /// serving run this context drives.
     pool: OnceLock<BackendPool>,
@@ -52,6 +57,7 @@ impl ExpContext {
             workers: crate::util::threadpool::default_workers(),
             models: vec!["pico-llama".into(), "pico-qwen".into()],
             estimator: EstimatorChoice::Ml,
+            core: Core::Lockstep,
             pool: OnceLock::new(),
         }
     }
@@ -85,7 +91,7 @@ impl ExpContext {
     }
 
     /// A context from common CLI args: `--scale`, `--out`, `--model`,
-    /// `--estimator` (shared by the `drift` and `experiment`
+    /// `--estimator`, `--core` (shared by the `drift` and `experiment`
     /// subcommands).
     pub fn from_args(args: &Args) -> Result<ExpContext> {
         let mut ctx = ExpContext::new(Scale::parse(args.get_or("scale", "quick")));
@@ -96,6 +102,7 @@ impl ExpContext {
             ctx.models = vec![m.to_string()];
         }
         ctx.estimator = EstimatorChoice::parse(args.get_or("estimator", "ml"))?;
+        ctx.core = Core::parse(args.get_or("core", "lockstep"))?;
         Ok(ctx)
     }
 

@@ -16,9 +16,11 @@ use super::common::{
     backbone_max_tok_s, print_table, tokens_per_request, write_csv, write_summary,
     EstimatorChoice, ExpContext,
 };
-use crate::cluster::epochs::{run_epochs_on_engine, run_epochs_on_twin, DriftReport, ReplanPolicy};
+use crate::cluster::epochs::{serve_horizon, DriftReport, HorizonBackend, ReplanPolicy};
+use crate::cluster::{Core, RunOptions};
 use crate::config::EngineConfig;
 use crate::dt::{Calibration, LengthVariant};
+use crate::engine::metrics::ReportSchema;
 use crate::placement::replan::ReplanParams;
 use crate::placement::{MinGpus, MinLatency, Objective, PerfEstimator};
 use crate::util::json::Json;
@@ -114,7 +116,10 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
     let base = EngineConfig { model: model.to_string(), ..Default::default() };
     let params = ReplanParams::from_calibration(&calib, epoch_s);
     // Twin at quick scale (fidelity pinned by table1), engine at full.
-    let on_engine = !ctx.scale.is_quick();
+    // The event-driven core is a twin-side simulation, so `--core event`
+    // forces the twin backend at any scale.
+    let core = ctx.core;
+    let on_engine = !ctx.scale.is_quick() && core == Core::Lockstep;
 
     let cost = params.cost;
     let objectives: Vec<(&str, &dyn Objective)> =
@@ -128,42 +133,37 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
     let mut reports: Vec<(String, DriftReport)> = vec![];
     for (oname, objective) in &objectives {
         for (pname, policy) in &policies {
-            let rep = if on_engine {
-                let pool = ctx.backend_pool();
-                run_epochs_on_engine(pool, &base, &spec, gpus, est, *objective, policy)?
+            let backend = if on_engine {
+                HorizonBackend::Engine
             } else {
-                let variant = LengthVariant::Original;
-                run_epochs_on_twin(&calib, &base, &spec, gpus, est, *objective, policy, variant)?
+                HorizonBackend::Twin { calib: &calib, variant: LengthVariant::Original }
             };
+            let opts = if on_engine {
+                RunOptions::new().pool(ctx.backend_pool())
+            } else {
+                RunOptions::new()
+            };
+            let rep =
+                serve_horizon(backend, &base, &spec, gpus, est, *objective, policy, core, opts)?;
             for r in &rep.per_epoch {
-                rows.push(vec![
-                    oname.to_string(),
-                    pname.to_string(),
-                    r.epoch.to_string(),
-                    r.adapters.to_string(),
-                    r.gpus_used.to_string(),
-                    r.migrations.to_string(),
-                    format!("{:.3}", r.migration_cost_s * 1e3),
-                    format!("{:.3}", r.plan_wall_s * 1e3),
-                    format!("{:.1}", r.throughput_tok_s),
-                    format!("{:.1}", r.incoming_tok_s),
-                    format!("{:.3}", r.itl_mean_s * 1e3),
-                    format!("{:.0}", r.backlog_tokens),
-                    r.groups_reprobed.to_string(),
-                    r.groups_reused.to_string(),
-                    epoch_status(r).to_string(),
-                ]);
+                let mut row = vec![oname.to_string(), pname.to_string()];
+                row.extend(r.csv_cells());
+                row.push(epoch_status(r).to_string());
+                rows.push(row);
             }
             println!(
                 "  drift {oname}/{pname}: {} GPU-epochs, mean ITL {:.2} ms, {} migrations \
-                 ({:.1} ms), {} infeasible epochs, {} groups re-probed / {} ledger-reused",
+                 ({:.1} ms), {} infeasible epochs, {} groups re-probed / {} ledger-reused, \
+                 goodput {:.2} req/s at {:.0}% SLO attainment",
                 rep.gpu_epochs,
                 rep.mean_itl_s * 1e3,
                 rep.total_migrations,
                 rep.total_migration_cost_s * 1e3,
                 rep.infeasible_epochs,
                 rep.total_groups_reprobed,
-                rep.total_groups_reused
+                rep.total_groups_reused,
+                rep.mean_goodput_req_s,
+                100.0 * rep.slo_attainment
             );
             reports.push((format!("{oname}/{pname}"), rep));
         }
@@ -203,38 +203,24 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
             "backlog",
             "reprobed",
             "reused",
+            "goodput",
+            "slo_att",
+            "ttft_ms",
+            "kv_bytes",
             "status",
         ],
         &rows,
     );
-    write_csv(
-        &dir,
-        "drift.csv",
-        &[
-            "objective",
-            "policy",
-            "epoch",
-            "adapters",
-            "gpus_used",
-            "migrations",
-            "migration_cost_ms",
-            "plan_ms",
-            "throughput",
-            "incoming_tok_s",
-            "itl_ms",
-            "backlog_tokens",
-            "groups_reprobed",
-            "groups_reused",
-            "status",
-        ],
-        &rows,
-    )?;
+    // The CSV header comes from the shared column registry, so the drift
+    // and fleet emitters cannot silently diverge from the schema.
+    write_csv(&dir, "drift.csv", &ReportSchema::drift_header(), &rows)?;
 
     let mut fields: Vec<(&str, Json)> = vec![
         ("epochs", Json::Num(epochs as f64)),
         ("epoch_s", Json::Num(epoch_s)),
         ("gpus", Json::Num(gpus as f64)),
         ("backend", Json::Str(if on_engine { "engine" } else { "twin" }.into())),
+        ("core", Json::Str(core.name().into())),
         ("estimator", Json::Str(est.name().into())),
     ];
     if let Some((twin, _)) = &twin_est {
@@ -269,6 +255,9 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
                     ("final_backlog_tokens", Json::Num(rep.final_backlog_tokens)),
                     ("groups_reprobed", Json::Num(rep.total_groups_reprobed as f64)),
                     ("groups_reused", Json::Num(rep.total_groups_reused as f64)),
+                    ("mean_goodput_req_s", Json::Num(rep.mean_goodput_req_s)),
+                    ("slo_attainment", Json::Num(rep.slo_attainment)),
+                    ("kv_handoff_bytes", Json::Num(rep.total_kv_handoff_bytes as f64)),
                 ]),
             ));
         }

@@ -15,6 +15,7 @@
 use super::common::{print_table, write_csv, write_summary, ExpContext};
 use super::drift::burst_churn;
 use crate::config::{FleetSpec, GpuTypeSpec};
+use crate::engine::metrics::ReportSchema;
 use crate::placement::{MinCost, MinGpus, Objective};
 use crate::util::json::Json;
 use anyhow::Result;
@@ -60,17 +61,14 @@ pub fn fleet(ctx: &ExpContext) -> Result<()> {
             let planned = match pipe.place_on_twin(&calibrated, &spec.adapters) {
                 Ok(p) => p,
                 Err(e) => {
-                    rows.push(vec![
-                        oname.to_string(),
-                        epoch.to_string(),
-                        spec.adapters.len().to_string(),
-                        "-".into(),
-                        "-".into(),
-                        "-".into(),
-                        "-".into(),
-                        "-".into(),
-                        format!("infeasible: {e}"),
-                    ]);
+                    let mut row =
+                        vec![oname.to_string(), epoch.to_string(), spec.adapters.len().to_string()];
+                    // One "-" per metric column between the labels and status.
+                    row.extend(
+                        (0..ReportSchema::fleet_header().len() - 4).map(|_| "-".to_string()),
+                    );
+                    row.push(format!("infeasible: {e}"));
+                    rows.push(row);
                     continue;
                 }
             };
@@ -92,7 +90,7 @@ pub fn fleet(ctx: &ExpContext) -> Result<()> {
             gpu_epochs += rep.gpus_used;
             itl_sum += rep.itl_mean_s;
             served += 1;
-            rows.push(vec![
+            let mut row = vec![
                 oname.to_string(),
                 epoch.to_string(),
                 spec.adapters.len().to_string(),
@@ -101,8 +99,15 @@ pub fn fleet(ctx: &ExpContext) -> Result<()> {
                 format!("{:.2}", f.cost_per_hour),
                 format!("{:.1}", rep.total_throughput_tok_s),
                 format!("{:.3}", rep.itl_mean_s * 1e3),
-                if rep.feasible() { "ok" } else { "degraded" }.to_string(),
-            ]);
+            ];
+            row.extend(ReportSchema::slo_cells(
+                rep.goodput_req_s,
+                rep.slo_attainment,
+                rep.ttft_mean_s,
+                rep.kv_handoff_bytes,
+            ));
+            row.push(if rep.feasible() { "ok" } else { "degraded" }.to_string());
+            rows.push(row);
         }
         let mean_cost = cost_sum / served.max(1) as f64;
         let mean_itl = itl_sum / served.max(1) as f64;
@@ -126,9 +131,9 @@ pub fn fleet(ctx: &ExpContext) -> Result<()> {
     println!(
         "  fleet: probe cache {probe_hits} hits / {probe_misses} misses across both objectives"
     );
-    let header =
-        ["objective", "epoch", "adapters", "gpus", "mix", "cost_hr", "throughput", "itl_ms",
-         "status"];
+    // Header from the shared column registry (`engine::metrics`), same
+    // source as the drift CSV's.
+    let header = ReportSchema::fleet_header();
     print_table("fleet — $/hr, GPUs and ITL over time: min_gpus vs min_cost", &header, &rows);
     write_csv(&dir, "fleet.csv", &header, &rows)?;
 

@@ -20,14 +20,17 @@
 //!   on-disk content-hashed artifact store (DESIGN.md §8);
 //! - [`cluster`] — multi-GPU routing driven by placement decisions, with
 //!   per-GPU validation runs parallelized over the thread pool, plus the
-//!   rolling-horizon epoch runner ([`cluster::epochs`], DESIGN.md §7);
+//!   rolling-horizon epoch runner ([`cluster::epochs`], DESIGN.md §7) and
+//!   the event-driven continuous-batching core ([`cluster::events`],
+//!   DESIGN.md §12);
 //! - [`experiments`] — regenerates every table and figure of the paper.
 //!
 //! The three-layer public API is *workload* ([`workload::WorkloadSpec`],
 //! [`workload::drift::DriftSpec`]) → *placement* ([`placement::Placement`])
 //! → *cluster* ([`cluster::serve_on_engine`] / [`cluster::serve_on_twin`],
 //! both driven by [`cluster::RunOptions`], and the rolling-horizon
-//! [`cluster::epochs::run_epochs_on_twin`]); [`pipeline::Pipeline`] drives
+//! [`cluster::epochs::serve_horizon`] with its [`cluster::Core`]
+//! selector); [`pipeline::Pipeline`] drives
 //! the data-driven chain that produces the placement in the first place.
 //! The [`prelude`] re-exports this surface for one-line imports.
 //!
@@ -66,7 +69,7 @@ pub mod workload;
 /// assert_eq!(opts.workers, 1);
 /// ```
 pub mod prelude {
-    pub use crate::cluster::RunOptions;
+    pub use crate::cluster::{Core, RunOptions};
     pub use crate::pipeline::Pipeline;
     pub use crate::placement::{
         CachedEstimator, Estimate, MinGpus, MinLatency, Objective, PerfEstimator, Placement,

@@ -51,6 +51,9 @@ common options:
   --estimator <ml|twin>            placement estimator for pipeline/place/
                                    drift (default ml; twin = DT-in-the-loop
                                    with a persistent probe cache)
+  --core <lockstep|event>          serving core for drift horizons (default
+                                   lockstep; event = continuous-batching
+                                   event loop with SLO goodput + KV handoff)
   --out PATH                       output file/directory
 values that start with '--' need the --key=VALUE form
 environment:
@@ -265,9 +268,12 @@ fn pipeline_cmd(args: &Args) -> Result<()> {
             let validated = pipe.validate_with(&calibration, &planned, &spec)?;
             let backend = if validated.on_engine { "engine" } else { "twin" };
             println!(
-                "validate ({backend}): {:.0} tok/s, itl {:.2} ms, feasible={}",
+                "validate ({backend}): {:.0} tok/s, itl {:.2} ms, goodput {:.2} req/s \
+                 ({:.0}% SLO), feasible={}",
                 validated.report.total_throughput_tok_s,
                 validated.report.itl_mean_s * 1e3,
+                validated.report.goodput_req_s,
+                100.0 * validated.report.slo_attainment,
                 validated.report.feasible()
             );
         }

@@ -18,10 +18,15 @@
 //!    [`ReplanParams::slack`] and the [`MigrationCost`] amortization —
 //!    the fig6 adapter load-time profile) or migrates to the best
 //!    candidate;
-//! 4. **drain** — for consolidating objectives
+//! 4. **drain / rebalance** — for consolidating objectives
 //!    ([`Objective::consolidates`]), the smallest surviving group is
 //!    migrated onto the other used GPUs when every member fits, freeing
-//!    whole GPUs as demand recedes.  Spreading objectives skip this pass.
+//!    whole GPUs as demand recedes.  Spreading objectives instead run the
+//!    spread-preserving analogue: while the most-loaded GPU exceeds the
+//!    least-loaded alternative by more than the stickiness slack, one
+//!    adapter migrates over, restoring balance (and ITL) as adapters
+//!    retire or rates shift.  Both passes share the one-epoch cumulative
+//!    migration budget.
 //!
 //! Migrations and their modeled cost are reported relative to the previous
 //! placement, so the epoch runner ([`crate::cluster::epochs`]) can account
@@ -227,8 +232,8 @@ fn layout_fp(groups: &[Vec<AdapterSpec>], est: &dyn PerfEstimator) -> u64 {
 /// settled on, enabling incremental re-probing: sticky groups whose
 /// composition did not drift since the previous epoch (same
 /// fingerprint) reuse the recorded `A_max` without paying a single
-/// estimator probe, and the drain pass is skipped outright when the
-/// pre-drain layout is one already known to be a drain fixed point.
+/// estimator probe, and the drain/rebalance pass is skipped outright
+/// when the pre-pass layout is one already known to be its fixed point.
 ///
 /// Entries are self-validating — a fingerprint match *implies* the
 /// recorded answer is the one re-probing would compute — so a ledger
@@ -240,8 +245,9 @@ pub struct ReplanLedger {
     /// `(group fingerprint, settled A_max)` per GPU of the last success.
     groups: Vec<Option<(u64, usize)>>,
     /// Layout fingerprint of the last success, when that layout was a
-    /// drain fixed point (`None` after a budget-limited drain: a fresh
-    /// epoch budget could drain further).
+    /// fixed point of the shape pass — drain for consolidating
+    /// objectives, rebalance for spreading ones (`None` after a
+    /// budget-limited pass: a fresh epoch budget could move further).
     layout: Option<u64>,
 }
 
@@ -275,8 +281,8 @@ pub fn replan(
 
 /// [`replan`] with a cross-epoch [`ReplanLedger`]: sticky groups whose
 /// composition matches the ledger skip the repair probes entirely, and
-/// the drain pass is skipped when the layout is a known drain fixed
-/// point.  The outcome is bit-identical to [`replan`] — the ledger only
+/// the drain/rebalance pass is skipped when the layout is a known fixed
+/// point of it.  The outcome is bit-identical to [`replan`] — the ledger only
 /// removes estimator calls whose answers are already pinned by a
 /// fingerprint match.  On success the ledger is updated to describe the
 /// returned placement; on failure it is left untouched.
@@ -431,10 +437,11 @@ pub fn replan_with_ledger(
     //    surviving group onto the other used GPUs, bounded by one epoch of
     //    *cumulative* migration time across all drains of this replan step.
     //    Skipped outright when the ledger recorded this exact layout as a
-    //    drain fixed point — the pass is deterministic in the layout, so
-    //    re-running it could only terminate the same way.
-    let pre_drain_fp = ledger.as_ref().map(|_| layout_fp(&groups, est));
-    let settled = match (&ledger, pre_drain_fp) {
+    //    fixed point of the shape pass (drain or rebalance) — both passes
+    //    are deterministic in the layout, so re-running could only
+    //    terminate the same way.
+    let pre_pass_fp = ledger.as_ref().map(|_| layout_fp(&groups, est));
+    let settled = match (&ledger, pre_pass_fp) {
         (Some(l), Some(fp)) => l.layout == Some(fp),
         _ => false,
     };
@@ -517,6 +524,81 @@ pub fn replan_with_ledger(
         a_max[src] = 0;
     }
 
+    // 5. Rebalance (spreading objectives only): the spread-preserving
+    //    analogue of the drain.  While the most-loaded GPU exceeds the
+    //    least-loaded alternative by more than the stickiness slack, the
+    //    highest-priority movable adapter migrates over (both groups
+    //    re-probed), restoring the balance the latency objective packs
+    //    for.  Bounded by the same cumulative one-epoch migration budget;
+    //    each adapter moves at most once per replan, so the loop
+    //    terminates; a ledger-settled layout skips the pass outright.
+    let mut total_rebalance_cost = 0.0f64;
+    let mut rebalanced: HashSet<usize> = HashSet::new();
+    'rebalance: while !settled && !objective.consolidates() {
+        let load = |group: &[AdapterSpec]| group.iter().map(|a| a.rate).sum::<f64>();
+        let mut heaviest: Option<(usize, f64)> = None;
+        for g in 0..gpus {
+            if groups[g].is_empty() {
+                continue;
+            }
+            let l = load(&groups[g]);
+            if heaviest.is_none_or(|(_, best)| l > best) {
+                heaviest = Some((g, l));
+            }
+        }
+        let Some((src, src_load)) = heaviest else { break };
+        let mut lightest: Option<(usize, f64)> = None;
+        for g in (0..gpus).filter(|&g| g != src) {
+            let l = load(&groups[g]);
+            if lightest.is_none_or(|(_, best)| l < best) {
+                lightest = Some((g, l));
+            }
+        }
+        let Some((tgt, tgt_load)) = lightest else { break };
+        // Candidate movers in priority order: adapters whose move keeps
+        // the target strictly below the source beyond the slack (the
+        // inverse of the latency objective's sticky rule, so a move is
+        // only made where `keeps` would have let the adapter migrate).
+        let movers: Vec<AdapterSpec> = greedy::priority_sorting(&groups[src])
+            .into_iter()
+            .filter(|a| !rebalanced.contains(&a.id))
+            .filter(|a| src_load > (tgt_load + a.rate) * (1.0 + params.slack) + f64::EPSILON)
+            .collect();
+        let mut moved = false;
+        for a in movers {
+            let mut grown = groups[tgt].clone();
+            grown.push(a.clone());
+            let Some((p_tgt, _)) = probe(&grown, est) else { continue };
+            let rest: Vec<AdapterSpec> =
+                groups[src].iter().filter(|x| x.id != a.id).cloned().collect();
+            let p_src = if rest.is_empty() {
+                0
+            } else {
+                match probe(&rest, est) {
+                    Some((p, _)) => p,
+                    None => continue,
+                }
+            };
+            let move_cost = params.cost.load_s(a.rank);
+            if total_rebalance_cost + move_cost > params.epoch_s {
+                // Same transience rule as the drain budget above.
+                budget_limited = total_rebalance_cost > 0.0;
+                break 'rebalance;
+            }
+            total_rebalance_cost += move_cost;
+            rebalanced.insert(a.id);
+            groups[tgt] = grown;
+            groups[src] = rest;
+            a_max[tgt] = p_tgt;
+            a_max[src] = p_src;
+            moved = true;
+            break;
+        }
+        if !moved {
+            break;
+        }
+    }
+
     // Assemble and account against the previous placement.
     let mut placement = Placement { assignment: Default::default(), a_max: a_max.clone() };
     for (g, group) in groups.iter().enumerate() {
@@ -532,7 +614,8 @@ pub fn replan_with_ledger(
     // groups with their settled A_max — every path above leaves
     // `a_max[g]` equal to `probe(&groups[g])`'s choice, which is exactly
     // what a no-drift repair would recompute next epoch — plus the layout
-    // fingerprint when the drain pass settled structurally.
+    // fingerprint when the shape pass (drain or rebalance) settled
+    // structurally.
     if let Some(l) = ledger {
         l.groups = groups
             .iter()
@@ -670,7 +753,7 @@ mod tests {
     }
 
     #[test]
-    fn min_latency_replan_skips_drain_and_stays_spread() {
+    fn min_latency_replan_respreads_survivors_instead_of_draining() {
         use crate::placement::estimator::{Estimate, OracleEstimator};
         // An always-feasible estimator isolates the objective's shape from
         // any model behaviour.
@@ -682,15 +765,18 @@ mod tests {
         let ads = adapters(16, 0.1);
         let p0 = latency::place(&ads, 4, &est).unwrap();
         assert_eq!(p0.gpus_used(), 4);
-        // Half the adapters retire; the survivors sit on two GPUs.
+        // Half the adapters retire; the survivors crowd two GPUs.  The
+        // rebalance pass must re-spread them across the whole cluster
+        // (2 per GPU is the only within-slack layout) — never drain it.
         let survivors: Vec<AdapterSpec> = ads.iter().filter(|a| a.id % 2 == 0).cloned().collect();
         let lat = replan(Some(&p0), &survivors, 4, &est, &ReplanParams::default(), &MinLatency)
             .unwrap();
-        assert_eq!(lat.migrations, 0, "MinLatency must not consolidate survivors");
-        assert_eq!(lat.stayed, survivors.len());
-        for a in &survivors {
-            assert_eq!(lat.placement.assignment[&a.id], p0.assignment[&a.id]);
+        assert_eq!(lat.placement.gpus_used(), 4, "MinLatency must keep the cluster spread");
+        for g in 0..4 {
+            assert_eq!(lat.placement.adapters_on(g).len(), 2, "gpu {g} left unbalanced");
         }
+        assert!(lat.migrations > 0, "re-spreading the survivors takes migrations");
+        assert!(lat.migration_cost_s > 0.0);
         // The consolidating objective drains the same survivors together.
         let packed = replan(Some(&p0), &survivors, 4, &est, &ReplanParams::default(), &MinGpus)
             .unwrap();
@@ -701,6 +787,53 @@ mod tests {
             lat.placement.gpus_used()
         );
         assert!(packed.migrations > 0);
+    }
+
+    #[test]
+    fn min_latency_rebalance_improves_twin_itl() {
+        use crate::cluster::{serve_on_twin, RunOptions};
+        use crate::config::EngineConfig;
+        use crate::dt::LengthVariant;
+        use crate::placement::estimator::{Estimate, OracleEstimator};
+        use crate::workload::WorkloadSpec;
+        let est = OracleEstimator::with_fallback(Estimate {
+            throughput_tok_s: 500.0,
+            starved: false,
+            memory_error: false,
+        });
+        // A lopsided previous epoch: 7 of 8 adapters crowd GPU 0.
+        let ads = adapters(8, 0.2);
+        let mut prev = Placement { assignment: Default::default(), a_max: vec![8, 8] };
+        for a in &ads {
+            prev.assignment.insert(a.id, usize::from(a.id == 0));
+        }
+        let out =
+            replan(Some(&prev), &ads, 2, &est, &ReplanParams::default(), &MinLatency).unwrap();
+        assert_eq!(out.placement.adapters_on(0).len(), 4, "rebalance must split the load 4/4");
+        assert_eq!(out.placement.adapters_on(1).len(), 4);
+        assert!(out.migrations > 0);
+        // Regression: the balanced placement strictly improves realized
+        // mean ITL on the Digital Twin (smaller decode batches per GPU).
+        let calib = Calibration::default();
+        let base = EngineConfig::default();
+        let spec = WorkloadSpec::sharegpt_like(ads, 30.0, 7);
+        let lopsided =
+            serve_on_twin(&calib, &base, &prev, &spec, LengthVariant::Original, RunOptions::new());
+        let balanced = serve_on_twin(
+            &calib,
+            &base,
+            &out.placement,
+            &spec,
+            LengthVariant::Original,
+            RunOptions::new(),
+        );
+        assert!(lopsided.itl_mean_s > 0.0 && balanced.itl_mean_s > 0.0);
+        assert!(
+            balanced.itl_mean_s < lopsided.itl_mean_s,
+            "rebalance must cut mean ITL: {} !< {}",
+            balanced.itl_mean_s,
+            lopsided.itl_mean_s
+        );
     }
 
     #[test]
