@@ -2,6 +2,10 @@
 //! scale.  `cargo bench` regenerates every evaluation artifact into
 //! `results/` and times each (captured in bench_output.txt).
 
+// Bench binaries time things by definition; the clippy wall-clock
+// disallow (clippy.toml) is lifted file-wide here.
+#![allow(clippy::disallowed_methods)]
+
 use adapter_serving::experiments::{self, ExpContext, Scale};
 use std::time::Instant;
 

@@ -45,7 +45,6 @@ use crate::dt::{Calibration, LengthVariant};
 use crate::engine::metrics::ReportSchema;
 use crate::placement::replan::{replan_with_ledger, MigrationCost, ReplanLedger, ReplanParams};
 use crate::placement::{Objective, PerfEstimator, Placement};
-use crate::runtime::BackendPool;
 use crate::workload::drift::DriftSpec;
 use crate::workload::{AdapterSpec, WorkloadSpec};
 use anyhow::{anyhow, Result};
@@ -319,6 +318,8 @@ impl<'a> PolicyDriver<'a> {
             ReplanPolicy::Oracle(c) => *c,
             ReplanPolicy::Static => MigrationCost::default(), // never charged: 0 migrations
         };
+        // detlint: allow(wall-clock) — static_plan_s accounting column; excluded from bit-identity checks
+        #[allow(clippy::disallowed_methods)]
         let t_static = Instant::now();
         let static_placement: Option<Placement> = match policy {
             ReplanPolicy::Static => objective.plan(&drift.union_adapters(), gpus, est).ok(),
@@ -346,6 +347,8 @@ impl<'a> PolicyDriver<'a> {
     /// placement is kept (stale serving); the returned step's `active`
     /// becomes the next epoch's migration baseline.
     pub(crate) fn plan_epoch(&mut self, epoch: usize, adapters: &[AdapterSpec]) -> PlanStep {
+        // detlint: allow(wall-clock) — plan_wall_s accounting column; excluded from bit-identity checks
+        #[allow(clippy::disallowed_methods)]
         let t_plan = Instant::now();
         let (fresh, migrations, migration_cost_s, groups_reprobed, groups_reused) = match self
             .policy
@@ -534,10 +537,10 @@ pub enum HorizonBackend<'a> {
     Engine,
 }
 
-/// Serve a rolling drift horizon: the unified entry point that replaced
-/// `run_epochs_on_twin`/`run_epochs_on_engine` (mirroring the
-/// `serve_on_*` collapse into [`RunOptions`]).  `backend` picks what
-/// serves (twin or engine), `core` picks how time advances
+/// Serve a rolling drift horizon: the unified entry point for horizon
+/// serving (mirroring the `serve_on_*` collapse into [`RunOptions`]).
+/// `backend` picks what serves (twin or engine), `core` picks how time
+/// advances
 /// ([`Core::Lockstep`] per-epoch runs vs [`Core::EventDriven`]
 /// continuous simulation), and `opts` carries the worker/pool/seed seam
 /// of the one-shot runners — [`RunOptions::seed`] overrides the drift's
@@ -621,64 +624,6 @@ pub fn serve_horizon(
     }
 }
 
-/// Serve the rolling horizon on the Digital Twin (lockstep core).
-#[deprecated(
-    since = "0.1.0",
-    note = "use serve_horizon(HorizonBackend::Twin { calib, variant }, …, Core::Lockstep, \
-            RunOptions::new())"
-)]
-#[allow(clippy::too_many_arguments)]
-pub fn run_epochs_on_twin(
-    calib: &Calibration,
-    base: &EngineConfig,
-    drift: &DriftSpec,
-    gpus: usize,
-    est: &dyn PerfEstimator,
-    objective: &dyn Objective,
-    policy: &ReplanPolicy,
-    variant: LengthVariant,
-) -> Result<DriftReport> {
-    serve_horizon(
-        HorizonBackend::Twin { calib, variant },
-        base,
-        drift,
-        gpus,
-        est,
-        objective,
-        policy,
-        Core::Lockstep,
-        RunOptions::new(),
-    )
-}
-
-/// Serve the rolling horizon on the real engine (lockstep core).
-#[deprecated(
-    since = "0.1.0",
-    note = "use serve_horizon(HorizonBackend::Engine, …, Core::Lockstep, \
-            RunOptions::new().pool(pool))"
-)]
-pub fn run_epochs_on_engine(
-    pool: &BackendPool,
-    base: &EngineConfig,
-    drift: &DriftSpec,
-    gpus: usize,
-    est: &dyn PerfEstimator,
-    objective: &dyn Objective,
-    policy: &ReplanPolicy,
-) -> Result<DriftReport> {
-    serve_horizon(
-        HorizonBackend::Engine,
-        base,
-        drift,
-        gpus,
-        est,
-        objective,
-        policy,
-        Core::Lockstep,
-        RunOptions::new().pool(pool),
-    )
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -692,8 +637,8 @@ mod tests {
         crate::placement::test_models::analytic_models(21)
     }
 
-    /// Lockstep twin horizon with default options (what the deprecated
-    /// `run_epochs_on_twin` did) — keeps the migrated tests terse.
+    /// Lockstep twin horizon with default options — keeps the tests
+    /// terse.
     fn twin_horizon(
         calib: &Calibration,
         base: &EngineConfig,
@@ -962,38 +907,6 @@ mod tests {
             RunOptions::new(), // no pool
         );
         assert!(err.is_err(), "engine backend without a pool must be rejected");
-    }
-
-    /// The one-release shims must be exactly the old entry points: same
-    /// results, bit-for-bit, as `serve_horizon` with `Core::Lockstep`.
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_match_serve_horizon() {
-        let models = fake_models();
-        let calib = Calibration::default();
-        let base = EngineConfig::default();
-        let drift = DriftSpec::steady(WorkloadSpec::homogeneous(8, 8, 0.1), 2, 3.0, 13);
-        let policy = ReplanPolicy::Replan(ReplanParams::default());
-        let old = run_epochs_on_twin(
-            &calib,
-            &base,
-            &drift,
-            2,
-            &models,
-            &MinGpus,
-            &policy,
-            LengthVariant::Original,
-        )
-        .unwrap();
-        let new = twin_horizon(&calib, &base, &drift, 2, &models, &MinGpus, &policy);
-        assert_eq!(old.per_epoch.len(), new.per_epoch.len());
-        for (o, n) in old.per_epoch.iter().zip(&new.per_epoch) {
-            assert_eq!(o.gpus_used, n.gpus_used);
-            assert_eq!(o.throughput_tok_s.to_bits(), n.throughput_tok_s.to_bits());
-            assert_eq!(o.itl_mean_s.to_bits(), n.itl_mean_s.to_bits());
-            assert_eq!(o.backlog_tokens.to_bits(), n.backlog_tokens.to_bits());
-            assert_eq!(o.goodput_req_s.to_bits(), n.goodput_req_s.to_bits());
-        }
     }
 
     /// Row-shape half of the header↔struct drift guard (the header half

@@ -239,6 +239,8 @@ pub fn serve_on_engine(
     opts: RunOptions<'_>,
 ) -> Result<ClusterReport> {
     let pool = opts.pool.ok_or_else(|| anyhow!("serve_on_engine needs RunOptions::pool(&pool)"))?;
+    // detlint: allow(wall-clock) — aggregate `wall_s` reporting only; simulated time is virtual
+    #[allow(clippy::disallowed_methods)]
     let t0 = std::time::Instant::now();
     let jobs = gpu_jobs(placement);
     let workers = opts.workers.min(jobs.len().max(1));
@@ -288,6 +290,8 @@ pub fn serve_on_twin(
     variant: LengthVariant,
     opts: RunOptions<'_>,
 ) -> ClusterReport {
+    // detlint: allow(wall-clock) — aggregate `wall_s` reporting only; simulated time is virtual
+    #[allow(clippy::disallowed_methods)]
     let t0 = std::time::Instant::now();
     let jobs = gpu_jobs(placement);
     let workers = opts.workers.min(jobs.len().max(1));
@@ -316,6 +320,8 @@ pub fn serve_on_twin_fleet(
 ) -> ClusterReport {
     assert_eq!(calibs.len(), placement.a_max.len(), "one calibration per GPU slot");
     assert_eq!(configs.len(), placement.a_max.len(), "one engine config per GPU slot");
+    // detlint: allow(wall-clock) — aggregate `wall_s` reporting only; simulated time is virtual
+    #[allow(clippy::disallowed_methods)]
     let t0 = std::time::Instant::now();
     let jobs = gpu_jobs(placement);
     let workers = opts.workers.min(jobs.len().max(1));

@@ -66,6 +66,8 @@ pub fn run_trace(
     spec: &WorkloadSpec,
     trace: &[Arrival],
 ) -> TwinResult {
+    // detlint: allow(wall-clock) — reported `wall_s` is measurement only; it never feeds simulated state
+    #[allow(clippy::disallowed_methods)]
     let wall0 = Instant::now();
     let Some(pool) = cfg.kv_pool_tokens() else {
         return TwinResult {
@@ -76,6 +78,8 @@ pub fn run_trace(
         };
     };
 
+    // Lookup-only (never iterated), so hash order is not observable.
+    #[allow(clippy::disallowed_types)]
     let rank_of: std::collections::HashMap<usize, usize> =
         spec.adapters.iter().map(|a| (a.id, a.rank)).collect();
     let mut requests: Vec<Request> = trace
@@ -231,7 +235,7 @@ fn distinct_adapters(running: &[usize], requests: &[Request]) -> usize {
         .iter()
         .filter(|&&id| requests[id].rank > 0)
         .map(|&id| requests[id].adapter_id)
-        .collect::<std::collections::HashSet<_>>()
+        .collect::<std::collections::BTreeSet<_>>()
         .len()
 }
 

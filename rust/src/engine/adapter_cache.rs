@@ -7,6 +7,9 @@
 //!   slot backing the actual SGMV compute (slot 0 is the reserved zero
 //!   adapter for backbone-only rows).
 
+use std::collections::BTreeMap;
+// Lookup-only table; never iterated (see PhysBank::map).
+#[allow(clippy::disallowed_types)]
 use std::collections::HashMap;
 
 /// A swap-in event (for load-latency accounting).
@@ -22,8 +25,10 @@ pub struct LoadEvent {
 #[derive(Debug, Clone)]
 pub struct SimAdapterCache {
     a_max: usize,
-    /// adapter -> (rank, last-use tick, active request count)
-    resident: HashMap<usize, AdapterState>,
+    /// adapter -> (rank, last-use tick, active request count).  Ordered
+    /// map: the LRU eviction scan in `acquire` iterates it, and ties on
+    /// `last_use` must break by adapter id, not hash order.
+    resident: BTreeMap<usize, AdapterState>,
     tick: u64,
 }
 
@@ -37,7 +42,7 @@ struct AdapterState {
 impl SimAdapterCache {
     /// An empty cache bounded by `a_max` resident adapters.
     pub fn new(a_max: usize) -> SimAdapterCache {
-        SimAdapterCache { a_max, resident: HashMap::new(), tick: 0 }
+        SimAdapterCache { a_max, resident: BTreeMap::new(), tick: 0 }
     }
 
     /// The configured residency bound (the paper's `A_max`).
@@ -120,7 +125,9 @@ impl SimAdapterCache {
 #[derive(Debug)]
 pub struct PhysBank {
     slots: usize,
-    /// adapter -> slot
+    /// adapter -> slot.  Lookup-only (get/insert/remove — the LRU scan
+    /// walks `owner`, a Vec), so hash order is never observable.
+    #[allow(clippy::disallowed_types)]
     map: HashMap<usize, usize>,
     /// slot -> (adapter, last-use tick); index 0 unused.
     owner: Vec<Option<(usize, u64)>>,
@@ -141,6 +148,7 @@ pub enum PhysSlot {
 impl PhysBank {
     /// A bank with `slots` physical slots (slot 0 reserved for the zero
     /// adapter).
+    #[allow(clippy::disallowed_types)]
     pub fn new(slots: usize) -> PhysBank {
         PhysBank { slots, map: HashMap::new(), owner: vec![None; slots], tick: 0 }
     }

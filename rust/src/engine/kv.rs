@@ -19,7 +19,9 @@ pub struct KvLedger {
     mem: MemoryConfig,
     /// Total pool size in blocks (after the static adapter reservation).
     total_blocks: usize,
-    /// Blocks currently held, keyed by request id.
+    /// Blocks currently held, keyed by request id.  Lookup-only
+    /// (get/entry/remove); never iterated, so hash order is invisible.
+    #[allow(clippy::disallowed_types)]
     held: std::collections::HashMap<usize, usize>,
     free_blocks: usize,
     /// Dynamic adapter charge in unified (S-LoRA) mode, in tokens.

@@ -25,7 +25,7 @@ pub fn table1(ctx: &ExpContext) -> Result<()> {
 
         // -------- Predictable arrivals --------
         type Acc6 = (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>);
-        let mut acc: std::collections::HashMap<&str, Acc6> = Default::default();
+        let mut acc: std::collections::BTreeMap<&str, Acc6> = Default::default();
         let mut twin_walls = vec![];
         let mut engine_walls = vec![];
         for sc in &scenarios {
@@ -73,7 +73,7 @@ pub fn table1(ctx: &ExpContext) -> Result<()> {
         }
 
         // -------- Unpredictable arrivals --------
-        let mut acc_u: std::collections::HashMap<&str, Acc6> = Default::default();
+        let mut acc_u: std::collections::BTreeMap<&str, Acc6> = Default::default();
         let counts: Vec<usize> =
             if ctx.scale.is_quick() { vec![32, 64] } else { vec![32, 64, 128] };
         for (i, &n) in counts.iter().enumerate() {

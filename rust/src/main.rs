@@ -197,6 +197,8 @@ fn load_or_default_calibration(args: &Args, model: &str) -> Result<Calibration> 
 /// artifact-cache status (the CI smoke asserts a second run is all
 /// cache hits).
 fn pipeline_cmd(args: &Args) -> Result<()> {
+    // CLI progress timing only (detlint allowlists `main` for wall-clock).
+    #[allow(clippy::disallowed_methods)]
     let t0 = Instant::now();
     let pipe = pipeline_from(args)?;
     let spec = workload(args)?;

@@ -11,7 +11,7 @@ pub fn kfold(n: usize, folds: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)>
     let mut out = Vec::with_capacity(folds);
     for f in 0..folds {
         let test: Vec<usize> = idx.iter().copied().skip(f).step_by(folds).collect();
-        let test_set: std::collections::HashSet<usize> = test.iter().copied().collect();
+        let test_set: std::collections::BTreeSet<usize> = test.iter().copied().collect();
         let train: Vec<usize> = idx.iter().copied().filter(|i| !test_set.contains(i)).collect();
         out.push((train, test));
     }

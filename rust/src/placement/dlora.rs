@@ -42,6 +42,8 @@ fn objective(loads: &[f64], mem: &[f64]) -> f64 {
 /// dLoRA proactive placement: balanced greedy assignment + best-swap local
 /// search under a wall-clock budget.
 pub fn place(adapters: &[AdapterSpec], gpus: usize, params: &DloraParams) -> PlacementResult {
+    // detlint: allow(wall-clock) — dLoRA reproduces the baseline's wall-clock swap budget (`TimeLimit`); time-boxed by design
+    #[allow(clippy::disallowed_methods)]
     let t0 = Instant::now();
     // Phase 1: greedy balanced assignment (rate-descending, least-loaded).
     let mut order: Vec<&AdapterSpec> = adapters.iter().collect();
@@ -49,7 +51,7 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, params: &DloraParams) -> Pla
     let mut assign: Vec<usize> = vec![0; adapters.len()];
     let mut loads = vec![0.0f64; gpus];
     let mut mem = vec![0.0f64; gpus];
-    let mut idx_of: std::collections::HashMap<usize, usize> = Default::default();
+    let mut idx_of: std::collections::BTreeMap<usize, usize> = Default::default();
     for (i, a) in adapters.iter().enumerate() {
         idx_of.insert(a.id, i);
     }

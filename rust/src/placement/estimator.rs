@@ -30,7 +30,11 @@ use crate::ml::{features, MlModels};
 use crate::util::csv::Table;
 use crate::util::threadpool::{default_workers, parallel_map};
 use crate::workload::{AdapterSpec, WorkloadSpec};
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
+// Hot-path memo + within-batch dedup tables; never iterated unsorted
+// (see `LruMemo` and `probe_batched`).
+#[allow(clippy::disallowed_types)]
+use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -293,6 +297,7 @@ pub fn probe_key(adapters: &[AdapterSpec], a_max: usize) -> Vec<u64> {
 
 /// `f64::to_bits` with `-0.0` collapsed onto `+0.0` (see [`probe_key`]).
 fn normalized_bits(v: f64) -> u64 {
+    // detlint: allow(float-key) — this comparison IS the -0.0 → +0.0 normalization feeding to_bits()
     (if v == 0.0 { 0.0f64 } else { v }).to_bits()
 }
 
@@ -463,6 +468,9 @@ pub struct CachedEstimator {
 /// entry to evict when an insert exceeds capacity.
 #[derive(Default)]
 struct LruMemo {
+    /// Hash map on the probe hot path (bench-trajectory-gated); the only
+    /// iteration is the sorted snapshot in `CachedEstimator::memos`.
+    #[allow(clippy::disallowed_types)]
     entries: HashMap<Vec<u64>, (Estimate, u64)>,
     order: BTreeMap<u64, Vec<u64>>,
     tick: u64,
@@ -599,6 +607,7 @@ impl CachedEstimator {
     /// Snapshot of the memo, in deterministic key order.
     pub fn memos(&self) -> Vec<(Vec<u64>, Estimate)> {
         let memo = self.memo.lock().unwrap();
+        // detlint: allow(unordered-iter) — hash-order snapshot is sorted by key on the next line
         let mut out: Vec<(Vec<u64>, Estimate)> =
             memo.entries.iter().map(|(k, (v, _))| (k.clone(), *v)).collect();
         out.sort_unstable_by(|a, b| a.0.cmp(&b.0));
@@ -701,7 +710,9 @@ impl PerfEstimator for CachedEstimator {
         }
         let mut slots: Vec<Slot> = Vec::with_capacity(queries.len());
         let mut pending: Vec<usize> = Vec::new(); // query index of each unique miss
-        let mut first_seen: HashMap<&[u64], usize> = HashMap::new(); // key -> pending slot
+        // key -> pending slot; lookup-only within-batch dedup, never iterated.
+        #[allow(clippy::disallowed_types)]
+        let mut first_seen: HashMap<&[u64], usize> = HashMap::new();
         {
             let mut memo = self.memo.lock().unwrap();
             for (i, key) in keys.iter().enumerate() {

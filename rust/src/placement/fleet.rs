@@ -174,7 +174,7 @@ pub fn place(
     let mut states: Vec<GpuState> = vec![];
     let mut gpu_type: Vec<usize> = vec![];
     let mut g_q: VecDeque<usize> = VecDeque::new();
-    let testing: std::collections::HashSet<usize> = TESTING_POINTS.iter().copied().collect();
+    let testing: std::collections::BTreeSet<usize> = TESTING_POINTS.iter().copied().collect();
 
     while let Some(a) = a_q.pop_front() {
         let g = match g_q.pop_front() {

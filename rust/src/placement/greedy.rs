@@ -110,7 +110,7 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, est: &dyn PerfEstimator) -> 
     let mut a_q: VecDeque<AdapterSpec> = sorted.into();
     let mut g_q: VecDeque<usize> = (0..gpus).collect();
     let mut states: Vec<GpuState> = vec![GpuState::default(); gpus];
-    let testing: std::collections::HashSet<usize> = TESTING_POINTS.iter().copied().collect();
+    let testing: std::collections::BTreeSet<usize> = TESTING_POINTS.iter().copied().collect();
 
     while let Some(a) = a_q.pop_front() {
         let Some(g) = g_q.pop_front() else {

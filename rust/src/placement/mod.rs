@@ -45,7 +45,7 @@ pub use objective::{plan, Candidate, MinCost, MinGpus, MinLatency, Objective, Op
 pub use replan::{replan_with_ledger, ReplanLedger};
 
 use crate::workload::AdapterSpec;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// The paper's testing-point array, reused as the `A_max` candidate set.
 pub const TESTING_POINTS: [usize; 11] = [8, 16, 32, 64, 96, 128, 160, 192, 256, 320, 384];
@@ -63,8 +63,10 @@ pub const TESTING_POINTS: [usize; 11] = [8, 16, 32, 64, 96, 128, 160, 192, 256, 
 /// ```
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Placement {
-    /// adapter id → GPU index.
-    pub assignment: HashMap<usize, usize>,
+    /// adapter id → GPU index.  Ordered map: plans are iterated when
+    /// deriving per-GPU groups and diffing replans, and that order must
+    /// be a function of the plan alone (determinism contract, DESIGN §13).
+    pub assignment: BTreeMap<usize, usize>,
     /// Per-GPU `A_max` configuration (0 = GPU unused).
     pub a_max: Vec<usize>,
 }
@@ -182,7 +184,7 @@ mod tests {
 
     #[test]
     fn gpus_used_counts_distinct() {
-        let mut p = Placement { assignment: HashMap::new(), a_max: vec![8, 8, 0, 0] };
+        let mut p = Placement { assignment: BTreeMap::new(), a_max: vec![8, 8, 0, 0] };
         p.assignment.insert(0, 0);
         p.assignment.insert(1, 0);
         p.assignment.insert(2, 1);

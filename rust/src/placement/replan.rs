@@ -49,7 +49,7 @@ use super::objective::{better_than, Candidate, Objective};
 use super::{greedy, Placement, PlacementError, TESTING_POINTS};
 use crate::dt::Calibration;
 use crate::workload::AdapterSpec;
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 /// Linear model of the cost of migrating (re-loading) one adapter:
 /// `base_s + per_rank_s · rank` seconds, fitted to the calibration's
@@ -309,7 +309,7 @@ pub fn replan_with_ledger(
         });
     };
 
-    let current_ids: HashSet<usize> = adapters.iter().map(|a| a.id).collect();
+    let current_ids: BTreeSet<usize> = adapters.iter().map(|a| a.id).collect();
     let removed = prev.assignment.keys().filter(|id| !current_ids.contains(*id)).count();
 
     // 1. Sticky grouping: survivors keep their GPU, the rest go pending.
@@ -533,7 +533,7 @@ pub fn replan_with_ledger(
     //    each adapter moves at most once per replan, so the loop
     //    terminates; a ledger-settled layout skips the pass outright.
     let mut total_rebalance_cost = 0.0f64;
-    let mut rebalanced: HashSet<usize> = HashSet::new();
+    let mut rebalanced: BTreeSet<usize> = BTreeSet::new();
     'rebalance: while !settled && !objective.consolidates() {
         let load = |group: &[AdapterSpec]| group.iter().map(|a| a.rate).sum::<f64>();
         let mut heaviest: Option<(usize, f64)> = None;

@@ -28,7 +28,7 @@
 
 use super::Backend;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::ops::{Deref, DerefMut};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -54,7 +54,7 @@ type Factory = Box<dyn Fn(&str) -> Result<Box<dyn Backend + Send>> + Send + Sync
 /// ```
 pub struct BackendPool {
     factory: Factory,
-    idle: Mutex<HashMap<String, Vec<Box<dyn Backend + Send>>>>,
+    idle: Mutex<BTreeMap<String, Vec<Box<dyn Backend + Send>>>>,
     created: AtomicUsize,
     reused: AtomicUsize,
 }
@@ -73,7 +73,7 @@ impl BackendPool {
     pub fn with_factory(factory: Factory) -> BackendPool {
         BackendPool {
             factory,
-            idle: Mutex::new(HashMap::new()),
+            idle: Mutex::new(BTreeMap::new()),
             created: AtomicUsize::new(0),
             reused: AtomicUsize::new(0),
         }

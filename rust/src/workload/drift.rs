@@ -378,7 +378,7 @@ mod tests {
                 rng.next_u64(),
             );
             for e in 0..epochs {
-                let active: std::collections::HashSet<usize> =
+                let active: std::collections::BTreeSet<usize> =
                     d.phases.iter().filter(|p| p.active_in(e)).map(|p| p.adapter.id).collect();
                 for arr in d.epoch_spec(e).trace() {
                     prop_assert!(

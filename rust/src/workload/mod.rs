@@ -176,7 +176,7 @@ impl WorkloadSpec {
     /// Restrict to a subset of adapters (used by placement validation:
     /// each GPU serves the adapters assigned to it).
     pub fn subset(&self, adapter_ids: &[usize], seed: u64) -> WorkloadSpec {
-        let set: std::collections::HashSet<usize> = adapter_ids.iter().copied().collect();
+        let set: std::collections::BTreeSet<usize> = adapter_ids.iter().copied().collect();
         WorkloadSpec {
             adapters: self.adapters.iter().filter(|a| set.contains(&a.id)).cloned().collect(),
             input_len: self.input_len.clone(),

@@ -1,0 +1,58 @@
+//! Double-run bit-identity: the experiment harness must produce *byte
+//! identical* CSV artifacts when run twice from cold caches.  This is the
+//! end-to-end check behind the determinism contract (DESIGN.md §13) that
+//! detlint enforces statically: no hash-order iteration, no wall-clock
+//! reads and no ambient entropy may leak into results.
+//!
+//! Both experiments run twin-backed at quick scale on the reference
+//! backend, and their CSVs carry no wall-clock columns (the waived
+//! `plan_wall_s`-style accounting goes to stdout/summary only), so a full
+//! byte compare is valid.
+
+use adapter_serving::experiments::{self, ExpContext, Scale};
+use std::path::PathBuf;
+
+/// A fresh ExpContext writing under `target/tmp/<tag>-<pid>-<run>/`.
+fn fresh_ctx(tag: &str, run: usize) -> (ExpContext, PathBuf) {
+    let base = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../target/tmp"));
+    let dir = base.join(format!("{tag}-{}-{run}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create temp out_dir");
+    let mut ctx = ExpContext::new(Scale::Quick);
+    ctx.out_dir = dir.clone();
+    (ctx, dir)
+}
+
+/// Run experiment `id` twice into independent cold-cache dirs and assert
+/// the named CSV artifact is byte-identical across the runs.
+fn assert_double_run_identical(id: &str, csv: &str) {
+    let mut outputs = vec![];
+    for run in 0..2 {
+        let (ctx, dir) = fresh_ctx(id, run);
+        experiments::run(id, &ctx).unwrap_or_else(|e| panic!("experiment {id} run {run}: {e}"));
+        let path = dir.join(id).join(csv);
+        let bytes =
+            std::fs::read(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        assert!(!bytes.is_empty(), "{id}/{csv} is empty");
+        outputs.push((dir, bytes));
+    }
+    assert_eq!(
+        outputs[0].1, outputs[1].1,
+        "{id}/{csv} differs between two cold-cache runs — a nondeterministic \
+         input (hash order, wall clock, ambient entropy) leaked into results; \
+         run `cargo run -p detlint -- --check` and see DESIGN.md §13"
+    );
+    for (dir, _) in outputs {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}
+
+#[test]
+fn fleet_experiment_is_bit_identical_across_runs() {
+    assert_double_run_identical("fleet", "fleet.csv");
+}
+
+#[test]
+fn fig11_experiment_is_bit_identical_across_runs() {
+    assert_double_run_identical("fig11", "fig11.csv");
+}

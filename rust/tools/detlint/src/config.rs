@@ -1,0 +1,99 @@
+//! The determinism ruleset configuration: which modules each rule
+//! applies to, and how module paths are matched.
+//!
+//! Allowlist / scope entries come in two forms:
+//!
+//! * `"util::bench"` — exact module match only;
+//! * `"experiments::*"` — the module itself (`experiments`) and its
+//!   whole subtree (`experiments::fleet`, …).
+//!
+//! Module paths are derived from the file path relative to `rust/src`:
+//! `cluster/events.rs → cluster::events`, `cluster/mod.rs → cluster`,
+//! `main.rs → main`, `lib.rs → lib`.
+
+/// All five rule identifiers, in report order.
+pub const RULE_IDS: [&str; 5] =
+    ["unordered-iter", "wall-clock", "float-key", "ambient-entropy", "deprecated"];
+
+/// R1 — modules where unordered `HashMap`/`HashSet` iteration breaks
+/// replay determinism (planner, twin, event core, workload gen, ML).
+pub const CRITICAL_MODULES: [&str; 6] =
+    ["cluster::*", "dt::*", "placement::*", "workload::*", "ml::*", "engine::*"];
+
+/// R2 — modules allowed to read wall clocks. `engine` is exact: the
+/// engine top module's contract *is* measured kernel time, but its
+/// submodules (cache, kv, metrics) are pure bookkeeping.
+pub const WALL_CLOCK_ALLOW: [&str; 4] = ["util::bench", "experiments::*", "main", "engine"];
+
+/// R3 — file suffixes (relative to `rust/src`) that hold memo-key /
+/// fingerprint code, where floats must round-trip via `to_bits()`.
+pub const FLOAT_KEY_FILES: [&str; 3] =
+    ["placement/estimator.rs", "placement/replan.rs", "pipeline/store.rs"];
+
+/// R4 — the only module allowed to call `std::thread::spawn`.
+pub const SPAWN_ALLOW: [&str; 1] = ["util::threadpool"];
+
+/// R4 — the only module allowed to construct entropy (seed material);
+/// everything else must take a seed.
+pub const RNG_ALLOW: [&str; 1] = ["util::rng"];
+
+/// Does `entry` (exact or `::*` subtree pattern) match `module`?
+pub fn entry_matches(entry: &str, module: &str) -> bool {
+    if let Some(prefix) = entry.strip_suffix("::*") {
+        module == prefix || module.strip_prefix(prefix).is_some_and(|r| r.starts_with("::"))
+    } else {
+        module == entry
+    }
+}
+
+/// Does any entry in `list` match `module`?
+pub fn module_in(list: &[&str], module: &str) -> bool {
+    list.iter().any(|e| entry_matches(e, module))
+}
+
+/// Derive the module path for a `.rs` file from its path relative to
+/// the scanned source root (forward slashes).
+pub fn module_path(rel: &str) -> String {
+    let no_ext = rel.strip_suffix(".rs").unwrap_or(rel);
+    let parts: Vec<&str> = no_ext.split('/').filter(|s| !s.is_empty()).collect();
+    match parts.as_slice() {
+        [] => String::new(),
+        [.., "mod"] => parts[..parts.len() - 1].join("::"),
+        _ => parts.join("::"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_paths() {
+        assert_eq!(module_path("cluster/events.rs"), "cluster::events");
+        assert_eq!(module_path("cluster/mod.rs"), "cluster");
+        assert_eq!(module_path("main.rs"), "main");
+        assert_eq!(module_path("lib.rs"), "lib");
+        assert_eq!(module_path("util/bench.rs"), "util::bench");
+    }
+
+    #[test]
+    fn exact_vs_subtree_matching() {
+        // Exact entry: module only, not submodules.
+        assert!(entry_matches("engine", "engine"));
+        assert!(!entry_matches("engine", "engine::kv"));
+        // Subtree entry: root and all descendants, no sibling bleed.
+        assert!(entry_matches("experiments::*", "experiments"));
+        assert!(entry_matches("experiments::*", "experiments::fleet"));
+        assert!(!entry_matches("experiments::*", "experiments_extra"));
+    }
+
+    #[test]
+    fn critical_scope_covers_the_determinism_core() {
+        for m in ["cluster::events", "dt::twin", "placement", "engine::adapter_cache"] {
+            assert!(module_in(&CRITICAL_MODULES, m), "{m} must be critical");
+        }
+        for m in ["util::bench", "experiments::fleet", "runtime::pool", "config"] {
+            assert!(!module_in(&CRITICAL_MODULES, m), "{m} must not be critical");
+        }
+    }
+}

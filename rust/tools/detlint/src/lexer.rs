@@ -1,0 +1,414 @@
+//! A minimal hand-rolled Rust lexer — just enough fidelity for the
+//! determinism ruleset: identifiers, punctuation (multi-char operators
+//! kept whole so `==`/`::` never read as two tokens), numeric literals
+//! with float-ness, strings/chars/lifetimes, and comments (kept as
+//! tokens so waiver annotations can be recovered with their line).
+//!
+//! Fidelity limits are deliberate: no macro expansion, no type
+//! inference.  The rule pass compensates with per-file binding tracking
+//! (see `rules.rs`); DESIGN.md §13 documents the blind spots.
+
+/// Token class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (`for`, `let`, `HashMap`, …).
+    Ident,
+    /// Operator / delimiter, multi-char operators intact (`::`, `==`).
+    Punct,
+    /// Integer literal (including hex/oct/bin).
+    Int,
+    /// Float literal (has `.`, exponent, or `f32`/`f64` suffix).
+    Float,
+    /// String literal (plain, raw or byte; contents dropped).
+    Str,
+    /// Char or byte-char literal.
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Line or block comment, text preserved for waiver parsing.
+    Comment,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// Token class.
+    pub kind: Kind,
+    /// Source text (comments keep full text; strings are dropped).
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: u32,
+}
+
+impl Tok {
+    /// Is this an identifier with exactly this text?
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == Kind::Ident && self.text == s
+    }
+
+    /// Is this punctuation with exactly this text?
+    pub fn is_punct(&self, s: &str) -> bool {
+        self.kind == Kind::Punct && self.text == s
+    }
+}
+
+const PUNCT3: [&str; 5] = ["..=", "...", "<<=", ">>=", "=>>"];
+const PUNCT2: [&str; 19] = [
+    "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "..", "+=", "-=", "*=", "/=", "%=",
+    "^=", "&=", "|=", "<<",
+];
+
+/// Lex `src` into tokens.  Never fails: unrecognized bytes become
+/// single-char punctuation, unterminated literals run to end of input.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut out: Vec<Tok> = Vec::new();
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc comments).
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            out.push(Tok { kind: Kind::Comment, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        // Block comment, nested.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let tok_line = line;
+            let start = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.push(Tok {
+                kind: Kind::Comment,
+                text: b[start..i].iter().collect(),
+                line: tok_line,
+            });
+            continue;
+        }
+        // Raw / byte strings: r"…", r#"…"#, br"…", b"…".
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            if c == 'b' && j < n && b[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            let is_raw = j > i + usize::from(c == 'b' && i + 1 < n && b[i + 1] == 'r') || c == 'r';
+            if j < n && b[j] == '"' && (hashes > 0 || is_raw || c == 'b') {
+                // Raw string: scan for `"` followed by `hashes` hashes.
+                // (For b"…" with hashes == 0 this is exact too, except
+                // escapes — a `\"` inside would end early; byte strings
+                // with escaped quotes are absent from this tree.)
+                let tok_line = line;
+                i = j + 1;
+                loop {
+                    if i >= n {
+                        break;
+                    }
+                    if b[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                        continue;
+                    }
+                    if hashes == 0 && b[i] == '\\' && c == 'b' {
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && i + 1 + k < n && b[i + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            i += 1 + hashes;
+                            break;
+                        }
+                    }
+                    i += 1;
+                }
+                out.push(Tok { kind: Kind::Str, text: String::new(), line: tok_line });
+                continue;
+            }
+            // Byte char b'x'.
+            if c == 'b' && i + 1 < n && b[i + 1] == '\'' {
+                let tok_line = line;
+                i += 2; // past `b` and the opening quote
+                if i < n && b[i] == '\\' {
+                    i += 2; // past the backslash and the escaped char
+                    while i < n && b[i] != '\'' {
+                        i += 1;
+                    }
+                    i += 1;
+                } else {
+                    i += 1; // the char
+                    if i < n && b[i] == '\'' {
+                        i += 1;
+                    }
+                }
+                out.push(Tok { kind: Kind::Char, text: String::new(), line: tok_line });
+                continue;
+            }
+            // Raw identifier r#ident.
+            if c == 'r' && i + 1 < n && b[i + 1] == '#' && i + 2 < n && is_ident_start(b[i + 2]) {
+                let start = i + 2;
+                i += 2;
+                while i < n && is_ident_continue(b[i]) {
+                    i += 1;
+                }
+                out.push(Tok { kind: Kind::Ident, text: b[start..i].iter().collect(), line });
+                continue;
+            }
+            // else: plain identifier starting with r/b — fall through.
+        }
+        // Plain string.
+        if c == '"' {
+            let tok_line = line;
+            i += 1;
+            while i < n {
+                if b[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                }
+                if b[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            out.push(Tok { kind: Kind::Str, text: String::new(), line: tok_line });
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            let tok_line = line;
+            if i + 1 < n && b[i + 1] == '\\' {
+                // Escaped char literal: '\n', '\u{…}', '\'', '\\'.
+                i += 3; // opening quote, backslash, escaped char
+                while i < n && b[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+                out.push(Tok { kind: Kind::Char, text: String::new(), line: tok_line });
+            } else if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                // 'x'
+                i += 3;
+                out.push(Tok { kind: Kind::Char, text: String::new(), line: tok_line });
+            } else {
+                // Lifetime.
+                let start = i + 1;
+                i += 1;
+                while i < n && is_ident_continue(b[i]) {
+                    i += 1;
+                }
+                out.push(Tok {
+                    kind: Kind::Lifetime,
+                    text: b[start..i].iter().collect(),
+                    line: tok_line,
+                });
+            }
+            continue;
+        }
+        // Number.
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut is_float = false;
+            if c == '0' && i + 1 < n && matches!(b[i + 1], 'x' | 'o' | 'b') {
+                i += 2;
+                while i < n && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+            } else {
+                while i < n && (b[i].is_ascii_digit() || b[i] == '_') {
+                    i += 1;
+                }
+                if i + 1 < n && b[i] == '.' && b[i + 1].is_ascii_digit() {
+                    is_float = true;
+                    i += 1;
+                    while i < n && (b[i].is_ascii_digit() || b[i] == '_') {
+                        i += 1;
+                    }
+                }
+                if i < n && (b[i] == 'e' || b[i] == 'E') {
+                    let exp_ok = i + 1 < n
+                        && (b[i + 1].is_ascii_digit()
+                            || ((b[i + 1] == '+' || b[i + 1] == '-')
+                                && i + 2 < n
+                                && b[i + 2].is_ascii_digit()));
+                    if exp_ok {
+                        is_float = true;
+                        i += 1;
+                        if b[i] == '+' || b[i] == '-' {
+                            i += 1;
+                        }
+                        while i < n && (b[i].is_ascii_digit() || b[i] == '_') {
+                            i += 1;
+                        }
+                    }
+                }
+                // Type suffix (f64, u32, usize, …).
+                let sfx = i;
+                while i < n && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                if b[sfx..i].starts_with(&['f']) {
+                    is_float = true;
+                }
+            }
+            out.push(Tok {
+                kind: if is_float { Kind::Float } else { Kind::Int },
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_continue(b[i]) {
+                i += 1;
+            }
+            out.push(Tok { kind: Kind::Ident, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        // Punctuation, longest match first.
+        let rest3: String = b[i..n.min(i + 3)].iter().collect();
+        if PUNCT3.contains(&rest3.as_str()) {
+            out.push(Tok { kind: Kind::Punct, text: rest3, line });
+            i += 3;
+            continue;
+        }
+        let rest2: String = b[i..n.min(i + 2)].iter().collect();
+        if PUNCT2.contains(&rest2.as_str()) {
+            out.push(Tok { kind: Kind::Punct, text: rest2, line });
+            i += 2;
+            continue;
+        }
+        out.push(Tok { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn operators_stay_whole() {
+        let toks = lex("a == b != c :: d");
+        let ops: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Punct)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(ops, vec!["==", "!=", "::"]);
+    }
+
+    #[test]
+    fn floats_vs_ints_vs_ranges() {
+        let toks = kinds("1.5 0..4 2e3 7usize 3.0f64 0xff");
+        let nums: Vec<(Kind, &str)> = toks
+            .iter()
+            .filter(|(k, _)| matches!(k, Kind::Int | Kind::Float))
+            .map(|(k, t)| (*k, t.as_str()))
+            .collect();
+        assert_eq!(
+            nums,
+            vec![
+                (Kind::Float, "1.5"),
+                (Kind::Int, "0"),
+                (Kind::Int, "4"),
+                (Kind::Float, "2e3"),
+                (Kind::Int, "7usize"),
+                (Kind::Float, "3.0f64"),
+                (Kind::Int, "0xff"),
+            ]
+        );
+    }
+
+    #[test]
+    fn lifetimes_and_chars() {
+        let toks = lex("&'a str; let c = 'x'; let nl = '\\n';");
+        assert!(toks.iter().any(|t| t.kind == Kind::Lifetime && t.text == "a"));
+        assert_eq!(toks.iter().filter(|t| t.kind == Kind::Char).count(), 2);
+    }
+
+    #[test]
+    fn comments_keep_text_and_lines() {
+        let src = "let a = 1;\n// detlint: allow(wall-clock) — reporting only\nlet b = 2;";
+        let toks = lex(src);
+        let c = toks.iter().find(|t| t.kind == Kind::Comment).unwrap();
+        assert_eq!(c.line, 2);
+        assert!(c.text.contains("detlint: allow(wall-clock)"));
+        assert_eq!(toks.iter().filter(|t| t.is_ident("let")).count(), 3);
+    }
+
+    #[test]
+    fn strings_do_not_leak_tokens() {
+        let toks = lex(r#"let s = "HashMap::iter() == 1.5"; let r = r"x\"; "#);
+        assert!(!toks.iter().any(|t| t.is_ident("HashMap")));
+        assert_eq!(toks.iter().filter(|t| t.kind == Kind::Str).count(), 2);
+    }
+
+    #[test]
+    fn escaped_quote_char_literals() {
+        let toks = lex("let q = '\\''; let b = b'\\''; let s = '\\\\'; let x = 1;");
+        assert_eq!(toks.iter().filter(|t| t.kind == Kind::Char).count(), 3);
+        assert!(!toks.iter().any(|t| t.kind == Kind::Lifetime));
+        assert!(toks.iter().any(|t| t.is_ident("x")));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = lex("/* a /* b */ c */ let x = 1;");
+        assert_eq!(toks.iter().filter(|t| t.kind == Kind::Comment).count(), 1);
+        assert!(toks.iter().any(|t| t.is_ident("let")));
+    }
+}

@@ -1,0 +1,341 @@
+//! `detlint` — determinism & invariant static analysis for the
+//! `adapter_serving` crate (DESIGN.md §13).
+//!
+//! Scans `rust/src/**/*.rs` with a hand-rolled token-level pass and
+//! enforces five rules:
+//!
+//! * `unordered-iter` — no `HashMap`/`HashSet` iteration in
+//!   determinism-critical modules;
+//! * `wall-clock` — no `Instant::now`/`SystemTime` outside timing
+//!   modules;
+//! * `float-key` — fingerprint/memo-key code must route floats
+//!   through `to_bits()`;
+//! * `ambient-entropy` — no `thread::spawn` outside
+//!   `util::threadpool`, no unseeded randomness outside `util::rng`;
+//! * `deprecated` — no in-crate `#[deprecated]` APIs.
+//!
+//! Violations are silenced only by an inline
+//! `// detlint: allow(<rule>) — <reason>` waiver on the offending
+//! line or up to two lines above; every waiver must carry a reason
+//! and the per-rule waiver count is capped by `waiver-budget.txt`.
+//!
+//! ```text
+//! cargo run -p detlint -- --check            # CI gate: non-zero exit on any finding
+//! cargo run -p detlint -- --waivers          # print the waiver inventory only
+//! cargo run -p detlint -- --root DIR --budget FILE
+//! ```
+
+mod config;
+mod lexer;
+mod rules;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// A violation tagged with its file, plus the waiver that covers it
+/// (if any).
+struct Finding {
+    rel: String,
+    violation: rules::Violation,
+    waived_by: Option<rules::Waiver>,
+}
+
+/// Full scan result over the tree.
+#[derive(Default)]
+struct Report {
+    findings: Vec<Finding>,
+    /// All waivers seen, as `(rel, waiver, used)`.
+    waivers: Vec<(String, rules::Waiver, bool)>,
+    files: usize,
+}
+
+fn scan_tree(src_root: &Path) -> Result<Report, String> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    files.sort();
+
+    let mut report = Report::default();
+    for path in &files {
+        let rel = path
+            .strip_prefix(src_root)
+            .map_err(|e| e.to_string())?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let toks = lexer::lex(&src);
+        let module = config::module_path(&rel);
+        let violations = rules::analyze(&module, &rel, &toks);
+        let waivers = rules::parse_waivers(&toks);
+        let mut used = vec![false; waivers.len()];
+        for v in violations {
+            let hit = waivers
+                .iter()
+                .enumerate()
+                .find(|(_, w)| rules::waiver_covers(w, v.rule, v.line));
+            let waived_by = hit.map(|(i, w)| {
+                used[i] = true;
+                w.clone()
+            });
+            report.findings.push(Finding { rel: rel.clone(), violation: v, waived_by });
+        }
+        for (w, u) in waivers.into_iter().zip(used) {
+            report.waivers.push((rel.clone(), w, u));
+        }
+        report.files += 1;
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| e.to_string())?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Parse `waiver-budget.txt`: `<rule-id> <max-count>` per line, `#`
+/// comments.  Rules absent from the file have budget 0.
+fn parse_budget(text: &str) -> Result<BTreeMap<String, usize>, String> {
+    let mut out = BTreeMap::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(rule), Some(count)) = (it.next(), it.next()) else {
+            return Err(format!("budget line {}: expected `<rule> <count>`", ln + 1));
+        };
+        if !config::RULE_IDS.contains(&rule) {
+            return Err(format!("budget line {}: unknown rule `{rule}`", ln + 1));
+        }
+        let n: usize =
+            count.parse().map_err(|e| format!("budget line {}: {e}", ln + 1))?;
+        out.insert(rule.to_string(), n);
+    }
+    Ok(out)
+}
+
+/// Everything `--check` enforces, as (ok, rendered report).
+fn check(report: &Report, budget: &BTreeMap<String, usize>) -> (bool, String) {
+    let mut out = String::new();
+    let mut ok = true;
+
+    let active: Vec<&Finding> =
+        report.findings.iter().filter(|f| f.waived_by.is_none()).collect();
+    if active.is_empty() {
+        out.push_str(&format!(
+            "detlint: {} files scanned, 0 unwaivered violations\n",
+            report.files
+        ));
+    } else {
+        ok = false;
+        out.push_str(&format!("detlint: {} violation(s):\n", active.len()));
+        for f in &active {
+            out.push_str(&format!(
+                "  rust/src/{}:{} [{}] {}\n",
+                f.rel, f.violation.line, f.violation.rule, f.violation.msg
+            ));
+        }
+    }
+
+    // Waiver inventory, with reasons — the audited budget.
+    let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut no_reason = 0usize;
+    out.push_str("waiver inventory:\n");
+    for (rel, w, used) in &report.waivers {
+        if !used {
+            out.push_str(&format!(
+                "  warning: stale waiver rust/src/{rel}:{} [{}] covers nothing\n",
+                w.line, w.rule
+            ));
+            continue;
+        }
+        if w.reason.is_empty() {
+            ok = false;
+            no_reason += 1;
+            out.push_str(&format!(
+                "  ERROR: waiver without reason at rust/src/{rel}:{} [{}]\n",
+                w.line, w.rule
+            ));
+            continue;
+        }
+        *counts.entry(w.rule.as_str()).or_default() += 1;
+        out.push_str(&format!("  rust/src/{rel}:{} [{}] — {}\n", w.line, w.rule, w.reason));
+    }
+    if report.waivers.iter().all(|(_, _, used)| !used) {
+        out.push_str("  (none)\n");
+    }
+    if no_reason > 0 {
+        out.push_str(&format!("{no_reason} waiver(s) missing a reason\n"));
+    }
+
+    out.push_str("waiver budget:\n");
+    for rule in config::RULE_IDS {
+        let have = counts.get(rule).copied().unwrap_or(0);
+        let max = budget.get(rule).copied().unwrap_or(0);
+        let status = if have > max { "EXCEEDED" } else { "ok" };
+        out.push_str(&format!("  {rule}: {have}/{max} {status}\n"));
+        if have > max {
+            ok = false;
+        }
+    }
+    (ok, out)
+}
+
+fn default_root() -> PathBuf {
+    // tools/detlint sits at <repo>/rust/tools/detlint.
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../../..").canonicalize().unwrap_or_else(|_| {
+        PathBuf::from(".")
+    })
+}
+
+fn main() -> ExitCode {
+    let mut check_mode = false;
+    let mut waivers_only = false;
+    let mut root = default_root();
+    let mut budget_path: Option<PathBuf> = None;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--check" => check_mode = true,
+            "--waivers" => waivers_only = true,
+            "--root" => match args.next() {
+                Some(d) => root = PathBuf::from(d),
+                None => return usage("--root needs a directory"),
+            },
+            "--budget" => match args.next() {
+                Some(f) => budget_path = Some(PathBuf::from(f)),
+                None => return usage("--budget needs a file"),
+            },
+            "--help" | "-h" => {
+                println!(
+                    "detlint [--check] [--waivers] [--root DIR] [--budget FILE]\n\
+                     determinism lint over rust/src — see DESIGN.md §13"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+
+    let src_root = root.join("rust/src");
+    if !src_root.is_dir() {
+        eprintln!("detlint: source root {} not found", src_root.display());
+        return ExitCode::from(2);
+    }
+    let report = match scan_tree(&src_root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("detlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if waivers_only {
+        for (rel, w, used) in &report.waivers {
+            let mark = if *used { "" } else { " (stale)" };
+            println!("rust/src/{rel}:{} [{}]{} — {}", w.line, w.rule, mark, w.reason);
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    let budget_file =
+        budget_path.unwrap_or_else(|| root.join("rust/tools/detlint/waiver-budget.txt"));
+    let budget = match std::fs::read_to_string(&budget_file) {
+        Ok(text) => match parse_budget(&text) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("detlint: {}: {e}", budget_file.display());
+                return ExitCode::from(2);
+            }
+        },
+        Err(e) if check_mode => {
+            eprintln!("detlint: budget file {}: {e}", budget_file.display());
+            return ExitCode::from(2);
+        }
+        Err(_) => BTreeMap::new(),
+    };
+
+    let (ok, rendered) = check(&report, &budget);
+    print!("{rendered}");
+    if check_mode && !ok {
+        return ExitCode::FAILURE;
+    }
+    ExitCode::SUCCESS
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("detlint: {msg} (try --help)");
+    ExitCode::from(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_parsing() {
+        let b = parse_budget("# comment\nwall-clock 9\nunordered-iter 1 # inline\n").unwrap();
+        assert_eq!(b.get("wall-clock"), Some(&9));
+        assert_eq!(b.get("unordered-iter"), Some(&1));
+        assert!(parse_budget("no-such-rule 3\n").is_err());
+        assert!(parse_budget("wall-clock\n").is_err());
+    }
+
+    /// The CI gate as a tier-1 test: the real tree must scan clean —
+    /// zero unwaivered violations, every waiver reasoned and within
+    /// the checked-in budget.
+    #[test]
+    fn repo_tree_is_clean_under_budget() {
+        let root = default_root();
+        let src_root = root.join("rust/src");
+        assert!(src_root.is_dir(), "source root missing: {}", src_root.display());
+        let report = scan_tree(&src_root).expect("scan");
+        assert!(report.files > 20, "suspiciously few files scanned: {}", report.files);
+        let budget_text = std::fs::read_to_string(root.join("rust/tools/detlint/waiver-budget.txt"))
+            .expect("waiver-budget.txt");
+        let budget = parse_budget(&budget_text).expect("budget parses");
+        let (ok, rendered) = check(&report, &budget);
+        assert!(ok, "detlint check failed:\n{rendered}");
+    }
+
+    /// Acceptance criterion: seeding a synthetic `HashMap` iteration
+    /// into a scanned tree produces a failing check with a file:line
+    /// diagnostic.
+    #[test]
+    fn seeded_violation_fails_with_file_line_diagnostic() {
+        let dir = std::env::temp_dir().join(format!("detlint-seed-{}", std::process::id()));
+        let cluster = dir.join("cluster");
+        std::fs::create_dir_all(&cluster).expect("mkdir");
+        std::fs::write(
+            cluster.join("events.rs"),
+            "use std::collections::HashMap;\n\
+             pub fn drain_routes(route: &mut HashMap<usize, usize>) -> usize {\n\
+             let mut n = 0;\n\
+             for (_, v) in route.iter() { n += v; }\n\
+             n\n\
+             }\n",
+        )
+        .expect("write seed file");
+        let report = scan_tree(&dir).expect("scan");
+        let (ok, rendered) = check(&report, &BTreeMap::new());
+        std::fs::remove_dir_all(&dir).ok();
+        assert!(!ok, "seeded violation must fail the check");
+        assert!(
+            rendered.contains("cluster/events.rs:4 [unordered-iter]"),
+            "diagnostic must carry file:line, got:\n{rendered}"
+        );
+    }
+}

@@ -1,0 +1,437 @@
+//! The determinism rule pass: given one file's tokens and its module
+//! path, emit violations.  Waivers are parsed here too; *matching*
+//! waivers to violations is the driver's job (`main.rs`) so the
+//! inventory can be reported globally.
+//!
+//! All passes are per-file and token-level.  Type information is
+//! approximated by tracked bindings: an identifier declared as
+//! `HashMap`/`HashSet` (or `f64`/`f32` in fingerprint files) anywhere
+//! in the file taints every later use of that name.  That
+//! over-approximates (name collisions) and under-approximates (values
+//! returned from functions) — both are acceptable for a lint whose
+//! escape hatch is a one-line waiver.
+
+use crate::config;
+use crate::lexer::{Kind, Tok};
+
+/// One rule violation at a source line.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// 1-based source line.
+    pub line: u32,
+    /// Rule id (one of `config::RULE_IDS`).
+    pub rule: &'static str,
+    /// Human-readable diagnostic.
+    pub msg: String,
+}
+
+/// One parsed `// detlint: allow(<rule>) — <reason>` annotation.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    /// 1-based line of the comment.
+    pub line: u32,
+    /// Waived rule id.
+    pub rule: String,
+    /// Justification text after the rule id (may be empty — the
+    /// driver rejects empty reasons).
+    pub reason: String,
+}
+
+const ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+const INT_TYPES: [&str; 12] =
+    ["u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize"];
+
+const ENTROPY_IDENTS: [&str; 4] = ["RandomState", "thread_rng", "from_entropy", "OsRng"];
+
+/// Tokens transparently skipped when walking back from a type name to
+/// the binding it annotates (`resident: Mutex<HashMap<…>>`).
+fn is_back_skip(t: &Tok) -> bool {
+    if t.kind == Kind::Lifetime {
+        return true;
+    }
+    matches!(
+        t.text.as_str(),
+        "::" | "<"
+            | ">"
+            | "&"
+            | "("
+            | ","
+            | "="
+            | "mut"
+            | "dyn"
+            | "std"
+            | "collections"
+            | "hash_map"
+            | "hash_set"
+            | "btree_map"
+            | "Mutex"
+            | "RwLock"
+            | "Option"
+            | "Vec"
+            | "Box"
+            | "Arc"
+            | "Rc"
+    )
+}
+
+/// Names bound (let / field / param) to any of `type_names` in this
+/// file, found by back-walking from each type-name occurrence.
+fn tracked_bindings(code: &[&Tok], type_names: &[&str]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for (i, t) in code.iter().enumerate() {
+        if t.kind != Kind::Ident || !type_names.contains(&t.text.as_str()) {
+            continue;
+        }
+        let mut j = i;
+        let mut steps = 0;
+        while j > 0 && is_back_skip(code[j - 1]) && steps < 16 {
+            j -= 1;
+            steps += 1;
+        }
+        if j == 0 {
+            continue;
+        }
+        let at = code[j - 1];
+        // `name: Type` — field, param, or annotated let.
+        if at.is_punct(":") && j >= 2 && code[j - 2].kind == Kind::Ident {
+            names.push(code[j - 2].text.clone());
+            continue;
+        }
+        // `let [mut] name = Type::new()` — back-walk already skipped
+        // the `=` and `mut`, leaving us at `name`.
+        if at.kind == Kind::Ident
+            && j >= 2
+            && (code[j - 2].is_ident("let")
+                || (code[j - 2].is_ident("mut") && j >= 3 && code[j - 3].is_ident("let")))
+        {
+            names.push(at.text.clone());
+        }
+    }
+    names.sort_unstable();
+    names.dedup();
+    names
+}
+
+/// Run all five rules over one file.
+///
+/// * `module` — module path (`cluster::events`), see [`config::module_path`];
+/// * `rel` — path relative to the source root, forward slashes
+///   (drives the R3 fingerprint-file scope);
+/// * `toks` — full token stream including comments.
+pub fn analyze(module: &str, rel: &str, toks: &[Tok]) -> Vec<Violation> {
+    let code: Vec<&Tok> = toks.iter().filter(|t| t.kind != Kind::Comment).collect();
+    let mut out: Vec<Violation> = Vec::new();
+
+    let critical = config::module_in(&config::CRITICAL_MODULES, module);
+    let clock_ok = config::module_in(&config::WALL_CLOCK_ALLOW, module);
+    let spawn_ok = config::module_in(&config::SPAWN_ALLOW, module);
+    let rng_ok = config::module_in(&config::RNG_ALLOW, module);
+    let fingerprint_file = config::FLOAT_KEY_FILES.iter().any(|f| rel.ends_with(f));
+
+    // ---- R1: unordered iteration over hash collections -------------
+    if critical {
+        let hashed = tracked_bindings(&code, &["HashMap", "HashSet"]);
+        let is_hashed = |t: &Tok| t.kind == Kind::Ident && hashed.iter().any(|n| *n == t.text);
+        for (i, t) in code.iter().enumerate() {
+            // `map.iter()`, `self.map.keys()`, `map.drain()`, …
+            if is_hashed(t)
+                && i + 2 < code.len()
+                && code[i + 1].is_punct(".")
+                && code[i + 2].kind == Kind::Ident
+                && ITER_METHODS.contains(&code[i + 2].text.as_str())
+            {
+                out.push(Violation {
+                    line: t.line,
+                    rule: "unordered-iter",
+                    msg: format!(
+                        "`{}.{}()` iterates a hash collection in determinism-critical \
+                         module `{}`; use BTreeMap/BTreeSet or sort first",
+                        t.text, code[i + 2].text, module
+                    ),
+                });
+            }
+            // `for x in &map { … }` / `for x in map { … }`
+            if t.is_ident("in") {
+                let mut k = i + 1;
+                while k < code.len() && (code[k].is_punct("&") || code[k].is_ident("mut")) {
+                    k += 1;
+                }
+                if k + 1 < code.len() && is_hashed(code[k]) && code[k + 1].is_punct("{") {
+                    out.push(Violation {
+                        line: code[k].line,
+                        rule: "unordered-iter",
+                        msg: format!(
+                            "`for … in {}` iterates a hash collection in \
+                             determinism-critical module `{}`",
+                            code[k].text, module
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // ---- R2: wall clocks outside timing modules --------------------
+    if !clock_ok {
+        for (i, t) in code.iter().enumerate() {
+            if t.is_ident("Instant")
+                && i + 2 < code.len()
+                && code[i + 1].is_punct("::")
+                && code[i + 2].is_ident("now")
+            {
+                out.push(Violation {
+                    line: t.line,
+                    rule: "wall-clock",
+                    msg: format!(
+                        "`Instant::now()` outside timing allowlist (module `{module}`); \
+                         wall time must not influence simulated state"
+                    ),
+                });
+            }
+            if t.is_ident("SystemTime") {
+                out.push(Violation {
+                    line: t.line,
+                    rule: "wall-clock",
+                    msg: format!("`SystemTime` outside timing allowlist (module `{module}`)"),
+                });
+            }
+        }
+    }
+
+    // ---- R3: raw floats in memo-key / fingerprint code -------------
+    if fingerprint_file {
+        let floats = tracked_bindings(&code, &["f64", "f32"]);
+        let is_float =
+            |t: &Tok| t.kind == Kind::Float || floats.iter().any(|n| t.is_ident(n.as_str()));
+        for (i, t) in code.iter().enumerate() {
+            if (t.is_punct("==") || t.is_punct("!="))
+                && i > 0
+                && i + 1 < code.len()
+                && (is_float(code[i - 1]) || is_float(code[i + 1]))
+            {
+                out.push(Violation {
+                    line: t.line,
+                    rule: "float-key",
+                    msg: "float comparison in fingerprint path; compare `to_bits()` instead"
+                        .to_string(),
+                });
+            }
+            if t.is_ident("as")
+                && i > 0
+                && i + 1 < code.len()
+                && INT_TYPES.contains(&code[i + 1].text.as_str())
+                && is_float(code[i - 1])
+            {
+                out.push(Violation {
+                    line: t.line,
+                    rule: "float-key",
+                    msg: format!(
+                        "float → `{}` cast in fingerprint path; use `to_bits()` for a \
+                         total, lossless key",
+                        code[i + 1].text
+                    ),
+                });
+            }
+        }
+    }
+
+    // ---- R4: ambient entropy (threads, unseeded randomness) --------
+    for (i, t) in code.iter().enumerate() {
+        if !spawn_ok
+            && t.is_ident("thread")
+            && i + 2 < code.len()
+            && code[i + 1].is_punct("::")
+            && code[i + 2].is_ident("spawn")
+        {
+            out.push(Violation {
+                line: t.line,
+                rule: "ambient-entropy",
+                msg: format!(
+                    "`thread::spawn` outside util::threadpool (module `{module}`); \
+                     ad-hoc threads make completion order a scheduling artifact"
+                ),
+            });
+        }
+        if !rng_ok && t.kind == Kind::Ident && ENTROPY_IDENTS.contains(&t.text.as_str()) {
+            out.push(Violation {
+                line: t.line,
+                rule: "ambient-entropy",
+                msg: format!(
+                    "`{}` outside util::rng (module `{module}`); all randomness must \
+                     be seeded",
+                    t.text
+                ),
+            });
+        }
+    }
+
+    // ---- R5: deprecated APIs must not exist or be used -------------
+    for (i, t) in code.iter().enumerate() {
+        if t.is_ident("deprecated") {
+            let suppressed =
+                i >= 2 && code[i - 1].is_punct("(") && code[i - 2].is_ident("allow");
+            out.push(Violation {
+                line: t.line,
+                rule: "deprecated",
+                msg: if suppressed {
+                    "`#[allow(deprecated)]` hides use of a deprecated API".to_string()
+                } else {
+                    "`deprecated` marker: in-crate deprecated APIs must be removed, \
+                     not accumulated"
+                        .to_string()
+                },
+            });
+        }
+    }
+
+    out.sort_by(|a, b| (a.line, a.rule, &a.msg).cmp(&(b.line, b.rule, &b.msg)));
+    out.dedup_by(|a, b| a.line == b.line && a.rule == b.rule && a.msg == b.msg);
+    out
+}
+
+/// Extract waiver annotations from a file's comment tokens.
+pub fn parse_waivers(toks: &[Tok]) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for t in toks {
+        if t.kind != Kind::Comment {
+            continue;
+        }
+        let Some(at) = t.text.find("detlint:") else { continue };
+        let rest = &t.text[at + "detlint:".len()..];
+        let Some(open) = rest.find("allow(") else { continue };
+        let after = &rest[open + "allow(".len()..];
+        let Some(close) = after.find(')') else { continue };
+        let rule = after[..close].trim().to_string();
+        let reason = after[close + 1..]
+            .trim_start_matches([' ', '\t', '—', '–', '-', ':'])
+            .trim_end_matches(['*', '/', ' '])
+            .trim()
+            .to_string();
+        out.push(Waiver { line: t.line, rule, reason });
+    }
+    out
+}
+
+/// Does `w` cover a violation of `rule` at `line`?  A waiver applies
+/// on its own line or up to two lines above (so `#[allow(...)]`
+/// attribute lines can sit between the comment and the code).
+pub fn waiver_covers(w: &Waiver, rule: &str, line: u32) -> bool {
+    w.rule == rule && w.line <= line && line <= w.line + 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn run(module: &str, rel: &str, src: &str) -> Vec<Violation> {
+        analyze(module, rel, &lex(src))
+    }
+
+    #[test]
+    fn seeded_hashmap_iteration_in_cluster_events_is_flagged() {
+        // The acceptance-criteria scenario: a synthetic violation in
+        // cluster/events.rs must produce a file:line diagnostic.
+        let src = "use std::collections::HashMap;\n\
+                   fn f() {\n\
+                   let mut route: HashMap<usize, usize> = HashMap::new();\n\
+                   route.insert(1, 2);\n\
+                   for (k, v) in route.iter() { println!(\"{k}{v}\"); }\n\
+                   }\n";
+        let v = run("cluster::events", "cluster/events.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "unordered-iter");
+        assert_eq!(v[0].line, 5);
+    }
+
+    #[test]
+    fn for_in_ref_over_hashset_is_flagged() {
+        let src = "use std::collections::HashSet;\n\
+                   fn f(placed: &HashSet<usize>) {\n\
+                   for p in placed { let _ = p; }\n\
+                   }\n";
+        let v = run("placement::replan", "placement/replan.rs", src);
+        assert!(v.iter().any(|x| x.rule == "unordered-iter" && x.line == 3), "{v:?}");
+    }
+
+    #[test]
+    fn lookup_only_hashmap_is_clean_and_noncritical_modules_ignored() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<usize, usize>) -> Option<&usize> { m.get(&1) }\n";
+        assert!(run("cluster::events", "cluster/events.rs", src).is_empty());
+        let iterating = "use std::collections::HashMap;\n\
+                         fn f(m: &HashMap<usize, usize>) { for x in m.iter() { let _ = x; } }\n";
+        assert!(run("experiments::fleet", "experiments/fleet.rs", iterating).is_empty());
+    }
+
+    #[test]
+    fn btreemap_iteration_is_clean() {
+        let src = "use std::collections::BTreeMap;\n\
+                   fn f(m: &BTreeMap<usize, usize>) { for x in m.iter() { let _ = x; } }\n";
+        assert!(run("cluster::events", "cluster/events.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_scoping() {
+        let src = "use std::time::Instant;\nfn f() { let _t = Instant::now(); }\n";
+        let v = run("engine::kv", "engine/kv.rs", src);
+        assert!(v.iter().any(|x| x.rule == "wall-clock" && x.line == 2), "{v:?}");
+        assert!(run("util::bench", "util/bench.rs", src).is_empty());
+        assert!(run("experiments::fleet", "experiments/fleet.rs", src).is_empty());
+        assert!(run("engine", "engine/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn float_key_rules_fire_only_in_fingerprint_files() {
+        let src = "fn key(v: f64) -> u64 { if v == 0.0 { 0 } else { v as u64 } }\n";
+        let v = run("placement::estimator", "placement/estimator.rs", src);
+        assert_eq!(v.iter().filter(|x| x.rule == "float-key").count(), 2, "{v:?}");
+        assert!(run("ml::features", "ml/features.rs", src).is_empty());
+    }
+
+    #[test]
+    fn ambient_entropy_and_deprecated() {
+        let spawn = "fn f() { std::thread::spawn(|| {}); }\n";
+        assert!(!run("cluster::mod_", "cluster/x.rs", spawn).is_empty());
+        assert!(run("util::threadpool", "util/threadpool.rs", spawn).is_empty());
+        let dep = "#[deprecated(note = \"gone\")]\nfn old() {}\n";
+        assert!(run("config", "config.rs", dep).iter().any(|x| x.rule == "deprecated"));
+        let sup = "#[allow(deprecated)]\nfn f() {}\n";
+        let v = run("config", "config.rs", sup);
+        assert!(v.iter().any(|x| x.rule == "deprecated" && x.msg.contains("hides")));
+    }
+
+    #[test]
+    fn waivers_parse_and_cover_nearby_lines() {
+        let src = "// detlint: allow(unordered-iter) — snapshot is sorted immediately after\n\
+                   #[allow(clippy::disallowed_types)]\n\
+                   fn f() {}\n";
+        let ws = parse_waivers(&lex(src));
+        assert_eq!(ws.len(), 1);
+        assert_eq!(ws[0].rule, "unordered-iter");
+        assert_eq!(ws[0].reason, "snapshot is sorted immediately after");
+        assert!(waiver_covers(&ws[0], "unordered-iter", 1));
+        assert!(waiver_covers(&ws[0], "unordered-iter", 3));
+        assert!(!waiver_covers(&ws[0], "unordered-iter", 4));
+        assert!(!waiver_covers(&ws[0], "wall-clock", 1));
+    }
+
+    #[test]
+    fn waiver_reason_may_be_empty_for_driver_to_reject() {
+        let ws = parse_waivers(&lex("// detlint: allow(wall-clock)\n"));
+        assert_eq!(ws.len(), 1);
+        assert!(ws[0].reason.is_empty());
+    }
+}
