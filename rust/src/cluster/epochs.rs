@@ -147,11 +147,11 @@ impl EpochRecord {
             self.adapters.to_string(),
             self.gpus_used.to_string(),
             self.migrations.to_string(),
-            format!("{:.3}", self.migration_cost_s * 1e3),
-            format!("{:.3}", self.plan_wall_s * 1e3),
+            format!("{:.3}", ReportSchema::ms_from_s(self.migration_cost_s)),
+            format!("{:.3}", ReportSchema::ms_from_s(self.plan_wall_s)),
             format!("{:.1}", self.throughput_tok_s),
             format!("{:.1}", self.incoming_tok_s),
-            format!("{:.3}", self.itl_mean_s * 1e3),
+            format!("{:.3}", ReportSchema::ms_from_s(self.itl_mean_s)),
             format!("{:.0}", self.backlog_tokens),
             self.groups_reprobed.to_string(),
             self.groups_reused.to_string(),

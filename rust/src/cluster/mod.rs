@@ -190,6 +190,7 @@ fn gpu_config(
 ) -> EngineConfig {
     let s_max = spec.adapters.iter().map(|a| a.rank).max().unwrap_or(8);
     let mut cfg = base.clone();
+    // detlint: allow(panic-path) — `a_max` sized to the fleet/group count at construction; ordinals in range
     cfg.a_max = placement.a_max[g].max(1);
     cfg.s_max_rank = s_max;
     cfg.seed = base.seed ^ (g as u64 + 1);
@@ -328,6 +329,7 @@ pub fn serve_on_twin_fleet(
     let seed_base = opts.seed.unwrap_or(spec.seed);
     let per_gpu: Vec<Option<Report>> = parallel_map(jobs, workers, |(g, ids)| {
         let sub = spec.subset(&ids, seed_base ^ (g as u64) << 8);
+        // detlint: allow(panic-path) — `calibs`/`configs` sized to the fleet/group count at construction; ordinals in range
         let cfg = gpu_config(&configs[g], placement, g, spec);
         crate::dt::run_twin(&cfg, &calibs[g], &sub, variant).report
     });

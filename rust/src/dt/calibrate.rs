@@ -71,6 +71,7 @@ pub fn calibrate(
                 request_id: i,
                 time_s: 0.0,
                 adapter_id: i,
+                // detlint: allow(panic-path) — `input_cycle` is indexed within its own recorded length
                 input_len: input_cycle[i % input_cycle.len()],
                 output_len: out_tokens,
             })
@@ -102,6 +103,7 @@ pub fn calibrate(
     let fixed_b = *decode_buckets
         .iter()
         .find(|&&b| b >= 32)
+        // detlint: allow(panic-path) — `decode_buckets` is indexed within its own recorded length
         .unwrap_or(&decode_buckets[decode_buckets.len() - 1]);
     // Denominator must be the backbone latency at exactly the same batch.
     let backbone_at_b = pts_b
@@ -127,6 +129,7 @@ pub fn calibrate(
                 request_id: i,
                 time_s: 0.0,
                 adapter_id: i % a_b,
+                // detlint: allow(panic-path) — `input_cycle` is indexed within its own recorded length
                 input_len: input_cycle[i % input_cycle.len()],
                 output_len: out_tokens,
             })

@@ -88,6 +88,7 @@ fn interp(pts: &[(f64, f64)], x: f64) -> f64 {
                 }
             }
             // Extrapolate with the final segment's slope.
+            // detlint: allow(panic-path) — `pts` is indexed within its own recorded length
             let (a, b) = (pts[pts.len() - 2], pts[pts.len() - 1]);
             let slope = (b.1 - a.1) / (b.0 - a.0);
             (b.1 + slope * (x - b.0)).max(0.0)
@@ -202,6 +203,7 @@ impl Calibration {
             .windows(2)
             .find(|w| rank as f64 <= w[1].0)
             .map(|w| (w[0], w[1]))
+            // detlint: allow(panic-path) — `pts` is indexed within its own recorded length
             .unwrap_or((pts[pts.len() - 2], pts[pts.len() - 1]));
         let t = (rank as f64 - lo.0) / (hi.0 - lo.0);
         (lo.1 + t * (hi.1 - lo.1)).max(0.0)

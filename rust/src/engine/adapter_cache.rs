@@ -163,19 +163,23 @@ impl PhysBank {
     pub fn acquire(&mut self, adapter: usize, pinned: &dyn Fn(usize) -> bool) -> PhysSlot {
         self.tick += 1;
         if let Some(&slot) = self.map.get(&adapter) {
+            // detlint: allow(panic-path) — `owner` sized to the cache's slot count at construction; slot ids in range
             self.owner[slot] = Some((adapter, self.tick));
             return PhysSlot::Hit(slot);
         }
         // Free slot?
         for slot in 1..self.slots {
+            // detlint: allow(panic-path) — `owner` sized to the cache's slot count at construction; slot ids in range
             if self.owner[slot].is_none() {
                 self.map.insert(adapter, slot);
+                // detlint: allow(panic-path) — `owner` sized to the cache's slot count at construction; slot ids in range
                 self.owner[slot] = Some((adapter, self.tick));
                 return PhysSlot::Miss(slot);
             }
         }
         // LRU-evict an unpinned resident.
         let victim = (1..self.slots)
+            // detlint: allow(panic-path) — `owner` sized to the cache's slot count at construction; slot ids in range
             .filter_map(|s| self.owner[s].map(|(a, t)| (s, a, t)))
             .filter(|&(_, a, _)| !pinned(a))
             .min_by_key(|&(_, _, t)| t);
@@ -183,6 +187,7 @@ impl PhysBank {
             Some((slot, old, _)) => {
                 self.map.remove(&old);
                 self.map.insert(adapter, slot);
+                // detlint: allow(panic-path) — `owner` sized to the cache's slot count at construction; slot ids in range
                 self.owner[slot] = Some((adapter, self.tick));
                 PhysSlot::Miss(slot)
             }

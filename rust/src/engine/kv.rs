@@ -159,6 +159,7 @@ impl RequestKv {
             for l in 0..n_layers {
                 let src = (l * bucket + t) * d;
                 let dst = (t * n_layers + l) * d;
+                // detlint: allow(panic-path) — `k`/`v` rows are allocated to the exact loop bounds indexing them
                 self.k[dst..dst + d].copy_from_slice(&k[src..src + d]);
                 self.v[dst..dst + d].copy_from_slice(&v[src..src + d]);
             }
@@ -189,6 +190,7 @@ impl RequestKv {
         let start = self.tokens - n;
         for (i, t) in (start..self.tokens).enumerate() {
             let src = (t * n_layers + layer) * d;
+            // detlint: allow(panic-path) — `dst_k`/`dst_v`/`k`/`v` rows are allocated to the exact loop bounds indexing them
             dst_k[i * d..(i + 1) * d].copy_from_slice(&self.k[src..src + d]);
             dst_v[i * d..(i + 1) * d].copy_from_slice(&self.v[src..src + d]);
         }

@@ -62,6 +62,7 @@ pub fn scan_admissions(
 
     while let Some(id) = waiting.pop_front() {
         res.scanned += 1;
+        // detlint: allow(panic-path) — `requests` is the request arena; ids are indices it issued itself
         let r = &requests[id];
         debug_assert_eq!(r.state, ReqState::Waiting);
         if active >= limits.max_running
@@ -106,6 +107,7 @@ pub fn scan_admissions(
             continue;
         }
         // Admitted.
+        // detlint: allow(panic-path) — `requests` is the request arena; ids are indices it issued itself
         requests[id].state = ReqState::Prefilling;
         requests[id].context_len = tokens;
         prefill_tokens += tokens;
@@ -132,6 +134,7 @@ pub fn grow_or_preempt(
     let mut preempted = Vec::new();
     let mut i = 0;
     while i < running.len() {
+        // detlint: allow(panic-path) — `requests`/`running` and its index are constructed together; in range by construction
         let id = running[i];
         let need = requests[id].context_len + 1;
         if ledger.grow_to(id, need) {
@@ -140,12 +143,12 @@ pub fn grow_or_preempt(
         }
         // Preempt the most recently admitted *other* request; if this
         // request is the only one left, preempt it instead.
-        let victim_pos = if running.len() > 1 && *running.last().unwrap() != id {
-            running.len() - 1
-        } else {
-            i
+        let victim_pos = match running.last() {
+            Some(&last) if running.len() > 1 && last != id => running.len() - 1,
+            _ => i,
         };
         let victim = running.remove(victim_pos);
+        // detlint: allow(panic-path) — `requests` is the request arena; ids are indices it issued itself
         let v = &mut requests[victim];
         v.state = ReqState::Waiting;
         v.preemptions += 1;

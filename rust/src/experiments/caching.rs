@@ -7,6 +7,7 @@ use crate::cluster;
 use crate::config::EngineConfig;
 use crate::dt::LengthVariant;
 use crate::engine::Engine;
+use crate::engine::metrics::ReportSchema;
 use crate::placement::{baselines, dlora, greedy, latency, PlacementResult};
 use crate::workload::{AdapterSpec, WorkloadSpec};
 use anyhow::Result;
@@ -81,7 +82,7 @@ fn validate(
             Ok((
                 rep.gpus_used.to_string(),
                 format!("{:.1}", rep.total_throughput_tok_s),
-                format!("{:.3}", rep.itl_mean_s * 1e3),
+                format!("{:.3}", ReportSchema::ms_from_s(rep.itl_mean_s)),
                 status.into(),
             ))
         }

@@ -156,9 +156,9 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
                  ({:.1} ms), {} infeasible epochs, {} groups re-probed / {} ledger-reused, \
                  goodput {:.2} req/s at {:.0}% SLO attainment",
                 rep.gpu_epochs,
-                rep.mean_itl_s * 1e3,
+                ReportSchema::ms_from_s(rep.mean_itl_s),
                 rep.total_migrations,
-                rep.total_migration_cost_s * 1e3,
+                ReportSchema::ms_from_s(rep.total_migration_cost_s),
                 rep.infeasible_epochs,
                 rep.total_groups_reprobed,
                 rep.total_groups_reused,
@@ -278,9 +278,9 @@ pub fn drift(ctx: &ExpContext) -> Result<()> {
             "  drift: replan objectives — min_gpus {} GPU-epochs at {:.2} ms mean ITL vs \
              min_latency {} GPU-epochs at {:.2} ms mean ITL",
             rg.gpu_epochs,
-            rg.mean_itl_s * 1e3,
+            ReportSchema::ms_from_s(rg.mean_itl_s),
             rl.gpu_epochs,
-            rl.mean_itl_s * 1e3
+            ReportSchema::ms_from_s(rl.mean_itl_s)
         );
         fields.push((
             "replan_objective_tradeoff",

@@ -98,7 +98,7 @@ pub fn fleet(ctx: &ExpContext) -> Result<()> {
                 mix.join("+"),
                 format!("{:.2}", f.cost_per_hour),
                 format!("{:.1}", rep.total_throughput_tok_s),
-                format!("{:.3}", rep.itl_mean_s * 1e3),
+                format!("{:.3}", ReportSchema::ms_from_s(rep.itl_mean_s)),
             ];
             row.extend(ReportSchema::slo_cells(
                 rep.goodput_req_s,
@@ -114,7 +114,7 @@ pub fn fleet(ctx: &ExpContext) -> Result<()> {
         println!(
             "  fleet {oname}: {gpu_epochs} GPU-epochs at ${mean_cost:.2}/hr mean rental, \
              mean ITL {:.2} ms ({served}/{epochs} epochs feasible)",
-            mean_itl * 1e3
+            ReportSchema::ms_from_s(mean_itl)
         );
         mean_costs.push((oname, mean_cost));
         summaries.push((

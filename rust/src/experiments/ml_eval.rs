@@ -3,6 +3,7 @@
 //! refinement phase: RF → Small Tree → Small Tree**).
 
 use super::common::{print_table, validation_runs, write_csv, ExpContext};
+use crate::engine::metrics::ReportSchema;
 use crate::ml::{
     self, features,
     metrics::macro_f1,
@@ -27,7 +28,7 @@ fn bench_predict(p: &Predictor, xs: &[Vec<f64>], reps: usize) -> f64 {
         }
     }
     std::hint::black_box(sink);
-    t0.elapsed().as_secs_f64() * 1e3 / (reps * xs.len()) as f64
+    ReportSchema::ms_from_s(t0.elapsed().as_secs_f64()) / (reps * xs.len()) as f64
 }
 
 /// Table 3: accuracy and inference time of KNN / RF / SVM on both tasks.

@@ -5,6 +5,7 @@
 use super::common::{write_csv, ExpContext};
 use crate::config::EngineConfig;
 use crate::engine::Engine;
+use crate::engine::metrics::ReportSchema;
 use crate::util::stats;
 use crate::workload::{AdapterSpec, Arrival, WorkloadSpec};
 use anyhow::Result;
@@ -232,14 +233,14 @@ pub fn fig5(ctx: &ExpContext) -> Result<()> {
             let itl = stats::mean(&ts);
             if rank == 0 {
                 baseline_itl = itl;
-                println!("  fig5 backbone-only: itl={:.3}ms", itl * 1e3);
+                println!("  fig5 backbone-only: itl={:.3}ms", ReportSchema::ms_from_s(itl));
                 continue;
             }
             let itl_overhead = itl / baseline_itl.max(1e-12);
             let slowdown = itl_overhead; // tokens/step fixed → slowdown = ITL ratio
             println!(
                 "  fig5 rank={rank} A_B={a_b}: itl={:.3}ms overhead={:.3}x",
-                itl * 1e3,
+                ReportSchema::ms_from_s(itl),
                 itl_overhead
             );
             rows.push(vec![
@@ -281,7 +282,7 @@ pub fn fig6(ctx: &ExpContext) -> Result<()> {
                 println!(
                     "  fig6 rank={rank} len={in_len}/{out_len} {}: load={:.2}ms = {rel:.2}% of request",
                     if disk { "disk" } else { "cpu" },
-                    load * 1e3
+                    ReportSchema::ms_from_s(load)
                 );
                 rows.push(vec![
                     rank.to_string(),

@@ -23,6 +23,7 @@
 use adapter_serving::config::{EngineConfig, FleetSpec};
 use adapter_serving::dt::{self, Calibration};
 use adapter_serving::engine::Engine;
+use adapter_serving::engine::metrics::ReportSchema;
 use adapter_serving::experiments::{self, ExpContext};
 use adapter_serving::ml;
 use adapter_serving::pipeline::{EstimatorChoice, Pipeline, Scale};
@@ -273,7 +274,7 @@ fn pipeline_cmd(args: &Args) -> Result<()> {
                 "validate ({backend}): {:.0} tok/s, itl {:.2} ms, goodput {:.2} req/s \
                  ({:.0}% SLO), feasible={}",
                 validated.report.total_throughput_tok_s,
-                validated.report.itl_mean_s * 1e3,
+                ReportSchema::ms_from_s(validated.report.itl_mean_s),
                 validated.report.goodput_req_s,
                 100.0 * validated.report.slo_attainment,
                 validated.report.feasible()

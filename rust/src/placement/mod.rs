@@ -50,6 +50,11 @@ use std::collections::BTreeMap;
 /// The paper's testing-point array, reused as the `A_max` candidate set.
 pub const TESTING_POINTS: [usize; 11] = [8, 16, 32, 64, 96, 128, 160, 192, 256, 320, 384];
 
+/// The largest testing point — the `A_max` planners saturate at.  A
+/// literal (not `TESTING_POINTS.last().unwrap()`) so planner hot paths
+/// stay panic-free; pinned to the table's last entry by a unit test.
+pub const MAX_TESTING_POINT: usize = 384;
+
 /// A complete placement decision.
 ///
 /// ```
@@ -76,6 +81,7 @@ impl Placement {
     pub fn gpus_used(&self) -> usize {
         let mut used: Vec<bool> = vec![false; self.a_max.len()];
         for &g in self.assignment.values() {
+            // detlint: allow(panic-path) — `used` sized to the fleet/group count at construction; ordinals in range
             used[g] = true;
         }
         used.iter().filter(|&&u| u).count()
@@ -98,6 +104,7 @@ impl Placement {
         let mut out: Vec<Vec<&AdapterSpec>> = vec![Vec::new(); self.a_max.len()];
         for a in adapters {
             if let Some(&g) = self.assignment.get(&a.id) {
+                // detlint: allow(panic-path) — `out` built with one entry per index of this very loop
                 out[g].push(a);
             }
         }
@@ -181,6 +188,11 @@ pub(crate) mod test_models {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn max_testing_point_is_the_tables_last_entry() {
+        assert_eq!(TESTING_POINTS.last(), Some(&MAX_TESTING_POINT));
+    }
 
     #[test]
     fn gpus_used_counts_distinct() {

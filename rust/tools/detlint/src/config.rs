@@ -1,5 +1,5 @@
-//! The determinism ruleset configuration: which modules each rule
-//! applies to, and how module paths are matched.
+//! The ruleset configuration: which modules each rule applies to, how
+//! module paths are matched, and the unit-suffix dimension table.
 //!
 //! Allowlist / scope entries come in two forms:
 //!
@@ -9,11 +9,21 @@
 //!
 //! Module paths are derived from the file path relative to `rust/src`:
 //! `cluster/events.rs → cluster::events`, `cluster/mod.rs → cluster`,
-//! `main.rs → main`, `lib.rs → lib`.
+//! `main.rs → main`, `lib.rs → lib`.  Files under the self-lint roots
+//! get a namespace prefix: `rust/tools/detlint/src/rules.rs →
+//! tools::detlint::rules`, `rust/benches/plan.rs → benches::plan`.
 
-/// All five rule identifiers, in report order.
-pub const RULE_IDS: [&str; 5] =
-    ["unordered-iter", "wall-clock", "float-key", "ambient-entropy", "deprecated"];
+/// All eight rule identifiers, in report order.
+pub const RULE_IDS: [&str; 8] = [
+    "unordered-iter",
+    "wall-clock",
+    "float-key",
+    "ambient-entropy",
+    "deprecated",
+    "unit-mix",
+    "lossy-cast",
+    "panic-path",
+];
 
 /// R1 — modules where unordered `HashMap`/`HashSet` iteration breaks
 /// replay determinism (planner, twin, event core, workload gen, ML).
@@ -22,8 +32,11 @@ pub const CRITICAL_MODULES: [&str; 6] =
 
 /// R2 — modules allowed to read wall clocks. `engine` is exact: the
 /// engine top module's contract *is* measured kernel time, but its
-/// submodules (cache, kv, metrics) are pure bookkeeping.
-pub const WALL_CLOCK_ALLOW: [&str; 4] = ["util::bench", "experiments::*", "main", "engine"];
+/// submodules (cache, kv, metrics) are pure bookkeeping.  The bench
+/// harnesses (self-lint root `rust/benches`) are timing code by
+/// definition.
+pub const WALL_CLOCK_ALLOW: [&str; 5] =
+    ["util::bench", "experiments::*", "main", "engine", "benches::*"];
 
 /// R3 — file suffixes (relative to `rust/src`) that hold memo-key /
 /// fingerprint code, where floats must round-trip via `to_bits()`.
@@ -36,6 +49,58 @@ pub const SPAWN_ALLOW: [&str; 1] = ["util::threadpool"];
 /// R4 — the only module allowed to construct entropy (seed material);
 /// everything else must take a seed.
 pub const RNG_ALLOW: [&str; 1] = ["util::rng"];
+
+/// R7 — accounting / counter modules where a truncating or wrapping
+/// `as` cast silently corrupts the token, byte and latency totals that
+/// the planner optimizes.
+pub const LOSSY_CAST_MODULES: [&str; 5] =
+    ["engine::metrics", "cluster::events", "dt::*", "placement::estimator", "pipeline::store"];
+
+/// R8 — serving hot paths where a panic kills a whole horizon: the
+/// event core, the engine iteration, the twin, and every planner pass.
+pub const PANIC_PATH_MODULES: [&str; 4] = ["cluster::*", "engine::*", "dt::*", "placement::*"];
+
+/// R6 — the unit-suffix table: identifier suffix → dimension.  Checked
+/// in array order, so longer suffixes shadow their tails (`_tok_s`
+/// before `_s`).  The dimension strings are opaque labels; two tracked
+/// operands mix units iff their labels differ.
+pub const UNIT_SUFFIXES: [(&str, &str); 7] = [
+    ("_tok_s", "tok/s"),
+    ("_req_s", "req/s"),
+    ("_usd_hr", "usd/hr"),
+    ("_ms", "ms"),
+    ("_bytes", "bytes"),
+    ("_tokens", "tokens"),
+    ("_s", "s"),
+];
+
+/// Dimension of a unit-suffixed identifier, if any.  The suffix must
+/// be proper (`wall_s` carries one, a bare `s` does not).
+pub fn unit_dim(ident: &str) -> Option<&'static str> {
+    UNIT_SUFFIXES
+        .iter()
+        .find(|(sfx, _)| ident.len() > sfx.len() && ident.ends_with(sfx))
+        .map(|&(_, dim)| dim)
+}
+
+/// The sanctioned conversions of the dimension lattice:
+/// `(from, op, to)` — multiplying or dividing a `from`-dimension
+/// operand by a [`conversion_factor`] literal yields a `to`-dimension
+/// value (`wall_s * 1e3` is milliseconds, `load_ms / 1e3` seconds).
+pub const UNIT_CONVERSIONS: [(&str, char, &str); 2] = [("s", '*', "ms"), ("ms", '/', "s")];
+
+/// Is this float literal one of the sanctioned scale factors (10³ in
+/// any of the spellings the tree uses)?
+pub fn conversion_factor(lit: &str) -> bool {
+    matches!(lit.replace('_', "").as_str(), "1e3" | "1000.0" | "1000.")
+}
+
+/// Apply a sanctioned conversion: dimension of `dim <op> factor`.
+/// `None` means the factor does not convert `dim` — scaling by a
+/// dimensionless constant, which *preserves* the dimension.
+pub fn convert(dim: &str, op: char) -> Option<&'static str> {
+    UNIT_CONVERSIONS.iter().find(|&&(f, o, _)| f == dim && o == op).map(|&(_, _, t)| t)
+}
 
 /// Does `entry` (exact or `::*` subtree pattern) match `module`?
 pub fn entry_matches(entry: &str, module: &str) -> bool {
@@ -55,11 +120,26 @@ pub fn module_in(list: &[&str], module: &str) -> bool {
 /// the scanned source root (forward slashes).
 pub fn module_path(rel: &str) -> String {
     let no_ext = rel.strip_suffix(".rs").unwrap_or(rel);
-    let parts: Vec<&str> = no_ext.split('/').filter(|s| !s.is_empty()).collect();
+    let parts: Vec<&str> = no_ext.split('/').filter(|s| !s.is_empty() && *s != "src").collect();
     match parts.as_slice() {
         [] => String::new(),
         [.., "mod"] => parts[..parts.len() - 1].join("::"),
         _ => parts.join("::"),
+    }
+}
+
+/// Module path for a file under a prefixed self-lint root
+/// (`tools` / `benches`): `detlint/src/rules.rs` under `tools` →
+/// `tools::detlint::rules` (the crate-layout `src` segment is
+/// transparent, handled by [`module_path`]).
+pub fn module_path_prefixed(prefix: &str, rel: &str) -> String {
+    let inner = module_path(rel);
+    if prefix.is_empty() {
+        inner
+    } else if inner.is_empty() {
+        prefix.to_string()
+    } else {
+        format!("{prefix}::{inner}")
     }
 }
 
@@ -85,6 +165,41 @@ mod tests {
         assert!(entry_matches("experiments::*", "experiments"));
         assert!(entry_matches("experiments::*", "experiments::fleet"));
         assert!(!entry_matches("experiments::*", "experiments_extra"));
+    }
+
+    #[test]
+    fn prefixed_module_paths_for_self_lint_roots() {
+        assert_eq!(module_path_prefixed("tools", "detlint/src/rules.rs"), "tools::detlint::rules");
+        assert_eq!(module_path_prefixed("tools", "detlint/src/main.rs"), "tools::detlint::main");
+        assert_eq!(module_path_prefixed("benches", "plan.rs"), "benches::plan");
+        assert_eq!(module_path_prefixed("", "cluster/events.rs"), "cluster::events");
+    }
+
+    #[test]
+    fn unit_dimension_table() {
+        assert_eq!(unit_dim("wall_s"), Some("s"));
+        assert_eq!(unit_dim("throughput_tok_s"), Some("tok/s"));
+        assert_eq!(unit_dim("goodput_req_s"), Some("req/s"));
+        assert_eq!(unit_dim("migration_cost_ms"), Some("ms"));
+        assert_eq!(unit_dim("kv_handoff_bytes"), Some("bytes"));
+        assert_eq!(unit_dim("backlog_tokens"), Some("tokens"));
+        assert_eq!(unit_dim("cost_usd_hr"), Some("usd/hr"));
+        // Proper suffix only, and no suffix means no dimension.
+        assert_eq!(unit_dim("_s"), None);
+        assert_eq!(unit_dim("stats"), None);
+        assert_eq!(unit_dim("completed"), None);
+    }
+
+    #[test]
+    fn sanctioned_conversions() {
+        assert!(conversion_factor("1e3"));
+        assert!(conversion_factor("1000.0"));
+        assert!(conversion_factor("1_000.0"));
+        assert!(!conversion_factor("0.9"));
+        assert_eq!(convert("s", '*'), Some("ms"));
+        assert_eq!(convert("ms", '/'), Some("s"));
+        assert_eq!(convert("ms", '*'), None, "ms * 1e3 converts to nothing in the lattice");
+        assert_eq!(convert("tokens", '*'), None);
     }
 
     #[test]

@@ -1,8 +1,8 @@
-//! `detlint` — determinism & invariant static analysis for the
+//! `detlint` — determinism & correctness static analysis for the
 //! `adapter_serving` crate (DESIGN.md §13).
 //!
-//! Scans `rust/src/**/*.rs` with a hand-rolled token-level pass and
-//! enforces five rules:
+//! Scans `rust/src/**`, `rust/tools/**` and `rust/benches/**` with a
+//! hand-rolled token-level pass and enforces eight rules:
 //!
 //! * `unordered-iter` — no `HashMap`/`HashSet` iteration in
 //!   determinism-critical modules;
@@ -12,12 +12,21 @@
 //!   through `to_bits()`;
 //! * `ambient-entropy` — no `thread::spawn` outside
 //!   `util::threadpool`, no unseeded randomness outside `util::rng`;
-//! * `deprecated` — no in-crate `#[deprecated]` APIs.
+//! * `deprecated` — no in-crate `#[deprecated]` APIs;
+//! * `unit-mix` — no arithmetic/comparison/assignment across
+//!   disagreeing unit suffixes (`_s`, `_ms`, `_tok_s`, `_req_s`,
+//!   `_bytes`, `_usd_hr`, `_tokens`) outside the sanctioned
+//!   conversion lattice;
+//! * `lossy-cast` — no truncating/wrapping `as` casts in the
+//!   accounting modules;
+//! * `panic-path` — no `.unwrap()`/`.expect(…)`/`panic!`/
+//!   `unreachable!`/non-literal indexing in the serving hot paths.
 //!
-//! Violations are silenced only by an inline
-//! `// detlint: allow(<rule>) — <reason>` waiver on the offending
-//! line or up to two lines above; every waiver must carry a reason
-//! and the per-rule waiver count is capped by `waiver-budget.txt`.
+//! Violations are silenced only by an inline `detlint` waiver comment
+//! (the rule id in an `allow` clause, then a dash and a mandatory
+//! reason) on the offending line or up to two lines above;
+//! the per-rule waiver count is capped by `waiver-budget.txt`, and a
+//! stale waiver (covering nothing) fails `--check` outright.
 //!
 //! ```text
 //! cargo run -p detlint -- --check            # CI gate: non-zero exit on any finding
@@ -50,22 +59,31 @@ struct Report {
     files: usize,
 }
 
-fn scan_tree(src_root: &Path) -> Result<Report, String> {
+/// Scan one root.  `display` prefixes every reported path
+/// (`rust/src/`), `module_prefix` namespaces the derived module paths
+/// (`""` for the main crate, `"tools"` / `"benches"` for the self-lint
+/// roots).  Findings and waivers accumulate into `report`.
+fn scan_tree(
+    src_root: &Path,
+    display: &str,
+    module_prefix: &str,
+    report: &mut Report,
+) -> Result<(), String> {
     let mut files: Vec<PathBuf> = Vec::new();
     collect_rs(src_root, &mut files)?;
     files.sort();
 
-    let mut report = Report::default();
     for path in &files {
         let rel = path
             .strip_prefix(src_root)
             .map_err(|e| e.to_string())?
             .to_string_lossy()
             .replace('\\', "/");
+        let shown = format!("{display}{rel}");
         let src = std::fs::read_to_string(path)
             .map_err(|e| format!("read {}: {e}", path.display()))?;
         let toks = lexer::lex(&src);
-        let module = config::module_path(&rel);
+        let module = config::module_path_prefixed(module_prefix, &rel);
         let violations = rules::analyze(&module, &rel, &toks);
         let waivers = rules::parse_waivers(&toks);
         let mut used = vec![false; waivers.len()];
@@ -78,12 +96,32 @@ fn scan_tree(src_root: &Path) -> Result<Report, String> {
                 used[i] = true;
                 w.clone()
             });
-            report.findings.push(Finding { rel: rel.clone(), violation: v, waived_by });
+            report.findings.push(Finding { rel: shown.clone(), violation: v, waived_by });
         }
         for (w, u) in waivers.into_iter().zip(used) {
-            report.waivers.push((rel.clone(), w, u));
+            report.waivers.push((shown.clone(), w, u));
         }
         report.files += 1;
+    }
+    Ok(())
+}
+
+/// The three scan roots under the repository root: the crate sources
+/// plus the self-lint roots (the lint tool itself and the bench
+/// harnesses obey the same contract).
+const SCAN_ROOTS: [(&str, &str, &str); 3] = [
+    ("rust/src", "rust/src/", ""),
+    ("rust/tools", "rust/tools/", "tools"),
+    ("rust/benches", "rust/benches/", "benches"),
+];
+
+fn scan_repo(root: &Path) -> Result<Report, String> {
+    let mut report = Report::default();
+    for (sub, display, module_prefix) in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            scan_tree(&dir, display, module_prefix, &mut report)?;
+        }
     }
     Ok(report)
 }
@@ -95,6 +133,10 @@ fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
         let entry = entry.map_err(|e| e.to_string())?;
         let path = entry.path();
         if path.is_dir() {
+            // Build artifacts under a nested `target/` are not source.
+            if path.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
             collect_rs(&path, out)?;
         } else if path.extension().is_some_and(|e| e == "rs") {
             out.push(path);
@@ -143,20 +185,23 @@ fn check(report: &Report, budget: &BTreeMap<String, usize>) -> (bool, String) {
         out.push_str(&format!("detlint: {} violation(s):\n", active.len()));
         for f in &active {
             out.push_str(&format!(
-                "  rust/src/{}:{} [{}] {}\n",
+                "  {}:{} [{}] {}\n",
                 f.rel, f.violation.line, f.violation.rule, f.violation.msg
             ));
         }
     }
 
-    // Waiver inventory, with reasons — the audited budget.
+    // Waiver inventory, with reasons — the audited budget.  A stale
+    // waiver is an error, not a warning: it silently re-opens budget
+    // headroom for a future violation nobody reviewed.
     let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
     let mut no_reason = 0usize;
     out.push_str("waiver inventory:\n");
     for (rel, w, used) in &report.waivers {
         if !used {
+            ok = false;
             out.push_str(&format!(
-                "  warning: stale waiver rust/src/{rel}:{} [{}] covers nothing\n",
+                "  ERROR: stale waiver {rel}:{} [{}] covers nothing — delete it\n",
                 w.line, w.rule
             ));
             continue;
@@ -165,13 +210,13 @@ fn check(report: &Report, budget: &BTreeMap<String, usize>) -> (bool, String) {
             ok = false;
             no_reason += 1;
             out.push_str(&format!(
-                "  ERROR: waiver without reason at rust/src/{rel}:{} [{}]\n",
+                "  ERROR: waiver without reason at {rel}:{} [{}]\n",
                 w.line, w.rule
             ));
             continue;
         }
         *counts.entry(w.rule.as_str()).or_default() += 1;
-        out.push_str(&format!("  rust/src/{rel}:{} [{}] — {}\n", w.line, w.rule, w.reason));
+        out.push_str(&format!("  {rel}:{} [{}] — {}\n", w.line, w.rule, w.reason));
     }
     if report.waivers.iter().all(|(_, _, used)| !used) {
         out.push_str("  (none)\n");
@@ -180,12 +225,31 @@ fn check(report: &Report, budget: &BTreeMap<String, usize>) -> (bool, String) {
         out.push_str(&format!("{no_reason} waiver(s) missing a reason\n"));
     }
 
-    out.push_str("waiver budget:\n");
+    // Per-rule inventory: how many findings each rule produced, split
+    // into waived vs active, against the checked-in budget — the one
+    // block a CI log reader needs to audit budget drift.
+    let mut waived_by_rule: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut active_by_rule: BTreeMap<&str, usize> = BTreeMap::new();
+    for f in &report.findings {
+        let m = if f.waived_by.is_some() { &mut waived_by_rule } else { &mut active_by_rule };
+        *m.entry(f.violation.rule).or_default() += 1;
+    }
+    out.push_str("per-rule inventory (active / waived findings; waivers vs budget):\n");
     for rule in config::RULE_IDS {
+        let act = active_by_rule.get(rule).copied().unwrap_or(0);
+        let wvd = waived_by_rule.get(rule).copied().unwrap_or(0);
         let have = counts.get(rule).copied().unwrap_or(0);
         let max = budget.get(rule).copied().unwrap_or(0);
-        let status = if have > max { "EXCEEDED" } else { "ok" };
-        out.push_str(&format!("  {rule}: {have}/{max} {status}\n"));
+        let status = if have > max {
+            "EXCEEDED"
+        } else if act > 0 {
+            "FAILING"
+        } else {
+            "ok"
+        };
+        out.push_str(&format!(
+            "  {rule}: {act} active, {wvd} waived; waivers {have}/{max} {status}\n"
+        ));
         if have > max {
             ok = false;
         }
@@ -222,7 +286,8 @@ fn main() -> ExitCode {
             "--help" | "-h" => {
                 println!(
                     "detlint [--check] [--waivers] [--root DIR] [--budget FILE]\n\
-                     determinism lint over rust/src — see DESIGN.md §13"
+                     determinism & correctness lint over rust/src, rust/tools and \
+                     rust/benches — see DESIGN.md §13"
                 );
                 return ExitCode::SUCCESS;
             }
@@ -230,12 +295,11 @@ fn main() -> ExitCode {
         }
     }
 
-    let src_root = root.join("rust/src");
-    if !src_root.is_dir() {
-        eprintln!("detlint: source root {} not found", src_root.display());
+    if !root.join("rust/src").is_dir() {
+        eprintln!("detlint: source root {} not found", root.join("rust/src").display());
         return ExitCode::from(2);
     }
-    let report = match scan_tree(&src_root) {
+    let report = match scan_repo(&root) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("detlint: {e}");
@@ -246,7 +310,7 @@ fn main() -> ExitCode {
     if waivers_only {
         for (rel, w, used) in &report.waivers {
             let mark = if *used { "" } else { " (stale)" };
-            println!("rust/src/{rel}:{} [{}]{} — {}", w.line, w.rule, mark, w.reason);
+            println!("{rel}:{} [{}]{} — {}", w.line, w.rule, mark, w.reason);
         }
         return ExitCode::SUCCESS;
     }
@@ -294,16 +358,18 @@ mod tests {
         assert!(parse_budget("wall-clock\n").is_err());
     }
 
-    /// The CI gate as a tier-1 test: the real tree must scan clean —
-    /// zero unwaivered violations, every waiver reasoned and within
-    /// the checked-in budget.
+    /// The CI gate as a tier-1 test: the real tree (all three scan
+    /// roots) must scan clean — zero unwaivered violations, every
+    /// waiver reasoned, no stale waivers, all within the checked-in
+    /// budget.
     #[test]
     fn repo_tree_is_clean_under_budget() {
         let root = default_root();
-        let src_root = root.join("rust/src");
-        assert!(src_root.is_dir(), "source root missing: {}", src_root.display());
-        let report = scan_tree(&src_root).expect("scan");
-        assert!(report.files > 20, "suspiciously few files scanned: {}", report.files);
+        assert!(root.join("rust/src").is_dir(), "source root missing under {}", root.display());
+        let report = scan_repo(&root).expect("scan");
+        // ~60 crate files plus the self-lint roots (detlint itself and
+        // the three bench harnesses).
+        assert!(report.files > 50, "suspiciously few files scanned: {}", report.files);
         let budget_text = std::fs::read_to_string(root.join("rust/tools/detlint/waiver-budget.txt"))
             .expect("waiver-budget.txt");
         let budget = parse_budget(&budget_text).expect("budget parses");
@@ -311,31 +377,140 @@ mod tests {
         assert!(ok, "detlint check failed:\n{rendered}");
     }
 
+    /// Scan a synthetic tree laid out as `<dir>/<rel>` = file body.
+    fn scan_seeded(files: &[(&str, &str)]) -> (bool, String) {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "detlint-seed-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        for (rel, body) in files {
+            let path = dir.join(rel);
+            std::fs::create_dir_all(path.parent().expect("parent")).expect("mkdir");
+            std::fs::write(&path, body).expect("write seed file");
+        }
+        let mut report = Report::default();
+        let res = scan_tree(&dir, "", "", &mut report);
+        std::fs::remove_dir_all(&dir).ok();
+        res.expect("scan");
+        check(&report, &BTreeMap::new())
+    }
+
     /// Acceptance criterion: seeding a synthetic `HashMap` iteration
     /// into a scanned tree produces a failing check with a file:line
     /// diagnostic.
     #[test]
     fn seeded_violation_fails_with_file_line_diagnostic() {
-        let dir = std::env::temp_dir().join(format!("detlint-seed-{}", std::process::id()));
-        let cluster = dir.join("cluster");
-        std::fs::create_dir_all(&cluster).expect("mkdir");
-        std::fs::write(
-            cluster.join("events.rs"),
+        let (ok, rendered) = scan_seeded(&[(
+            "cluster/events.rs",
             "use std::collections::HashMap;\n\
              pub fn drain_routes(route: &mut HashMap<usize, usize>) -> usize {\n\
              let mut n = 0;\n\
              for (_, v) in route.iter() { n += v; }\n\
              n\n\
              }\n",
-        )
-        .expect("write seed file");
-        let report = scan_tree(&dir).expect("scan");
-        let (ok, rendered) = check(&report, &BTreeMap::new());
-        std::fs::remove_dir_all(&dir).ok();
+        )]);
         assert!(!ok, "seeded violation must fail the check");
         assert!(
             rendered.contains("cluster/events.rs:4 [unordered-iter]"),
             "diagnostic must carry file:line, got:\n{rendered}"
+        );
+    }
+
+    /// Acceptance criterion (unit-mix): a `ttft_ms`-vs-seconds mixup
+    /// in a scanned tree fails with a file:line diagnostic.
+    #[test]
+    fn seeded_unit_mix_fails_with_file_line_diagnostic() {
+        let (ok, rendered) = scan_seeded(&[(
+            "engine/metrics.rs",
+            "pub fn report(ttft_s: f64, itl_ms: f64) -> f64 {\n\
+             ttft_s + itl_ms\n\
+             }\n",
+        )]);
+        assert!(!ok, "seeded unit mix must fail the check");
+        assert!(
+            rendered.contains("engine/metrics.rs:2 [unit-mix]"),
+            "diagnostic must carry file:line, got:\n{rendered}"
+        );
+    }
+
+    /// Acceptance criterion (lossy-cast): a truncating `u64 as u32` in
+    /// an accounting module fails with a file:line diagnostic.
+    #[test]
+    fn seeded_lossy_cast_fails_with_file_line_diagnostic() {
+        let (ok, rendered) = scan_seeded(&[(
+            "cluster/events.rs",
+            "pub fn shipped(kv_bytes: u64) -> u32 {\n\
+             kv_bytes as u32\n\
+             }\n",
+        )]);
+        assert!(!ok, "seeded lossy cast must fail the check");
+        assert!(
+            rendered.contains("cluster/events.rs:2 [lossy-cast]"),
+            "diagnostic must carry file:line, got:\n{rendered}"
+        );
+    }
+
+    /// Acceptance criterion (panic-path): an `.unwrap()` in a serving
+    /// hot path fails with a file:line diagnostic.
+    #[test]
+    fn seeded_panic_path_fails_with_file_line_diagnostic() {
+        let (ok, rendered) = scan_seeded(&[(
+            "placement/greedy.rs",
+            "pub fn best(xs: &[f64]) -> f64 {\n\
+             let i = xs.iter().position(|x| *x > 0.0).unwrap();\n\
+             xs[i]\n\
+             }\n",
+        )]);
+        assert!(!ok, "seeded panic path must fail the check");
+        assert!(
+            rendered.contains("placement/greedy.rs:2 [panic-path]"),
+            "unwrap diagnostic must carry file:line, got:\n{rendered}"
+        );
+        assert!(
+            rendered.contains("placement/greedy.rs:3 [panic-path]"),
+            "non-literal index diagnostic must carry file:line, got:\n{rendered}"
+        );
+    }
+
+    /// Satellite regression: a stale waiver (annotation with no
+    /// matching violation) fails `--check`, it no longer just warns.
+    #[test]
+    fn stale_waiver_fails_check() {
+        let (ok, rendered) = scan_seeded(&[(
+            "workload/gen.rs",
+            "// detlint: allow(wall-clock) — covers nothing at all\n\
+             pub fn f() -> usize { 1 }\n",
+        )]);
+        assert!(!ok, "stale waiver must fail the check");
+        assert!(
+            rendered.contains("ERROR: stale waiver workload/gen.rs:1 [wall-clock]"),
+            "stale waiver must be reported as an error, got:\n{rendered}"
+        );
+    }
+
+    /// The per-rule inventory block CI audits is present and counts
+    /// active vs waived findings per rule.
+    #[test]
+    fn per_rule_inventory_summarizes_counts() {
+        let (ok, rendered) = scan_seeded(&[(
+            "cluster/events.rs",
+            "// detlint: allow(panic-path) — seeded: index proven in bounds by test\n\
+             pub fn pick(xs: &[f64], i: usize) -> f64 { xs[i] }\n\
+             \n\
+             \n\
+             pub fn pick2(xs: &[f64], i: usize) -> f64 { xs[i] }\n",
+        )]);
+        assert!(!ok, "one unwaived finding remains");
+        assert!(
+            rendered.contains("per-rule inventory"),
+            "inventory header missing:\n{rendered}"
+        );
+        assert!(
+            rendered.contains("panic-path: 1 active, 1 waived; waivers 1/0 EXCEEDED"),
+            "per-rule counts wrong:\n{rendered}"
         );
     }
 }

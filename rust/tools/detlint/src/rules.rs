@@ -25,7 +25,8 @@ pub struct Violation {
     pub msg: String,
 }
 
-/// One parsed `// detlint: allow(<rule>) — <reason>` annotation.
+/// One parsed waiver annotation: a `detlint` comment whose `allow`
+/// clause names the waived rule, followed by a dash and a reason.
 #[derive(Debug, Clone)]
 pub struct Waiver {
     /// 1-based line of the comment.
@@ -54,6 +55,95 @@ const INT_TYPES: [&str; 12] =
     ["u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize"];
 
 const ENTROPY_IDENTS: [&str; 4] = ["RandomState", "thread_rng", "from_entropy", "OsRng"];
+
+/// Numeric types the lossy-cast pass reasons about.
+const FLOAT_TYPES: [&str; 2] = ["f64", "f32"];
+
+/// Identifiers that may legitimately precede an index bracket without
+/// the bracket being an index expression (`&mut [T]`, `for x in [..]`,
+/// `x as [..]` never exists, slice patterns, …).
+const NON_INDEX_PREV: [&str; 14] = [
+    "mut", "in", "return", "dyn", "else", "match", "if", "while", "loop", "break", "continue",
+    "move", "static", "const",
+];
+
+/// Inclusive line ranges covered by `#[cfg(test)]`-gated items.  The
+/// correctness rules (`unit-mix`, `lossy-cast`, `panic-path`) target
+/// production hot paths only — tests unwrap and index freely by
+/// design.  The determinism rules still apply inside tests (a
+/// hash-order iteration in a test flakes the suite the same way).
+pub fn test_line_ranges(code: &[&Tok]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let n = code.len();
+    let mut i = 0usize;
+    while i + 6 < n {
+        let is_cfg_test = code[i].is_punct("#")
+            && code[i + 1].is_punct("[")
+            && code[i + 2].is_ident("cfg")
+            && code[i + 3].is_punct("(")
+            && code[i + 4].is_ident("test")
+            && code[i + 5].is_punct(")")
+            && code[i + 6].is_punct("]");
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        let start = code[i].line;
+        let mut j = i + 7;
+        // Skip any further attributes between the cfg and the item.
+        while j + 1 < n && code[j].is_punct("#") && code[j + 1].is_punct("[") {
+            let mut depth = 0usize;
+            j += 1;
+            while j < n {
+                if code[j].is_punct("[") {
+                    depth += 1;
+                } else if code[j].is_punct("]") {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        // The gated item ends at the first `;` (use/const) or at the
+        // matching brace of its first `{` (mod/fn/impl).
+        let mut end = start;
+        while j < n {
+            if code[j].is_punct(";") {
+                end = code[j].line;
+                j += 1;
+                break;
+            }
+            if code[j].is_punct("{") {
+                let mut depth = 0usize;
+                while j < n {
+                    if code[j].is_punct("{") {
+                        depth += 1;
+                    } else if code[j].is_punct("}") {
+                        depth -= 1;
+                        if depth == 0 {
+                            end = code[j].line;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                j += 1;
+                break;
+            }
+            j += 1;
+        }
+        out.push((start, end.max(start)));
+        i = j.max(i + 1);
+    }
+    out
+}
+
+fn in_ranges(ranges: &[(u32, u32)], line: u32) -> bool {
+    ranges.iter().any(|&(a, b)| a <= line && line <= b)
+}
 
 /// Tokens transparently skipped when walking back from a type name to
 /// the binding it annotates (`resident: Mutex<HashMap<…>>`).
@@ -124,7 +214,159 @@ fn tracked_bindings(code: &[&Tok], type_names: &[&str]) -> Vec<String> {
     names
 }
 
-/// Run all five rules over one file.
+/// Per-file `name → numeric type` approximation for the lossy-cast
+/// pass, built by the same back-walk as [`tracked_bindings`].  A name
+/// bound to two different numeric types in one file is ambiguous and
+/// dropped (the lint stays quiet rather than guessing).
+fn typed_bindings(code: &[&Tok]) -> Vec<(String, &'static str)> {
+    let mut pairs: Vec<(String, &'static str)> = Vec::new();
+    for ty in INT_TYPES.iter().chain(FLOAT_TYPES.iter()) {
+        for name in tracked_bindings(code, &[ty]) {
+            pairs.push((name, ty));
+        }
+    }
+    pairs.sort();
+    pairs.dedup();
+    let mut out: Vec<(String, &'static str)> = Vec::new();
+    for (name, ty) in pairs {
+        match out.last_mut() {
+            // Same name under two types: ambiguous, poison the entry.
+            Some((last, lt)) if *last == name => *lt = "?",
+            _ => out.push((name, ty)),
+        }
+    }
+    out.retain(|(_, ty)| *ty != "?");
+    out
+}
+
+/// Bit width of an integer type name (usize/isize treated as 64-bit
+/// with the platform caveat handled by the caller).
+fn int_bits(ty: &str) -> u32 {
+    match ty {
+        "u8" | "i8" => 8,
+        "u16" | "i16" => 16,
+        "u32" | "i32" => 32,
+        "u64" | "i64" | "usize" | "isize" => 64,
+        _ => 128,
+    }
+}
+
+/// Why `src as dst` can lose information, or `None` when the cast is
+/// value-preserving.  `src == "float-lit"` marks a float literal
+/// source.  Int → `f64` is deliberately not flagged: every counter in
+/// the tree stays far below 2⁵³ and the accounting CSVs are
+/// f64-formatted by contract.
+fn cast_loss(src: &str, dst: &str) -> Option<String> {
+    let fsrc = src == "float-lit" || FLOAT_TYPES.contains(&src);
+    let fdst = FLOAT_TYPES.contains(&dst);
+    if fsrc && !fdst {
+        return Some(format!("float → `{dst}` truncates toward zero and saturates"));
+    }
+    if fsrc && fdst {
+        return (src == "f64" && dst == "f32")
+            .then(|| "`f64` → `f32` silently rounds to 24-bit precision".to_string());
+    }
+    if !fsrc && fdst {
+        return (dst == "f32").then(|| {
+            format!("`{src}` → `f32` loses integer precision above 2^24")
+        });
+    }
+    // int → int.
+    let (sb, db) = (int_bits(src), int_bits(dst));
+    let (su, du) = (src.starts_with('u'), dst.starts_with('u'));
+    let lossy = if su == du {
+        db < sb || (src == "u64" && dst == "usize") || (src == "i64" && dst == "isize")
+    } else if su {
+        db <= sb // unsigned → signed needs strictly more bits
+    } else {
+        true // signed → unsigned wraps negatives
+    };
+    lossy.then(|| format!("`{src}` → `{dst}` can wrap or truncate"))
+}
+
+/// Dimension of the operand *ending* at code index `i`: the final
+/// segment of a field path, unless it is a call (whose unit the name
+/// suffix cannot vouch for).
+fn operand_dim_at(code: &[&Tok], i: usize) -> Option<&'static str> {
+    if code[i].kind != Kind::Ident {
+        return None;
+    }
+    if i + 1 < code.len() && (code[i + 1].is_punct("(") || code[i + 1].is_punct("!")) {
+        return None;
+    }
+    config::unit_dim(&code[i].text)
+}
+
+/// Effective dimension of the expression immediately left of the
+/// operator at `i`, recognizing a trailing sanctioned conversion
+/// (`wall_s * 1e3` is milliseconds; any other constant factor
+/// preserves the dimension).
+fn left_dim(code: &[&Tok], i: usize) -> Option<&'static str> {
+    if i == 0 {
+        return None;
+    }
+    let p = i - 1;
+    if code[p].kind == Kind::Float && p >= 2 {
+        let op = code[p - 1].text.as_str();
+        if (op == "*" || op == "/") && code[p - 2].kind == Kind::Ident {
+            let d = operand_dim_at(code, p - 2)?;
+            return if config::conversion_factor(&code[p].text) {
+                config::convert(d, op.chars().next().unwrap_or('*')).or(Some(d))
+            } else {
+                Some(d)
+            };
+        }
+        return None;
+    }
+    // `n_tokens / epoch_s > …`: a product/quotient of tracked operands
+    // (or a deref) is a composite whose dimension one suffix cannot
+    // vouch for — rate definitions are legitimate cross-dimension math.
+    if code[p].kind == Kind::Ident
+        && p >= 1
+        && (code[p - 1].is_punct("*") || code[p - 1].is_punct("/"))
+    {
+        return None;
+    }
+    operand_dim_at(code, p)
+}
+
+/// Effective dimension of the expression starting right of the
+/// operator at `i`: walk a `recv.field.leaf` path to its final
+/// segment, then apply a trailing sanctioned conversion if present.
+fn right_dim(code: &[&Tok], i: usize) -> Option<&'static str> {
+    let n = code.len();
+    let mut j = i + 1;
+    while j < n && (code[j].is_punct("&") || code[j].is_punct("*")) {
+        j += 1;
+    }
+    if j >= n || code[j].kind != Kind::Ident {
+        return None;
+    }
+    while j + 2 < n && code[j + 1].is_punct(".") && code[j + 2].kind == Kind::Ident {
+        j += 2;
+    }
+    let d = operand_dim_at(code, j)?;
+    // An `as` cast keeps the operand's dimension (`tokens as f64`).
+    if j + 2 < n && code[j + 1].is_ident("as") && code[j + 2].kind == Kind::Ident {
+        j += 2;
+    }
+    if j + 2 < n && (code[j + 1].is_punct("*") || code[j + 1].is_punct("/")) {
+        let op = if code[j + 1].is_punct("*") { '*' } else { '/' };
+        if code[j + 2].kind == Kind::Float {
+            return if config::conversion_factor(&code[j + 2].text) {
+                config::convert(d, op).or(Some(d))
+            } else {
+                Some(d) // dimensionless constant scale preserves `d`
+            };
+        }
+        // `n_tokens / epoch_s`: a composite of tracked operands has no
+        // single suffix dimension — rate definitions are legitimate.
+        return None;
+    }
+    Some(d)
+}
+
+/// Run all eight rules over one file.
 ///
 /// * `module` — module path (`cluster::events`), see [`config::module_path`];
 /// * `rel` — path relative to the source root, forward slashes
@@ -139,6 +381,9 @@ pub fn analyze(module: &str, rel: &str, toks: &[Tok]) -> Vec<Violation> {
     let spawn_ok = config::module_in(&config::SPAWN_ALLOW, module);
     let rng_ok = config::module_in(&config::RNG_ALLOW, module);
     let fingerprint_file = config::FLOAT_KEY_FILES.iter().any(|f| rel.ends_with(f));
+    let cast_scoped = config::module_in(&config::LOSSY_CAST_MODULES, module);
+    let panic_scoped = config::module_in(&config::PANIC_PATH_MODULES, module);
+    let test_ranges = test_line_ranges(&code);
 
     // ---- R1: unordered iteration over hash collections -------------
     if critical {
@@ -296,6 +541,185 @@ pub fn analyze(module: &str, rel: &str, toks: &[Tok]) -> Vec<Violation> {
         }
     }
 
+    // ---- R6: mixed unit suffixes in arithmetic / assignment --------
+    // Applies everywhere (the suffix convention is tree-wide), outside
+    // test code.  The canonical finding class is the report-boundary
+    // seam: seconds-typed internals leaking raw into `*_ms` columns —
+    // fixed once via `engine::metrics::ReportSchema::ms_from_s` (§13).
+    for (i, t) in code.iter().enumerate() {
+        if in_ranges(&test_ranges, t.line) {
+            continue;
+        }
+        // Binary arithmetic / comparison between differently-dimensioned
+        // operands.
+        if t.kind == Kind::Punct
+            && matches!(t.text.as_str(), "+" | "-" | "<" | ">" | "<=" | ">=" | "==" | "!=")
+        {
+            if let (Some(l), Some(r)) = (left_dim(&code, i), right_dim(&code, i)) {
+                if l != r {
+                    out.push(Violation {
+                        line: t.line,
+                        rule: "unit-mix",
+                        msg: format!(
+                            "`{}` mixes units: left operand is {l}, right operand is {r}; \
+                             convert through the sanctioned lattice first",
+                            t.text
+                        ),
+                    });
+                }
+            }
+        }
+        // Assignment / struct-literal field: suffixed sink fed by a
+        // differently-dimensioned suffixed source.
+        if let Some(ldim) = operand_dim_at(&code, i) {
+            let assigns = i + 1 < code.len()
+                && (code[i + 1].is_punct("=")
+                    || code[i + 1].is_punct(":")
+                    || code[i + 1].is_punct("+=")
+                    || code[i + 1].is_punct("-="));
+            if assigns {
+                if let Some(rdim) = right_dim(&code, i + 1) {
+                    if rdim != ldim {
+                        out.push(Violation {
+                            line: t.line,
+                            rule: "unit-mix",
+                            msg: format!(
+                                "`{}` ({ldim}) is assigned a {rdim}-dimensioned value; \
+                                 convert at the seam (ReportSchema::ms_from_s style), \
+                                 don't re-label",
+                                t.text
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- R7: lossy `as` casts in accounting modules ----------------
+    if cast_scoped {
+        let typed = typed_bindings(&code);
+        let type_of = |t: &Tok| {
+            typed.iter().find(|(n, _)| t.is_ident(n)).map(|(_, ty)| *ty)
+        };
+        for (i, t) in code.iter().enumerate() {
+            if !t.is_ident("as") || i == 0 || i + 1 >= code.len() {
+                continue;
+            }
+            if in_ranges(&test_ranges, t.line) {
+                continue;
+            }
+            let dst = code[i + 1].text.as_str();
+            if !INT_TYPES.contains(&dst) && !FLOAT_TYPES.contains(&dst) {
+                continue;
+            }
+            let prev = code[i - 1];
+            let src: Option<&str> = if prev.kind == Kind::Float {
+                Some("float-lit")
+            } else if prev.is_punct(")")
+                && i >= 4
+                && code[i - 2].is_punct("(")
+                && code[i - 4].is_punct(".")
+                && (code[i - 3].is_ident("len") || code[i - 3].is_ident("count"))
+            {
+                Some("usize") // `.len() as …` / `.count() as …`
+            } else if prev.kind == Kind::Ident {
+                type_of(prev)
+            } else {
+                None
+            };
+            if let Some(why) = src.and_then(|s| cast_loss(s, dst)) {
+                out.push(Violation {
+                    line: t.line,
+                    rule: "lossy-cast",
+                    msg: format!(
+                        "{why} in accounting module `{module}`; use try_from/try_into \
+                         (or widen the destination) so overflow is an error, not a \
+                         silent wrap"
+                    ),
+                });
+            }
+        }
+    }
+
+    // ---- R8: panic paths in the serving core -----------------------
+    if panic_scoped {
+        for (i, t) in code.iter().enumerate() {
+            if in_ranges(&test_ranges, t.line) {
+                continue;
+            }
+            let callish = i > 0
+                && code[i - 1].is_punct(".")
+                && i + 1 < code.len()
+                && code[i + 1].is_punct("(");
+            if callish && (t.is_ident("unwrap") || t.is_ident("expect")) {
+                out.push(Violation {
+                    line: t.line,
+                    rule: "panic-path",
+                    msg: format!(
+                        "`.{}(…)` in serving hot path `{module}` kills the whole horizon \
+                         on failure; return a contextual error or use a total fallback",
+                        t.text
+                    ),
+                });
+            }
+            if (t.is_ident("panic") || t.is_ident("unreachable"))
+                && i + 1 < code.len()
+                && code[i + 1].is_punct("!")
+            {
+                out.push(Violation {
+                    line: t.line,
+                    rule: "panic-path",
+                    msg: format!(
+                        "`{}!` in serving hot path `{module}`; make the impossible case \
+                         a typed error so a bad input cannot abort a horizon",
+                        t.text
+                    ),
+                });
+            }
+            // Direct indexing with a non-literal index.
+            if t.is_punct("[") && i > 0 {
+                let p = code[i - 1];
+                let indexes = (p.kind == Kind::Ident
+                    && !NON_INDEX_PREV.contains(&p.text.as_str()))
+                    || p.is_punct(")")
+                    || p.is_punct("]");
+                if indexes {
+                    // Matching bracket; literal-only and full-range
+                    // (`[..]`) contents are infallible.
+                    let mut depth = 0usize;
+                    let mut j = i;
+                    while j < code.len() {
+                        if code[j].is_punct("[") {
+                            depth += 1;
+                        } else if code[j].is_punct("]") {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                    let inner = &code[i + 1..j.min(code.len())];
+                    let literal = inner.len() == 1 && inner[0].kind == Kind::Int;
+                    let full_range = inner.len() == 1 && inner[0].is_punct("..");
+                    if !inner.is_empty() && !literal && !full_range {
+                        let recv = if p.kind == Kind::Ident { p.text.as_str() } else { "…" };
+                        out.push(Violation {
+                            line: t.line,
+                            rule: "panic-path",
+                            msg: format!(
+                                "non-literal index `{recv}[…]` in serving hot path \
+                                 `{module}` can panic out of bounds; use .get()/iterators \
+                                 or prove the bound and waive"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
     out.sort_by(|a, b| (a.line, a.rule, &a.msg).cmp(&(b.line, b.rule, &b.msg)));
     out.dedup_by(|a, b| a.line == b.line && a.rule == b.rule && a.msg == b.msg);
     out
@@ -433,5 +857,236 @@ mod tests {
         let ws = parse_waivers(&lex("// detlint: allow(wall-clock)\n"));
         assert_eq!(ws.len(), 1);
         assert!(ws[0].reason.is_empty());
+    }
+
+    // ---- R6 unit-mix ------------------------------------------------
+
+    #[test]
+    fn unit_mix_flags_cross_dimension_arithmetic_and_comparison() {
+        let v = run(
+            "engine::metrics",
+            "engine/metrics.rs",
+            "fn f(a_s: f64, b_ms: f64) -> f64 { a_s + b_ms }\n",
+        );
+        assert!(v.iter().any(|x| x.rule == "unit-mix" && x.line == 1), "{v:?}");
+        let v = run(
+            "cluster::epochs",
+            "cluster/epochs.rs",
+            "fn f(ttft_s: f64, deadline_ms: f64) -> bool {\nttft_s > deadline_ms\n}\n",
+        );
+        assert!(v.iter().any(|x| x.rule == "unit-mix" && x.line == 2), "{v:?}");
+        let v = run(
+            "dt::twin",
+            "dt/twin.rs",
+            "fn f(n_tokens: f64, kv_bytes: f64) -> bool { n_tokens == kv_bytes }\n",
+        );
+        assert!(v.iter().any(|x| x.rule == "unit-mix"), "{v:?}");
+    }
+
+    #[test]
+    fn unit_mix_flags_cross_dimension_assignment_and_field_init() {
+        let v = run(
+            "engine::metrics",
+            "engine/metrics.rs",
+            "fn f(w_s: f64) { let mut t_ms = 0.0; t_ms = w_s; }\n",
+        );
+        assert!(v.iter().any(|x| x.rule == "unit-mix" && x.msg.contains("t_ms")), "{v:?}");
+        let v = run(
+            "engine::metrics",
+            "engine/metrics.rs",
+            "fn f(r: &Rep) -> Row { Row { ttft_ms: r.ttft_mean_s } }\n",
+        );
+        assert!(v.iter().any(|x| x.rule == "unit-mix" && x.msg.contains("ttft_ms")), "{v:?}");
+    }
+
+    #[test]
+    fn unit_mix_accepts_sanctioned_conversions_and_same_dimension() {
+        // The sanctioned lattice: `*_s * 1000.0 → *_ms` both in
+        // arithmetic and at assignment seams.
+        let clean = [
+            "fn f(a_s: f64, b_s: f64) -> f64 { a_s + b_s }\n",
+            "fn f(w_s: f64, t_ms: f64) -> f64 { w_s * 1e3 + t_ms }\n",
+            "fn f(w_s: f64, t_ms: f64) -> f64 { t_ms + w_s * 1000.0 }\n",
+            "fn f(r: &Rep) -> Row { Row { ttft_ms: r.ttft_mean_s * 1e3 } }\n",
+            "fn f(t_ms: f64) { let wall_s = t_ms / 1e3; let _ = wall_s; }\n",
+            // Scaling by a dimensionless factor preserves the dimension.
+            "fn f(a_s: f64, b_s: f64) -> f64 { a_s * 0.9 + b_s }\n",
+            // Rates × times are legitimate cross-dimension products.
+            "fn f(r_tok_s: f64, dt_s: f64) -> f64 { r_tok_s * dt_s }\n",
+            // Rate definitions: a quotient of tracked operands is a
+            // composite with no single suffix dimension (the canonical
+            // tree shape is `incoming_tok_s: arrived_tokens / epoch_s`).
+            "fn f(n_tokens: u64, dt_s: f64) -> Row { Row { r_tok_s: n_tokens as f64 / dt_s } }\n",
+            "fn f(n_tokens: f64, dt_s: f64, r_tok_s: f64) -> bool { n_tokens / dt_s > r_tok_s }\n",
+        ];
+        for src in clean {
+            let v = run("engine::metrics", "engine/metrics.rs", src);
+            assert!(v.iter().all(|x| x.rule != "unit-mix"), "false positive on {src:?}: {v:?}");
+        }
+    }
+
+    #[test]
+    fn unit_mix_ignores_calls_tests_and_unsuffixed_operands() {
+        // A call's unit cannot be vouched for by its name suffix.
+        let v = run(
+            "engine::metrics",
+            "engine/metrics.rs",
+            "fn f(t_ms: f64) -> f64 { t_ms + elapsed_s() }\n",
+        );
+        assert!(v.is_empty(), "{v:?}");
+        // Unsuffixed operands have no dimension.
+        let v = run(
+            "engine::metrics",
+            "engine/metrics.rs",
+            "fn f(t_ms: f64, n: f64) -> f64 { t_ms + n }\n",
+        );
+        assert!(v.is_empty(), "{v:?}");
+        // Test code is exempt from the correctness rules.
+        let src = "#[cfg(test)]\nmod tests {\nfn f(a_s: f64, b_ms: f64) -> f64 { a_s + b_ms }\n}\n";
+        let v = run("engine::metrics", "engine/metrics.rs", src);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    /// Satellite no-false-positive fixtures: suffixed identifiers
+    /// inside raw/byte strings and nested block comments must not trip
+    /// `unit-mix` (the lexer drops string contents and the rule pass
+    /// drops comments).
+    #[test]
+    fn unit_mix_ignores_strings_and_comments() {
+        let raw = "fn f() -> &'static str { r#\"ttft_s + itl_ms\"# }\n";
+        assert!(run("engine::metrics", "engine/metrics.rs", raw).is_empty());
+        let byte = "fn f() -> &'static [u8] { b\"wall_s < wall_ms\" }\n";
+        assert!(run("engine::metrics", "engine/metrics.rs", byte).is_empty());
+        let comment = "/* a_s + b_ms /* nested: ttft_s > itl_ms */ still comment */\nfn f() {}\n";
+        assert!(run("engine::metrics", "engine/metrics.rs", comment).is_empty());
+    }
+
+    // ---- R7 lossy-cast ----------------------------------------------
+
+    #[test]
+    fn lossy_cast_flags_truncating_and_wrapping_casts() {
+        let cases = [
+            ("fn f(x: f64) -> u64 { x as u64 }\n", "float → int"),
+            ("fn f(n: u64) -> u32 { n as u32 }\n", "u64 → u32"),
+            ("fn f(n: u64) -> usize { n as usize }\n", "u64 → usize"),
+            ("fn f(n: i64) -> u64 { n as u64 }\n", "signed → unsigned"),
+            ("fn f(n: u64) -> f32 { n as f32 }\n", "int → f32"),
+            ("fn f(x: f64) -> f32 { x as f32 }\n", "f64 → f32"),
+            ("fn f() -> u64 { 1.5 as u64 }\n", "float literal → int"),
+            ("fn f(v: &[u8]) -> u32 { v.len() as u32 }\n", "len() → u32"),
+        ];
+        for (src, what) in cases {
+            let v = run("cluster::events", "cluster/events.rs", src);
+            assert!(v.iter().any(|x| x.rule == "lossy-cast"), "missed {what}: {v:?}");
+        }
+    }
+
+    #[test]
+    fn lossy_cast_accepts_value_preserving_casts_and_out_of_scope() {
+        let clean = [
+            "fn f(n: usize) -> u64 { n as u64 }\n",
+            "fn f(n: u32) -> usize { n as usize }\n",
+            "fn f(n: u32) -> i64 { n as i64 }\n",
+            // int → f64 is the accounting contract (counters ≪ 2^53).
+            "fn f(n: usize) -> f64 { n as f64 }\n",
+            "fn f(v: &[u8]) -> f64 { v.len() as f64 }\n",
+            "fn f(v: &[u8]) -> u64 { v.len() as u64 }\n",
+        ];
+        for src in clean {
+            let v = run("cluster::events", "cluster/events.rs", src);
+            assert!(v.iter().all(|x| x.rule != "lossy-cast"), "false positive on {src:?}: {v:?}");
+        }
+        // Out of the accounting scope the rule stays quiet.
+        let lossy = "fn f(x: f64) -> u64 { x as u64 }\n";
+        assert!(run("ml::features", "ml/features.rs", lossy).is_empty());
+        assert!(run("workload::arrivals", "workload/arrivals.rs", lossy).is_empty());
+    }
+
+    /// Satellite no-false-positive fixture: `as` inside a string
+    /// literal must not trip `lossy-cast`.
+    #[test]
+    fn lossy_cast_ignores_as_inside_strings_and_tests() {
+        let s = "fn f(x: f64) -> String { format!(\"cast x as u64 = {}\", x) }\n";
+        assert!(run("cluster::events", "cluster/events.rs", s).is_empty());
+        let raw = "fn f() -> &'static str { r\"1.5 as u32\" }\n";
+        assert!(run("cluster::events", "cluster/events.rs", raw).is_empty());
+        let test = "#[cfg(test)]\nmod tests {\nfn f(x: f64) -> u64 { x as u64 }\n}\n";
+        assert!(run("cluster::events", "cluster/events.rs", test).is_empty());
+    }
+
+    // ---- R8 panic-path ----------------------------------------------
+
+    #[test]
+    fn panic_path_flags_unwrap_expect_panic_and_nonliteral_indexing() {
+        let v = run(
+            "cluster::events",
+            "cluster/events.rs",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        );
+        assert!(v.iter().any(|x| x.rule == "panic-path" && x.msg.contains("unwrap")), "{v:?}");
+        let v = run(
+            "engine::scheduler",
+            "engine/scheduler.rs",
+            "fn f(x: Option<u32>) -> u32 { x.expect(\"missing\") }\n",
+        );
+        assert!(v.iter().any(|x| x.rule == "panic-path" && x.msg.contains("expect")), "{v:?}");
+        let v = run("dt::twin", "dt/twin.rs", "fn f(bad: bool) { if bad { panic!(\"boom\") } }\n");
+        assert!(v.iter().any(|x| x.rule == "panic-path" && x.msg.contains("panic")), "{v:?}");
+        let v = run("placement::greedy", "placement/greedy.rs", "fn f() { unreachable!() }\n");
+        assert!(v.iter().any(|x| x.rule == "panic-path"), "{v:?}");
+        let v = run(
+            "placement::replan",
+            "placement/replan.rs",
+            "fn f(xs: &[f64], i: usize) -> f64 { xs[i] }\n",
+        );
+        assert!(v.iter().any(|x| x.rule == "panic-path" && x.msg.contains("index")), "{v:?}");
+        let v = run(
+            "cluster::events",
+            "cluster/events.rs",
+            "fn f(xs: &[f64], n: usize) -> &[f64] { &xs[..n] }\n",
+        );
+        assert!(v.iter().any(|x| x.rule == "panic-path"), "range slicing can panic: {v:?}");
+    }
+
+    #[test]
+    fn panic_path_accepts_total_alternatives_and_out_of_scope() {
+        let clean = [
+            "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }\n",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap_or_default() }\n",
+            "fn f(x: Option<u32>) -> u32 { x.unwrap_or_else(|| 1) }\n",
+            "fn f(xs: &[f64], i: usize) -> Option<&f64> { xs.get(i) }\n",
+            "fn f(xs: &[f64; 4]) -> f64 { xs[0] }\n",
+            "fn f(xs: &[f64]) -> &[f64] { &xs[..] }\n",
+            "fn f(xs: &mut [f64]) { for x in xs.iter_mut() { *x += 1.0; } }\n",
+            "fn f() -> [u8; 2] { [1, 2] }\n",
+        ];
+        for src in clean {
+            let v = run("cluster::events", "cluster/events.rs", src);
+            assert!(v.iter().all(|x| x.rule != "panic-path"), "false positive on {src:?}: {v:?}");
+        }
+        // Outside the hot-path scope (and in test code) panics are fine.
+        let unwrap = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert!(run("util::csv", "util/csv.rs", unwrap).is_empty());
+        assert!(run("experiments::drift", "experiments/drift.rs", unwrap).is_empty());
+        let test = "#[cfg(test)]\nmod tests {\nfn f(x: Option<u32>) -> u32 { x.unwrap() }\n}\n";
+        assert!(run("cluster::events", "cluster/events.rs", test).is_empty());
+    }
+
+    #[test]
+    fn test_line_ranges_cover_gated_items_only() {
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn a() {}\n\
+                   }\n\
+                   fn also_live() {}\n";
+        let toks = lex(src);
+        let code: Vec<&Tok> = toks.iter().filter(|t| t.kind != Kind::Comment).collect();
+        let r = test_line_ranges(&code);
+        assert_eq!(r, vec![(2, 5)]);
+        // `#[cfg(test)] use …;` ends at the semicolon.
+        let toks = lex("#[cfg(test)]\nuse std::collections::HashMap;\nfn f() {}\n");
+        let code: Vec<&Tok> = toks.iter().filter(|t| t.kind != Kind::Comment).collect();
+        assert_eq!(test_line_ranges(&code), vec![(1, 2)]);
     }
 }
